@@ -1,0 +1,44 @@
+//! Bench A1/A2: ablation sweeps over the Table II design constants —
+//! the weight w (delay↔energy dial), the compression ratio φ, and the
+//! channel bandwidth.  Regenerates the sweep tables and times a sweep.
+//!
+//!   cargo bench --bench ablation_sweeps
+
+use edgesplit::config::ExpConfig;
+use edgesplit::sim::ablate;
+use edgesplit::util::benchkit::{bb, Bencher};
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = ExpConfig::paper();
+    cfg.workload.rounds = 10;
+
+    let w_vals = [0.0, 0.1, 0.2, 0.35, 0.5, 0.65, 0.8, 0.9, 1.0];
+    let pts = ablate::sweep_w(&cfg, &w_vals)?;
+    println!("{}\n", ablate::render("A1 — weight w sweep (Normal channel)", "w", &pts));
+    // Pareto read-out: delay must fall and energy rise as w grows
+    let d_first = pts.first().unwrap().mean_delay_s;
+    let d_last = pts.last().unwrap().mean_delay_s;
+    let e_first = pts.first().unwrap().mean_energy_j;
+    let e_last = pts.last().unwrap().mean_energy_j;
+    println!(
+        "Pareto check: delay {:.1}s → {:.1}s (must fall), energy {:.0}J → {:.0}J (must rise)\n",
+        d_first, d_last, e_first, e_last
+    );
+
+    let phi_vals = [0.02, 0.05, 0.1, 0.2, 0.4, 0.8, 1.0];
+    let pts = ablate::sweep_phi(&cfg, &phi_vals)?;
+    println!("{}\n", ablate::render("A2a — compression φ sweep (Poor channel)", "phi", &pts));
+
+    let bw_vals = [10.0, 20.0, 50.0, 100.0, 200.0, 400.0];
+    let pts = ablate::sweep_bandwidth(&cfg, &bw_vals)?;
+    println!("{}\n", ablate::render("A2b — bandwidth sweep [MHz] (Normal channel)", "MHz", &pts));
+
+    let mut b = Bencher::new("ablation_sweeps");
+    let mut quick = cfg.clone();
+    quick.workload.rounds = 4;
+    b.bench("sweep_w_9_points_4_rounds", || {
+        bb(ablate::sweep_w(&quick, &w_vals).unwrap());
+    });
+    b.report();
+    Ok(())
+}

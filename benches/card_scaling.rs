@@ -1,0 +1,55 @@
+//! Bench A3: CARD complexity — the paper claims O(I) (Alg. 1 does I+1
+//! cost evaluations after the closed-form f*).  We time `decide` for
+//! models of 8..512 layers and fit the scaling exponent.
+//!
+//!   cargo bench --bench card_scaling
+
+use edgesplit::config::{ExpConfig, WorkloadSpec};
+use edgesplit::coordinator::{Card, CostModel};
+use edgesplit::model::{DataSizeModel, DelayModel, EnergyModel, FlopModel, LinkRates, LlmArch};
+use edgesplit::util::benchkit::{bb, Bencher};
+use edgesplit::util::stats::linreg;
+use edgesplit::util::table::Table;
+
+fn cost_model_with_layers(n_layers: usize, w: &WorkloadSpec, weight: f64) -> CostModel {
+    let mut arch = LlmArch::llama1b();
+    arch.n_layers = n_layers;
+    let fl = FlopModel::new(&arch, w);
+    CostModel::new(
+        DelayModel::new(fl.clone(), DataSizeModel::new(&arch, w), w),
+        EnergyModel::new(fl, w.local_epochs),
+        weight,
+    )
+}
+
+fn main() {
+    let cfg = ExpConfig::paper();
+    let rates = LinkRates {
+        up_bps: 300e6,
+        down_bps: 500e6,
+    };
+
+    let sizes = [8usize, 16, 32, 64, 128, 256, 512];
+    let mut b = Bencher::new("card_scaling");
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    let mut t = Table::new("A3 — CARD cost vs model depth I", &["I", "mean decide time"]);
+    for &i in &sizes {
+        let cm = cost_model_with_layers(i, &cfg.workload, cfg.card.w);
+        let card = Card::new(&cm, &cfg.server);
+        let res = b.bench(&format!("decide_I_{i}"), || {
+            bb(card.decide(&cfg.devices[2], rates));
+        });
+        xs.push((i as f64).ln());
+        ys.push(res.mean_s.ln());
+        t.row(vec![i.to_string(), format!("{:.2} µs", res.mean_s * 1e6)]);
+    }
+    t.print();
+
+    let (slope, _) = linreg(&xs, &ys);
+    println!(
+        "\nlog-log scaling exponent: {slope:.2} (paper claims O(I) ⇒ exponent ≈ 1; \
+         sub-linear readings mean fixed overhead still dominates at small I)"
+    );
+    b.report();
+}

@@ -1,0 +1,62 @@
+//! Bench F3: regenerates Fig. 3(a)+(b) — per-device cut-layer and
+//! server-frequency decisions across 20 training rounds under Rayleigh
+//! block fading — and times the decision loop itself.
+//!
+//!   cargo bench --bench fig3_decisions
+
+use edgesplit::config::{ChannelState, ExpConfig};
+use edgesplit::coordinator::{build_cost_model, Card};
+use edgesplit::model::LinkRates;
+use edgesplit::sim::fig3;
+use edgesplit::util::benchkit::{bb, Bencher};
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = ExpConfig::paper();
+    cfg.workload.rounds = 20;
+
+    // ---- the figure itself ----
+    // Normal: stable per-capability endpoints.  Poor: fading flips the
+    // decisions across rounds (the dynamic behaviour Fig. 3 highlights).
+    let names: Vec<String> = cfg.devices.iter().map(|d| d.name.clone()).collect();
+    let r_poor = fig3::run(&cfg, ChannelState::Poor)?;
+    println!("--- Poor channel (dynamic regime) ---\n{}\n", r_poor.render(&names));
+    let r = fig3::run(&cfg, ChannelState::Normal)?;
+    println!("--- Normal channel ---\n{}\n", r.render(&names));
+
+    // paper-structure checks, printed so regressions are visible in CI logs
+    let m = r.cut_matrix();
+    let endpoints = m
+        .iter()
+        .flatten()
+        .filter(|&&c| c == 0 || c == r.n_layers)
+        .count();
+    println!(
+        "endpoint decisions: {endpoints}/{} (paper: all decisions at 0 or {})",
+        r.rounds * r.n_devices,
+        r.n_layers
+    );
+    let mean_cut = |row: &Vec<usize>| row.iter().sum::<usize>() as f64 / row.len() as f64;
+    println!(
+        "mean cut by device (capability ↓): {:?}  (paper: decreasing 32 → 0)\n",
+        m.iter().map(|r| format!("{:.0}", mean_cut(r))).collect::<Vec<_>>()
+    );
+
+    // ---- decision-loop timing ----
+    let cm = build_cost_model(&cfg);
+    let card = Card::new(&cm, &cfg.server);
+    let rates = LinkRates {
+        up_bps: 300e6,
+        down_bps: 500e6,
+    };
+    let mut b = Bencher::new("fig3_decisions");
+    b.bench("card_decide_one_device", || {
+        bb(card.decide(&cfg.devices[2], rates));
+    });
+    b.bench_throughput("card_decide_fleet_of_5", 5.0, "decision", || {
+        for d in &cfg.devices {
+            bb(card.decide(d, rates));
+        }
+    });
+    b.report();
+    Ok(())
+}

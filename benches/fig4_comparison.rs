@@ -1,0 +1,36 @@
+//! Bench F4: regenerates Fig. 4 — training delay and server energy for
+//! CARD vs Server-only vs Device-only across Good/Normal/Poor channels —
+//! and prints the paper's headline reductions next to ours.
+//!
+//!   cargo bench --bench fig4_comparison
+
+use edgesplit::config::ExpConfig;
+use edgesplit::sim::fig4;
+use edgesplit::util::benchkit::{bb, Bencher};
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = ExpConfig::paper();
+    cfg.workload.rounds = 20;
+
+    let r = fig4::run(&cfg)?;
+    println!("{}\n", r.render());
+
+    // shape assertions, printed for the experiment log
+    let ok_delay = r.delay_reduction_vs_device_only_pct > 40.0;
+    let ok_energy = r.energy_reduction_vs_server_only_pct > 25.0;
+    println!(
+        "shape check: delay reduction {} ({}), energy reduction {} ({})",
+        if ok_delay { "PASS" } else { "FAIL" },
+        format_args!("{:.1}%", r.delay_reduction_vs_device_only_pct),
+        if ok_energy { "PASS" } else { "FAIL" },
+        format_args!("{:.1}%", r.energy_reduction_vs_server_only_pct),
+    );
+
+    // timing: full figure regeneration cost
+    let mut b = Bencher::new("fig4_comparison");
+    b.bench("fig4_full_grid_20_rounds", || {
+        bb(fig4::run(&cfg).unwrap());
+    });
+    b.report();
+    Ok(())
+}

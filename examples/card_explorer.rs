@@ -1,0 +1,100 @@
+//! CARD decision-landscape explorer: where does the optimal cut flip?
+//!
+//! Sweeps (a) device compute capability, (b) distance/SNR, (c) the
+//! weight w — printing the decision each time.  This is the intuition
+//! behind Fig. 3: the optimum is an endpoint {0, I} whose side depends
+//! on the device/channel/objective trade-off.
+//!
+//!   cargo run --release --example card_explorer
+
+use edgesplit::config::{ChannelState, DeviceSpec, ExpConfig};
+use edgesplit::coordinator::{build_cost_model, Card};
+use edgesplit::net::Channel;
+use edgesplit::util::rng::Rng;
+use edgesplit::util::table::Table;
+
+fn device(ghz: f64, cores: f64, dist: f64) -> DeviceSpec {
+    DeviceSpec {
+        name: format!("{ghz:.1}GHz/{cores:.0}c"),
+        platform: "synthetic".into(),
+        freq_hz: ghz * 1e9,
+        cores,
+        flops_per_cycle: 2.0,
+        distance_m: dist,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let cfg = ExpConfig::paper();
+    let cm = build_cost_model(&cfg);
+    let mut rng = Rng::new(1);
+
+    // (a) capability sweep at fixed distance, Normal channel, no fading
+    let mut ch_spec = cfg.channel.clone();
+    ch_spec.fading = false;
+    let channel = Channel::new(ch_spec.clone(), ChannelState::Normal);
+    let mut t = Table::new(
+        "(a) capability sweep — 20 m, Normal channel",
+        &["device", "cut c*", "f* [GHz]", "U"],
+    );
+    for ghz in [0.3, 0.5, 0.7, 0.9, 1.1, 1.3] {
+        let dev = device(ghz, 2048.0, 20.0);
+        let link = channel.realize(&dev, &mut rng);
+        let card = Card::new(&cm, &cfg.server);
+        let d = card.decide(&dev, link.rates);
+        t.row(vec![
+            dev.name.clone(),
+            d.cut.to_string(),
+            format!("{:.2}", d.freq_hz / 1e9),
+            format!("{:.3}", d.cost),
+        ]);
+    }
+    t.print();
+
+    // (b) distance sweep for a mid-tier device, Poor channel
+    let channel = Channel::new(ch_spec.clone(), ChannelState::Poor);
+    let mut t = Table::new(
+        "\n(b) distance sweep — 0.7 GHz / 1024 cores, Poor channel",
+        &["distance", "SNR up [dB]", "cut c*", "U"],
+    );
+    for dist in [5.0, 10.0, 15.0, 20.0, 30.0, 45.0] {
+        let dev = device(0.7, 1024.0, dist);
+        let link = channel.realize(&dev, &mut rng);
+        let card = Card::new(&cm, &cfg.server);
+        let d = card.decide(&dev, link.rates);
+        t.row(vec![
+            format!("{dist:.0} m"),
+            format!("{:.1}", link.snr_up_db),
+            d.cut.to_string(),
+            format!("{:.3}", d.cost),
+        ]);
+    }
+    t.print();
+
+    // (c) weight sweep for Device 3 — the delay/energy dial
+    let channel = Channel::new(ch_spec, ChannelState::Normal);
+    let mut t = Table::new(
+        "\n(c) weight w sweep — Device 3 (0.7 GHz / 1792 cores)",
+        &["w", "cut c*", "f* [GHz]", "delay [s]", "energy [J]"],
+    );
+    for w in [0.0, 0.1, 0.2, 0.4, 0.6, 0.8, 1.0] {
+        let mut cfg_w = cfg.clone();
+        cfg_w.card.w = w;
+        let cm_w = build_cost_model(&cfg_w);
+        let dev = cfg.devices[2].clone();
+        let link = channel.realize(&dev, &mut rng);
+        let card = Card::new(&cm_w, &cfg_w.server);
+        let d = card.decide(&dev, link.rates);
+        t.row(vec![
+            format!("{w:.1}"),
+            d.cut.to_string(),
+            format!("{:.2}", d.freq_hz / 1e9),
+            format!("{:.1}", d.delay_s),
+            format!("{:.1}", d.energy_j),
+        ]);
+    }
+    t.print();
+    println!("\nReading: cut flips 0 → I as capability grows / objective tilts to energy;");
+    println!("f* climbs with w (delay pressure) and falls when energy dominates.");
+    Ok(())
+}

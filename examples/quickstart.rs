@@ -1,0 +1,63 @@
+//! Quickstart: the public API in ~60 lines.
+//!
+//! Builds the paper's testbed (Tables I+II), realizes a wireless channel,
+//! asks CARD for a cut-layer + frequency decision per device, and runs a
+//! few analytic training rounds.
+//!
+//!   cargo run --release --example quickstart
+
+use edgesplit::config::{ChannelState, ExpConfig};
+use edgesplit::coordinator::{build_cost_model, Scheduler, Strategy};
+use edgesplit::net::Channel;
+use edgesplit::sim::Summary;
+use edgesplit::util::rng::Rng;
+use edgesplit::util::table::{fmt_joules, fmt_secs, Table};
+
+fn main() -> anyhow::Result<()> {
+    // 1. the paper's setup: 5 Jetson-class devices + RTX-4060Ti server
+    let mut cfg = ExpConfig::paper();
+    cfg.workload.rounds = 8;
+    cfg.validate()?;
+
+    // 2. one CARD decision per device under a Normal channel
+    let cost_model = build_cost_model(&cfg);
+    let channel = Channel::new(cfg.channel.clone(), ChannelState::Normal);
+    let mut rng = Rng::new(cfg.seed);
+
+    let mut t = Table::new(
+        "CARD decisions (Normal channel)",
+        &["device", "cut c*", "f* [GHz]", "round delay", "server energy"],
+    );
+    for dev in &cfg.devices {
+        let link = channel.realize(dev, &mut rng);
+        let d = Strategy::Card.decide(&cost_model, &cfg.server, dev, link.rates, &mut rng);
+        t.row(vec![
+            dev.name.clone(),
+            d.cut.to_string(),
+            format!("{:.2}", d.freq_hz / 1e9),
+            fmt_secs(d.delay_s),
+            fmt_joules(d.energy_j),
+        ]);
+    }
+    t.print();
+
+    // 3. full multi-round simulation, CARD vs the two paper baselines
+    println!();
+    let mut cmp = Table::new(
+        "8 rounds, mean per-round cost (Normal channel)",
+        &["strategy", "delay", "server energy"],
+    );
+    for strat in [Strategy::Card, Strategy::ServerOnly, Strategy::DeviceOnly] {
+        let mut sched = Scheduler::new(cfg.clone(), ChannelState::Normal, strat);
+        let records = sched.run_analytic()?;
+        let s = Summary::from_records(&records);
+        cmp.row(vec![
+            strat.name(),
+            fmt_secs(s.delay.mean()),
+            fmt_joules(s.energy.mean()),
+        ]);
+    }
+    cmp.print();
+    println!("\nNext: `cargo run --release --example edge_finetune` for REAL split training.");
+    Ok(())
+}

@@ -1,0 +1,190 @@
+"""AOT lowering: JAX segments -> HLO *text* artifacts + manifest.json.
+
+Interchange format is HLO text, NOT ``.serialize()``: jax >= 0.5 emits
+HloModuleProtos with 64-bit instruction ids which the runtime's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once at build time (``make artifacts``); the Rust binary is fully
+self-contained afterwards — Python is never on the request path.
+
+Usage:  cd python && python -m compile.aot --config tiny --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .configs import CONFIGS, ModelConfig
+from .params import (
+    base_layer_layout,
+    head_layout,
+    layout_offsets,
+    lora_layer_layout,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _dt(dtype) -> str:
+    return {jnp.float32: "f32", jnp.int32: "i32"}[dtype]
+
+
+def segment_table(cfg: ModelConfig):
+    """name -> (fn, [(arg_name, shape, dtype)], [(out_name, shape, dtype)]).
+
+    The donate list marks args whose buffer the runtime may alias into the
+    output (adapter updates are in-place on TPU/real deployments).
+    """
+    b, s, d = cfg.batch_size, cfg.seq_len, cfg.d_model
+    lb, ll, lh = cfg.base_layer_len, cfg.lora_layer_len, cfg.head_len
+    nl, v = cfg.n_layers, cfg.vocab_size
+
+    return {
+        "embed_fwd": (
+            lambda tokens, embed: (model.embed_fwd(tokens, embed),),
+            [("tokens", (b, s), jnp.int32), ("embed", (v, d), jnp.float32)],
+            [("h", (b, s, d), jnp.float32)],
+        ),
+        "layer_fwd": (
+            lambda h, bv, lv: (model.layer_fwd(h, bv, lv, cfg),),
+            [
+                ("h", (b, s, d), jnp.float32),
+                ("base_vec", (lb,), jnp.float32),
+                ("lora_vec", (ll,), jnp.float32),
+            ],
+            [("h_out", (b, s, d), jnp.float32)],
+        ),
+        "layer_bwd": (
+            lambda h_in, bv, lv, g: model.layer_bwd(h_in, bv, lv, g, cfg),
+            [
+                ("h_in", (b, s, d), jnp.float32),
+                ("base_vec", (lb,), jnp.float32),
+                ("lora_vec", (ll,), jnp.float32),
+                ("g_out", (b, s, d), jnp.float32),
+            ],
+            [
+                ("g_in", (b, s, d), jnp.float32),
+                ("g_lora", (ll,), jnp.float32),
+            ],
+        ),
+        "head_loss_grad": (
+            lambda h, hv, labels: model.head_loss_grad(h, hv, labels, cfg),
+            [
+                ("h", (b, s, d), jnp.float32),
+                ("head_vec", (lh,), jnp.float32),
+                ("labels", (b, s), jnp.int32),
+            ],
+            [("loss", (), jnp.float32), ("g_h", (b, s, d), jnp.float32)],
+        ),
+        "adapter_sgd": (
+            lambda lv, g, lr: (model.adapter_sgd(lv, g, lr),),
+            [
+                ("lora_vec", (ll,), jnp.float32),
+                ("grad", (ll,), jnp.float32),
+                ("lr", (1,), jnp.float32),
+            ],
+            [("lora_vec_out", (ll,), jnp.float32)],
+        ),
+        "train_step": (
+            lambda tokens, labels, embed, bs, ls, hv, lr: model.train_step(
+                tokens, labels, embed, bs, ls, hv, lr, cfg
+            ),
+            [
+                ("tokens", (b, s), jnp.int32),
+                ("labels", (b, s), jnp.int32),
+                ("embed", (v, d), jnp.float32),
+                ("base_stack", (nl, lb), jnp.float32),
+                ("lora_stack", (nl, ll), jnp.float32),
+                ("head_vec", (lh,), jnp.float32),
+                ("lr", (1,), jnp.float32),
+            ],
+            [
+                ("loss", (), jnp.float32),
+                ("lora_stack_out", (nl, ll), jnp.float32),
+            ],
+        ),
+    }
+
+
+def lower_config(cfg: ModelConfig, out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest: dict = {"config": cfg.to_dict(), "artifacts": {}, "layouts": {}}
+
+    for name, (fn, in_specs, out_specs) in segment_table(cfg).items():
+        specs = [_spec(shape, dt) for _, shape, dt in in_specs]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": fname,
+            "inputs": [
+                {"name": n, "shape": list(shape), "dtype": _dt(dt)}
+                for n, shape, dt in in_specs
+            ],
+            "outputs": [
+                {"name": n, "shape": list(shape), "dtype": _dt(dt)}
+                for n, shape, dt in out_specs
+            ],
+        }
+        print(f"  {name}: {len(text)} chars -> {fname}")
+
+    for lname, layout in (
+        ("base_layer", base_layer_layout(cfg)),
+        ("lora_layer", lora_layer_layout(cfg)),
+        ("head", head_layout(cfg)),
+    ):
+        manifest["layouts"][lname] = [
+            {"name": n, "offset": off, "shape": list(shape)}
+            for n, off, shape in layout_offsets(layout)
+        ]
+
+    path = os.path.join(out_dir, "manifest.json")
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"  manifest -> {path}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--config", default="tiny", choices=sorted(CONFIGS))
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+
+    cfg = CONFIGS[args.config]
+    if cfg.name == "llama1b":
+        raise SystemExit(
+            "llama1b parameterizes the Rust cost model only; compiling its "
+            "artifacts is intentionally unsupported (DESIGN.md §2)."
+        )
+    out = os.path.join(args.out_dir, cfg.name)
+    print(f"AOT-lowering config '{cfg.name}' ({cfg.n_params/1e6:.1f}M params) -> {out}")
+    lower_config(cfg, out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""Model configurations.
+
+``nano``/``tiny`` are test-scale configs (pytest + Rust integration
+tests), ``small`` drives the end-to-end split fine-tuning example, and
+``llama1b`` mirrors the paper's LLaMA-3.2-1B ("32-layer transformer
+decoders", §V) — it is used by the Rust cost model for the figures, and
+is deliberately NOT compiled to artifacts (CPU-intractable; see
+DESIGN.md §2 Substitutions).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab_size: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    seq_len: int
+    batch_size: int
+    lora_rank: int
+    lora_alpha: float
+    rope_theta: float = 10000.0
+    rms_eps: float = 1e-6
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def lora_scale(self) -> float:
+        return self.lora_alpha / self.lora_rank
+
+    # ---- flat-vector lengths (layouts in params.py) -------------------
+    @property
+    def base_layer_len(self) -> int:
+        d, f = self.d_model, self.d_ff
+        return 4 * d * d + 3 * d * f + 2 * d
+
+    @property
+    def lora_layer_len(self) -> int:
+        d, f, r = self.d_model, self.d_ff, self.lora_rank
+        # q,k,v,o: A(d,r)+B(r,d); gate,up: A(d,r)+B(r,f); down: A(f,r)+B(r,d)
+        return 4 * (d * r + r * d) + 2 * (d * r + r * f) + (f * r + r * d)
+
+    @property
+    def head_len(self) -> int:
+        return self.d_model + self.d_model * self.vocab_size
+
+    @property
+    def n_params(self) -> int:
+        return (
+            self.vocab_size * self.d_model
+            + self.n_layers * (self.base_layer_len + self.lora_layer_len)
+            + self.head_len
+        )
+
+    @property
+    def n_trainable(self) -> int:
+        return self.n_layers * self.lora_layer_len
+
+    def to_dict(self) -> dict:
+        out = dataclasses.asdict(self)
+        out.update(
+            head_dim=self.head_dim,
+            lora_scale=self.lora_scale,
+            base_layer_len=self.base_layer_len,
+            lora_layer_len=self.lora_layer_len,
+            head_len=self.head_len,
+            n_params=self.n_params,
+            n_trainable=self.n_trainable,
+        )
+        return out
+
+
+CONFIGS: dict[str, ModelConfig] = {
+    # pytest-scale: segments trace + execute in < 1 s
+    "nano": ModelConfig(
+        name="nano", vocab_size=256, d_model=64, n_layers=4, n_heads=4,
+        d_ff=192, seq_len=32, batch_size=2, lora_rank=4, lora_alpha=8.0,
+    ),
+    # Rust integration-test scale
+    "tiny": ModelConfig(
+        name="tiny", vocab_size=256, d_model=128, n_layers=6, n_heads=8,
+        d_ff=384, seq_len=64, batch_size=4, lora_rank=8, lora_alpha=16.0,
+    ),
+    # end-to-end example scale (~7M params, byte-level vocab)
+    "small": ModelConfig(
+        name="small", vocab_size=256, d_model=256, n_layers=8, n_heads=8,
+        d_ff=704, seq_len=128, batch_size=8, lora_rank=8, lora_alpha=16.0,
+    ),
+    # paper's model: cost-model parameterization ONLY (never compiled)
+    "llama1b": ModelConfig(
+        name="llama1b", vocab_size=128256, d_model=2048, n_layers=32,
+        n_heads=32, d_ff=8192, seq_len=512, batch_size=8, lora_rank=16,
+        lora_alpha=32.0, rope_theta=500000.0,
+    ),
+}

@@ -1,0 +1,15 @@
+"""Pallas kernels (L1) + pure-jnp oracles.
+
+``lora_matmul`` / ``rmsnorm`` are the interpret-mode Pallas kernels used
+by the L2 model; ``ref`` holds the oracles pytest compares them against.
+"""
+
+from .lora import lora_matmul, mxu_utilization_estimate, vmem_footprint_bytes
+from .rmsnorm import rmsnorm
+
+__all__ = [
+    "lora_matmul",
+    "rmsnorm",
+    "vmem_footprint_bytes",
+    "mxu_utilization_estimate",
+]

@@ -1,0 +1,202 @@
+"""L1 — fused LoRA-linear Pallas kernel.
+
+Computes the hot spot of split-LoRA fine-tuning (every adapted projection
+in every transformer layer):
+
+    y = x @ W + alpha * (x @ A) @ B
+
+On GPU (the paper's testbed) this is two cuBLAS GEMMs plus an epilogue.
+Re-thought for TPU (see DESIGN.md §7 Hardware-Adaptation):
+
+  * the base GEMM ``x @ W`` runs on the MXU with (bm, bk) x (bk, bn)
+    tiles staged HBM->VMEM by ``BlockSpec``;
+  * the low-rank path is fused into the *same* K-loop: each ``x`` tile is
+    read from HBM exactly once and contributes to both the ``x @ W``
+    accumulator and an ``x @ A`` accumulator (bm, r) kept in VMEM
+    scratch.  ``(x@A) @ B`` is applied once, at the last K step — the TPU
+    analogue of CUDA epilogue fusion;
+  * A (k, r) is sliced along K like W; B (r, bn) is sliced along N and is
+    tiny (r <= 64), so the adapter adds no meaningful HBM traffic.
+
+Lowered with ``interpret=True`` so the kernel becomes plain HLO and runs
+on the CPU PJRT plugin (real-TPU lowering emits a Mosaic custom-call the
+CPU client cannot execute).  Correctness oracle: ``kernels.ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(dim: int, preferred: int) -> int:
+    """Largest divisor of ``dim`` that is <= ``preferred``.
+
+    TPU tiles want MXU-aligned 128s; on the interpret path any divisor is
+    legal, so we degrade gracefully for small/odd test shapes instead of
+    padding (keeps the oracle comparison exact).
+    """
+    if dim <= preferred:
+        return dim
+    for cand in range(preferred, 0, -1):
+        if dim % cand == 0:
+            return cand
+    return dim
+
+
+def _lora_kernel(x_ref, w_ref, a_ref, b_ref, o_ref, xa_ref, *, alpha: float, nk: int):
+    """One (i, j, k) grid step.
+
+    x_ref: (bm, bk)  w_ref: (bk, bn)  a_ref: (bk, r)  b_ref: (r, bn)
+    o_ref: (bm, bn) accumulator (same block for every k)
+    xa_ref: (bm, r) VMEM scratch accumulating x @ A across the K loop
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        xa_ref[...] = jnp.zeros_like(xa_ref)
+
+    x = x_ref[...]
+    # Both accumulations consume the SAME VMEM-resident x tile: one HBM
+    # read of x serves the base GEMM and the low-rank projection.
+    o_ref[...] += jnp.dot(x, w_ref[...], preferred_element_type=jnp.float32)
+    xa_ref[...] += jnp.dot(x, a_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        o_ref[...] += alpha * jnp.dot(
+            xa_ref[...], b_ref[...], preferred_element_type=jnp.float32
+        )
+
+
+def lora_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    alpha: float = 1.0,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+) -> jax.Array:
+    """Fused ``x @ w + alpha * (x @ a) @ b`` as a Pallas kernel.
+
+    Shapes: x (m, k), w (k, n), a (k, r), b (r, n) -> (m, n) float32.
+    Leading batch dims of ``x`` are flattened into m.  Differentiable
+    w.r.t. ``x``, ``a``, ``b`` (custom VJP); ``w`` is the FROZEN base
+    weight — its cotangent is returned as zeros (never computing the
+    d×d' weight-grad is exactly the LoRA saving the paper's cost model
+    Eq. (7) relies on).
+    """
+    return _lora_mm(x, w, a, b, alpha, (bm, bn, bk))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def _lora_mm(x, w, a, b, alpha, blocks):
+    return _lora_mm_impl(x, w, a, b, alpha, blocks)
+
+
+def _lora_mm_fwd(x, w, a, b, alpha, blocks):
+    return _lora_mm_impl(x, w, a, b, alpha, blocks), (x, w, a, b)
+
+
+def _lora_mm_bwd(alpha, blocks, res, g):
+    x, w, a, b = res
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k).astype(jnp.float32)
+    g2 = g.reshape(-1, g.shape[-1]).astype(jnp.float32)
+    # Data gradient is the SAME fused kernel on transposed operands:
+    #   dx = g @ Wᵀ + alpha * (g @ Bᵀ) @ Aᵀ
+    dx = _lora_mm_impl(g, w.T, b.T, a.T, alpha, blocks).reshape(x.shape)
+    # Adapter gradients (rank-r, cheap: O(m·k·r + m·r·n) FLOPs).
+    gbt = jnp.matmul(g2, b.T.astype(jnp.float32))
+    da = alpha * jnp.matmul(x2.T, gbt)
+    db = alpha * jnp.matmul(jnp.matmul(x2, a.astype(jnp.float32)).T, g2)
+    # Frozen base weight: cotangent intentionally zero (LoRA contract).
+    dw = jnp.zeros_like(w)
+    return dx, dw, da, db
+
+
+def _lora_mm_impl(x, w, a, b, alpha, blocks):
+    bm, bn, bk = blocks
+    orig_shape = x.shape
+    if x.ndim > 2:
+        x = x.reshape(-1, x.shape[-1])
+    m, kdim = x.shape
+    k2, n = w.shape
+    assert kdim == k2, f"x/w contraction mismatch: {kdim} vs {k2}"
+    r = a.shape[1]
+    assert a.shape == (kdim, r) and b.shape == (r, n), (a.shape, b.shape)
+
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    bk = _pick_block(kdim, bk)
+    nk = kdim // bk
+
+    out = pl.pallas_call(
+        functools.partial(_lora_kernel, alpha=alpha, nk=nk),
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),  # x
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),  # w
+            pl.BlockSpec((bk, r), lambda i, j, k: (k, 0)),  # a
+            pl.BlockSpec((r, bn), lambda i, j, k: (0, j)),  # b
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[_vmem_scratch(bm, r)],
+        interpret=True,
+    )(x.astype(jnp.float32), w, a, b)
+
+    if len(orig_shape) > 2:
+        out = out.reshape(*orig_shape[:-1], n)
+    return out
+
+
+_lora_mm.defvjp(_lora_mm_fwd, _lora_mm_bwd)
+
+
+def _vmem_scratch(bm: int, r: int):
+    """VMEM scratch allocation, tolerant of pallas API surface differences."""
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+
+        return pltpu.VMEM((bm, r), jnp.float32)
+    except Exception:  # pragma: no cover - fallback for non-tpu builds
+        return pl.MemorySpace.ANY  # type: ignore[attr-defined]
+
+
+def vmem_footprint_bytes(
+    bm: int, bn: int, bk: int, r: int, dtype_bytes: int = 4
+) -> int:
+    """Static VMEM footprint of one grid step (perf model, DESIGN.md §9).
+
+    x tile + w tile + a slice + b slice + out accumulator + xa scratch,
+    double-buffered on the streamed inputs (x, w, a).
+    """
+    streamed = (bm * bk + bk * bn + bk * r) * dtype_bytes * 2  # double buffer
+    resident = (r * bn + bm * bn + bm * r) * dtype_bytes
+    return streamed + resident
+
+
+def mxu_utilization_estimate(m: int, n: int, k: int, r: int, bm: int, bn: int) -> float:
+    """Fraction of MXU-issue slots doing useful work (128x128 systolic).
+
+    Tiles that are not multiples of 128 waste the remainder lanes; the
+    low-rank path (r << 128) runs at r/128 occupancy but is a vanishing
+    fraction of total FLOPs.
+    """
+    eff_m = bm / (128 * math.ceil(bm / 128))
+    eff_n = bn / (128 * math.ceil(bn / 128))
+    base_flops = 2 * m * n * k
+    lora_flops = 2 * m * k * r + 2 * m * r * n
+    lora_eff = r / (128 * math.ceil(r / 128))
+    total = base_flops + lora_flops
+    return (base_flops * eff_m * eff_n + lora_flops * lora_eff) / total

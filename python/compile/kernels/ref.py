@@ -1,0 +1,28 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth the pytest suite (and hypothesis sweeps) hold
+``kernels.lora`` / ``kernels.rmsnorm`` against.  Written in the most
+obvious possible style on purpose — no tiling, no tricks.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lora_matmul_ref(
+    x: jax.Array, w: jax.Array, a: jax.Array, b: jax.Array, *, alpha: float = 1.0
+) -> jax.Array:
+    """y = x @ w + alpha * (x @ a) @ b, fp32."""
+    x = x.astype(jnp.float32)
+    base = jnp.matmul(x, w.astype(jnp.float32))
+    low = jnp.matmul(jnp.matmul(x, a.astype(jnp.float32)), b.astype(jnp.float32))
+    return base + alpha * low
+
+
+def rmsnorm_ref(x: jax.Array, gain: jax.Array, *, eps: float = 1e-6) -> jax.Array:
+    """x * rsqrt(mean(x^2, -1) + eps) * gain, fp32."""
+    x = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * gain.astype(jnp.float32)

@@ -1,0 +1,93 @@
+"""L1 — RMSNorm Pallas kernel.
+
+RMSNorm is applied twice per decoder layer (pre-attention, pre-MLP) plus
+once before the LM head; on the device side of the split it brackets every
+LoRA projection, so we keep it on the fast path as a row-tiled Pallas
+kernel: each grid step normalizes a (bm, d) panel entirely in VMEM
+(one HBM read + one HBM write per element, the roofline minimum).
+
+Interpret-mode lowering for CPU PJRT, same as ``kernels.lora``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, g_ref, o_ref, *, eps: float):
+    x = x_ref[...]
+    # mean of squares along the feature axis, fp32 accumulation
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    o_ref[...] = x * jax.lax.rsqrt(ms + eps) * g_ref[...]
+
+
+def _pick_rows(m: int, preferred: int = 128) -> int:
+    if m <= preferred:
+        return m
+    for cand in range(preferred, 0, -1):
+        if m % cand == 0:
+            return cand
+    return m
+
+
+def rmsnorm(x: jax.Array, gain: jax.Array, *, eps: float = 1e-6) -> jax.Array:
+    """Row-wise RMS normalization ``x * rsqrt(mean(x^2) + eps) * gain``.
+
+    x: (..., d) float32, gain: (d,) float32 -> same shape as x.
+    Differentiable via custom VJP (Pallas has no autodiff rule); the
+    gain gradient IS computed exactly (it is cheap), even though the
+    split-LoRA setup freezes it.
+    """
+    return _rmsnorm(x, gain, eps)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _rmsnorm(x, gain, eps):
+    return _rmsnorm_impl(x, gain, eps)
+
+
+def _rmsnorm_fwd(x, gain, eps):
+    return _rmsnorm_impl(x, gain, eps), (x, gain)
+
+
+def _rmsnorm_bwd(eps, res, g):
+    x, gain = res
+    xf = x.astype(jnp.float32)
+    d = xf.shape[-1]
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(ms + eps)
+    gg = g.astype(jnp.float32) * gain.astype(jnp.float32)
+    # dL/dx = gain*g*inv − x · (Σ_j g_j·gain_j·x_j / d) · inv³
+    dx = gg * inv - xf * (jnp.sum(gg * xf, axis=-1, keepdims=True) / d) * inv**3
+    dgain = jnp.sum(
+        (g.astype(jnp.float32) * xf * inv).reshape(-1, d), axis=0
+    ).astype(gain.dtype)
+    return dx.astype(x.dtype), dgain
+
+
+def _rmsnorm_impl(x, gain, eps):
+    orig_shape = x.shape
+    d = x.shape[-1]
+    x2 = x.reshape(-1, d).astype(jnp.float32)
+    m = x2.shape[0]
+    bm = _pick_rows(m)
+
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d), jnp.float32),
+        interpret=True,
+    )(x2, gain.astype(jnp.float32))
+    return out.reshape(orig_shape)
+
+
+_rmsnorm.defvjp(_rmsnorm_fwd, _rmsnorm_bwd)

@@ -1,0 +1,85 @@
+"""L2 building blocks: RoPE, causal MHA, SwiGLU — all LoRA-adapted
+projections go through the fused Pallas kernel (``kernels.lora_matmul``),
+all norms through ``kernels.rmsnorm``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import lora_matmul, rmsnorm
+from .params import (
+    base_layer_layout,
+    lora_layer_layout,
+    unflatten,
+)
+
+
+def rope_angles(cfg: ModelConfig) -> jax.Array:
+    """(seq, head_dim/2) rotation angles, LLaMA half-split convention."""
+    hd = cfg.head_dim
+    inv_freq = cfg.rope_theta ** (
+        -jnp.arange(0, hd, 2, dtype=jnp.float32) / hd
+    )
+    pos = jnp.arange(cfg.seq_len, dtype=jnp.float32)
+    return pos[:, None] * inv_freq[None, :]
+
+
+def apply_rope(x: jax.Array, angles: jax.Array) -> jax.Array:
+    """x: (b, s, nh, hd) -> rotated; half-split (not interleaved)."""
+    hd = x.shape[-1]
+    x1, x2 = x[..., : hd // 2], x[..., hd // 2 :]
+    cos = jnp.cos(angles)[None, :, None, :]
+    sin = jnp.sin(angles)[None, :, None, :]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1
+    )
+
+
+def _proj(h, base, lora, name, cfg):
+    """LoRA-adapted projection through the fused Pallas kernel."""
+    return lora_matmul(
+        h,
+        base[f"w{name}" if name in ("q", "k", "v", "o") else f"w_{name}"],
+        lora[f"a_{name}"],
+        lora[f"b_{name}"],
+        alpha=cfg.lora_scale,
+    )
+
+
+def attention(h, base, lora, cfg: ModelConfig) -> jax.Array:
+    """Causal multi-head attention with RoPE, LoRA on q/k/v/o."""
+    b, s, d = h.shape
+    nh, hd = cfg.n_heads, cfg.head_dim
+
+    q = _proj(h, base, lora, "q", cfg).reshape(b, s, nh, hd)
+    k = _proj(h, base, lora, "k", cfg).reshape(b, s, nh, hd)
+    v = _proj(h, base, lora, "v", cfg).reshape(b, s, nh, hd)
+
+    ang = rope_angles(cfg)[:s]
+    q, k = apply_rope(q, ang), apply_rope(k, ang)
+
+    scores = jnp.einsum("bihd,bjhd->bhij", q, k) / jnp.sqrt(float(hd))
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhij,bjhd->bihd", probs, v).reshape(b, s, d)
+    return _proj(ctx, base, lora, "o", cfg)
+
+
+def swiglu(h, base, lora, cfg: ModelConfig) -> jax.Array:
+    """SwiGLU MLP: down( silu(gate(h)) * up(h) ), LoRA on all three."""
+    g = _proj(h, base, lora, "gate", cfg)
+    u = _proj(h, base, lora, "up", cfg)
+    return _proj(jax.nn.silu(g) * u, base, lora, "down", cfg)
+
+
+def decoder_layer(h, base_vec, lora_vec, cfg: ModelConfig) -> jax.Array:
+    """One pre-norm decoder layer over flat parameter vectors."""
+    base = unflatten(base_vec, base_layer_layout(cfg))
+    lora = unflatten(lora_vec, lora_layer_layout(cfg))
+    h = h + attention(rmsnorm(h, base["rms1"], eps=cfg.rms_eps), base, lora, cfg)
+    h = h + swiglu(rmsnorm(h, base["rms2"], eps=cfg.rms_eps), base, lora, cfg)
+    return h

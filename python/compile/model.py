@@ -1,0 +1,119 @@
+"""L2 — the split-segment functions that become HLO artifacts.
+
+The cut layer changes every round (CARD), so the split must be dynamic at
+runtime while HLO is static.  We therefore compile a small closed set of
+*segment* functions; the Rust executor chains them (DESIGN.md §3):
+
+    device FP  :  embed_fwd, then c × layer_fwd
+    server FP  :  (I−c) × layer_fwd, then head_loss_grad
+    server BP  :  (I−c) × layer_bwd (recompute-style VJP)
+    device BP  :  c × layer_bwd after receiving the smashed-data gradient
+    update     :  adapter_sgd per layer
+
+Every function takes/returns flat f32 vectors (see params.py) so the Rust
+side stays shape-agnostic.  A fused ``train_step`` over the whole model is
+also exported to measure the chaining overhead (ablation A4).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import rmsnorm
+from .layers import decoder_layer
+from .params import head_layout, unflatten
+
+
+# ---------------------------------------------------------------------------
+# segments
+# ---------------------------------------------------------------------------
+
+
+def embed_fwd(tokens: jax.Array, embed: jax.Array) -> jax.Array:
+    """tokens (b, s) i32, embed (vocab, d) -> h (b, s, d)."""
+    return embed[tokens]
+
+
+def layer_fwd(h: jax.Array, base_vec: jax.Array, lora_vec: jax.Array,
+              cfg: ModelConfig) -> jax.Array:
+    """One decoder layer forward: h (b, s, d) -> (b, s, d)."""
+    return decoder_layer(h, base_vec, lora_vec, cfg)
+
+
+def layer_bwd(h_in: jax.Array, base_vec: jax.Array, lora_vec: jax.Array,
+              g_out: jax.Array, cfg: ModelConfig):
+    """Recompute-style VJP of one layer.
+
+    Takes the layer's *input* activation (stashed during FP), recomputes
+    the forward internally, and returns (g_in, g_lora).  The frozen base
+    weights get no gradient (LoRA contract, kernels/lora.py).
+    """
+    _, vjp = jax.vjp(lambda h, lv: layer_fwd(h, base_vec, lv, cfg), h_in, lora_vec)
+    g_in, g_lora = vjp(g_out)
+    return g_in, g_lora
+
+
+def head_loss_grad(h: jax.Array, head_vec: jax.Array, labels: jax.Array,
+                   cfg: ModelConfig):
+    """Final norm + LM head + mean token cross-entropy.
+
+    h (b, s, d), labels (b, s) i32 -> (loss (), g_h (b, s, d)).
+    The head is frozen (no LoRA) so only the activation gradient crosses
+    back into the layer chain.
+    """
+
+    def loss_fn(h):
+        head = unflatten(head_vec, head_layout(cfg))
+        hn = rmsnorm(h, head["rms_f"], eps=cfg.rms_eps)
+        logits = jnp.matmul(hn, head["lm_head"])  # (b, s, vocab)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)
+        return jnp.mean(nll)
+
+    loss, g_h = jax.value_and_grad(loss_fn)(h)
+    return loss, g_h
+
+
+def adapter_sgd(lora_vec: jax.Array, grad: jax.Array, lr: jax.Array) -> jax.Array:
+    """SGD step on one layer's flat adapter vector; lr is a (1,) array so
+    the same compiled executable serves any learning-rate schedule."""
+    return lora_vec - lr[0] * grad
+
+
+# ---------------------------------------------------------------------------
+# fused whole-model train step (ablation A4: chaining overhead baseline)
+# ---------------------------------------------------------------------------
+
+
+def full_forward(tokens, embed, base_stack, lora_stack, head_vec,
+                 cfg: ModelConfig):
+    """Whole-model forward via lax.scan over the layer stack."""
+    h = embed_fwd(tokens, embed)
+
+    def body(h, vecs):
+        bvec, lvec = vecs
+        return layer_fwd(h, bvec, lvec, cfg), None
+
+    h, _ = jax.lax.scan(body, h, (base_stack, lora_stack))
+    head = unflatten(head_vec, head_layout(cfg))
+    hn = rmsnorm(h, head["rms_f"], eps=cfg.rms_eps)
+    return jnp.matmul(hn, head["lm_head"])
+
+
+def full_loss(tokens, labels, embed, base_stack, lora_stack, head_vec,
+              cfg: ModelConfig):
+    logits = full_forward(tokens, embed, base_stack, lora_stack, head_vec, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+def train_step(tokens, labels, embed, base_stack, lora_stack, head_vec, lr,
+               cfg: ModelConfig):
+    """One fused SGD step on all LoRA adapters: returns (loss, new stack)."""
+    loss, g = jax.value_and_grad(full_loss, argnums=4)(
+        tokens, labels, embed, base_stack, lora_stack, head_vec, cfg
+    )
+    return loss, lora_stack - lr[0] * g

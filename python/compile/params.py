@@ -1,0 +1,174 @@
+"""Parameter layouts: structured pytrees <-> flat f32 vectors.
+
+The Rust coordinator owns all state as flat f32 buffers (one per layer
+for the frozen base weights, one per layer for the trainable LoRA
+adapters, plus embed/head).  The HLO segment artifacts take those flat
+vectors as arguments and unflatten them internally with static slices —
+XLA folds the slicing away, and Rust never needs to know tensor shapes
+beyond the manifest's layout table (exported by ``aot.py``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+
+# ---------------------------------------------------------------------------
+# layout tables: (name, shape) in flat-vector order
+# ---------------------------------------------------------------------------
+
+
+def base_layer_layout(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...]]]:
+    d, f = cfg.d_model, cfg.d_ff
+    return [
+        ("wq", (d, d)),
+        ("wk", (d, d)),
+        ("wv", (d, d)),
+        ("wo", (d, d)),
+        ("w_gate", (d, f)),
+        ("w_up", (d, f)),
+        ("w_down", (f, d)),
+        ("rms1", (d,)),
+        ("rms2", (d,)),
+    ]
+
+
+# projections carrying LoRA adapters, with (in_dim, out_dim) resolvers
+LORA_PROJS: tuple[str, ...] = ("q", "k", "v", "o", "gate", "up", "down")
+
+
+def _proj_dims(cfg: ModelConfig, proj: str) -> tuple[int, int]:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "q": (d, d), "k": (d, d), "v": (d, d), "o": (d, d),
+        "gate": (d, f), "up": (d, f), "down": (f, d),
+    }[proj]
+
+
+def lora_layer_layout(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...]]]:
+    r = cfg.lora_rank
+    out: list[tuple[str, tuple[int, ...]]] = []
+    for proj in LORA_PROJS:
+        din, dout = _proj_dims(cfg, proj)
+        out.append((f"a_{proj}", (din, r)))
+        out.append((f"b_{proj}", (r, dout)))
+    return out
+
+
+def head_layout(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...]]]:
+    return [("rms_f", (cfg.d_model,)), ("lm_head", (cfg.d_model, cfg.vocab_size))]
+
+
+def layout_len(layout: list[tuple[str, tuple[int, ...]]]) -> int:
+    total = 0
+    for _, shape in layout:
+        n = 1
+        for s in shape:
+            n *= s
+        total += n
+    return total
+
+
+def layout_offsets(
+    layout: list[tuple[str, tuple[int, ...]]]
+) -> list[tuple[str, int, tuple[int, ...]]]:
+    """(name, offset, shape) triples — exported into manifest.json."""
+    out, off = [], 0
+    for name, shape in layout:
+        n = 1
+        for s in shape:
+            n *= s
+        out.append((name, off, shape))
+        off += n
+    return out
+
+
+# ---------------------------------------------------------------------------
+# flatten / unflatten
+# ---------------------------------------------------------------------------
+
+
+def flatten(tree: dict[str, jax.Array], layout) -> jax.Array:
+    return jnp.concatenate([tree[name].reshape(-1) for name, _ in layout])
+
+
+def unflatten(vec: jax.Array, layout) -> dict[str, jax.Array]:
+    out, off = {}, 0
+    for name, shape in layout:
+        n = 1
+        for s in shape:
+            n *= s
+        out[name] = jax.lax.slice(vec, (off,), (off + n,)).reshape(shape)
+        off += n
+    return out
+
+
+# ---------------------------------------------------------------------------
+# initialization
+# ---------------------------------------------------------------------------
+
+
+def init_base_layer(key: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Random 'pre-trained' base weights (frozen): scaled-normal matrices,
+    unit RMS gains."""
+    parts = {}
+    for i, (name, shape) in enumerate(base_layer_layout(cfg)):
+        k = jax.random.fold_in(key, i)
+        if name.startswith("rms"):
+            parts[name] = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[0]
+            parts[name] = (
+                jax.random.normal(k, shape, jnp.float32) * (fan_in ** -0.5)
+            )
+    return flatten(parts, base_layer_layout(cfg))
+
+
+def init_lora_layer(key: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Standard LoRA init: A ~ N(0, 0.02²), B = 0 (adapter starts as a
+    no-op; the paper initializes adapters randomly — Stage 0)."""
+    parts = {}
+    for i, (name, shape) in enumerate(lora_layer_layout(cfg)):
+        k = jax.random.fold_in(key, i)
+        if name.startswith("a_"):
+            parts[name] = jax.random.normal(k, shape, jnp.float32) * 0.02
+        else:
+            parts[name] = jnp.zeros(shape, jnp.float32)
+    return flatten(parts, lora_layer_layout(cfg))
+
+
+def init_embed(key: jax.Array, cfg: ModelConfig) -> jax.Array:
+    return jax.random.normal(
+        key, (cfg.vocab_size, cfg.d_model), jnp.float32
+    ) * (cfg.d_model ** -0.5)
+
+
+def init_head(key: jax.Array, cfg: ModelConfig) -> jax.Array:
+    parts = {
+        "rms_f": jnp.ones((cfg.d_model,), jnp.float32),
+        "lm_head": jax.random.normal(
+            key, (cfg.d_model, cfg.vocab_size), jnp.float32
+        )
+        * (cfg.d_model ** -0.5),
+    }
+    return flatten(parts, head_layout(cfg))
+
+
+def init_all(seed: int, cfg: ModelConfig) -> dict[str, jax.Array]:
+    """Full model state: embed, per-layer base stack, per-layer LoRA
+    stack, head vec."""
+    key = jax.random.key(seed)
+    base = jnp.stack(
+        [init_base_layer(jax.random.fold_in(key, 100 + i), cfg) for i in range(cfg.n_layers)]
+    )
+    lora = jnp.stack(
+        [init_lora_layer(jax.random.fold_in(key, 200 + i), cfg) for i in range(cfg.n_layers)]
+    )
+    return {
+        "embed": init_embed(jax.random.fold_in(key, 0), cfg),
+        "base": base,
+        "lora": lora,
+        "head": init_head(jax.random.fold_in(key, 1), cfg),
+    }

@@ -1,0 +1,73 @@
+"""Independent pure-jnp reference of the full model (no Pallas).
+
+Used by pytest as an end-to-end oracle for the L2 segments: identical
+parameters in -> allclose logits/loss/grads out.  Deliberately written
+against ``kernels.ref`` so a bug in the Pallas kernels or the segment
+plumbing cannot cancel itself out.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels.ref import lora_matmul_ref, rmsnorm_ref
+from .layers import apply_rope, rope_angles
+from .params import (
+    base_layer_layout,
+    head_layout,
+    lora_layer_layout,
+    unflatten,
+)
+
+
+def _proj(h, base, lora, name, cfg):
+    w = base[f"w{name}" if name in ("q", "k", "v", "o") else f"w_{name}"]
+    return lora_matmul_ref(
+        h, w, lora[f"a_{name}"], lora[f"b_{name}"], alpha=cfg.lora_scale
+    )
+
+
+def ref_decoder_layer(h, base_vec, lora_vec, cfg: ModelConfig):
+    base = unflatten(base_vec, base_layer_layout(cfg))
+    lora = unflatten(lora_vec, lora_layer_layout(cfg))
+    b, s, d = h.shape
+    nh, hd = cfg.n_heads, cfg.head_dim
+
+    x = rmsnorm_ref(h, base["rms1"], eps=cfg.rms_eps)
+    q = _proj(x, base, lora, "q", cfg).reshape(b, s, nh, hd)
+    k = _proj(x, base, lora, "k", cfg).reshape(b, s, nh, hd)
+    v = _proj(x, base, lora, "v", cfg).reshape(b, s, nh, hd)
+    ang = rope_angles(cfg)[:s]
+    q, k = apply_rope(q, ang), apply_rope(k, ang)
+    scores = jnp.einsum("bihd,bjhd->bhij", q, k) / jnp.sqrt(float(hd))
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    ctx = jnp.einsum(
+        "bhij,bjhd->bihd", jax.nn.softmax(scores, axis=-1), v
+    ).reshape(b, s, d)
+    h = h + _proj(ctx, base, lora, "o", cfg)
+
+    x = rmsnorm_ref(h, base["rms2"], eps=cfg.rms_eps)
+    g = _proj(x, base, lora, "gate", cfg)
+    u = _proj(x, base, lora, "up", cfg)
+    h = h + _proj(jax.nn.silu(g) * u, base, lora, "down", cfg)
+    return h
+
+
+def ref_forward(tokens, embed, base_stack, lora_stack, head_vec,
+                cfg: ModelConfig):
+    h = embed[tokens]
+    for i in range(cfg.n_layers):
+        h = ref_decoder_layer(h, base_stack[i], lora_stack[i], cfg)
+    head = unflatten(head_vec, head_layout(cfg))
+    hn = rmsnorm_ref(h, head["rms_f"], eps=cfg.rms_eps)
+    return jnp.matmul(hn, head["lm_head"])
+
+
+def ref_loss(tokens, labels, embed, base_stack, lora_stack, head_vec,
+             cfg: ModelConfig):
+    logits = ref_forward(tokens, embed, base_stack, lora_stack, head_vec, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return jnp.mean(-jnp.take_along_axis(logp, labels[..., None], axis=-1))

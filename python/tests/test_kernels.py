@@ -1,0 +1,281 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+This is the CORE correctness signal for the compute layer — hypothesis
+sweeps shapes/ranks/alphas/block sizes and asserts allclose against
+``kernels.ref``, for both the forward values and the custom-VJP
+gradients.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    lora_matmul,
+    mxu_utilization_estimate,
+    rmsnorm,
+    vmem_footprint_bytes,
+)
+from compile.kernels.ref import lora_matmul_ref, rmsnorm_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, *shape, scale=1.0):
+    return jax.random.normal(jax.random.key(key), shape) * scale
+
+
+# ---------------------------------------------------------------------------
+# lora_matmul forward
+# ---------------------------------------------------------------------------
+
+
+class TestLoraMatmulForward:
+    def test_matches_ref_square(self):
+        x, w = _rand(0, 64, 64), _rand(1, 64, 64)
+        a, b = _rand(2, 64, 8), _rand(3, 8, 64)
+        np.testing.assert_allclose(
+            lora_matmul(x, w, a, b), lora_matmul_ref(x, w, a, b), rtol=1e-5, atol=1e-4
+        )
+
+    def test_alpha_zero_is_base_gemm(self):
+        x, w = _rand(0, 32, 48), _rand(1, 48, 40)
+        a, b = _rand(2, 48, 4), _rand(3, 4, 40)
+        np.testing.assert_allclose(
+            lora_matmul(x, w, a, b, alpha=0.0),
+            jnp.matmul(x, w),
+            rtol=1e-5,
+            atol=1e-4,
+        )
+
+    def test_zero_base_is_scaled_lora(self):
+        x = _rand(0, 16, 24)
+        w = jnp.zeros((24, 20))
+        a, b = _rand(1, 24, 4), _rand(2, 4, 20)
+        np.testing.assert_allclose(
+            lora_matmul(x, w, a, b, alpha=2.0),
+            2.0 * (x @ a) @ b,
+            rtol=1e-5,
+            atol=1e-4,
+        )
+
+    def test_batched_input_3d(self):
+        x = _rand(0, 4, 16, 32)
+        w, a, b = _rand(1, 32, 24), _rand(2, 32, 8), _rand(3, 8, 24)
+        y = lora_matmul(x, w, a, b, alpha=0.7)
+        assert y.shape == (4, 16, 24)
+        np.testing.assert_allclose(
+            y, lora_matmul_ref(x, w, a, b, alpha=0.7), rtol=1e-5, atol=1e-4
+        )
+
+    def test_rank_one_adapter(self):
+        x, w = _rand(0, 8, 8), _rand(1, 8, 8)
+        a, b = _rand(2, 8, 1), _rand(3, 1, 8)
+        np.testing.assert_allclose(
+            lora_matmul(x, w, a, b), lora_matmul_ref(x, w, a, b), rtol=1e-5, atol=1e-4
+        )
+
+    def test_single_row(self):
+        x, w = _rand(0, 1, 64), _rand(1, 64, 32)
+        a, b = _rand(2, 64, 8), _rand(3, 8, 32)
+        np.testing.assert_allclose(
+            lora_matmul(x, w, a, b), lora_matmul_ref(x, w, a, b), rtol=1e-5, atol=1e-4
+        )
+
+    def test_explicit_blocks_partition_k(self):
+        # K split across 4 grid steps exercises the accumulator init/epilogue.
+        x, w = _rand(0, 32, 128), _rand(1, 128, 64)
+        a, b = _rand(2, 128, 8), _rand(3, 8, 64)
+        y = lora_matmul(x, w, a, b, alpha=0.3, bm=16, bn=32, bk=32)
+        np.testing.assert_allclose(
+            y, lora_matmul_ref(x, w, a, b, alpha=0.3), rtol=1e-5, atol=1e-4
+        )
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.sampled_from([1, 3, 8, 17, 64]),
+        k=st.sampled_from([4, 16, 48, 128]),
+        n=st.sampled_from([2, 8, 40, 96]),
+        r=st.sampled_from([1, 2, 4, 8, 16]),
+        alpha=st.sampled_from([0.0, 0.5, 1.0, 2.0]),
+    )
+    def test_hypothesis_shape_sweep(self, m, k, n, r, alpha):
+        x, w = _rand(m * 7 + 1, m, k), _rand(k * 5 + 2, k, n)
+        a, b = _rand(n * 3 + 3, k, r, scale=0.3), _rand(r + 4, r, n, scale=0.3)
+        np.testing.assert_allclose(
+            lora_matmul(x, w, a, b, alpha=alpha),
+            lora_matmul_ref(x, w, a, b, alpha=alpha),
+            rtol=1e-4,
+            atol=1e-3,
+        )
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        bm=st.sampled_from([8, 16, 32, 64]),
+        bn=st.sampled_from([8, 16, 32, 64]),
+        bk=st.sampled_from([8, 16, 32, 64]),
+    )
+    def test_hypothesis_block_sweep(self, bm, bn, bk):
+        # Result must be block-shape independent.
+        x, w = _rand(0, 64, 64), _rand(1, 64, 64)
+        a, b = _rand(2, 64, 8, scale=0.3), _rand(3, 8, 64, scale=0.3)
+        np.testing.assert_allclose(
+            lora_matmul(x, w, a, b, bm=bm, bn=bn, bk=bk),
+            lora_matmul_ref(x, w, a, b),
+            rtol=1e-4,
+            atol=1e-3,
+        )
+
+    def test_bf16_inputs_accumulate_f32(self):
+        x = _rand(0, 32, 64).astype(jnp.bfloat16)
+        w = _rand(1, 64, 32).astype(jnp.bfloat16)
+        a, b = _rand(2, 64, 8), _rand(3, 8, 32)
+        y = lora_matmul(x, w, a, b)
+        assert y.dtype == jnp.float32
+        np.testing.assert_allclose(
+            y, lora_matmul_ref(x, w, a, b), rtol=2e-2, atol=2e-1
+        )
+
+
+# ---------------------------------------------------------------------------
+# lora_matmul gradients (custom VJP)
+# ---------------------------------------------------------------------------
+
+
+class TestLoraMatmulGrad:
+    def _setup(self):
+        x = _rand(0, 4, 8, 32)
+        w = _rand(1, 32, 24)
+        a, b = _rand(2, 32, 4, scale=0.2), _rand(3, 4, 24, scale=0.2)
+        return x, w, a, b
+
+    def test_grads_match_ref_autodiff(self):
+        x, w, a, b = self._setup()
+
+        def f(x, a, b):
+            return jnp.sum(jnp.tanh(lora_matmul(x, w, a, b, alpha=0.5)))
+
+        def fr(x, a, b):
+            return jnp.sum(jnp.tanh(lora_matmul_ref(x, w, a, b, alpha=0.5)))
+
+        got = jax.grad(f, argnums=(0, 1, 2))(x, a, b)
+        want = jax.grad(fr, argnums=(0, 1, 2))(x, a, b)
+        for g, r in zip(got, want):
+            np.testing.assert_allclose(g, r, rtol=1e-4, atol=1e-4)
+
+    def test_frozen_base_weight_grad_is_zero(self):
+        x, w, a, b = self._setup()
+        dw = jax.grad(lambda w: jnp.sum(lora_matmul(x, w, a, b)))(w)
+        assert float(jnp.abs(dw).max()) == 0.0
+
+    def test_grad_through_jit(self):
+        x, w, a, b = self._setup()
+        f = jax.jit(lambda x, a, b: jnp.sum(lora_matmul(x, w, a, b) ** 2))
+        g = jax.grad(f)(x, a, b)
+        assert g.shape == x.shape and bool(jnp.all(jnp.isfinite(g)))
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        m=st.sampled_from([2, 8, 16]),
+        r=st.sampled_from([1, 4, 8]),
+        alpha=st.sampled_from([0.25, 1.0]),
+    )
+    def test_hypothesis_grad_sweep(self, m, r, alpha):
+        x, w = _rand(10 + m, m, 16), _rand(11, 16, 12)
+        a, b = _rand(12 + r, 16, r, scale=0.3), _rand(13, r, 12, scale=0.3)
+
+        def f(a, b):
+            return jnp.sum(lora_matmul(x, w, a, b, alpha=alpha) ** 2)
+
+        def fr(a, b):
+            return jnp.sum(lora_matmul_ref(x, w, a, b, alpha=alpha) ** 2)
+
+        got = jax.grad(f, argnums=(0, 1))(a, b)
+        want = jax.grad(fr, argnums=(0, 1))(a, b)
+        for g, rr in zip(got, want):
+            np.testing.assert_allclose(g, rr, rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+
+class TestRmsNorm:
+    def test_matches_ref(self):
+        x, g = _rand(0, 16, 64), _rand(1, 64)
+        np.testing.assert_allclose(
+            rmsnorm(x, g), rmsnorm_ref(x, g), rtol=1e-5, atol=1e-5
+        )
+
+    def test_3d_input(self):
+        x, g = _rand(0, 2, 8, 32), _rand(1, 32)
+        y = rmsnorm(x, g)
+        assert y.shape == x.shape
+        np.testing.assert_allclose(y, rmsnorm_ref(x, g), rtol=1e-5, atol=1e-5)
+
+    def test_unit_gain_unit_rows(self):
+        # A row of constant v normalizes to ±1 with unit gain.
+        x = jnp.full((4, 16), 3.0)
+        y = rmsnorm(x, jnp.ones(16))
+        np.testing.assert_allclose(y, jnp.ones((4, 16)), rtol=1e-4)
+
+    def test_scale_invariance(self):
+        # rmsnorm(c·x) == rmsnorm(x) for c > 0 (up to eps).
+        x, g = _rand(0, 8, 48), _rand(1, 48)
+        np.testing.assert_allclose(
+            rmsnorm(100.0 * x, g), rmsnorm(x, g), rtol=1e-3, atol=1e-4
+        )
+
+    def test_grads_match_ref_autodiff(self):
+        x, g = _rand(0, 4, 6, 32), _rand(1, 32)
+
+        def f(x, g):
+            return jnp.sum(jnp.sin(rmsnorm(x, g)))
+
+        def fr(x, g):
+            return jnp.sum(jnp.sin(rmsnorm_ref(x, g)))
+
+        got = jax.grad(f, argnums=(0, 1))(x, g)
+        want = jax.grad(fr, argnums=(0, 1))(x, g)
+        for gg, rr in zip(got, want):
+            np.testing.assert_allclose(gg, rr, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        rows=st.sampled_from([1, 3, 16, 100]),
+        d=st.sampled_from([1, 4, 64, 129]),
+        scale=st.sampled_from([1e-3, 1.0, 1e3]),
+    )
+    def test_hypothesis_sweep(self, rows, d, scale):
+        x, g = _rand(rows, rows, d, scale=scale), _rand(d, d)
+        np.testing.assert_allclose(
+            rmsnorm(x, g), rmsnorm_ref(x, g), rtol=1e-4, atol=1e-4
+        )
+
+
+# ---------------------------------------------------------------------------
+# perf-model helpers (used by DESIGN.md §9 estimates)
+# ---------------------------------------------------------------------------
+
+
+class TestPerfModel:
+    def test_vmem_footprint_within_budget_for_default_blocks(self):
+        # Default 128³ tiles with r=16 must fit the ~16 MB VMEM budget.
+        assert vmem_footprint_bytes(128, 128, 128, 16) < 16 * 2**20
+
+    def test_footprint_monotone_in_blocks(self):
+        assert vmem_footprint_bytes(256, 128, 128, 8) > vmem_footprint_bytes(
+            128, 128, 128, 8
+        )
+
+    def test_mxu_utilization_aligned_tiles(self):
+        u = mxu_utilization_estimate(1024, 1024, 1024, 16, 128, 128)
+        assert 0.9 < u <= 1.0  # base GEMM fully aligned, small lora tax
+
+    def test_mxu_utilization_misaligned_tiles_worse(self):
+        good = mxu_utilization_estimate(1024, 1024, 1024, 16, 128, 128)
+        bad = mxu_utilization_estimate(1024, 1024, 1024, 16, 72, 72)
+        assert bad < good

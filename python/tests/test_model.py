@@ -1,0 +1,200 @@
+"""L2 correctness: split segments vs fused model vs independent pure-jnp
+reference, plus the training-dynamics sanity checks the split protocol
+relies on (Stage 3/4 of the paper's framework)."""
+
+import jax
+import jax.numpy as jnp
+import jax.random as jr
+import numpy as np
+import pytest
+
+from compile import model, params
+from compile.configs import CONFIGS
+from compile.ref_model import ref_forward, ref_loss
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = CONFIGS["nano"]
+
+
+@pytest.fixture(scope="module")
+def state():
+    st = params.init_all(0, CFG)
+    # randomize B matrices so adapters contribute (default init is B=0)
+    st["lora"] = st["lora"] + jr.normal(jr.key(9), st["lora"].shape) * 0.01
+    return st
+
+
+@pytest.fixture(scope="module")
+def batch():
+    tok = jr.randint(jr.key(1), (CFG.batch_size, CFG.seq_len), 0, CFG.vocab_size)
+    lab = jr.randint(jr.key(2), (CFG.batch_size, CFG.seq_len), 0, CFG.vocab_size)
+    return tok, lab
+
+
+def _chain_forward(st, tok):
+    """Device FP (embed + c layers) then server FP — at any cut the chain
+    is the same ops, so we run all layers and stash activations."""
+    h = model.embed_fwd(tok, st["embed"])
+    acts = [h]
+    for i in range(CFG.n_layers):
+        h = model.layer_fwd(h, st["base"][i], st["lora"][i], CFG)
+        acts.append(h)
+    return h, acts
+
+
+class TestForwardConsistency:
+    def test_fused_matches_independent_ref(self, state, batch):
+        tok, _ = batch
+        got = model.full_forward(
+            tok, state["embed"], state["base"], state["lora"], state["head"], CFG
+        )
+        want = ref_forward(
+            tok, state["embed"], state["base"], state["lora"], state["head"], CFG
+        )
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_chained_segments_match_fused_loss(self, state, batch):
+        tok, lab = batch
+        h, _ = _chain_forward(state, tok)
+        loss, _ = model.head_loss_grad(h, state["head"], lab, CFG)
+        fused = model.full_loss(
+            tok, lab, state["embed"], state["base"], state["lora"], state["head"], CFG
+        )
+        np.testing.assert_allclose(float(loss), float(fused), rtol=1e-5)
+
+    def test_embed_fwd_is_gather(self, state):
+        tok = jnp.array([[0, 1], [2, 3]], jnp.int32)
+        h = model.embed_fwd(tok, state["embed"])
+        np.testing.assert_allclose(h[0, 0], state["embed"][0])
+        np.testing.assert_allclose(h[1, 1], state["embed"][3])
+
+    def test_causality(self, state, batch):
+        """Future tokens must not influence past positions (decoder mask)."""
+        tok, _ = batch
+        h1, _ = _chain_forward(state, tok)
+        tok2 = tok.at[:, -1].set((tok[:, -1] + 1) % CFG.vocab_size)
+        h2, _ = _chain_forward(state, tok2)
+        np.testing.assert_allclose(
+            h1[:, : CFG.seq_len - 1], h2[:, : CFG.seq_len - 1], rtol=1e-4, atol=1e-5
+        )
+        assert float(jnp.abs(h1[:, -1] - h2[:, -1]).max()) > 1e-4
+
+    def test_lora_adapters_change_output(self, state, batch):
+        tok, _ = batch
+        h1, _ = _chain_forward(state, tok)
+        st2 = dict(state)
+        st2["lora"] = state["lora"] + 0.05
+        h2, _ = _chain_forward(st2, tok)
+        assert float(jnp.abs(h1 - h2).max()) > 1e-3
+
+
+class TestBackwardConsistency:
+    def test_chained_bwd_matches_fused_grad(self, state, batch):
+        tok, lab = batch
+        h, acts = _chain_forward(state, tok)
+        _, g = model.head_loss_grad(h, state["head"], lab, CFG)
+        per_layer = []
+        for i in reversed(range(CFG.n_layers)):
+            g, g_lora = model.layer_bwd(
+                acts[i], state["base"][i], state["lora"][i], g, CFG
+            )
+            per_layer.append(g_lora)
+        chained = jnp.stack(per_layer[::-1])
+        fused = jax.grad(model.full_loss, argnums=4)(
+            tok, lab, state["embed"], state["base"], state["lora"], state["head"], CFG
+        )
+        np.testing.assert_allclose(chained, fused, rtol=1e-4, atol=1e-6)
+
+    def test_fused_grad_matches_ref_autodiff(self, state, batch):
+        tok, lab = batch
+        got = jax.grad(model.full_loss, argnums=4)(
+            tok, lab, state["embed"], state["base"], state["lora"], state["head"], CFG
+        )
+        want = jax.grad(ref_loss, argnums=4)(
+            tok, lab, state["embed"], state["base"], state["lora"], state["head"], CFG
+        )
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-5)
+
+    def test_smashed_gradient_nonzero_at_every_cut(self, state, batch):
+        """Stage 4: the gradient crossing the cut must carry signal for
+        every feasible cut layer."""
+        tok, lab = batch
+        h, acts = _chain_forward(state, tok)
+        _, g = model.head_loss_grad(h, state["head"], lab, CFG)
+        for i in reversed(range(CFG.n_layers)):
+            assert float(jnp.abs(g).max()) > 0.0, f"zero smashed grad at layer {i}"
+            g, _ = model.layer_bwd(acts[i], state["base"][i], state["lora"][i], g, CFG)
+
+
+class TestTrainingDynamics:
+    def test_sgd_step_reduces_loss(self, state, batch):
+        tok, lab = batch
+        lr = jnp.array([0.5], jnp.float32)
+        loss0, lora1 = model.train_step(
+            tok, lab, state["embed"], state["base"], state["lora"], state["head"],
+            lr, CFG,
+        )
+        loss1, _ = model.train_step(
+            tok, lab, state["embed"], state["base"], lora1, state["head"], lr, CFG
+        )
+        assert float(loss1) < float(loss0)
+
+    def test_adapter_sgd_formula(self):
+        v = jnp.arange(8.0)
+        g = jnp.ones(8)
+        out = model.adapter_sgd(v, g, jnp.array([0.25]))
+        np.testing.assert_allclose(out, v - 0.25)
+
+    def test_loss_is_log_vocab_at_init_uniformish(self, batch):
+        """With B=0 LoRA init and random base, loss ≈ ln(vocab) ± slack."""
+        st = params.init_all(3, CFG)
+        tok, lab = batch
+        loss = model.full_loss(
+            tok, lab, st["embed"], st["base"], st["lora"], st["head"], CFG
+        )
+        assert abs(float(loss) - float(jnp.log(CFG.vocab_size))) < 2.0
+
+    def test_b_zero_init_means_identity_adapter(self, batch):
+        """Standard LoRA init (B=0): adapters are a no-op at step 0, so
+        zeroing A too must not change the forward."""
+        st = params.init_all(4, CFG)
+        tok, _ = batch
+        l1 = model.full_forward(tok, st["embed"], st["base"], st["lora"], st["head"], CFG)
+        l2 = model.full_forward(
+            tok, st["embed"], st["base"], jnp.zeros_like(st["lora"]), st["head"], CFG
+        )
+        np.testing.assert_allclose(l1, l2, rtol=1e-5, atol=1e-6)
+
+
+class TestParamLayouts:
+    def test_flat_lengths_match_config(self):
+        assert params.layout_len(params.base_layer_layout(CFG)) == CFG.base_layer_len
+        assert params.layout_len(params.lora_layer_layout(CFG)) == CFG.lora_layer_len
+        assert params.layout_len(params.head_layout(CFG)) == CFG.head_len
+
+    def test_flatten_unflatten_roundtrip(self):
+        key = jr.key(0)
+        layout = params.lora_layer_layout(CFG)
+        tree = {
+            name: jr.normal(jr.fold_in(key, i), shape)
+            for i, (name, shape) in enumerate(layout)
+        }
+        rt = params.unflatten(params.flatten(tree, layout), layout)
+        for name, _ in layout:
+            np.testing.assert_allclose(rt[name], tree[name])
+
+    def test_offsets_are_contiguous(self):
+        offs = params.layout_offsets(params.base_layer_layout(CFG))
+        running = 0
+        for name, off, shape in offs:
+            assert off == running
+            n = 1
+            for s in shape:
+                n *= s
+            running += n
+        assert running == CFG.base_layer_len
+
+    def test_all_compiled_configs_have_divisible_heads(self):
+        for name, cfg in CONFIGS.items():
+            assert cfg.d_model % cfg.n_heads == 0, name

@@ -1,0 +1,210 @@
+//! CLI substrate (no `clap` in the offline crate set): a small
+//! subcommand + flag parser with typed accessors and generated help.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown flag '--{0}' (see --help)")]
+    UnknownFlag(String),
+    #[error("flag '--{0}' expects a value")]
+    MissingValue(String),
+    #[error("flag '--{0}': cannot parse '{1}' as {2}")]
+    BadValue(String, String, &'static str),
+}
+
+/// Flag specification for help + validation.
+#[derive(Clone, Debug)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub value: Option<&'static str>, // None = boolean switch
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+}
+
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv` (without the program/subcommand) against `specs`.
+    pub fn parse(argv: &[String], specs: &[FlagSpec]) -> Result<Args, CliError> {
+        let mut flags = BTreeMap::new();
+        let mut positional = Vec::new();
+        let spec_of = |name: &str| specs.iter().find(|s| s.name == name);
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                // --flag=value
+                let (name, inline) = match name.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (name, None),
+                };
+                let spec =
+                    spec_of(name).ok_or_else(|| CliError::UnknownFlag(name.to_string()))?;
+                let value = if spec.value.is_some() {
+                    match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .cloned()
+                            .ok_or_else(|| CliError::MissingValue(name.to_string()))?,
+                    }
+                } else {
+                    "true".to_string()
+                };
+                flags.insert(name.to_string(), value);
+            } else {
+                positional.push(a.clone());
+            }
+        }
+        // fill defaults
+        for s in specs {
+            if let Some(d) = s.default {
+                flags.entry(s.name.to_string()).or_insert_with(|| d.to_string());
+            }
+        }
+        Ok(Args { flags, positional })
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn str_of(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn bool_of(&self, name: &str) -> bool {
+        matches!(self.str_of(name), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn f64_of(&self, name: &str) -> Result<Option<f64>, CliError> {
+        match self.flags.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| CliError::BadValue(name.into(), v.clone(), "number")),
+        }
+    }
+
+    pub fn usize_of(&self, name: &str) -> Result<Option<usize>, CliError> {
+        match self.flags.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| CliError::BadValue(name.into(), v.clone(), "integer")),
+        }
+    }
+
+    pub fn u64_of(&self, name: &str) -> Result<Option<u64>, CliError> {
+        match self.flags.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| CliError::BadValue(name.into(), v.clone(), "integer")),
+        }
+    }
+}
+
+pub fn render_help(program: &str, about: &str, subcommands: &[(&str, &str)], specs: &[FlagSpec]) -> String {
+    let mut s = format!("{program} — {about}\n\nUSAGE:\n  {program} <command> [flags]\n");
+    if !subcommands.is_empty() {
+        s.push_str("\nCOMMANDS:\n");
+        for (name, help) in subcommands {
+            s.push_str(&format!("  {name:<14} {help}\n"));
+        }
+    }
+    if !specs.is_empty() {
+        s.push_str("\nFLAGS:\n");
+        for f in specs {
+            let arg = match f.value {
+                Some(v) => format!("--{} <{v}>", f.name),
+                None => format!("--{}", f.name),
+            };
+            let default = f
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  {arg:<26} {}{default}\n", f.help));
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<FlagSpec> {
+        vec![
+            FlagSpec {
+                name: "rounds",
+                value: Some("N"),
+                help: "training rounds",
+                default: Some("20"),
+            },
+            FlagSpec {
+                name: "w",
+                value: Some("0..1"),
+                help: "cost weight",
+                default: None,
+            },
+            FlagSpec {
+                name: "verbose",
+                value: None,
+                help: "chatty",
+                default: None,
+            },
+        ]
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_positional() {
+        let a = Args::parse(&sv(&["fig3", "--rounds", "7", "--verbose"]), &specs()).unwrap();
+        assert_eq!(a.positional(), &["fig3".to_string()]);
+        assert_eq!(a.usize_of("rounds").unwrap(), Some(7));
+        assert!(a.bool_of("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax_and_defaults() {
+        let a = Args::parse(&sv(&["--w=0.4"]), &specs()).unwrap();
+        assert_eq!(a.f64_of("w").unwrap(), Some(0.4));
+        assert_eq!(a.usize_of("rounds").unwrap(), Some(20)); // default
+    }
+
+    #[test]
+    fn rejects_unknown_and_bad_values() {
+        assert!(matches!(
+            Args::parse(&sv(&["--bogus"]), &specs()),
+            Err(CliError::UnknownFlag(_))
+        ));
+        assert!(matches!(
+            Args::parse(&sv(&["--rounds", "xyz"]), &specs())
+                .unwrap()
+                .usize_of("rounds"),
+            Err(CliError::BadValue(..))
+        ));
+        assert!(matches!(
+            Args::parse(&sv(&["--rounds"]), &specs()),
+            Err(CliError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn help_renders() {
+        let h = render_help("edgesplit", "about", &[("fig3", "fig3 help")], &specs());
+        assert!(h.contains("--rounds <N>"));
+        assert!(h.contains("fig3 help"));
+        assert!(h.contains("[default: 20]"));
+    }
+}

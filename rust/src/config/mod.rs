@@ -1,0 +1,10 @@
+//! Configuration system: TOML-subset parser + typed schema with the
+//! paper's Table I / Table II defaults.
+
+pub mod schema;
+pub mod toml;
+
+pub use schema::{
+    CardSpec, ChannelSpec, ChannelState, ConfigError, DeviceSpec, ExpConfig, ServerSpec,
+    WorkloadSpec,
+};

@@ -1,0 +1,499 @@
+//! Typed experiment configuration + the paper's default parameterization.
+//!
+//! Defaults encode Table I (server/device specs) and Table II (simulation
+//! parameters) exactly; everything is overridable from a TOML file
+//! (`--config`) and/or CLI flags (see `cli`).
+
+use crate::util::json::Json;
+
+use super::toml::{self, TomlError};
+
+/// Channel states used in Fig. 4 — pathloss exponents 2/4/6 (§V-B).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChannelState {
+    Good,
+    Normal,
+    Poor,
+}
+
+impl ChannelState {
+    pub fn pathloss_exp(self) -> f64 {
+        match self {
+            ChannelState::Good => 2.0,
+            ChannelState::Normal => 4.0,
+            ChannelState::Poor => 6.0,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "good" => Some(ChannelState::Good),
+            "normal" => Some(ChannelState::Normal),
+            "poor" => Some(ChannelState::Poor),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ChannelState::Good => "Good",
+            ChannelState::Normal => "Normal",
+            ChannelState::Poor => "Poor",
+        }
+    }
+
+    pub const ALL: [ChannelState; 3] =
+        [ChannelState::Good, ChannelState::Normal, ChannelState::Poor];
+}
+
+/// Edge-server compute spec (Table I row 1 + Table II δ^S, ξ).
+#[derive(Clone, Debug)]
+pub struct ServerSpec {
+    pub platform: String,
+    /// F^S_max — maximum GPU core frequency [Hz]
+    pub max_freq_hz: f64,
+    /// σ^S — GPU core count
+    pub cores: f64,
+    /// δ^S — FLOPs per core per cycle
+    pub flops_per_cycle: f64,
+    /// ξ — power coefficient [W/(Hz)³]: P = ξ·f³ (Eq. 11)
+    pub xi: f64,
+}
+
+impl Default for ServerSpec {
+    fn default() -> Self {
+        Self {
+            platform: "Nvidia RTX 4060Ti".into(),
+            max_freq_hz: 2.46e9,
+            cores: 3072.0,
+            flops_per_cycle: 2.0,
+            xi: 1e-25,
+        }
+    }
+}
+
+impl ServerSpec {
+    /// Peak throughput f·δ·σ [FLOP/s] at frequency `f`.
+    pub fn throughput(&self, f_hz: f64) -> f64 {
+        f_hz * self.flops_per_cycle * self.cores
+    }
+}
+
+/// Edge-device compute spec (Table I rows 2-6 + Table II δ^D_m).
+#[derive(Clone, Debug)]
+pub struct DeviceSpec {
+    pub name: String,
+    pub platform: String,
+    /// f^D_m — GPU core frequency [Hz] (devices run at a fixed clock)
+    pub freq_hz: f64,
+    /// σ^D_m — GPU core count
+    pub cores: f64,
+    /// δ^D_m — FLOPs per core per cycle
+    pub flops_per_cycle: f64,
+    /// distance to the AP [m] (simulated placement; see DESIGN.md §2)
+    pub distance_m: f64,
+}
+
+impl DeviceSpec {
+    /// Peak throughput f·δ·σ [FLOP/s].
+    pub fn throughput(&self) -> f64 {
+        self.freq_hz * self.flops_per_cycle * self.cores
+    }
+
+    /// F^{m,S}_min = f^D_m δ^D_m σ^D_m / (δ^S σ^S) — the paper's server
+    /// frequency floor (server must out-compute the device).
+    pub fn server_freq_floor(&self, server: &ServerSpec) -> f64 {
+        self.throughput() / (server.flops_per_cycle * server.cores)
+    }
+}
+
+/// Table I defaults.  Distances are the simulated placements (5–45 m
+/// from the AP) used for every figure; they are config-overridable.
+pub fn default_devices() -> Vec<DeviceSpec> {
+    let mk = |name: &str, platform: &str, ghz: f64, cores: f64, dist: f64| DeviceSpec {
+        name: name.into(),
+        platform: platform.into(),
+        freq_hz: ghz * 1e9,
+        cores,
+        flops_per_cycle: 2.0,
+        distance_m: dist,
+    };
+    vec![
+        mk("Device 1", "Jetson AGX Orin", 1.3, 2048.0, 10.0),
+        mk("Device 2", "Jetson AGX Orin", 1.0, 2048.0, 15.0),
+        mk("Device 3", "Jetson AGX Orin", 0.7, 1792.0, 20.0),
+        mk("Device 4", "Jetson Orin NX", 0.7, 1024.0, 25.0),
+        mk("Device 5", "Jetson AGX Nano", 0.5, 512.0, 30.0),
+    ]
+}
+
+/// Wireless channel parameterization (3GPP-flavoured; DESIGN.md §6).
+#[derive(Clone, Debug)]
+pub struct ChannelSpec {
+    /// per-link bandwidth B [Hz]
+    pub bandwidth_hz: f64,
+    /// device TX power [dBm] (uplink)
+    pub tx_power_device_dbm: f64,
+    /// AP TX power [dBm] (downlink)
+    pub tx_power_ap_dbm: f64,
+    /// thermal noise density [dBm/Hz]
+    pub noise_dbm_per_hz: f64,
+    /// receiver noise figure [dB]
+    pub noise_figure_db: f64,
+    /// reference pathloss at d0 [dB]
+    pub pl0_db: f64,
+    /// reference distance [m]
+    pub d0_m: f64,
+    /// Rayleigh block fading per round on/off
+    pub fading: bool,
+}
+
+impl Default for ChannelSpec {
+    fn default() -> Self {
+        Self {
+            bandwidth_hz: 100e6,
+            tx_power_device_dbm: 23.0,
+            tx_power_ap_dbm: 30.0,
+            noise_dbm_per_hz: -174.0,
+            noise_figure_db: 9.0,
+            pl0_db: 40.0,
+            d0_m: 1.0,
+            fading: true,
+        }
+    }
+}
+
+/// Fine-tuning workload (Table II + §V setup).
+#[derive(Clone, Debug)]
+pub struct WorkloadSpec {
+    /// model architecture for the cost model ("llama1b" for figures)
+    pub arch: String,
+    /// mini-batch size (sequences)
+    pub batch_size: usize,
+    /// sequence length (tokens)
+    pub seq_len: usize,
+    /// T_{m,n} — local epochs per round
+    pub local_epochs: usize,
+    /// N — training rounds
+    pub rounds: usize,
+    /// φ — compression ratio for smashed data & gradient
+    pub phi: f64,
+}
+
+impl Default for WorkloadSpec {
+    fn default() -> Self {
+        Self {
+            arch: "llama1b".into(),
+            batch_size: 8,
+            seq_len: 512,
+            local_epochs: 5,
+            rounds: 20,
+            phi: 0.1,
+        }
+    }
+}
+
+/// CARD algorithm knobs (Table II).
+#[derive(Clone, Debug)]
+pub struct CardSpec {
+    /// w — delay/energy weighting in Eq. (12)
+    pub w: f64,
+}
+
+impl Default for CardSpec {
+    fn default() -> Self {
+        Self { w: 0.2 }
+    }
+}
+
+/// Top-level experiment configuration.
+#[derive(Clone, Debug, Default)]
+pub struct ExpConfig {
+    pub server: ServerSpec,
+    pub devices: Vec<DeviceSpec>,
+    pub channel: ChannelSpec,
+    pub workload: WorkloadSpec,
+    pub card: CardSpec,
+    pub seed: u64,
+}
+
+impl ExpConfig {
+    /// Paper defaults (Tables I + II).
+    pub fn paper() -> Self {
+        Self {
+            server: ServerSpec::default(),
+            devices: default_devices(),
+            channel: ChannelSpec::default(),
+            workload: WorkloadSpec::default(),
+            card: CardSpec::default(),
+            seed: 7,
+        }
+    }
+
+    /// Load from a TOML file, starting from paper defaults — every key
+    /// optional.  Unknown keys are rejected to catch typos.
+    pub fn from_toml_str(text: &str) -> Result<Self, ConfigError> {
+        let tree = toml::parse(text)?;
+        let mut cfg = ExpConfig::paper();
+        apply_tree(&mut cfg, &tree)?;
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &str) -> Result<Self, ConfigError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| ConfigError::Io(path.to_string(), e.to_string()))?;
+        Self::from_toml_str(&text)
+    }
+
+    /// Sanity bounds — called after any override layer.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        let inval = |msg: String| Err(ConfigError::Invalid(msg));
+        if !(0.0..=1.0).contains(&self.card.w) {
+            return inval(format!("card.w must be in [0,1], got {}", self.card.w));
+        }
+        if !(0.0..=1.0).contains(&self.workload.phi) {
+            return inval(format!("workload.phi must be in (0,1], got {}", self.workload.phi));
+        }
+        if self.devices.is_empty() {
+            return inval("at least one device required".into());
+        }
+        if self.workload.local_epochs == 0 || self.workload.rounds == 0 {
+            return inval("local_epochs and rounds must be >= 1".into());
+        }
+        for d in &self.devices {
+            if d.server_freq_floor(&self.server) > self.server.max_freq_hz {
+                return inval(format!(
+                    "{}: F_min ({:.3e}) exceeds server F_max ({:.3e}) — the paper \
+                     assumes the server out-computes every device",
+                    d.name,
+                    d.server_freq_floor(&self.server),
+                    self.server.max_freq_hz
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("failed to read {0}: {1}")]
+    Io(String, String),
+    #[error(transparent)]
+    Toml(#[from] TomlError),
+    #[error("invalid config: {0}")]
+    Invalid(String),
+    #[error("unknown config key: {0}")]
+    UnknownKey(String),
+}
+
+// ---------------------------------------------------------------------------
+// tree -> struct application (explicit, so typos are caught)
+// ---------------------------------------------------------------------------
+
+fn apply_tree(cfg: &mut ExpConfig, tree: &Json) -> Result<(), ConfigError> {
+    let obj = tree
+        .as_obj()
+        .ok_or_else(|| ConfigError::Invalid("root must be a table".into()))?;
+    for (key, val) in obj {
+        match key.as_str() {
+            "server" => apply_server(&mut cfg.server, val)?,
+            "devices" => {
+                let arr = val
+                    .as_arr()
+                    .ok_or_else(|| ConfigError::Invalid("devices must be [[devices]]".into()))?;
+                cfg.devices = arr
+                    .iter()
+                    .map(parse_device)
+                    .collect::<Result<Vec<_>, _>>()?;
+            }
+            "channel" => apply_channel(&mut cfg.channel, val)?,
+            "workload" => apply_workload(&mut cfg.workload, val)?,
+            "card" => apply_card(&mut cfg.card, val)?,
+            "sim" => {
+                for (k, v) in val.as_obj().into_iter().flatten() {
+                    match k.as_str() {
+                        "seed" => cfg.seed = num(v, "sim.seed")? as u64,
+                        _ => return Err(ConfigError::UnknownKey(format!("sim.{k}"))),
+                    }
+                }
+            }
+            _ => return Err(ConfigError::UnknownKey(key.clone())),
+        }
+    }
+    Ok(())
+}
+
+fn num(v: &Json, what: &str) -> Result<f64, ConfigError> {
+    v.as_f64()
+        .ok_or_else(|| ConfigError::Invalid(format!("{what} must be a number")))
+}
+
+fn string(v: &Json, what: &str) -> Result<String, ConfigError> {
+    v.as_str()
+        .map(|s| s.to_string())
+        .ok_or_else(|| ConfigError::Invalid(format!("{what} must be a string")))
+}
+
+fn apply_server(s: &mut ServerSpec, val: &Json) -> Result<(), ConfigError> {
+    for (k, v) in val.as_obj().into_iter().flatten() {
+        match k.as_str() {
+            "platform" => s.platform = string(v, "server.platform")?,
+            "max_freq_ghz" => s.max_freq_hz = num(v, "server.max_freq_ghz")? * 1e9,
+            "cores" => s.cores = num(v, "server.cores")?,
+            "flops_per_cycle" => s.flops_per_cycle = num(v, "server.flops_per_cycle")?,
+            "xi" => s.xi = num(v, "server.xi")?,
+            _ => return Err(ConfigError::UnknownKey(format!("server.{k}"))),
+        }
+    }
+    Ok(())
+}
+
+fn parse_device(val: &Json) -> Result<DeviceSpec, ConfigError> {
+    let mut d = DeviceSpec {
+        name: "device".into(),
+        platform: "unknown".into(),
+        freq_hz: 1e9,
+        cores: 1024.0,
+        flops_per_cycle: 2.0,
+        distance_m: 20.0,
+    };
+    for (k, v) in val.as_obj().into_iter().flatten() {
+        match k.as_str() {
+            "name" => d.name = string(v, "devices.name")?,
+            "platform" => d.platform = string(v, "devices.platform")?,
+            "freq_ghz" => d.freq_hz = num(v, "devices.freq_ghz")? * 1e9,
+            "cores" => d.cores = num(v, "devices.cores")?,
+            "flops_per_cycle" => d.flops_per_cycle = num(v, "devices.flops_per_cycle")?,
+            "distance_m" => d.distance_m = num(v, "devices.distance_m")?,
+            _ => return Err(ConfigError::UnknownKey(format!("devices.{k}"))),
+        }
+    }
+    Ok(d)
+}
+
+fn apply_channel(c: &mut ChannelSpec, val: &Json) -> Result<(), ConfigError> {
+    for (k, v) in val.as_obj().into_iter().flatten() {
+        match k.as_str() {
+            "bandwidth_mhz" => c.bandwidth_hz = num(v, "channel.bandwidth_mhz")? * 1e6,
+            "tx_power_device_dbm" => c.tx_power_device_dbm = num(v, k)?,
+            "tx_power_ap_dbm" => c.tx_power_ap_dbm = num(v, k)?,
+            "noise_dbm_per_hz" => c.noise_dbm_per_hz = num(v, k)?,
+            "noise_figure_db" => c.noise_figure_db = num(v, k)?,
+            "pl0_db" => c.pl0_db = num(v, k)?,
+            "d0_m" => c.d0_m = num(v, k)?,
+            "fading" => {
+                c.fading = matches!(v, Json::Bool(true));
+            }
+            _ => return Err(ConfigError::UnknownKey(format!("channel.{k}"))),
+        }
+    }
+    Ok(())
+}
+
+fn apply_workload(w: &mut WorkloadSpec, val: &Json) -> Result<(), ConfigError> {
+    for (k, v) in val.as_obj().into_iter().flatten() {
+        match k.as_str() {
+            "arch" => w.arch = string(v, "workload.arch")?,
+            "batch_size" => w.batch_size = num(v, k)? as usize,
+            "seq_len" => w.seq_len = num(v, k)? as usize,
+            "local_epochs" => w.local_epochs = num(v, k)? as usize,
+            "rounds" => w.rounds = num(v, k)? as usize,
+            "phi" => w.phi = num(v, k)?,
+            _ => return Err(ConfigError::UnknownKey(format!("workload.{k}"))),
+        }
+    }
+    Ok(())
+}
+
+fn apply_card(c: &mut CardSpec, val: &Json) -> Result<(), ConfigError> {
+    for (k, v) in val.as_obj().into_iter().flatten() {
+        match k.as_str() {
+            "w" => c.w = num(v, "card.w")?,
+            _ => return Err(ConfigError::UnknownKey(format!("card.{k}"))),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_defaults_match_tables() {
+        let c = ExpConfig::paper();
+        // Table I
+        assert_eq!(c.server.max_freq_hz, 2.46e9);
+        assert_eq!(c.server.cores, 3072.0);
+        assert_eq!(c.devices.len(), 5);
+        assert_eq!(c.devices[0].freq_hz, 1.3e9);
+        assert_eq!(c.devices[4].cores, 512.0);
+        // Table II
+        assert_eq!(c.server.flops_per_cycle, 2.0);
+        assert_eq!(c.server.xi, 1e-25);
+        assert_eq!(c.card.w, 0.2);
+        assert_eq!(c.workload.local_epochs, 5);
+        assert_eq!(c.workload.phi, 0.1);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn toml_overrides() {
+        let c = ExpConfig::from_toml_str(
+            r#"
+            [card]
+            w = 0.5
+            [workload]
+            rounds = 3
+            [channel]
+            bandwidth_mhz = 20
+            [[devices]]
+            name = "solo"
+            freq_ghz = 0.9
+            cores = 256
+            "#,
+        )
+        .unwrap();
+        assert_eq!(c.card.w, 0.5);
+        assert_eq!(c.workload.rounds, 3);
+        assert_eq!(c.channel.bandwidth_hz, 20e6);
+        assert_eq!(c.devices.len(), 1);
+        assert_eq!(c.devices[0].freq_hz, 0.9e9);
+        // untouched defaults survive
+        assert_eq!(c.workload.phi, 0.1);
+    }
+
+    #[test]
+    fn unknown_keys_rejected() {
+        assert!(matches!(
+            ExpConfig::from_toml_str("[card]\nweight = 0.5\n"),
+            Err(ConfigError::UnknownKey(_))
+        ));
+        assert!(matches!(
+            ExpConfig::from_toml_str("[bogus]\nx = 1\n"),
+            Err(ConfigError::UnknownKey(_))
+        ));
+    }
+
+    #[test]
+    fn validation_bounds() {
+        let mut c = ExpConfig::paper();
+        c.card.w = 1.5;
+        assert!(c.validate().is_err());
+        c = ExpConfig::paper();
+        c.devices.clear();
+        assert!(c.validate().is_err());
+        c = ExpConfig::paper();
+        c.devices[0].freq_hz = 1e12; // faster than the server
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn server_freq_floor_formula() {
+        let c = ExpConfig::paper();
+        // Device 1: 1.3e9 * 2 * 2048 / (2 * 3072)
+        let f = c.devices[0].server_freq_floor(&c.server);
+        assert!((f - 1.3e9 * 2048.0 / 3072.0).abs() < 1.0);
+    }
+}

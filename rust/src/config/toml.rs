@@ -1,0 +1,281 @@
+//! TOML-subset parser (no `serde`/`toml` offline) producing a
+//! `util::json::Json` tree, so typed extraction is shared with the
+//! manifest loader.
+//!
+//! Supported grammar (everything the shipped configs use):
+//!   * `[section]`, `[nested.section]`, `[[array.of.tables]]`
+//!   * `key = "string" | 123 | 1.5e3 | true | false | [scalars, ...]`
+//!   * `#` comments, blank lines
+//! Unsupported (rejected loudly): inline tables, multi-line strings,
+//! datetimes, dotted keys on the left-hand side.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error at line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+pub fn parse(text: &str) -> Result<Json, TomlError> {
+    let mut root: BTreeMap<String, Json> = BTreeMap::new();
+    // current insertion path: (path segments, is_array_of_tables)
+    let mut path: Vec<String> = Vec::new();
+    let mut in_array_table = false;
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |msg: &str| TomlError {
+            line: lineno + 1,
+            msg: msg.to_string(),
+        };
+
+        if let Some(inner) = line.strip_prefix("[[").and_then(|s| s.strip_suffix("]]")) {
+            path = inner.split('.').map(|s| s.trim().to_string()).collect();
+            if path.iter().any(|s| s.is_empty()) {
+                return Err(err("empty segment in table name"));
+            }
+            in_array_table = true;
+            // push a fresh element onto the array at `path`
+            let arr = resolve_array(&mut root, &path).map_err(|m| err(&m))?;
+            arr.push(Json::Obj(BTreeMap::new()));
+        } else if let Some(inner) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            path = inner.split('.').map(|s| s.trim().to_string()).collect();
+            if path.iter().any(|s| s.is_empty()) {
+                return Err(err("empty segment in table name"));
+            }
+            in_array_table = false;
+            resolve_table(&mut root, &path).map_err(|m| err(&m))?;
+        } else if let Some(eq) = find_eq(line) {
+            let key = line[..eq].trim();
+            let val_src = line[eq + 1..].trim();
+            if key.is_empty() {
+                return Err(err("empty key"));
+            }
+            let value = parse_value(val_src).map_err(|m| err(&m))?;
+            let table = if in_array_table {
+                last_array_elem(&mut root, &path).map_err(|m| err(&m))?
+            } else {
+                resolve_table(&mut root, &path).map_err(|m| err(&m))?
+            };
+            if table.insert(key.to_string(), value).is_some() {
+                return Err(err(&format!("duplicate key '{key}'")));
+            }
+        } else {
+            return Err(err("expected `[section]` or `key = value`"));
+        }
+    }
+    Ok(Json::Obj(root))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // respect '#' inside quoted strings
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn find_eq(line: &str) -> Option<usize> {
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '=' if !in_str => return Some(i),
+            _ => {}
+        }
+    }
+    None
+}
+
+fn resolve_table<'a>(
+    root: &'a mut BTreeMap<String, Json>,
+    path: &[String],
+) -> Result<&'a mut BTreeMap<String, Json>, String> {
+    let mut cur = root;
+    for seg in path {
+        let entry = cur
+            .entry(seg.clone())
+            .or_insert_with(|| Json::Obj(BTreeMap::new()));
+        cur = match entry {
+            Json::Obj(m) => m,
+            Json::Arr(v) => match v.last_mut() {
+                Some(Json::Obj(m)) => m,
+                _ => return Err(format!("'{seg}' is not a table")),
+            },
+            _ => return Err(format!("'{seg}' is not a table")),
+        };
+    }
+    Ok(cur)
+}
+
+fn resolve_array<'a>(
+    root: &'a mut BTreeMap<String, Json>,
+    path: &[String],
+) -> Result<&'a mut Vec<Json>, String> {
+    let (last, prefix) = path.split_last().ok_or("empty path")?;
+    let parent = resolve_table(root, prefix)?;
+    let entry = parent
+        .entry(last.clone())
+        .or_insert_with(|| Json::Arr(Vec::new()));
+    match entry {
+        Json::Arr(v) => Ok(v),
+        _ => Err(format!("'{last}' is not an array of tables")),
+    }
+}
+
+fn last_array_elem<'a>(
+    root: &'a mut BTreeMap<String, Json>,
+    path: &[String],
+) -> Result<&'a mut BTreeMap<String, Json>, String> {
+    let arr = resolve_array(root, path)?;
+    match arr.last_mut() {
+        Some(Json::Obj(m)) => Ok(m),
+        _ => Err("array of tables has no open element".to_string()),
+    }
+}
+
+fn parse_value(src: &str) -> Result<Json, String> {
+    if src.is_empty() {
+        return Err("missing value".to_string());
+    }
+    if let Some(inner) = src.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or("unterminated string")?;
+        if inner.contains('"') {
+            return Err("embedded quote in string (escapes unsupported)".to_string());
+        }
+        return Ok(Json::Str(inner.to_string()));
+    }
+    if src == "true" {
+        return Ok(Json::Bool(true));
+    }
+    if src == "false" {
+        return Ok(Json::Bool(false));
+    }
+    if let Some(inner) = src.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+        let mut out = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in split_top_level(trimmed) {
+                out.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(Json::Arr(out));
+    }
+    // number (allow underscores like 2_048)
+    let cleaned: String = src.chars().filter(|&c| c != '_').collect();
+    cleaned
+        .parse::<f64>()
+        .map(Json::Num)
+        .map_err(|_| format!("unparseable value: '{src}'"))
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, ch) in s.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sections_and_scalars() {
+        let t = parse(
+            r#"
+            # comment
+            top = 1
+            [server]
+            max_freq_ghz = 2.46   # trailing comment
+            cores = 3_072
+            name = "RTX 4060Ti"
+            [card]
+            enabled = true
+            "#,
+        )
+        .unwrap();
+        assert_eq!(t.at(&["top"]).unwrap().as_f64(), Some(1.0));
+        assert_eq!(t.at(&["server", "cores"]).unwrap().as_f64(), Some(3072.0));
+        assert_eq!(
+            t.at(&["server", "name"]).unwrap().as_str(),
+            Some("RTX 4060Ti")
+        );
+        assert_eq!(t.at(&["card", "enabled"]).unwrap(), &Json::Bool(true));
+    }
+
+    #[test]
+    fn array_of_tables() {
+        let t = parse(
+            r#"
+            [[devices]]
+            name = "d1"
+            freq = 1.3
+            [[devices]]
+            name = "d2"
+            freq = 1.0
+            "#,
+        )
+        .unwrap();
+        let devs = t.at(&["devices"]).unwrap().as_arr().unwrap();
+        assert_eq!(devs.len(), 2);
+        assert_eq!(devs[1].get("name").unwrap().as_str(), Some("d2"));
+    }
+
+    #[test]
+    fn nested_sections() {
+        let t = parse("[a.b]\nx = 2\n[a.c]\ny = 3\n").unwrap();
+        assert_eq!(t.at(&["a", "b", "x"]).unwrap().as_f64(), Some(2.0));
+        assert_eq!(t.at(&["a", "c", "y"]).unwrap().as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn arrays() {
+        let t = parse("xs = [1, 2, 3]\nnames = [\"a\", \"b\"]\nempty = []\n").unwrap();
+        assert_eq!(t.at(&["xs"]).unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(t.at(&["empty"]).unwrap().as_arr().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn rejects_bad_syntax() {
+        assert!(parse("just words\n").is_err());
+        assert!(parse("[unclosed\n").is_err());
+        assert!(parse("k = \n").is_err());
+        assert!(parse("k = 1\nk = 2\n").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let t = parse("k = \"a#b\"\n").unwrap();
+        assert_eq!(t.at(&["k"]).unwrap().as_str(), Some("a#b"));
+    }
+}

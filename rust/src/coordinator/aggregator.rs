@@ -1,0 +1,168 @@
+//! Adapter aggregation & version bookkeeping — Stage 5, Eq. (6).
+//!
+//! The paper trains devices sequentially against one shared adapter set:
+//! after T local epochs the device uploads its device-side adapters
+//! R^{D,T} and the server concatenates them with its own R^{S,T}
+//! (Eq. 6), so the merged R becomes the starting point for the next
+//! device.  This module tracks that merge: per-layer ownership (which
+//! side last updated each layer), staleness, and the Stage-2/5 payload
+//! ledger.  The actual numeric adapter state lives in the runtime
+//! executor; this is the coordinator's control-plane view.
+
+/// Which side of the split last wrote a layer's adapters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Owner {
+    Device(usize),
+    Server,
+}
+
+#[derive(Clone, Debug)]
+pub struct LayerVersion {
+    pub owner: Owner,
+    /// round index of the last update
+    pub round: usize,
+    /// total updates applied to this layer
+    pub updates: u64,
+}
+
+/// Control-plane view of the shared LoRA adapter stack.
+#[derive(Clone, Debug)]
+pub struct Aggregator {
+    pub layers: Vec<LayerVersion>,
+    /// cumulative Stage-2 (downlink) adapter bytes
+    pub bytes_distributed: f64,
+    /// cumulative Stage-5 (uplink) adapter bytes
+    pub bytes_collected: f64,
+    merges: u64,
+}
+
+impl Aggregator {
+    pub fn new(n_layers: usize) -> Self {
+        Self {
+            layers: vec![
+                LayerVersion {
+                    owner: Owner::Server,
+                    round: 0,
+                    updates: 0,
+                };
+                n_layers
+            ],
+            bytes_distributed: 0.0,
+            bytes_collected: 0.0,
+            merges: 0,
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Stage 1+2: the split at cut `c` hands layers [0, c) to `device`.
+    /// Returns the number of layers distributed (payload accounting is
+    /// the caller's A(c)).
+    pub fn distribute(&mut self, device: usize, cut: usize, round: usize, bytes: f64) -> usize {
+        assert!(cut <= self.layers.len(), "cut beyond model depth");
+        for l in &mut self.layers[..cut] {
+            l.owner = Owner::Device(device);
+            l.round = round;
+        }
+        self.bytes_distributed += bytes;
+        cut
+    }
+
+    /// Stage 4 server-side updates: layers [c, I) were updated by the
+    /// server during this round's BP.
+    pub fn server_update(&mut self, cut: usize, round: usize) {
+        for l in &mut self.layers[cut..] {
+            l.owner = Owner::Server;
+            l.round = round;
+            l.updates += 1;
+        }
+    }
+
+    /// Stage 5, Eq. (6): merge device-side adapters back.  After the
+    /// merge every layer is server-owned (the server holds R complete).
+    pub fn merge(&mut self, device: usize, cut: usize, round: usize, bytes: f64) {
+        for l in &mut self.layers[..cut] {
+            debug_assert_eq!(l.owner, Owner::Device(device), "merge from non-owner");
+            l.owner = Owner::Server;
+            l.round = round;
+            l.updates += 1;
+        }
+        self.bytes_collected += bytes;
+        self.merges += 1;
+    }
+
+    /// All layers consistent at the server (invariant between rounds).
+    pub fn is_consistent(&self) -> bool {
+        self.layers.iter().all(|l| l.owner == Owner::Server)
+    }
+
+    /// Max round-lag across layers (0 = everything fresh this round).
+    pub fn staleness(&self, current_round: usize) -> usize {
+        self.layers
+            .iter()
+            .map(|l| current_round.saturating_sub(l.round))
+            .max()
+            .unwrap_or(0)
+    }
+
+    pub fn merges(&self) -> u64 {
+        self.merges
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_round_restores_consistency() {
+        let mut a = Aggregator::new(32);
+        a.distribute(2, 10, 1, 5e6);
+        assert!(!a.is_consistent());
+        a.server_update(10, 1);
+        a.merge(2, 10, 1, 5e6);
+        assert!(a.is_consistent());
+        assert_eq!(a.merges(), 1);
+    }
+
+    #[test]
+    fn update_counts_accumulate_everywhere() {
+        let mut a = Aggregator::new(8);
+        for round in 1..=3 {
+            a.distribute(0, 4, round, 1.0);
+            a.server_update(4, round);
+            a.merge(0, 4, round, 1.0);
+        }
+        // both halves of the model updated every round
+        assert!(a.layers.iter().all(|l| l.updates == 3));
+        assert_eq!(a.bytes_distributed, 3.0);
+        assert_eq!(a.bytes_collected, 3.0);
+    }
+
+    #[test]
+    fn cut_zero_touches_nothing_device_side() {
+        let mut a = Aggregator::new(8);
+        assert_eq!(a.distribute(1, 0, 1, 0.0), 0);
+        a.server_update(0, 1);
+        a.merge(1, 0, 1, 0.0);
+        assert!(a.is_consistent());
+        assert!(a.layers.iter().all(|l| l.updates == 1));
+    }
+
+    #[test]
+    fn staleness_tracks_oldest_layer() {
+        let mut a = Aggregator::new(4);
+        a.server_update(0, 5); // all updated at round 5
+        assert_eq!(a.staleness(5), 0);
+        assert_eq!(a.staleness(9), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "cut beyond model depth")]
+    fn distribute_validates_cut() {
+        let mut a = Aggregator::new(4);
+        a.distribute(0, 5, 1, 0.0);
+    }
+}

@@ -1,0 +1,201 @@
+//! Decision strategies: CARD plus the paper's two benchmarks (§V-B) and
+//! extra ablation strategies.
+//!
+//! * **ServerOnly** — "devices fine-tune the embedding module locally,
+//!   and the server handles the rest": c = 0, server at F_max (no
+//!   energy-aware scaling — that is exactly what CARD's 53.1 % energy
+//!   saving is measured against).
+//! * **DeviceOnly** — "devices fine-tune the embedding module and
+//!   transform decoders locally": c = I; the server only runs the head,
+//!   at its frequency floor.
+//! * **StaticCut(c)** — fixed split with CARD's frequency rule
+//!   (ablation: how much of the win is the *adaptive* cut?).
+//! * **RandomCut** — uniform cut per round with CARD's frequency rule.
+
+use crate::config::{DeviceSpec, ServerSpec};
+use crate::model::LinkRates;
+use crate::util::rng::Rng;
+
+use super::card::{Card, Decision};
+use super::cost::CostModel;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    Card,
+    ServerOnly,
+    DeviceOnly,
+    StaticCut(usize),
+    RandomCut,
+}
+
+impl Strategy {
+    pub fn name(&self) -> String {
+        match self {
+            Strategy::Card => "CARD (proposed)".into(),
+            Strategy::ServerOnly => "Server-only".into(),
+            Strategy::DeviceOnly => "Device-only".into(),
+            Strategy::StaticCut(c) => format!("Static-cut({c})"),
+            Strategy::RandomCut => "Random-cut".into(),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Strategy> {
+        match s.to_ascii_lowercase().as_str() {
+            "card" => Some(Strategy::Card),
+            "server-only" | "serveronly" => Some(Strategy::ServerOnly),
+            "device-only" | "deviceonly" => Some(Strategy::DeviceOnly),
+            "random" | "random-cut" => Some(Strategy::RandomCut),
+            other => other
+                .strip_prefix("static:")
+                .and_then(|c| c.parse().ok())
+                .map(Strategy::StaticCut),
+        }
+    }
+
+    /// Decide (cut, frequency) for one device-round.
+    pub fn decide(
+        &self,
+        cm: &CostModel,
+        server: &ServerSpec,
+        dev: &DeviceSpec,
+        rates: LinkRates,
+        rng: &mut Rng,
+    ) -> Decision {
+        let card = Card::new(cm, server);
+        let b = cm.bounds(dev, server, rates);
+        let fixed = |c: usize, f: f64| {
+            let (d, e) = cm.delay_energy(c, f, dev, server, rates);
+            Decision {
+                cut: c,
+                freq_hz: f,
+                cost: cm.cost(c, f, dev, server, rates, &b),
+                delay_s: d,
+                energy_j: e,
+            }
+        };
+        match *self {
+            Strategy::Card => card.decide(dev, rates),
+            Strategy::ServerOnly => fixed(0, server.max_freq_hz),
+            Strategy::DeviceOnly => fixed(cm.n_layers(), dev.server_freq_floor(server)),
+            Strategy::StaticCut(c) => {
+                let c = c.min(cm.n_layers());
+                fixed(c, card.optimal_frequency(dev, &b))
+            }
+            Strategy::RandomCut => {
+                let c = rng.below(cm.n_layers() as u64 + 1) as usize;
+                fixed(c, card.optimal_frequency(dev, &b))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExpConfig;
+    use crate::model::{DataSizeModel, DelayModel, EnergyModel, FlopModel, LlmArch};
+
+    fn setup() -> (CostModel, ExpConfig) {
+        let cfg = ExpConfig::paper();
+        let arch = LlmArch::llama1b();
+        let fl = FlopModel::new(&arch, &cfg.workload);
+        let cm = CostModel::new(
+            DelayModel::new(
+                fl.clone(),
+                DataSizeModel::new(&arch, &cfg.workload),
+                &cfg.workload,
+            ),
+            EnergyModel::new(fl, cfg.workload.local_epochs),
+            cfg.card.w,
+        );
+        (cm, cfg)
+    }
+
+    const RATES: LinkRates = LinkRates {
+        up_bps: 300e6,
+        down_bps: 500e6,
+    };
+
+    #[test]
+    fn card_never_worse_than_baselines() {
+        // CARD minimizes U over the joint feasible set that contains every
+        // baseline's operating point ⇒ its cost must be ≤ all of them.
+        let (cm, cfg) = setup();
+        let mut rng = Rng::new(0);
+        for dev in &cfg.devices {
+            let u_card = Strategy::Card
+                .decide(&cm, &cfg.server, dev, RATES, &mut rng)
+                .cost;
+            for s in [
+                Strategy::ServerOnly,
+                Strategy::DeviceOnly,
+                Strategy::StaticCut(16),
+                Strategy::RandomCut,
+            ] {
+                let u = s.decide(&cm, &cfg.server, dev, RATES, &mut rng).cost;
+                assert!(
+                    u_card <= u + 1e-9,
+                    "{}: CARD {} > {} {}",
+                    dev.name,
+                    u_card,
+                    s.name(),
+                    u
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn server_only_fastest_for_weak_devices() {
+        let (cm, cfg) = setup();
+        let mut rng = Rng::new(1);
+        let weak = &cfg.devices[4];
+        let so = Strategy::ServerOnly.decide(&cm, &cfg.server, weak, RATES, &mut rng);
+        let do_ = Strategy::DeviceOnly.decide(&cm, &cfg.server, weak, RATES, &mut rng);
+        assert!(so.delay_s < do_.delay_s);
+    }
+
+    #[test]
+    fn device_only_lowest_server_energy() {
+        let (cm, cfg) = setup();
+        let mut rng = Rng::new(2);
+        for dev in &cfg.devices {
+            let so = Strategy::ServerOnly.decide(&cm, &cfg.server, dev, RATES, &mut rng);
+            let do_ = Strategy::DeviceOnly.decide(&cm, &cfg.server, dev, RATES, &mut rng);
+            assert!(do_.energy_j < so.energy_j, "{}", dev.name);
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!(Strategy::parse("card"), Some(Strategy::Card));
+        assert_eq!(Strategy::parse("Server-Only"), Some(Strategy::ServerOnly));
+        assert_eq!(Strategy::parse("static:16"), Some(Strategy::StaticCut(16)));
+        assert_eq!(Strategy::parse("bogus"), None);
+    }
+
+    #[test]
+    fn static_cut_clamps() {
+        let (cm, cfg) = setup();
+        let mut rng = Rng::new(3);
+        let d = Strategy::StaticCut(999).decide(&cm, &cfg.server, &cfg.devices[0], RATES, &mut rng);
+        assert_eq!(d.cut, cm.n_layers());
+    }
+
+    #[test]
+    fn random_cut_varies() {
+        let (cm, cfg) = setup();
+        let mut rng = Rng::new(4);
+        let cuts: Vec<usize> = (0..30)
+            .map(|_| {
+                Strategy::RandomCut
+                    .decide(&cm, &cfg.server, &cfg.devices[0], RATES, &mut rng)
+                    .cut
+            })
+            .collect();
+        let mut uniq = cuts.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert!(uniq.len() > 5, "{cuts:?}");
+    }
+}

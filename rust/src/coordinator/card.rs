@@ -1,0 +1,316 @@
+//! The CARD algorithm — Cut lAyer and computing Resource Decision
+//! (Alg. 1, Eqs. 14–16).
+//!
+//! Problem P2 (per device, per round) decomposes into:
+//!  * **upper layer** (P3): optimal server GPU frequency.  U(f) is
+//!    convex in f (delay ∝ 1/f, energy ∝ f²), so the stationary point
+//!    is the closed form of Eq. (16):
+//!
+//!    ```text
+//!    f* = clamp( Q,  F^{m,S}_min, F^S_max ),   Q = ∛( w·ΔE / (2ξ(1−w)·ΔD) )
+//!    ```
+//!    — see `optimal_frequency`.
+//!
+//!    Note Q is independent of the cut layer c (both the delay and
+//!    energy f-terms scale with the same η−η_D(c) factor), which is why
+//!    Alg. 1 computes f* ONCE before the cut scan.
+//!  * **lower layer** (P4): U(c) is non-convex in the general case, and
+//!    c ranges over {0..I} — brute-force scan, O(I) total.
+
+use crate::config::{DeviceSpec, ServerSpec};
+use crate::model::LinkRates;
+
+use super::cost::{Bounds, CostModel};
+
+/// A CARD (or baseline) decision for one device-round.
+#[derive(Clone, Copy, Debug)]
+pub struct Decision {
+    /// c* — selected cut layer ∈ {0..I}
+    pub cut: usize,
+    /// (f^S)* — selected server GPU frequency [Hz]
+    pub freq_hz: f64,
+    /// U(c*, f*) under this round's bounds
+    pub cost: f64,
+    /// realized round delay D [s] (Eq. 10)
+    pub delay_s: f64,
+    /// realized server energy E [J] (Eq. 11)
+    pub energy_j: f64,
+}
+
+pub struct Card<'a> {
+    pub cost_model: &'a CostModel,
+    pub server: &'a ServerSpec,
+}
+
+impl<'a> Card<'a> {
+    pub fn new(cost_model: &'a CostModel, server: &'a ServerSpec) -> Self {
+        Self { cost_model, server }
+    }
+
+    /// Eq. (16): closed-form optimal server frequency, clamped to
+    /// [F^{m,S}_min, F^S_max].
+    ///
+    /// Derivation (DESIGN.md §6): with D(f) = T·η_S/(f·δσ) + const and
+    /// E(f) = T·ξ·f²·η_S/(δσ),
+    ///   dU/df = 0  ⇒  f³ = w·ΔE / (2ξ(1−w)·ΔD)
+    /// — the η_S/(δσ) factors cancel between the two terms.
+    pub fn optimal_frequency(&self, dev: &DeviceSpec, b: &Bounds) -> f64 {
+        let w = self.cost_model.w;
+        let xi = self.server.xi;
+        let f_min = dev.server_freq_floor(self.server);
+        let f_max = self.server.max_freq_hz;
+        if w >= 1.0 {
+            return f_max; // pure delay objective
+        }
+        if w <= 0.0 {
+            return f_min; // pure energy objective
+        }
+        let q = (w * b.energy_span() / (2.0 * xi * (1.0 - w) * b.delay_span())).cbrt();
+        q.clamp(f_min, f_max)
+    }
+
+    /// Alg. 1: f* via Eq. (16), then brute-force scan c ∈ {0..I}.
+    pub fn decide(&self, dev: &DeviceSpec, rates: LinkRates) -> Decision {
+        let cm = self.cost_model;
+        let b = cm.bounds(dev, self.server, rates);
+        let f_star = self.optimal_frequency(dev, &b);
+
+        let mut best = Decision {
+            cut: 0,
+            freq_hz: f_star,
+            cost: f64::INFINITY,
+            delay_s: 0.0,
+            energy_j: 0.0,
+        };
+        for c in 0..=cm.n_layers() {
+            let u = cm.cost(c, f_star, dev, self.server, rates, &b);
+            if u < best.cost {
+                let (d, e) = cm.delay_energy(c, f_star, dev, self.server, rates);
+                best = Decision {
+                    cut: c,
+                    freq_hz: f_star,
+                    cost: u,
+                    delay_s: d,
+                    energy_j: e,
+                };
+            }
+        }
+        best
+    }
+
+    /// Exhaustive 2-D reference search (cut × dense frequency grid) —
+    /// the oracle the tests hold `decide` against.
+    pub fn decide_bruteforce_2d(&self, dev: &DeviceSpec, rates: LinkRates, grid: usize) -> Decision {
+        let cm = self.cost_model;
+        let b = cm.bounds(dev, self.server, rates);
+        let f_min = dev.server_freq_floor(self.server);
+        let f_max = self.server.max_freq_hz;
+        let mut best = Decision {
+            cut: 0,
+            freq_hz: f_min,
+            cost: f64::INFINITY,
+            delay_s: 0.0,
+            energy_j: 0.0,
+        };
+        for c in 0..=cm.n_layers() {
+            for k in 0..=grid {
+                let f = f_min + (f_max - f_min) * k as f64 / grid as f64;
+                let u = cm.cost(c, f, dev, self.server, rates, &b);
+                if u < best.cost {
+                    let (d, e) = cm.delay_energy(c, f, dev, self.server, rates);
+                    best = Decision {
+                        cut: c,
+                        freq_hz: f,
+                        cost: u,
+                        delay_s: d,
+                        energy_j: e,
+                    };
+                }
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExpConfig;
+    use crate::coordinator::cost::CostModel;
+    use crate::model::{DataSizeModel, DelayModel, EnergyModel, FlopModel, LlmArch};
+
+    fn setup(w: f64) -> (CostModel, ExpConfig) {
+        let mut cfg = ExpConfig::paper();
+        cfg.card.w = w;
+        let arch = LlmArch::llama1b();
+        let fl = FlopModel::new(&arch, &cfg.workload);
+        let cm = CostModel::new(
+            DelayModel::new(
+                fl.clone(),
+                DataSizeModel::new(&arch, &cfg.workload),
+                &cfg.workload,
+            ),
+            EnergyModel::new(fl, cfg.workload.local_epochs),
+            w,
+        );
+        (cm, cfg)
+    }
+
+    const RATES: LinkRates = LinkRates {
+        up_bps: 300e6,
+        down_bps: 500e6,
+    };
+
+    #[test]
+    fn frequency_matches_numeric_optimum() {
+        // Closed form (Eq. 16) vs golden-section search on U(f) at fixed c.
+        let (cm, cfg) = setup(0.2);
+        let card = Card::new(&cm, &cfg.server);
+        for dev in &cfg.devices {
+            let b = cm.bounds(dev, &cfg.server, RATES);
+            let f_star = card.optimal_frequency(dev, &b);
+            // golden-section on [f_min, f_max]
+            let (mut lo, mut hi) = (
+                dev.server_freq_floor(&cfg.server),
+                cfg.server.max_freq_hz,
+            );
+            let g = 0.618_033_988_75;
+            let u = |f: f64| cm.cost(8, f, dev, &cfg.server, RATES, &b);
+            for _ in 0..200 {
+                let a = hi - g * (hi - lo);
+                let c2 = lo + g * (hi - lo);
+                if u(a) < u(c2) {
+                    hi = c2;
+                } else {
+                    lo = a;
+                }
+            }
+            let f_num = 0.5 * (lo + hi);
+            assert!(
+                (f_star - f_num).abs() / f_num < 1e-4,
+                "{}: closed {f_star:.4e} vs numeric {f_num:.4e}",
+                dev.name
+            );
+        }
+    }
+
+    #[test]
+    fn card_matches_2d_bruteforce() {
+        for w in [0.05, 0.2, 0.5, 0.8] {
+            let (cm, cfg) = setup(w);
+            let card = Card::new(&cm, &cfg.server);
+            for dev in &cfg.devices {
+                let fast = card.decide(dev, RATES);
+                let brute = card.decide_bruteforce_2d(dev, RATES, 400);
+                assert_eq!(fast.cut, brute.cut, "{} w={w}", dev.name);
+                // closed-form f* is at least as good as the finite grid,
+                // and within grid resolution of it
+                assert!(
+                    fast.cost <= brute.cost + 1e-9,
+                    "{} w={w}: CARD {} worse than grid {}",
+                    dev.name,
+                    fast.cost,
+                    brute.cost
+                );
+                assert!(
+                    brute.cost - fast.cost < 1e-4,
+                    "{} w={w}: grid {} too far from CARD {}",
+                    dev.name,
+                    brute.cost,
+                    fast.cost
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn decision_within_constraints() {
+        let (cm, cfg) = setup(0.2);
+        let card = Card::new(&cm, &cfg.server);
+        for dev in &cfg.devices {
+            let d = card.decide(dev, RATES);
+            assert!(d.cut <= cm.n_layers());
+            assert!(d.freq_hz >= dev.server_freq_floor(&cfg.server) - 1.0);
+            assert!(d.freq_hz <= cfg.server.max_freq_hz + 1.0);
+            assert!(d.cost.is_finite() && d.delay_s > 0.0 && d.energy_j >= 0.0);
+        }
+    }
+
+    #[test]
+    fn paper_endpoint_structure() {
+        // Fig. 3(a): "its optimal cut is either 32 or 0" — uniform layers
+        // make U(c) monotone, so the scan lands at an endpoint.
+        let (cm, cfg) = setup(0.2);
+        let card = Card::new(&cm, &cfg.server);
+        let i = cm.n_layers();
+        for dev in &cfg.devices {
+            let d = card.decide(dev, RATES);
+            assert!(
+                d.cut == 0 || d.cut == i,
+                "{}: interior cut {} (paper predicts endpoints)",
+                dev.name,
+                d.cut
+            );
+        }
+    }
+
+    #[test]
+    fn strong_devices_cut_high_weak_cut_low() {
+        // Fig. 3(a): as device capability decreases the optimal cut moves
+        // from 32 to 0.
+        let (cm, cfg) = setup(0.2);
+        let card = Card::new(&cm, &cfg.server);
+        let cuts: Vec<usize> = cfg
+            .devices
+            .iter()
+            .map(|d| card.decide(d, RATES).cut)
+            .collect();
+        assert_eq!(cuts[0], cm.n_layers(), "Device 1 should keep layers local");
+        assert_eq!(cuts[4], 0, "Device 5 should offload everything");
+        // monotone non-increasing across Table I's capability ordering
+        for w in cuts.windows(2) {
+            assert!(w[0] >= w[1], "cuts not monotone: {cuts:?}");
+        }
+    }
+
+    #[test]
+    fn weight_extremes() {
+        // w→1: minimize delay only — strongest server frequency.
+        let (cm, cfg) = setup(1.0);
+        let card = Card::new(&cm, &cfg.server);
+        let d = card.decide(&cfg.devices[2], RATES);
+        assert!((d.freq_hz - cfg.server.max_freq_hz).abs() < 1.0);
+        // w→0: minimize energy only — frequency floor and full offloadING
+        // avoided (energy minimal at c=I).
+        let (cm0, cfg0) = setup(0.0);
+        let card0 = Card::new(&cm0, &cfg0.server);
+        let d0 = card0.decide(&cfg0.devices[2], RATES);
+        assert!((d0.freq_hz - cfg0.devices[2].server_freq_floor(&cfg0.server)).abs() < 1.0);
+        assert_eq!(d0.cut, cm0.n_layers());
+    }
+
+    #[test]
+    fn q_independent_of_cut() {
+        // The Eq. 16 stationary point must not depend on c: verify the
+        // numeric optimum at two different cuts coincides.
+        let (cm, cfg) = setup(0.3);
+        let dev = &cfg.devices[1];
+        let b = cm.bounds(dev, &cfg.server, RATES);
+        let opt_at = |c: usize| {
+            let mut best = (f64::INFINITY, 0.0);
+            for k in 0..=2000 {
+                let f = dev.server_freq_floor(&cfg.server)
+                    + (cfg.server.max_freq_hz - dev.server_freq_floor(&cfg.server)) * k as f64
+                        / 2000.0;
+                let u = cm.cost(c, f, dev, &cfg.server, RATES, &b);
+                if u < best.0 {
+                    best = (u, f);
+                }
+            }
+            best.1
+        };
+        let f8 = opt_at(8);
+        let f24 = opt_at(24);
+        assert!((f8 - f24).abs() / f8 < 5e-3, "{f8:.4e} vs {f24:.4e}");
+    }
+}

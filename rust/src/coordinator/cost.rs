@@ -1,0 +1,181 @@
+//! The CARD cost function — Eq. (12) — and its normalization bounds.
+//!
+//!   U(f, c) = w·(D − D_min)/(D_max − D_min)
+//!           + (1−w)·(E − E_min)/(E_max − E_min)
+//!
+//! Bounds follow the paper exactly (§III-C): (D_max, E_min) at
+//! (c = I, f = F^{m,S}_min); (D_min, E_max) at (c = 0, f = F^S_max).
+//! They are per-device, per-round quantities because they depend on the
+//! realized link rates.
+
+use crate::config::{DeviceSpec, ServerSpec};
+use crate::model::{DelayModel, EnergyModel, LinkRates};
+
+/// Per-round normalization bounds for one device.
+#[derive(Clone, Copy, Debug)]
+pub struct Bounds {
+    pub d_min: f64,
+    pub d_max: f64,
+    pub e_min: f64,
+    pub e_max: f64,
+}
+
+impl Bounds {
+    pub fn delay_span(&self) -> f64 {
+        (self.d_max - self.d_min).max(f64::MIN_POSITIVE)
+    }
+
+    pub fn energy_span(&self) -> f64 {
+        (self.e_max - self.e_min).max(f64::MIN_POSITIVE)
+    }
+}
+
+/// Cost-model bundle shared by CARD and every baseline strategy.
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    pub delay: DelayModel,
+    pub energy: EnergyModel,
+    /// w — Eq. (12) weighting
+    pub w: f64,
+}
+
+impl CostModel {
+    pub fn new(delay: DelayModel, energy: EnergyModel, w: f64) -> Self {
+        Self { delay, energy, w }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.delay.flops.arch.n_layers
+    }
+
+    /// Paper's normalization corners (§III-C).
+    pub fn bounds(&self, dev: &DeviceSpec, server: &ServerSpec, rates: LinkRates) -> Bounds {
+        let i = self.n_layers();
+        let f_min = dev.server_freq_floor(server);
+        let f_max = server.max_freq_hz;
+        Bounds {
+            d_max: self.delay.round(i, dev, server, f_min, rates),
+            e_min: self.energy.round(i, server, f_min),
+            d_min: self.delay.round(0, dev, server, f_max, rates),
+            e_max: self.energy.round(0, server, f_max),
+        }
+    }
+
+    /// Eq. (12) for a concrete (c, f) under the given bounds.
+    pub fn cost(
+        &self,
+        c: usize,
+        f_hz: f64,
+        dev: &DeviceSpec,
+        server: &ServerSpec,
+        rates: LinkRates,
+        b: &Bounds,
+    ) -> f64 {
+        let d = self.delay.round(c, dev, server, f_hz, rates);
+        let e = self.energy.round(c, server, f_hz);
+        self.w * (d - b.d_min) / b.delay_span() + (1.0 - self.w) * (e - b.e_min) / b.energy_span()
+    }
+
+    /// (delay, energy) for a decision — used by the figure harnesses.
+    pub fn delay_energy(
+        &self,
+        c: usize,
+        f_hz: f64,
+        dev: &DeviceSpec,
+        server: &ServerSpec,
+        rates: LinkRates,
+    ) -> (f64, f64) {
+        (
+            self.delay.round(c, dev, server, f_hz, rates),
+            self.energy.round(c, server, f_hz),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExpConfig;
+    use crate::model::{DataSizeModel, FlopModel, LlmArch};
+
+    pub fn paper_cost_model() -> (CostModel, ExpConfig) {
+        let cfg = ExpConfig::paper();
+        let arch = LlmArch::llama1b();
+        let fl = FlopModel::new(&arch, &cfg.workload);
+        let cm = CostModel::new(
+            DelayModel::new(
+                fl.clone(),
+                DataSizeModel::new(&arch, &cfg.workload),
+                &cfg.workload,
+            ),
+            EnergyModel::new(fl, cfg.workload.local_epochs),
+            cfg.card.w,
+        );
+        (cm, cfg)
+    }
+
+    const RATES: LinkRates = LinkRates {
+        up_bps: 200e6,
+        down_bps: 400e6,
+    };
+
+    #[test]
+    fn bounds_are_ordered() {
+        let (cm, cfg) = paper_cost_model();
+        for dev in &cfg.devices {
+            let b = cm.bounds(dev, &cfg.server, RATES);
+            assert!(b.d_max > b.d_min, "{}: {b:?}", dev.name);
+            assert!(b.e_max > b.e_min, "{}: {b:?}", dev.name);
+        }
+    }
+
+    #[test]
+    fn cost_at_corners() {
+        let (cm, cfg) = paper_cost_model();
+        let dev = &cfg.devices[1];
+        let b = cm.bounds(dev, &cfg.server, RATES);
+        let i = cm.n_layers();
+        // corner (0, F_max): delay term 0, energy term 1 -> U = 1-w
+        let u1 = cm.cost(0, cfg.server.max_freq_hz, dev, &cfg.server, RATES, &b);
+        assert!((u1 - (1.0 - cm.w)).abs() < 1e-9, "u1={u1}");
+        // corner (I, F_min): delay term 1, energy term 0 -> U = w
+        let u2 = cm.cost(
+            i,
+            dev.server_freq_floor(&cfg.server),
+            dev,
+            &cfg.server,
+            RATES,
+            &b,
+        );
+        assert!((u2 - cm.w).abs() < 1e-9, "u2={u2}");
+    }
+
+    #[test]
+    fn weight_extremes_select_single_objective() {
+        let (mut cm, cfg) = paper_cost_model();
+        let dev = &cfg.devices[0];
+        let b = cm.bounds(dev, &cfg.server, RATES);
+        cm.w = 1.0; // delay only
+        let fast = cm.cost(0, cfg.server.max_freq_hz, dev, &cfg.server, RATES, &b);
+        let slow = cm.cost(
+            cm.n_layers(),
+            dev.server_freq_floor(&cfg.server),
+            dev,
+            &cfg.server,
+            RATES,
+            &b,
+        );
+        assert!(fast < slow);
+        cm.w = 0.0; // energy only: same corners flip
+        let fast = cm.cost(0, cfg.server.max_freq_hz, dev, &cfg.server, RATES, &b);
+        let slow = cm.cost(
+            cm.n_layers(),
+            dev.server_freq_floor(&cfg.server),
+            dev,
+            &cfg.server,
+            RATES,
+            &b,
+        );
+        assert!(slow < fast);
+    }
+}

@@ -1,0 +1,15 @@
+//! The paper's system contribution (L3): the CARD decision algorithm
+//! (Alg. 1, Eqs. 12–16), the split-learning round scheduler
+//! (Stages 1–5), baseline strategies, and adapter aggregation (Eq. 6).
+
+pub mod aggregator;
+pub mod baselines;
+pub mod card;
+pub mod cost;
+pub mod scheduler;
+
+pub use aggregator::Aggregator;
+pub use baselines::Strategy;
+pub use card::{Card, Decision};
+pub use cost::{Bounds, CostModel};
+pub use scheduler::{build_cost_model, BackendStats, RoundRecord, Scheduler, TrainBackend};

@@ -1,0 +1,173 @@
+//! Synthetic training corpus for the end-to-end split fine-tuning runs.
+//!
+//! The paper fine-tunes on "geo-distributed personal data" we do not
+//! have (DESIGN.md §2), so each device gets a *learnable* synthetic
+//! byte-level corpus: a device-specific mixture of template phrases
+//! (strong, learnable structure) corrupted with Zipf-distributed byte
+//! noise (vocabulary-shaped randomness).  Loss on this corpus drops
+//! quickly from ln(256) when the model learns, which is exactly the
+//! signal the E2E experiment needs.
+
+use crate::util::rng::{zipf_table, Rng};
+
+/// Template phrases shared across devices (the "common language"), with
+/// device-specific vocabulary injected to make data non-IID across
+/// devices as in the paper's setting.
+const TEMPLATES: [&str; 6] = [
+    "the quick brown fox jumps over the lazy dog. ",
+    "split learning places early layers on the device. ",
+    "low rank adapters make fine tuning cheap. ",
+    "edge servers trade energy for latency. ",
+    "the cut layer decides who computes what. ",
+    "wireless channels fade and rates change. ",
+];
+
+#[derive(Clone, Debug)]
+pub struct Corpus {
+    /// token stream (byte-level vocab, ids 0..=255)
+    pub tokens: Vec<u8>,
+}
+
+impl Corpus {
+    /// Build a device's corpus: `len` tokens, `noise` fraction of Zipf
+    /// bytes, device-tagged phrases.
+    pub fn synthetic(device_idx: usize, len: usize, noise: f64, rng: &mut Rng) -> Self {
+        let tag = format!("device {} says: ", device_idx + 1);
+        let ztab = zipf_table(256, 1.3);
+        let mut tokens = Vec::with_capacity(len + 128);
+        while tokens.len() < len {
+            if rng.f64() < noise {
+                // noise burst: 4–16 Zipf bytes
+                let n = 4 + rng.below(12) as usize;
+                for _ in 0..n {
+                    tokens.push(rng.zipf(256, 1.3, &ztab) as u8);
+                }
+            } else {
+                let t = TEMPLATES[rng.below(TEMPLATES.len() as u64) as usize];
+                tokens.extend_from_slice(tag.as_bytes());
+                tokens.extend_from_slice(t.as_bytes());
+            }
+        }
+        tokens.truncate(len);
+        Self { tokens }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+}
+
+/// Mini-batch sampler: random windows of `seq_len + 1` tokens, split
+/// into (input, next-token labels).
+#[derive(Clone, Debug)]
+pub struct Batcher {
+    corpus: Corpus,
+    pub batch_size: usize,
+    pub seq_len: usize,
+    rng: Rng,
+}
+
+impl Batcher {
+    pub fn new(corpus: Corpus, batch_size: usize, seq_len: usize, seed: u64) -> Self {
+        assert!(
+            corpus.len() > seq_len + 1,
+            "corpus ({}) shorter than seq_len+1 ({})",
+            corpus.len(),
+            seq_len + 1
+        );
+        Self {
+            corpus,
+            batch_size,
+            seq_len,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Returns (tokens, labels), each batch_size × seq_len i32, flattened
+    /// row-major — ready for the `embed_fwd` / `head_loss_grad` artifacts.
+    pub fn next_batch(&mut self) -> (Vec<i32>, Vec<i32>) {
+        let n = self.corpus.len();
+        let mut toks = Vec::with_capacity(self.batch_size * self.seq_len);
+        let mut labs = Vec::with_capacity(self.batch_size * self.seq_len);
+        for _ in 0..self.batch_size {
+            let start = self.rng.below((n - self.seq_len - 1) as u64) as usize;
+            let window = &self.corpus.tokens[start..start + self.seq_len + 1];
+            toks.extend(window[..self.seq_len].iter().map(|&b| b as i32));
+            labs.extend(window[1..].iter().map(|&b| b as i32));
+        }
+        (toks, labs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_exact_length_and_range() {
+        let mut rng = Rng::new(1);
+        let c = Corpus::synthetic(0, 10_000, 0.1, &mut rng);
+        assert_eq!(c.len(), 10_000);
+    }
+
+    #[test]
+    fn corpora_differ_across_devices() {
+        let mut r1 = Rng::new(2);
+        let mut r2 = Rng::new(2);
+        let a = Corpus::synthetic(0, 2000, 0.1, &mut r1);
+        let b = Corpus::synthetic(1, 2000, 0.1, &mut r2);
+        assert_ne!(a.tokens, b.tokens, "device tag must differentiate data");
+    }
+
+    #[test]
+    fn corpus_has_learnable_structure() {
+        // template text should dominate: printable ASCII >> high bytes
+        let mut rng = Rng::new(3);
+        let c = Corpus::synthetic(0, 20_000, 0.1, &mut rng);
+        let printable = c
+            .tokens
+            .iter()
+            .filter(|&&b| (32..127).contains(&b))
+            .count();
+        assert!(printable as f64 > 0.8 * c.len() as f64);
+    }
+
+    #[test]
+    fn batcher_shapes_and_shift() {
+        let mut rng = Rng::new(4);
+        let c = Corpus::synthetic(0, 5000, 0.0, &mut rng);
+        let mut b = Batcher::new(c, 4, 32, 9);
+        let (toks, labs) = b.next_batch();
+        assert_eq!(toks.len(), 4 * 32);
+        assert_eq!(labs.len(), 4 * 32);
+        // labels are inputs shifted by one within each row
+        for row in 0..4 {
+            for i in 0..31 {
+                assert_eq!(toks[row * 32 + i + 1], labs[row * 32 + i]);
+            }
+        }
+    }
+
+    #[test]
+    fn batches_vary() {
+        let mut rng = Rng::new(5);
+        let c = Corpus::synthetic(0, 5000, 0.2, &mut rng);
+        let mut b = Batcher::new(c, 2, 16, 10);
+        let (t1, _) = b.next_batch();
+        let (t2, _) = b.next_batch();
+        assert_ne!(t1, t2);
+    }
+
+    #[test]
+    #[should_panic(expected = "corpus")]
+    fn batcher_rejects_short_corpus() {
+        let c = Corpus {
+            tokens: vec![1, 2, 3],
+        };
+        Batcher::new(c, 1, 16, 0);
+    }
+}

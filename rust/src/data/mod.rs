@@ -1,0 +1,6 @@
+//! Data substrate: synthetic device corpora + mini-batch sampling for
+//! the real split fine-tuning runs.
+
+pub mod corpus;
+
+pub use corpus::{Batcher, Corpus};

@@ -1,0 +1,128 @@
+//! Device fleet: the set of edge devices participating in split
+//! fine-tuning, with helpers to synthesize larger heterogeneous fleets
+//! (used by examples/fleet_simulation.rs and the ablation benches).
+
+use crate::config::{DeviceSpec, ServerSpec};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Fleet {
+    pub devices: Vec<DeviceSpec>,
+}
+
+impl Fleet {
+    pub fn new(devices: Vec<DeviceSpec>) -> Self {
+        Self { devices }
+    }
+
+    /// The paper's 5-device testbed (Table I).
+    pub fn paper() -> Self {
+        Self::new(crate::config::schema::default_devices())
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    /// Synthesize `n` heterogeneous devices by sampling capability tiers
+    /// around the Table I range (0.4–1.4 GHz, 512–2048 cores) and
+    /// placements in [5, 45] m.
+    pub fn synthetic(n: usize, rng: &mut Rng) -> Self {
+        let tiers: [(&str, f64, f64); 4] = [
+            ("AGX Orin", 1.3, 2048.0),
+            ("AGX Orin", 1.0, 2048.0),
+            ("Orin NX", 0.7, 1024.0),
+            ("AGX Nano", 0.5, 512.0),
+        ];
+        let devices = (0..n)
+            .map(|i| {
+                let (plat, ghz, cores) = tiers[rng.below(tiers.len() as u64) as usize];
+                DeviceSpec {
+                    name: format!("Device {}", i + 1),
+                    platform: plat.to_string(),
+                    // ±10% silicon lottery around the tier clock
+                    freq_hz: ghz * 1e9 * rng.range(0.9, 1.1),
+                    cores,
+                    flops_per_cycle: 2.0,
+                    distance_m: rng.range(5.0, 45.0),
+                }
+            })
+            .collect();
+        Self::new(devices)
+    }
+
+    /// Largest server-frequency floor over the fleet — the binding
+    /// F^{m,S}_min constraint when serving every device.
+    pub fn max_freq_floor(&self, server: &ServerSpec) -> f64 {
+        self.devices
+            .iter()
+            .map(|d| d.server_freq_floor(server))
+            .fold(0.0, f64::max)
+    }
+
+    /// Devices sorted by compute capability (descending) — Fig. 3 is
+    /// indexed this way ("capabilities gradually decrease from Device 1
+    /// to Device 5").
+    pub fn by_capability(&self) -> Vec<&DeviceSpec> {
+        let mut v: Vec<&DeviceSpec> = self.devices.iter().collect();
+        v.sort_by(|a, b| b.throughput().partial_cmp(&a.throughput()).unwrap());
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_fleet_matches_table1() {
+        let f = Fleet::paper();
+        assert_eq!(f.len(), 5);
+        assert_eq!(f.devices[0].platform, "Jetson AGX Orin");
+        assert_eq!(f.devices[4].platform, "Jetson AGX Nano");
+        // capability strictly decreasing (Table I ordering)
+        let caps: Vec<f64> = f.devices.iter().map(|d| d.throughput()).collect();
+        for w in caps.windows(2) {
+            assert!(w[0] > w[1]);
+        }
+    }
+
+    #[test]
+    fn synthetic_fleet_properties() {
+        let mut rng = Rng::new(11);
+        let f = Fleet::synthetic(50, &mut rng);
+        assert_eq!(f.len(), 50);
+        for d in &f.devices {
+            assert!(d.freq_hz > 0.3e9 && d.freq_hz < 1.5e9);
+            assert!(d.distance_m >= 5.0 && d.distance_m < 45.0);
+        }
+        // heterogeneity: more than one distinct core count
+        let mut cores: Vec<u64> = f.devices.iter().map(|d| d.cores as u64).collect();
+        cores.sort_unstable();
+        cores.dedup();
+        assert!(cores.len() > 1);
+    }
+
+    #[test]
+    fn freq_floor_is_max_over_fleet() {
+        let f = Fleet::paper();
+        let s = ServerSpec::default();
+        let floor = f.max_freq_floor(&s);
+        assert!((floor - f.devices[0].server_freq_floor(&s)).abs() < 1.0);
+        assert!(floor < s.max_freq_hz);
+    }
+
+    #[test]
+    fn by_capability_sorted() {
+        let mut rng = Rng::new(12);
+        let f = Fleet::synthetic(20, &mut rng);
+        let sorted = f.by_capability();
+        for w in sorted.windows(2) {
+            assert!(w[0].throughput() >= w[1].throughput());
+        }
+    }
+}

@@ -1,0 +1,6 @@
+//! Device fleet management: Table I profiles plus synthetic
+//! heterogeneous fleets for scaling experiments.
+
+pub mod fleet;
+
+pub use fleet::Fleet;

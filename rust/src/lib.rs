@@ -1,0 +1,30 @@
+//! # edgesplit
+//!
+//! Production-grade reproduction of **"Energy-Efficient Split Learning
+//! for Fine-Tuning Large Language Models in Edge Networks"** (Li, Wu,
+//! Li, Zhang — IEEE Networking Letters 2024) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the split-learning coordinator: the CARD
+//!   cut-layer/frequency algorithm, round scheduler (Stages 1–5),
+//!   wireless-channel and device-fleet simulators, cost models
+//!   (Eqs. 7–12, 16), and a PJRT runtime that executes the real split
+//!   LoRA transformer from AOT-compiled HLO artifacts.
+//! * **L2 (python/compile)** — JAX split-segment model, lowered once to
+//!   HLO text (`make artifacts`); never on the request path.
+//! * **L1 (python/compile/kernels)** — fused LoRA-linear + RMSNorm
+//!   Pallas kernels inside those segments.
+//!
+//! See DESIGN.md for the architecture and EXPERIMENTS.md for the
+//! paper-vs-measured figures.
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod devices;
+pub mod model;
+pub mod net;
+pub mod runtime;
+pub mod sim;
+pub mod util;

@@ -1,0 +1,300 @@
+//! `edgesplit` — leader binary: figure reproduction, CARD decisions,
+//! and real split fine-tuning from AOT artifacts.
+//!
+//! ```text
+//! edgesplit fig3                 # Fig. 3(a)+(b): decisions over rounds
+//! edgesplit fig4                 # Fig. 4: CARD vs baselines × channels
+//! edgesplit ablate --sweep w     # A1/A2 sweeps
+//! edgesplit decide --state poor  # one-shot CARD decision per device
+//! edgesplit train --arch tiny    # REAL split fine-tuning (PJRT)
+//! edgesplit show devices|params  # Table I / Table II
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+
+use edgesplit::cli::{render_help, Args, FlagSpec};
+use edgesplit::config::{ChannelState, ExpConfig};
+use edgesplit::coordinator::{Scheduler, Strategy};
+use edgesplit::data::{Batcher, Corpus};
+use edgesplit::net::Channel;
+use edgesplit::runtime::{artifact_dir, ArtifactStore, SplitExecutor};
+use edgesplit::sim::{ablate, fig3, fig4};
+use edgesplit::util::logging;
+use edgesplit::util::rng::Rng;
+use edgesplit::util::table::{fmt_bytes, fmt_joules, fmt_secs, Table};
+
+fn flag_specs() -> Vec<FlagSpec> {
+    vec![
+        FlagSpec { name: "config", value: Some("file.toml"), help: "experiment config (TOML); defaults to the paper's Tables I+II", default: None },
+        FlagSpec { name: "rounds", value: Some("N"), help: "training rounds", default: None },
+        FlagSpec { name: "w", value: Some("0..1"), help: "delay/energy weight (Eq. 12)", default: None },
+        FlagSpec { name: "seed", value: Some("u64"), help: "root RNG seed", default: None },
+        FlagSpec { name: "state", value: Some("good|normal|poor"), help: "channel state", default: Some("normal") },
+        FlagSpec { name: "strategy", value: Some("card|server-only|device-only|static:C|random"), help: "decision strategy", default: Some("card") },
+        FlagSpec { name: "sweep", value: Some("w|phi|bandwidth"), help: "ablation sweep to run", default: Some("w") },
+        FlagSpec { name: "arch", value: Some("tiny|small"), help: "artifact config for real training", default: Some("tiny") },
+        FlagSpec { name: "steps", value: Some("N"), help: "real-training steps (train)", default: Some("30") },
+        FlagSpec { name: "lr", value: Some("f"), help: "LoRA learning rate (train)", default: Some("0.5") },
+        FlagSpec { name: "log-level", value: Some("error..trace"), help: "stderr verbosity", default: None },
+        FlagSpec { name: "help", value: None, help: "print help", default: None },
+    ]
+}
+
+const SUBCOMMANDS: [(&str, &str); 7] = [
+    ("fig3", "reproduce Fig. 3: cut layer + frequency decisions over rounds"),
+    ("fig4", "reproduce Fig. 4: delay/energy vs baselines across channel states"),
+    ("ablate", "A1/A2 sweeps: w, phi, bandwidth"),
+    ("decide", "one-shot CARD decision for each device"),
+    ("train", "REAL split fine-tuning over PJRT artifacts"),
+    ("show", "print Table I (devices) / Table II (params) / arch"),
+    ("help", "print this help"),
+];
+
+fn main() {
+    logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &flag_specs())?;
+    if let Some(l) = args.str_of("log-level") {
+        logging::set_level(
+            logging::Level::parse(l).ok_or_else(|| anyhow!("bad log level '{l}'"))?,
+        );
+    }
+    let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
+    if args.bool_of("help") || cmd == "help" {
+        print!(
+            "{}",
+            render_help(
+                "edgesplit",
+                "energy-efficient split learning for LLM fine-tuning (CARD)",
+                &SUBCOMMANDS,
+                &flag_specs()
+            )
+        );
+        return Ok(());
+    }
+
+    let mut cfg = match args.str_of("config") {
+        Some(path) => ExpConfig::from_file(path)?,
+        None => ExpConfig::paper(),
+    };
+    if let Some(r) = args.usize_of("rounds")? {
+        cfg.workload.rounds = r;
+    }
+    if let Some(w) = args.f64_of("w")? {
+        cfg.card.w = w;
+    }
+    if let Some(s) = args.u64_of("seed")? {
+        cfg.seed = s;
+    }
+    cfg.validate()?;
+
+    let state = ChannelState::parse(args.str_of("state").unwrap_or("normal"))
+        .ok_or_else(|| anyhow!("bad --state"))?;
+    let strategy = Strategy::parse(args.str_of("strategy").unwrap_or("card"))
+        .ok_or_else(|| anyhow!("bad --strategy"))?;
+
+    match cmd {
+        "fig3" => cmd_fig3(&cfg, state),
+        "fig4" => cmd_fig4(&cfg),
+        "ablate" => cmd_ablate(&cfg, args.str_of("sweep").unwrap_or("w")),
+        "decide" => cmd_decide(&cfg, state),
+        "train" => cmd_train(
+            &cfg,
+            state,
+            strategy,
+            args.str_of("arch").unwrap_or("tiny"),
+            args.usize_of("steps")?.unwrap_or(30),
+            args.f64_of("lr")?.unwrap_or(0.5) as f32,
+        ),
+        "show" => cmd_show(&cfg, args.positional().get(1).map(|s| s.as_str())),
+        other => bail!("unknown command '{other}' (try `edgesplit help`)"),
+    }
+}
+
+fn cmd_fig3(cfg: &ExpConfig, state: ChannelState) -> Result<()> {
+    let r = fig3::run(cfg, state)?;
+    let names: Vec<String> = cfg.devices.iter().map(|d| d.name.clone()).collect();
+    println!("{}", r.render(&names));
+    Ok(())
+}
+
+fn cmd_fig4(cfg: &ExpConfig) -> Result<()> {
+    let r = fig4::run(cfg)?;
+    println!("{}", r.render());
+    Ok(())
+}
+
+fn cmd_ablate(cfg: &ExpConfig, sweep: &str) -> Result<()> {
+    match sweep {
+        "w" => {
+            let vals = [0.0, 0.1, 0.2, 0.35, 0.5, 0.65, 0.8, 0.9, 1.0];
+            let pts = ablate::sweep_w(cfg, &vals)?;
+            println!("{}", ablate::render("A1 — weight w sweep (Normal channel)", "w", &pts));
+        }
+        "phi" => {
+            let vals = [0.02, 0.05, 0.1, 0.2, 0.4, 0.8, 1.0];
+            let pts = ablate::sweep_phi(cfg, &vals)?;
+            println!("{}", ablate::render("A2a — compression φ sweep (Poor channel)", "phi", &pts));
+        }
+        "bandwidth" => {
+            let vals = [10.0, 20.0, 50.0, 100.0, 200.0, 400.0];
+            let pts = ablate::sweep_bandwidth(cfg, &vals)?;
+            println!("{}", ablate::render("A2b — bandwidth sweep [MHz] (Normal channel)", "MHz", &pts));
+        }
+        other => bail!("unknown sweep '{other}' (w|phi|bandwidth)"),
+    }
+    Ok(())
+}
+
+fn cmd_decide(cfg: &ExpConfig, state: ChannelState) -> Result<()> {
+    let cm = edgesplit::coordinator::build_cost_model(cfg);
+    let channel = Channel::new(cfg.channel.clone(), state);
+    let mut rng = Rng::new(cfg.seed);
+    let mut t = Table::new(
+        &format!("CARD decisions — {} channel", state.name()),
+        &["device", "SNR up [dB]", "rate up", "cut c*", "f* [GHz]", "delay", "energy", "U"],
+    );
+    for dev in &cfg.devices {
+        let link = channel.realize(dev, &mut rng);
+        let d = Strategy::Card.decide(&cm, &cfg.server, dev, link.rates, &mut rng);
+        t.row(vec![
+            dev.name.clone(),
+            format!("{:.1}", link.snr_up_db),
+            format!("{}/s", fmt_bytes(link.rates.up_bps / 8.0)),
+            d.cut.to_string(),
+            format!("{:.2}", d.freq_hz / 1e9),
+            fmt_secs(d.delay_s),
+            fmt_joules(d.energy_j),
+            format!("{:.3}", d.cost),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_train(
+    cfg: &ExpConfig,
+    state: ChannelState,
+    strategy: Strategy,
+    arch: &str,
+    steps: usize,
+    lr: f32,
+) -> Result<()> {
+    let dir = artifact_dir(arch);
+    let store = ArtifactStore::open(&dir)?;
+    let mcfg = store.config.clone();
+    println!(
+        "loaded artifacts '{}' ({} layers, d={}, batch={}x{})",
+        mcfg.name, mcfg.n_layers, mcfg.d_model, mcfg.batch_size, mcfg.seq_len
+    );
+
+    // per-device corpora + batchers
+    let batchers: Vec<Batcher> = (0..cfg.devices.len())
+        .map(|i| {
+            let mut rng = Rng::new(cfg.seed ^ (0xD00D + i as u64));
+            let corpus = Corpus::synthetic(i, 60_000, 0.1, &mut rng);
+            Batcher::new(corpus, mcfg.batch_size, mcfg.seq_len, cfg.seed ^ (0xBA7C + i as u64))
+        })
+        .collect();
+    let mut executor = SplitExecutor::new(store, batchers, lr, cfg.seed)?;
+
+    // scheduler drives decisions; executor runs the real math — the cost
+    // model must describe the model actually being trained
+    let mut sim_cfg = cfg.clone();
+    sim_cfg.workload.arch = mcfg.name.clone();
+    sim_cfg.workload.batch_size = mcfg.batch_size;
+    sim_cfg.workload.seq_len = mcfg.seq_len;
+    sim_cfg.workload.rounds = steps
+        .div_ceil(sim_cfg.workload.local_epochs * cfg.devices.len())
+        .max(1);
+    let mut sched = Scheduler::new(sim_cfg.clone(), state, strategy);
+    let records = sched.run(Some(&mut executor))?;
+
+    let mut t = Table::new(
+        &format!("real split fine-tuning ({} strategy)", strategy.name()),
+        &["round", "device", "cut", "loss", "delay (model)", "energy (model)", "wallclock"],
+    );
+    for r in &records {
+        t.row(vec![
+            r.round.to_string(),
+            r.device_name.clone(),
+            r.cut.to_string(),
+            r.loss.map(|l| format!("{l:.4}")).unwrap_or_default(),
+            fmt_secs(r.delay_s),
+            fmt_joules(r.energy_j),
+            r.backend_wallclock_s.map(fmt_secs).unwrap_or_default(),
+        ]);
+    }
+    t.print();
+    let first = executor.loss_log.first().map(|x| x.1).unwrap_or(f64::NAN);
+    let last = executor.loss_log.last().map(|x| x.1).unwrap_or(f64::NAN);
+    println!(
+        "\nsteps executed: {}   loss {first:.4} -> {last:.4}   adapters consistent: {}",
+        executor.loss_log.len(),
+        executor.aggregator.is_consistent()
+    );
+    Ok(())
+}
+
+fn cmd_show(cfg: &ExpConfig, what: Option<&str>) -> Result<()> {
+    match what.unwrap_or("devices") {
+        "devices" => {
+            let mut t = Table::new(
+                "Table I — server and devices",
+                &["type", "platform", "GPU max freq", "cores", "distance"],
+            );
+            t.row(vec![
+                "Server".into(),
+                cfg.server.platform.clone(),
+                format!("{:.2} GHz", cfg.server.max_freq_hz / 1e9),
+                format!("{}", cfg.server.cores as u64),
+                "-".into(),
+            ]);
+            for d in &cfg.devices {
+                t.row(vec![
+                    d.name.clone(),
+                    d.platform.clone(),
+                    format!("{:.1} GHz", d.freq_hz / 1e9),
+                    format!("{}", d.cores as u64),
+                    format!("{:.0} m", d.distance_m),
+                ]);
+            }
+            t.print();
+        }
+        "params" => {
+            let mut t = Table::new("Table II — simulation parameters", &["parameter", "value"]);
+            t.row(vec!["δ_m^D (FLOPs/core/cycle)".into(), format!("{}", cfg.devices[0].flops_per_cycle)]);
+            t.row(vec!["δ^S".into(), format!("{}", cfg.server.flops_per_cycle)]);
+            t.row(vec!["ξ (W/Hz³)".into(), format!("{:e}", cfg.server.xi)]);
+            t.row(vec!["w".into(), format!("{}", cfg.card.w)]);
+            t.row(vec!["T_{m,n} (local epochs)".into(), format!("{}", cfg.workload.local_epochs)]);
+            t.row(vec!["φ (compression)".into(), format!("{}", cfg.workload.phi)]);
+            t.row(vec!["rounds N".into(), format!("{}", cfg.workload.rounds)]);
+            t.row(vec!["bandwidth".into(), format!("{:.0} MHz", cfg.channel.bandwidth_hz / 1e6)]);
+            t.print();
+        }
+        "arch" => {
+            let arch = edgesplit::model::LlmArch::by_name(&cfg.workload.arch)
+                .ok_or_else(|| anyhow!("unknown arch"))?;
+            let mut t = Table::new("model architecture (cost model)", &["field", "value"]);
+            t.row(vec!["name".into(), arch.name.clone()]);
+            t.row(vec!["layers I".into(), arch.n_layers.to_string()]);
+            t.row(vec!["d_model".into(), arch.d_model.to_string()]);
+            t.row(vec!["d_ff".into(), arch.d_ff.to_string()]);
+            t.row(vec!["vocab".into(), arch.vocab_size.to_string()]);
+            t.row(vec!["LoRA rank".into(), arch.lora_rank.to_string()]);
+            t.row(vec!["params".into(), format!("{:.2}B", arch.total_params() as f64 / 1e9)]);
+            t.row(vec!["trainable (LoRA)".into(), format!("{:.1}M", (arch.n_layers * arch.lora_layer_params()) as f64 / 1e6)]);
+            t.print();
+        }
+        other => bail!("unknown show target '{other}' (devices|params|arch)"),
+    }
+    Ok(())
+}

@@ -1,0 +1,189 @@
+//! LLM architecture descriptor — parameterizes the FLOPs/byte cost
+//! models (Eqs. 7–11) and mirrors `python/compile/configs.py`.
+//!
+//! `llama1b()` is the paper's model ("1B LLaMA 3.2 with 32-layer
+//! transformer decoders", §V-A) used for every figure; `tiny`/`small`
+//! match the compiled artifact configs and can also be loaded from a
+//! manifest so the cost model and the real executor always agree.
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct LlmArch {
+    pub name: String,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    /// I — number of transformer decoder layers
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    /// Z — LoRA rank
+    pub lora_rank: usize,
+    pub lora_alpha: f64,
+    /// bytes per parameter/activation element on the wire & in FLOP
+    /// accounting (fp32 = 4; the paper's φ compression is applied on
+    /// top of this in the datasize model)
+    pub dtype_bytes: usize,
+}
+
+impl LlmArch {
+    /// The paper's model (§V-A).  LLaMA-3.2-1B dims with the paper's
+    /// stated 32 decoder layers.
+    pub fn llama1b() -> Self {
+        Self {
+            name: "llama1b".into(),
+            vocab_size: 128_256,
+            d_model: 2048,
+            n_layers: 32,
+            n_heads: 32,
+            d_ff: 8192,
+            lora_rank: 16,
+            lora_alpha: 32.0,
+            dtype_bytes: 4,
+        }
+    }
+
+    /// Matches python/compile/configs.py `tiny` (compiled artifacts).
+    pub fn tiny() -> Self {
+        Self {
+            name: "tiny".into(),
+            vocab_size: 256,
+            d_model: 128,
+            n_layers: 6,
+            n_heads: 8,
+            d_ff: 384,
+            lora_rank: 8,
+            lora_alpha: 16.0,
+            dtype_bytes: 4,
+        }
+    }
+
+    /// Matches python/compile/configs.py `small` (compiled artifacts).
+    pub fn small() -> Self {
+        Self {
+            name: "small".into(),
+            vocab_size: 256,
+            d_model: 256,
+            n_layers: 8,
+            n_heads: 8,
+            d_ff: 704,
+            lora_rank: 8,
+            lora_alpha: 16.0,
+            dtype_bytes: 4,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "llama1b" => Some(Self::llama1b()),
+            "tiny" => Some(Self::tiny()),
+            "small" => Some(Self::small()),
+            _ => None,
+        }
+    }
+
+    /// Build from an AOT manifest's `config` object, so the analytic
+    /// cost model and the compiled artifacts can never drift apart.
+    pub fn from_manifest(manifest: &Json) -> Option<Self> {
+        let c = manifest.get("config")?;
+        let g = |k: &str| c.get(k)?.as_usize();
+        Some(Self {
+            name: c.get("name")?.as_str()?.to_string(),
+            vocab_size: g("vocab_size")?,
+            d_model: g("d_model")?,
+            n_layers: g("n_layers")?,
+            n_heads: g("n_heads")?,
+            d_ff: g("d_ff")?,
+            lora_rank: g("lora_rank")?,
+            lora_alpha: c.get("lora_alpha")?.as_f64()?,
+            dtype_bytes: 4,
+        })
+    }
+
+    // ---- parameter counts (mirror configs.py exactly) -----------------
+
+    /// Frozen base parameters in one decoder layer.
+    pub fn base_layer_params(&self) -> usize {
+        let (d, f) = (self.d_model, self.d_ff);
+        4 * d * d + 3 * d * f + 2 * d
+    }
+
+    /// Trainable LoRA parameters in one decoder layer (7 adapted
+    /// projections: q,k,v,o,gate,up,down).
+    pub fn lora_layer_params(&self) -> usize {
+        let (d, f, r) = (self.d_model, self.d_ff, self.lora_rank);
+        4 * (d * r + r * d) + 2 * (d * r + r * f) + (f * r + r * d)
+    }
+
+    pub fn head_params(&self) -> usize {
+        self.d_model + self.d_model * self.vocab_size
+    }
+
+    pub fn embed_params(&self) -> usize {
+        self.vocab_size * self.d_model
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.embed_params()
+            + self.n_layers * (self.base_layer_params() + self.lora_layer_params())
+            + self.head_params()
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llama1b_matches_paper_parameterization() {
+        // NOTE: real LLaMA-3.2-1B has 16 decoder layers; the paper states
+        // "32-layer transformer decoders" and its figures sweep cuts
+        // 0..=32, so we follow the paper. With LLaMA-1B dims that yields
+        // ~2.7B params — the discrepancy is the paper's, documented in
+        // DESIGN.md §6; only relative per-layer costs enter the figures.
+        let a = LlmArch::llama1b();
+        let p = a.total_params() as f64;
+        assert!(p > 2.0e9 && p < 3.2e9, "params = {p:.3e}");
+        assert_eq!(a.n_layers, 32); // paper's stated layer count
+    }
+
+    #[test]
+    fn lora_params_tiny_match_python() {
+        // python: nano r(11d+3f) etc. — cross-check the closed form
+        let a = LlmArch::tiny();
+        let expect = a.lora_rank * (11 * a.d_model + 3 * a.d_ff);
+        assert_eq!(a.lora_layer_params(), expect);
+    }
+
+    #[test]
+    fn lora_is_small_fraction() {
+        let a = LlmArch::llama1b();
+        let frac = a.lora_layer_params() as f64 / a.base_layer_params() as f64;
+        assert!(frac < 0.05, "LoRA fraction {frac}");
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for n in ["llama1b", "tiny", "small"] {
+            assert_eq!(LlmArch::by_name(n).unwrap().name, n);
+        }
+        assert!(LlmArch::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn from_manifest_parses() {
+        let j = Json::parse(
+            r#"{"config":{"name":"tiny","vocab_size":256,"d_model":128,
+                "n_layers":6,"n_heads":8,"d_ff":384,"lora_rank":8,
+                "lora_alpha":16.0}}"#,
+        )
+        .unwrap();
+        let a = LlmArch::from_manifest(&j).unwrap();
+        assert_eq!(a.d_model, 128);
+        assert_eq!(a.base_layer_params(), LlmArch::tiny().base_layer_params());
+    }
+}

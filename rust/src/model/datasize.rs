@@ -1,0 +1,112 @@
+//! Wire data sizes for the split protocol — the S(c), S̃(c), A(c) terms
+//! of Eq. (9).
+//!
+//! The smashed data (and its gradient) is one activation tensor at the
+//! cut: b × s × d elements regardless of WHERE the cut is — matching the
+//! paper's observation that "each transformer layer has the same ...
+//! data size as the smashed data" (Fig. 3 discussion).  The adapter
+//! payload A(c) is linear in c (only device-side adapters travel,
+//! Stages 2 & 5).
+
+use crate::config::WorkloadSpec;
+
+use super::arch::LlmArch;
+
+#[derive(Clone, Debug)]
+pub struct DataSizeModel {
+    pub arch: LlmArch,
+    pub batch: f64,
+    pub seq: f64,
+    /// φ — compression ratio applied to smashed data & gradients
+    pub phi: f64,
+}
+
+impl DataSizeModel {
+    pub fn new(arch: &LlmArch, w: &WorkloadSpec) -> Self {
+        Self {
+            arch: arch.clone(),
+            batch: w.batch_size as f64,
+            seq: w.seq_len as f64,
+            phi: w.phi,
+        }
+    }
+
+    /// S(c) — uncompressed smashed-data bytes per local epoch (uplink).
+    /// Includes the labels that ride along with the activations
+    /// (Stage 3: "transmits its smashed data and corresponding label").
+    pub fn smashed_bytes(&self, c: usize) -> f64 {
+        let _ = c; // cut-independent by architecture uniformity
+        let act = self.batch * self.seq * self.arch.d_model as f64 * self.arch.dtype_bytes as f64;
+        let labels = self.batch * self.seq * 4.0; // i32 token ids
+        act + labels
+    }
+
+    /// S̃(c) — uncompressed smashed-gradient bytes per local epoch
+    /// (downlink).
+    pub fn grad_bytes(&self, c: usize) -> f64 {
+        let _ = c;
+        self.batch * self.seq * self.arch.d_model as f64 * self.arch.dtype_bytes as f64
+    }
+
+    /// A(c) — device-side LoRA adapter bytes (Stages 2 and 5).
+    pub fn adapter_bytes(&self, c: usize) -> f64 {
+        (c * self.arch.lora_layer_params() * self.arch.dtype_bytes) as f64
+    }
+
+    /// φ·S(c) — compressed uplink payload per local epoch.
+    pub fn smashed_wire_bytes(&self, c: usize) -> f64 {
+        self.phi * self.smashed_bytes(c)
+    }
+
+    /// φ·S̃(c) — compressed downlink payload per local epoch.
+    pub fn grad_wire_bytes(&self, c: usize) -> f64 {
+        self.phi * self.grad_bytes(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadSpec;
+
+    fn model() -> DataSizeModel {
+        DataSizeModel::new(&LlmArch::llama1b(), &WorkloadSpec::default())
+    }
+
+    #[test]
+    fn smashed_size_cut_independent() {
+        let m = model();
+        assert_eq!(m.smashed_bytes(1), m.smashed_bytes(31));
+        assert_eq!(m.grad_bytes(0), m.grad_bytes(32));
+    }
+
+    #[test]
+    fn smashed_magnitude() {
+        // 8×512×2048 fp32 ≈ 33.6 MB (+16 KB labels)
+        let m = model();
+        let mb = m.smashed_bytes(1) / 1e6;
+        assert!(mb > 33.0 && mb < 34.5, "{mb} MB");
+    }
+
+    #[test]
+    fn adapters_linear_in_cut_and_zero_at_zero() {
+        let m = model();
+        assert_eq!(m.adapter_bytes(0), 0.0);
+        let one = m.adapter_bytes(1);
+        assert!((m.adapter_bytes(8) - 8.0 * one).abs() < 1.0);
+    }
+
+    #[test]
+    fn compression_applies_to_activations_only() {
+        let m = model();
+        assert!((m.smashed_wire_bytes(4) - 0.1 * m.smashed_bytes(4)).abs() < 1e-6);
+        // adapters are parameters — never lossy-compressed
+        assert_eq!(m.adapter_bytes(4), m.adapter_bytes(4));
+    }
+
+    #[test]
+    fn grad_has_no_label_component() {
+        let m = model();
+        assert!(m.smashed_bytes(1) > m.grad_bytes(1));
+    }
+}

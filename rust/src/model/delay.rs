@@ -1,0 +1,169 @@
+//! Training-delay model — Eqs. (7)–(10).
+//!
+//!   d^{D,C} = η_D(c) / (f^D δ^D σ^D)                        (7)
+//!   d^{S,C} = (η − η_D(c)) / (f^S δ^S σ^S)                  (8)
+//!   D^V    = T(φS/R^D + φS̃/R^S) + A(c)/R^D + A(c)/R^S      (9)
+//!   D      = T(d^{D,C} + d^{S,C}) + D^V                     (10)
+
+use crate::config::{DeviceSpec, ServerSpec, WorkloadSpec};
+
+use super::datasize::DataSizeModel;
+use super::flops::FlopModel;
+
+/// Realized link rates for one round [bit/s].
+#[derive(Clone, Copy, Debug)]
+pub struct LinkRates {
+    /// R^D — uplink (device -> server)
+    pub up_bps: f64,
+    /// R^S — downlink (server -> device)
+    pub down_bps: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct DelayModel {
+    pub flops: FlopModel,
+    pub sizes: DataSizeModel,
+    /// T — local epochs per round
+    pub epochs: f64,
+}
+
+impl DelayModel {
+    pub fn new(flops: FlopModel, sizes: DataSizeModel, w: &WorkloadSpec) -> Self {
+        Self {
+            flops,
+            sizes,
+            epochs: w.local_epochs as f64,
+        }
+    }
+
+    /// Eq. (7): device compute delay per local epoch [s].
+    pub fn device_compute(&self, c: usize, dev: &DeviceSpec) -> f64 {
+        self.flops.eta_device(c) / dev.throughput()
+    }
+
+    /// Eq. (8): server compute delay per local epoch at frequency f [s].
+    pub fn server_compute(&self, c: usize, server: &ServerSpec, f_hz: f64) -> f64 {
+        self.flops.eta_server(c) / server.throughput(f_hz)
+    }
+
+    /// Eq. (9): total transmission delay for one round [s].
+    pub fn transmission(&self, c: usize, rates: LinkRates) -> f64 {
+        let per_epoch = 8.0 * self.sizes.smashed_wire_bytes(c) / rates.up_bps
+            + 8.0 * self.sizes.grad_wire_bytes(c) / rates.down_bps;
+        let adapters = 8.0 * self.sizes.adapter_bytes(c) / rates.up_bps
+            + 8.0 * self.sizes.adapter_bytes(c) / rates.down_bps;
+        self.epochs * per_epoch + adapters
+    }
+
+    /// Total compute delay for one round: T(d^{D,C} + d^{S,C}).
+    pub fn compute(&self, c: usize, dev: &DeviceSpec, server: &ServerSpec, f_hz: f64) -> f64 {
+        self.epochs * (self.device_compute(c, dev) + self.server_compute(c, server, f_hz))
+    }
+
+    /// Eq. (10): full round delay.
+    pub fn round(
+        &self,
+        c: usize,
+        dev: &DeviceSpec,
+        server: &ServerSpec,
+        f_hz: f64,
+        rates: LinkRates,
+    ) -> f64 {
+        self.compute(c, dev, server, f_hz) + self.transmission(c, rates)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExpConfig;
+    use crate::model::arch::LlmArch;
+
+    fn setup() -> (DelayModel, ExpConfig) {
+        let cfg = ExpConfig::paper();
+        let arch = LlmArch::llama1b();
+        let dm = DelayModel::new(
+            FlopModel::new(&arch, &cfg.workload),
+            DataSizeModel::new(&arch, &cfg.workload),
+            &cfg.workload,
+        );
+        (dm, cfg)
+    }
+
+    const RATES: LinkRates = LinkRates {
+        up_bps: 100e6,
+        down_bps: 200e6,
+    };
+
+    #[test]
+    fn device_delay_increases_with_cut() {
+        let (dm, cfg) = setup();
+        let d = &cfg.devices[0];
+        assert!(dm.device_compute(32, d) > dm.device_compute(0, d));
+    }
+
+    #[test]
+    fn server_delay_decreases_with_cut_and_freq() {
+        let (dm, cfg) = setup();
+        let s = &cfg.server;
+        assert!(dm.server_compute(0, s, 2.46e9) > dm.server_compute(32, s, 2.46e9));
+        assert!(dm.server_compute(8, s, 1.0e9) > dm.server_compute(8, s, 2.0e9));
+    }
+
+    #[test]
+    fn weak_device_slower_than_strong() {
+        let (dm, cfg) = setup();
+        assert!(dm.device_compute(16, &cfg.devices[4]) > dm.device_compute(16, &cfg.devices[0]));
+    }
+
+    #[test]
+    fn transmission_epochs_scale_smashed_not_adapters() {
+        let (mut dm, _) = setup();
+        let t1 = dm.transmission(8, RATES);
+        dm.epochs = 10.0;
+        let t2 = dm.transmission(8, RATES);
+        // doubling epochs less than doubles total (adapter term fixed)
+        assert!(t2 > t1 && t2 < 2.0 * t1 + 1e-9);
+    }
+
+    #[test]
+    fn round_delay_composition() {
+        let (dm, cfg) = setup();
+        let d = &cfg.devices[2];
+        let total = dm.round(8, d, &cfg.server, 2.0e9, RATES);
+        let parts = dm.compute(8, d, &cfg.server, 2.0e9) + dm.transmission(8, RATES);
+        assert!((total - parts).abs() < 1e-12);
+        assert!(total > 0.0 && total.is_finite());
+    }
+
+    #[test]
+    fn faster_link_lower_transmission() {
+        let (dm, _) = setup();
+        let slow = dm.transmission(
+            8,
+            LinkRates {
+                up_bps: 10e6,
+                down_bps: 10e6,
+            },
+        );
+        let fast = dm.transmission(
+            8,
+            LinkRates {
+                up_bps: 1e9,
+                down_bps: 1e9,
+            },
+        );
+        assert!(slow > fast * 10.0);
+    }
+
+    #[test]
+    fn paper_magnitudes_plausible() {
+        // Device 1 @ c=32 (device-only decoders): tens of seconds/epoch.
+        let (dm, cfg) = setup();
+        let d1 = dm.device_compute(32, &cfg.devices[0]);
+        assert!(d1 > 1.0 && d1 < 100.0, "device-1 epoch delay {d1}s");
+        // Server @ c=0, f_max: a few seconds/epoch.
+        let ds = dm.server_compute(0, &cfg.server, cfg.server.max_freq_hz);
+        assert!(ds > 0.5 && ds < 20.0, "server epoch delay {ds}s");
+    }
+}

@@ -1,0 +1,177 @@
+//! FLOP counting for split LoRA fine-tuning — the η(·) terms of
+//! Eqs. (7)–(8).
+//!
+//! η_D(c) = embedding + c × (per-layer training FLOPs); the server gets
+//! η − η_D(c) = (I − c) × layer + head.  Every decoder layer costs the
+//! same (uniform dims), which yields exactly the paper's observation
+//! that delay is linear in c and the optimum sits at an endpoint
+//! (Fig. 3 discussion).
+//!
+//! Accounting (per token, one decoder layer, LoRA-frozen base):
+//!   forward:   QKV/O projections 8d², scores+AV 4·s·d, SwiGLU 6·d·f,
+//!              LoRA 2·Σ(d_in·r + r·d_out)
+//!   backward:  activation-gradient matmuls mirror every forward matmul
+//!              (≈ 1× forward), adapter weight-grads ≈ 2× LoRA forward,
+//!              NO base weight-grads (frozen — the whole point of LoRA)
+//!   recompute: the split executor stashes only layer *inputs* and
+//!              recomputes internals in layer_bwd (+1× forward)
+
+use crate::config::WorkloadSpec;
+
+use super::arch::LlmArch;
+
+/// Workload-specialized FLOP model.
+#[derive(Clone, Debug)]
+pub struct FlopModel {
+    pub arch: LlmArch,
+    /// tokens per mini-batch = batch_size × seq_len
+    pub tokens: f64,
+    pub seq_len: f64,
+    /// extra forward pass for activation recomputation in backward
+    pub recompute: bool,
+}
+
+impl FlopModel {
+    pub fn new(arch: &LlmArch, w: &WorkloadSpec) -> Self {
+        Self {
+            arch: arch.clone(),
+            tokens: (w.batch_size * w.seq_len) as f64,
+            seq_len: w.seq_len as f64,
+            recompute: true,
+        }
+    }
+
+    /// Forward FLOPs of one decoder layer for the whole mini-batch.
+    pub fn layer_fwd(&self) -> f64 {
+        let d = self.arch.d_model as f64;
+        let f = self.arch.d_ff as f64;
+        let r = self.arch.lora_rank as f64;
+        let s = self.seq_len;
+        let proj = 8.0 * d * d; // wq,wk,wv,wo: 4 × 2d²
+        let attn = 4.0 * s * d; // QKᵀ + AV: 2 × 2·s·d per token
+        let mlp = 6.0 * d * f; // gate,up,down: 3 × 2·d·f
+        // LoRA: q,k,v,o (d->d), gate,up (d->f), down (f->d)
+        let lora = 2.0 * (4.0 * (d * r + r * d) + 2.0 * (d * r + r * f) + (f * r + r * d));
+        self.tokens * (proj + attn + mlp + lora)
+    }
+
+    /// Backward FLOPs of one decoder layer (LoRA-frozen base).
+    pub fn layer_bwd(&self) -> f64 {
+        let d = self.arch.d_model as f64;
+        let f = self.arch.d_ff as f64;
+        let r = self.arch.lora_rank as f64;
+        let s = self.seq_len;
+        // activation-grad matmuls mirror the forward ones
+        let dgrad = self.tokens * (8.0 * d * d + 8.0 * s * d + 6.0 * d * f);
+        // adapter weight-grads: dA and dB per projection ≈ 2× lora fwd
+        let dadapter =
+            2.0 * 2.0 * self.tokens * (4.0 * 2.0 * d * r + 2.0 * (d * r + r * f) + (f * r + r * d));
+        let recomp = if self.recompute { self.layer_fwd() } else { 0.0 };
+        dgrad + dadapter + recomp
+    }
+
+    /// Full fwd+bwd training FLOPs of one decoder layer.
+    pub fn layer_train(&self) -> f64 {
+        self.layer_fwd() + self.layer_bwd()
+    }
+
+    /// Embedding cost (memory-bound gather; copy-equivalent accounting).
+    pub fn embed(&self) -> f64 {
+        2.0 * self.tokens * self.arch.d_model as f64
+    }
+
+    /// LM head + softmax CE + its backward to the activations.
+    pub fn head(&self) -> f64 {
+        let d = self.arch.d_model as f64;
+        let v = self.arch.vocab_size as f64;
+        // fwd logits 2dv, softmax ~5v, bwd dlogits ~3v, dh 2dv
+        self.tokens * (4.0 * d * v + 8.0 * v)
+    }
+
+    /// η_D(c): device-side training FLOPs at cut layer c (embedding is
+    /// always on the device — both paper baselines keep it there, §V-B).
+    pub fn eta_device(&self, c: usize) -> f64 {
+        self.embed() + c as f64 * self.layer_train()
+    }
+
+    /// η: total training FLOPs of the whole model.
+    pub fn eta_total(&self) -> f64 {
+        self.embed() + self.arch.n_layers as f64 * self.layer_train() + self.head()
+    }
+
+    /// η − η_D(c): server-side FLOPs at cut layer c.
+    pub fn eta_server(&self, c: usize) -> f64 {
+        debug_assert!(c <= self.arch.n_layers);
+        self.eta_total() - self.eta_device(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadSpec;
+
+    fn model() -> FlopModel {
+        FlopModel::new(&LlmArch::llama1b(), &WorkloadSpec::default())
+    }
+
+    #[test]
+    fn eta_linear_in_cut() {
+        let m = model();
+        let i = m.arch.n_layers;
+        let d0 = m.eta_device(0);
+        let step = m.eta_device(1) - d0;
+        for c in 0..=i {
+            let expect = d0 + c as f64 * step;
+            assert!((m.eta_device(c) - expect).abs() < expect.abs() * 1e-12 + 1.0);
+        }
+    }
+
+    #[test]
+    fn eta_device_plus_server_is_total() {
+        let m = model();
+        for c in [0, 7, 32] {
+            let sum = m.eta_device(c) + m.eta_server(c);
+            assert!((sum - m.eta_total()).abs() < m.eta_total() * 1e-12);
+        }
+    }
+
+    #[test]
+    fn server_share_decreases_with_cut() {
+        let m = model();
+        assert!(m.eta_server(0) > m.eta_server(16));
+        assert!(m.eta_server(16) > m.eta_server(32));
+    }
+
+    #[test]
+    fn training_step_magnitude_sane() {
+        // ~1B params, 4096 tokens: fwd ≈ 2·N·T ≈ 8e12; train ≈ 3-4× that.
+        let m = model();
+        let eta = m.eta_total();
+        assert!(eta > 5e12 && eta < 1e14, "eta = {eta:.3e}");
+    }
+
+    #[test]
+    fn bwd_more_expensive_than_fwd() {
+        let m = model();
+        assert!(m.layer_bwd() > m.layer_fwd());
+        // ...but less than 3× (frozen base weights save the dW GEMMs)
+        assert!(m.layer_bwd() < 3.0 * m.layer_fwd());
+    }
+
+    #[test]
+    fn lora_overhead_is_marginal() {
+        let mut a = LlmArch::llama1b();
+        let w = WorkloadSpec::default();
+        let with = FlopModel::new(&a, &w).layer_fwd();
+        a.lora_rank = 0;
+        let without = FlopModel::new(&a, &w).layer_fwd();
+        assert!((with - without) / without < 0.05);
+    }
+
+    #[test]
+    fn head_dominated_by_vocab() {
+        let m = model();
+        assert!(m.head() > m.embed());
+    }
+}

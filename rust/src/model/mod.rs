@@ -1,0 +1,15 @@
+//! Analytic cost models of the paper's system model (§III): FLOPs,
+//! wire sizes, delay (Eqs. 7–10) and server energy (Eq. 11), all
+//! parameterized by an `LlmArch`.
+
+pub mod arch;
+pub mod datasize;
+pub mod delay;
+pub mod energy;
+pub mod flops;
+
+pub use arch::LlmArch;
+pub use datasize::DataSizeModel;
+pub use delay::{DelayModel, LinkRates};
+pub use energy::EnergyModel;
+pub use flops::FlopModel;

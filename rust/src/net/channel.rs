@@ -1,0 +1,165 @@
+//! Per-round wireless channel realization.
+//!
+//! Chains pathloss (log-distance, state-dependent exponent) + Rayleigh
+//! block fading + AWGN into an SNR, then maps SNR -> rate via the 3GPP
+//! CQI table:  R_{m,n} = B · y(SNR_{m,n})  (§III-A2).
+//!
+//! Block fading: one i.i.d. |CN(0,1)|² draw per link per round — the
+//! "dynamic wireless channel" that makes the optimal cut flip across
+//! rounds in Fig. 3.
+
+use crate::config::{ChannelSpec, ChannelState, DeviceSpec};
+use crate::model::LinkRates;
+use crate::util::rng::Rng;
+
+use super::cqi::spectral_efficiency;
+use super::pathloss::{dbm_to_watts, lin_to_db, noise_watts, pathloss_db};
+
+/// A device's realized link for one training round.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkRealization {
+    pub snr_up_db: f64,
+    pub snr_down_db: f64,
+    pub rates: LinkRates,
+}
+
+#[derive(Clone, Debug)]
+pub struct Channel {
+    pub spec: ChannelSpec,
+    pub state: ChannelState,
+}
+
+impl Channel {
+    pub fn new(spec: ChannelSpec, state: ChannelState) -> Self {
+        Self { spec, state }
+    }
+
+    /// Mean (no-fading) SNR for a link [dB].
+    pub fn mean_snr_db(&self, distance_m: f64, tx_dbm: f64) -> f64 {
+        let pl = pathloss_db(&self.spec, distance_m, self.state.pathloss_exp());
+        let rx_w = dbm_to_watts(tx_dbm - pl);
+        lin_to_db(rx_w / noise_watts(&self.spec, self.spec.bandwidth_hz))
+    }
+
+    /// Realize one round's links for a device (block fading).
+    pub fn realize(&self, dev: &DeviceSpec, rng: &mut Rng) -> LinkRealization {
+        let (g_up, g_down) = if self.spec.fading {
+            (rng.rayleigh_power(), rng.rayleigh_power())
+        } else {
+            (1.0, 1.0)
+        };
+        let snr_up = self.mean_snr_db(dev.distance_m, self.spec.tx_power_device_dbm)
+            + lin_to_db(g_up);
+        let snr_down = self.mean_snr_db(dev.distance_m, self.spec.tx_power_ap_dbm)
+            + lin_to_db(g_down);
+        LinkRealization {
+            snr_up_db: snr_up,
+            snr_down_db: snr_down,
+            rates: LinkRates {
+                up_bps: self.rate_bps(snr_up),
+                down_bps: self.rate_bps(snr_down),
+            },
+        }
+    }
+
+    /// R = B · y(SNR).  Outage is floored to a minimal control-channel
+    /// rate (CQI-1 at 1/50 of the band) instead of 0 — division-safe and
+    /// matches retransmission-until-success behaviour.
+    pub fn rate_bps(&self, snr_db: f64) -> f64 {
+        let eff = spectral_efficiency(snr_db);
+        if eff > 0.0 {
+            self.spec.bandwidth_hz * eff
+        } else {
+            self.spec.bandwidth_hz * 0.1523 / 50.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ChannelState::*;
+
+    fn dev(dist: f64) -> DeviceSpec {
+        DeviceSpec {
+            name: "d".into(),
+            platform: "p".into(),
+            freq_hz: 1e9,
+            cores: 1024.0,
+            flops_per_cycle: 2.0,
+            distance_m: dist,
+        }
+    }
+
+    #[test]
+    fn good_beats_normal_beats_poor() {
+        let d = dev(20.0);
+        let mk = |s| Channel::new(ChannelSpec::default(), s);
+        let snr = |s| mk(s).mean_snr_db(d.distance_m, 23.0);
+        assert!(snr(Good) > snr(Normal));
+        assert!(snr(Normal) > snr(Poor));
+    }
+
+    #[test]
+    fn downlink_stronger_than_uplink() {
+        // AP transmits at 30 dBm vs device 23 dBm
+        let ch = Channel::new(ChannelSpec::default(), Normal);
+        let mut rng = Rng::new(1);
+        let r = ch.realize(&dev(20.0), &mut rng);
+        // with independent fading this holds in expectation; check means
+        let up = ch.mean_snr_db(20.0, ch.spec.tx_power_device_dbm);
+        let down = ch.mean_snr_db(20.0, ch.spec.tx_power_ap_dbm);
+        assert!((down - up - 7.0).abs() < 1e-9);
+        assert!(r.rates.up_bps > 0.0 && r.rates.down_bps > 0.0);
+    }
+
+    #[test]
+    fn fading_varies_across_rounds() {
+        let ch = Channel::new(ChannelSpec::default(), Normal);
+        let d = dev(25.0);
+        let mut rng = Rng::new(2);
+        let rates: Vec<f64> = (0..20).map(|_| ch.realize(&d, &mut rng).rates.up_bps).collect();
+        let distinct = rates
+            .iter()
+            .filter(|&&r| (r - rates[0]).abs() > 1.0)
+            .count();
+        assert!(distinct > 5, "fading should move the rate across rounds");
+    }
+
+    #[test]
+    fn no_fading_is_deterministic() {
+        let mut spec = ChannelSpec::default();
+        spec.fading = false;
+        let ch = Channel::new(spec, Good);
+        let d = dev(25.0);
+        let mut r1 = Rng::new(3);
+        let mut r2 = Rng::new(4);
+        assert_eq!(
+            ch.realize(&d, &mut r1).rates.up_bps,
+            ch.realize(&d, &mut r2).rates.up_bps
+        );
+    }
+
+    #[test]
+    fn outage_floor_is_positive() {
+        let ch = Channel::new(ChannelSpec::default(), Poor);
+        assert!(ch.rate_bps(-40.0) > 0.0);
+        assert!(ch.rate_bps(-40.0) < ch.rate_bps(0.0));
+    }
+
+    #[test]
+    fn calibration_good_channel_hits_high_cqi() {
+        // Device at 10 m with α=2 should saturate near the top of the
+        // CQI table (paper's "Good" state).
+        let ch = Channel::new(ChannelSpec::default(), Good);
+        let snr = ch.mean_snr_db(10.0, 23.0);
+        assert!(snr > 22.7, "good-state SNR = {snr} dB");
+    }
+
+    #[test]
+    fn calibration_poor_channel_degrades() {
+        let ch = Channel::new(ChannelSpec::default(), Poor);
+        let snr = ch.mean_snr_db(30.0, 23.0);
+        assert!(snr < 5.0, "poor-state SNR = {snr} dB should be low");
+    }
+}

@@ -1,0 +1,103 @@
+//! SNR -> spectral-efficiency mapping via the 3GPP CQI table.
+//!
+//! The paper converts SNR to rate through "the CQI to MCS mapping table
+//! [TS 38.214]" (§III-A2): R = B · y(SNR).  We implement y(·) as the
+//! 4-bit CQI table 5.2.2.1-2 of TS 38.214 (QPSK…64QAM, efficiencies
+//! 0.1523…5.5547 bit/s/Hz) with the standard per-CQI SNR thresholds
+//! (1.02 dB/step BLER-10% fit used throughout the link-adaptation
+//! literature).
+
+/// One CQI row: minimum SNR [dB] to sustain it, spectral efficiency.
+#[derive(Clone, Copy, Debug)]
+pub struct CqiEntry {
+    pub index: u8,
+    pub snr_db: f64,
+    pub efficiency: f64,
+    pub modulation: &'static str,
+}
+
+/// TS 38.214 Table 5.2.2.1-2 (CQI indices 1..=15) with SNR thresholds.
+pub const CQI_TABLE: [CqiEntry; 15] = [
+    CqiEntry { index: 1,  snr_db: -6.7,  efficiency: 0.1523, modulation: "QPSK"   },
+    CqiEntry { index: 2,  snr_db: -4.7,  efficiency: 0.2344, modulation: "QPSK"   },
+    CqiEntry { index: 3,  snr_db: -2.3,  efficiency: 0.3770, modulation: "QPSK"   },
+    CqiEntry { index: 4,  snr_db: 0.2,   efficiency: 0.6016, modulation: "QPSK"   },
+    CqiEntry { index: 5,  snr_db: 2.4,   efficiency: 0.8770, modulation: "QPSK"   },
+    CqiEntry { index: 6,  snr_db: 4.3,   efficiency: 1.1758, modulation: "QPSK"   },
+    CqiEntry { index: 7,  snr_db: 5.9,   efficiency: 1.4766, modulation: "16QAM"  },
+    CqiEntry { index: 8,  snr_db: 8.1,   efficiency: 1.9141, modulation: "16QAM"  },
+    CqiEntry { index: 9,  snr_db: 10.3,  efficiency: 2.4063, modulation: "16QAM"  },
+    CqiEntry { index: 10, snr_db: 11.7,  efficiency: 2.7305, modulation: "64QAM"  },
+    CqiEntry { index: 11, snr_db: 14.1,  efficiency: 3.3223, modulation: "64QAM"  },
+    CqiEntry { index: 12, snr_db: 16.3,  efficiency: 3.9023, modulation: "64QAM"  },
+    CqiEntry { index: 13, snr_db: 18.7,  efficiency: 4.5234, modulation: "64QAM"  },
+    CqiEntry { index: 14, snr_db: 21.0,  efficiency: 5.1152, modulation: "64QAM"  },
+    CqiEntry { index: 15, snr_db: 22.7,  efficiency: 5.5547, modulation: "64QAM"  },
+];
+
+/// CQI index for a given SNR (0 = outage: below CQI-1 threshold).
+pub fn cqi_for_snr(snr_db: f64) -> u8 {
+    let mut best = 0;
+    for e in &CQI_TABLE {
+        if snr_db >= e.snr_db {
+            best = e.index;
+        } else {
+            break;
+        }
+    }
+    best
+}
+
+/// y(SNR): spectral efficiency [bit/s/Hz].  Outage -> 0.
+pub fn spectral_efficiency(snr_db: f64) -> f64 {
+    match cqi_for_snr(snr_db) {
+        0 => 0.0,
+        i => CQI_TABLE[i as usize - 1].efficiency,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_monotone() {
+        for w in CQI_TABLE.windows(2) {
+            assert!(w[1].snr_db > w[0].snr_db);
+            assert!(w[1].efficiency > w[0].efficiency);
+        }
+    }
+
+    #[test]
+    fn outage_below_first_threshold() {
+        assert_eq!(cqi_for_snr(-10.0), 0);
+        assert_eq!(spectral_efficiency(-10.0), 0.0);
+    }
+
+    #[test]
+    fn saturates_at_cqi15() {
+        assert_eq!(cqi_for_snr(50.0), 15);
+        assert!((spectral_efficiency(50.0) - 5.5547).abs() < 1e-9);
+    }
+
+    #[test]
+    fn threshold_boundaries() {
+        assert_eq!(cqi_for_snr(-6.7), 1);
+        assert_eq!(cqi_for_snr(-6.71), 0);
+        assert_eq!(cqi_for_snr(10.3), 9);
+        assert_eq!(cqi_for_snr(10.29), 8);
+    }
+
+    #[test]
+    fn step_function_between_thresholds() {
+        assert_eq!(spectral_efficiency(6.0), spectral_efficiency(7.9));
+    }
+
+    #[test]
+    fn efficiency_matches_standard_values() {
+        // spot-check against TS 38.214 Table 5.2.2.1-2
+        assert!((CQI_TABLE[0].efficiency - 0.1523).abs() < 1e-9);
+        assert!((CQI_TABLE[6].efficiency - 1.4766).abs() < 1e-9);
+        assert!((CQI_TABLE[14].efficiency - 5.5547).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,10 @@
+//! Wireless-network substrate: log-distance pathloss, Rayleigh block
+//! fading, AWGN, and the 3GPP TS 38.214 CQI -> spectral-efficiency
+//! mapping the paper cites for its rate model (§III-A2).
+
+pub mod channel;
+pub mod cqi;
+pub mod pathloss;
+
+pub use channel::{Channel, LinkRealization};
+pub use cqi::{cqi_for_snr, spectral_efficiency, CQI_TABLE};

@@ -1,0 +1,82 @@
+//! Log-distance pathloss model.
+//!
+//! PL(d) = PL₀ + 10·α·log₁₀(d/d₀)  [dB]
+//!
+//! α is the pathloss exponent; the paper's Fig. 4 channel states map to
+//! α = 2 (Good), 4 (Normal), 6 (Poor) (§V-B).
+
+use crate::config::ChannelSpec;
+
+/// Pathloss in dB at distance `d_m` with exponent `alpha`.
+pub fn pathloss_db(ch: &ChannelSpec, d_m: f64, alpha: f64) -> f64 {
+    let d = d_m.max(ch.d0_m); // clamp inside the reference distance
+    ch.pl0_db + 10.0 * alpha * (d / ch.d0_m).log10()
+}
+
+/// dBm -> Watts.
+pub fn dbm_to_watts(dbm: f64) -> f64 {
+    1e-3 * 10f64.powf(dbm / 10.0)
+}
+
+/// dB ratio -> linear.
+pub fn db_to_lin(db: f64) -> f64 {
+    10f64.powf(db / 10.0)
+}
+
+/// linear ratio -> dB.
+pub fn lin_to_db(lin: f64) -> f64 {
+    10.0 * lin.log10()
+}
+
+/// Noise power over bandwidth `bw_hz` [W], including noise figure.
+pub fn noise_watts(ch: &ChannelSpec, bw_hz: f64) -> f64 {
+    dbm_to_watts(ch.noise_dbm_per_hz + ch.noise_figure_db) * bw_hz
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ch() -> ChannelSpec {
+        ChannelSpec::default()
+    }
+
+    #[test]
+    fn pathloss_increases_with_distance_and_alpha() {
+        let c = ch();
+        assert!(pathloss_db(&c, 100.0, 2.0) > pathloss_db(&c, 10.0, 2.0));
+        assert!(pathloss_db(&c, 50.0, 6.0) > pathloss_db(&c, 50.0, 2.0));
+    }
+
+    #[test]
+    fn reference_distance_gives_pl0() {
+        let c = ch();
+        assert!((pathloss_db(&c, c.d0_m, 4.0) - c.pl0_db).abs() < 1e-12);
+        // inside d0 clamps (no negative-gain near-field nonsense)
+        assert!((pathloss_db(&c, 0.01, 4.0) - c.pl0_db).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ten_x_distance_adds_10_alpha_db() {
+        let c = ch();
+        let d1 = pathloss_db(&c, 10.0, 3.0);
+        let d2 = pathloss_db(&c, 100.0, 3.0);
+        assert!((d2 - d1 - 30.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unit_conversions() {
+        assert!((dbm_to_watts(30.0) - 1.0).abs() < 1e-12);
+        assert!((dbm_to_watts(0.0) - 1e-3).abs() < 1e-15);
+        assert!((db_to_lin(3.0) - 1.9952).abs() < 1e-3);
+        assert!((lin_to_db(100.0) - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn thermal_noise_magnitude() {
+        // -174 dBm/Hz + 9 dB NF over 100 MHz ≈ -85 dBm ≈ 3.2e-12 W
+        let c = ch();
+        let n = noise_watts(&c, 100e6);
+        assert!(n > 1e-12 && n < 1e-11, "{n}");
+    }
+}

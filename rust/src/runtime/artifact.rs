@@ -1,0 +1,392 @@
+//! Artifact store: loads the AOT manifest + HLO-text segments, compiles
+//! them on the PJRT client (lazily, cached), and executes them with
+//! shape/dtype validation.
+//!
+//! HLO *text* is the interchange format — see python/compile/aot.py and
+//! /opt/xla-example/README.md (jax ≥ 0.5 emits 64-bit instruction ids
+//! that xla_extension 0.5.1 rejects in proto form; the text parser
+//! reassigns ids).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+use super::tensor::{DType, HostTensor};
+
+/// One input/output slot of a segment, from the manifest.
+#[derive(Clone, Debug)]
+pub struct SlotMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+/// One compiled-segment description.
+#[derive(Clone, Debug)]
+pub struct SegmentMeta {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<SlotMeta>,
+    pub outputs: Vec<SlotMeta>,
+}
+
+/// Model dims exported by the manifest (mirror of configs.py).
+#[derive(Clone, Debug)]
+pub struct ManifestConfig {
+    pub name: String,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub batch_size: usize,
+    pub lora_rank: usize,
+    pub base_layer_len: usize,
+    pub lora_layer_len: usize,
+    pub head_len: usize,
+}
+
+/// One named slice of a flat parameter vector (from manifest layouts).
+#[derive(Clone, Debug)]
+pub struct LayoutEntry {
+    pub name: String,
+    pub offset: usize,
+    pub shape: Vec<usize>,
+}
+
+impl LayoutEntry {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+impl std::fmt::Debug for ArtifactStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ArtifactStore")
+            .field("dir", &self.dir)
+            .field("config", &self.config)
+            .field("segments", &self.segments.len())
+            .field("compiled", &self.compiled.len())
+            .finish()
+    }
+}
+
+pub struct ArtifactStore {
+    pub dir: PathBuf,
+    pub config: ManifestConfig,
+    pub segments: HashMap<String, SegmentMeta>,
+    /// flat-vector layouts: "base_layer", "lora_layer", "head"
+    pub layouts: HashMap<String, Vec<LayoutEntry>>,
+    client: xla::PjRtClient,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// executions per segment (perf accounting)
+    exec_counts: HashMap<String, u64>,
+}
+
+impl ArtifactStore {
+    /// Open `artifacts/<cfg>` and parse its manifest. The PJRT CPU client
+    /// is created here; compilation happens lazily per segment.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts`"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let cfg = parse_config(&j)?;
+        let mut segments = HashMap::new();
+        let arts = j
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts'"))?;
+        for (name, meta) in arts {
+            segments.insert(name.clone(), parse_segment(name, meta, &dir)?);
+        }
+
+        let mut layouts = HashMap::new();
+        if let Some(ls) = j.get("layouts").and_then(Json::as_obj) {
+            for (lname, entries) in ls {
+                let v = entries
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("layout '{lname}' not an array"))?
+                    .iter()
+                    .map(|e| -> Result<LayoutEntry> {
+                        Ok(LayoutEntry {
+                            name: e
+                                .get("name")
+                                .and_then(Json::as_str)
+                                .ok_or_else(|| anyhow!("layout entry missing name"))?
+                                .to_string(),
+                            offset: e
+                                .get("offset")
+                                .and_then(Json::as_usize)
+                                .ok_or_else(|| anyhow!("layout entry missing offset"))?,
+                            shape: e
+                                .get("shape")
+                                .and_then(Json::as_arr)
+                                .ok_or_else(|| anyhow!("layout entry missing shape"))?
+                                .iter()
+                                .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                                .collect::<Result<_>>()?,
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                layouts.insert(lname.clone(), v);
+            }
+        }
+
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            dir,
+            config: cfg,
+            segments,
+            layouts,
+            client,
+            compiled: HashMap::new(),
+            exec_counts: HashMap::new(),
+        })
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    pub fn segment(&self, name: &str) -> Result<&SegmentMeta> {
+        self.segments
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown segment '{name}' (have: {:?})", self.segment_names()))
+    }
+
+    pub fn segment_names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.segments.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Compile (or fetch cached) a segment executable.
+    pub fn compile(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.compiled.contains_key(name) {
+            let meta = self.segment(name)?.clone();
+            let proto = xla::HloModuleProto::from_text_file(&meta.file)
+                .with_context(|| format!("parsing HLO text {:?}", meta.file))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling segment '{name}'"))?;
+            self.compiled.insert(name.to_string(), exe);
+        }
+        Ok(&self.compiled[name])
+    }
+
+    /// Eagerly compile every segment (startup cost, measured by benches).
+    pub fn compile_all(&mut self) -> Result<()> {
+        let names: Vec<String> = self.segments.keys().cloned().collect();
+        for n in names {
+            self.compile(&n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute a segment on host tensors, with full I/O validation.
+    /// Outputs come back as host tensors in manifest order.
+    pub fn execute(&mut self, name: &str, args: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        let meta = self.segment(name)?.clone();
+        if args.len() != meta.inputs.len() {
+            bail!(
+                "segment '{name}': expected {} inputs, got {}",
+                meta.inputs.len(),
+                args.len()
+            );
+        }
+        for (slot, t) in meta.inputs.iter().zip(args) {
+            if slot.shape != t.shape || slot.dtype != t.dtype {
+                bail!(
+                    "segment '{name}' input '{}': manifest wants {:?} {:?}, got {:?} {:?}",
+                    slot.name,
+                    slot.dtype,
+                    slot.shape,
+                    t.dtype,
+                    t.shape
+                );
+            }
+        }
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let exe = self.compile(name)?;
+        let out_bufs = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing segment '{name}'"))?;
+        *self.exec_counts.entry(name.to_string()).or_insert(0) += 1;
+
+        // single-device: outputs[0][0] is the result tuple
+        let lit = out_bufs[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let parts = lit.to_tuple().context("untupling result")?;
+        if parts.len() != meta.outputs.len() {
+            bail!(
+                "segment '{name}': manifest declares {} outputs, got {}",
+                meta.outputs.len(),
+                parts.len()
+            );
+        }
+        let mut outs = Vec::with_capacity(parts.len());
+        for (slot, part) in meta.outputs.iter().zip(&parts) {
+            let t = HostTensor::from_literal(part)
+                .with_context(|| format!("decoding output '{}'", slot.name))?;
+            // scalars come back shape [] — accept against manifest []
+            if t.shape != slot.shape {
+                bail!(
+                    "segment '{name}' output '{}': manifest {:?}, got {:?}",
+                    slot.name,
+                    slot.shape,
+                    t.shape
+                );
+            }
+            outs.push(t);
+        }
+        Ok(outs)
+    }
+
+    /// Upload a host tensor to the device once; the returned buffer can
+    /// be passed to `execute_buffers` any number of times (perf path:
+    /// parameters stay device-resident across steps — DESIGN.md §9 L3).
+    pub fn upload(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
+        let lit = t.to_literal()?;
+        self.client
+            .buffer_from_host_literal(None, &lit)
+            .context("uploading buffer")
+    }
+
+    /// Fetch a device buffer back to the host.
+    pub fn buffer_to_host(&self, buf: &xla::PjRtBuffer) -> Result<HostTensor> {
+        let lit = buf.to_literal_sync().context("downloading buffer")?;
+        HostTensor::from_literal(&lit)
+    }
+
+    /// Device-resident execution: inputs and outputs are PJRT buffers;
+    /// no host round-trip.  The forked `xla` crate's `execute_b` is
+    /// patched to untuple results, so outputs arrive one buffer per
+    /// manifest output, chainable into the next call.
+    pub fn execute_buffers(
+        &mut self,
+        name: &str,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        let n_inputs = self.segment(name)?.inputs.len();
+        let n_outputs = self.segment(name)?.outputs.len();
+        if args.len() != n_inputs {
+            bail!(
+                "segment '{name}': expected {} inputs, got {}",
+                n_inputs,
+                args.len()
+            );
+        }
+        let exe = self.compile(name)?;
+        let mut out = exe
+            .execute_b::<&xla::PjRtBuffer>(args)
+            .with_context(|| format!("executing segment '{name}' (buffers)"))?;
+        *self.exec_counts.entry(name.to_string()).or_insert(0) += 1;
+        let bufs = out.remove(0);
+        if bufs.len() != n_outputs {
+            bail!(
+                "segment '{name}': manifest declares {} outputs, got {} buffers \
+                 (is the forked xla crate's untuple patch active?)",
+                n_outputs,
+                bufs.len()
+            );
+        }
+        Ok(bufs)
+    }
+
+    pub fn exec_count(&self, name: &str) -> u64 {
+        self.exec_counts.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.compiled.len()
+    }
+}
+
+fn parse_config(j: &Json) -> Result<ManifestConfig> {
+    let c = j
+        .get("config")
+        .ok_or_else(|| anyhow!("manifest missing 'config'"))?;
+    let g = |k: &str| -> Result<usize> {
+        c.get(k)
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("config missing '{k}'"))
+    };
+    Ok(ManifestConfig {
+        name: c
+            .get("name")
+            .and_then(Json::as_str)
+            .unwrap_or("unknown")
+            .to_string(),
+        vocab_size: g("vocab_size")?,
+        d_model: g("d_model")?,
+        n_layers: g("n_layers")?,
+        d_ff: g("d_ff")?,
+        seq_len: g("seq_len")?,
+        batch_size: g("batch_size")?,
+        lora_rank: g("lora_rank")?,
+        base_layer_len: g("base_layer_len")?,
+        lora_layer_len: g("lora_layer_len")?,
+        head_len: g("head_len")?,
+    })
+}
+
+fn parse_slot(v: &Json) -> Result<SlotMeta> {
+    let name = v
+        .get("name")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("slot missing name"))?;
+    let shape = v
+        .get("shape")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("slot missing shape"))?
+        .iter()
+        .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad shape dim")))
+        .collect::<Result<Vec<_>>>()?;
+    let dtype = DType::parse(
+        v.get("dtype")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("slot missing dtype"))?,
+    )?;
+    Ok(SlotMeta {
+        name: name.to_string(),
+        shape,
+        dtype,
+    })
+}
+
+fn parse_segment(name: &str, meta: &Json, dir: &Path) -> Result<SegmentMeta> {
+    let file = dir.join(
+        meta.get("file")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("segment '{name}' missing file"))?,
+    );
+    if !file.exists() {
+        bail!("segment '{name}': artifact file {file:?} missing — run `make artifacts`");
+    }
+    let slots = |key: &str| -> Result<Vec<SlotMeta>> {
+        meta.get(key)
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("segment '{name}' missing {key}"))?
+            .iter()
+            .map(parse_slot)
+            .collect()
+    };
+    Ok(SegmentMeta {
+        name: name.to_string(),
+        file,
+        inputs: slots("inputs")?,
+        outputs: slots("outputs")?,
+    })
+}

@@ -1,0 +1,524 @@
+//! The split execution engine: runs REAL LoRA fine-tuning by chaining
+//! per-layer HLO artifacts, implementing Stages 2–5 of the paper's
+//! protocol with actual numerics (DESIGN.md §3).
+//!
+//! For a cut layer c:
+//!   device FP  = embed_fwd + layer_fwd × c          (stash layer inputs)
+//!   server FP  = layer_fwd × (I−c) + head_loss_grad
+//!   server BP  = layer_bwd × (I−c), adapter_sgd × (I−c)
+//!   device BP  = layer_bwd × c,     adapter_sgd × c
+//!
+//! The cut does not change the math (the same ops run either way), so
+//! loss curves are comparable across strategies — exactly the paper's
+//! setting, where the split only moves delay/energy, not gradients.
+//! The executor still tracks which side executed every op + the bytes
+//! that crossed the "air gap" so integration tests can assert protocol
+//! invariants against the Aggregator.
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::aggregator::Aggregator;
+use crate::coordinator::scheduler::{BackendStats, TrainBackend};
+use crate::data::Batcher;
+use crate::util::rng::Rng;
+
+use super::artifact::{ArtifactStore, LayoutEntry};
+use super::tensor::HostTensor;
+
+/// Full model state as flat f32 vectors (layouts from the manifest).
+pub struct ModelState {
+    pub embed: HostTensor,
+    pub base: Vec<HostTensor>,
+    pub lora: Vec<HostTensor>,
+    pub head: HostTensor,
+}
+
+impl ModelState {
+    /// Initialize mirroring python/compile/params.py: scaled-normal
+    /// weights, unit RMS gains, LoRA A ~ N(0, 0.02²), B = 0.
+    pub fn init(store: &ArtifactStore, seed: u64) -> Result<Self> {
+        let cfg = &store.config;
+        let mut rng = Rng::new(seed);
+
+        let embed_vals: Vec<f32> = {
+            let scale = (cfg.d_model as f64).powf(-0.5);
+            (0..cfg.vocab_size * cfg.d_model)
+                .map(|_| (rng.gauss() * scale) as f32)
+                .collect()
+        };
+        let embed = HostTensor::from_f32(&[cfg.vocab_size, cfg.d_model], &embed_vals)?;
+
+        let base_layout = store
+            .layouts
+            .get("base_layer")
+            .context("manifest missing base_layer layout")?;
+        let lora_layout = store
+            .layouts
+            .get("lora_layer")
+            .context("manifest missing lora_layer layout")?;
+        let head_layout = store
+            .layouts
+            .get("head")
+            .context("manifest missing head layout")?;
+
+        let mut base = Vec::with_capacity(cfg.n_layers);
+        let mut lora = Vec::with_capacity(cfg.n_layers);
+        for _ in 0..cfg.n_layers {
+            base.push(HostTensor::from_f32(
+                &[cfg.base_layer_len],
+                &init_flat(base_layout, cfg.base_layer_len, &mut rng),
+            )?);
+            lora.push(HostTensor::from_f32(
+                &[cfg.lora_layer_len],
+                &init_flat(lora_layout, cfg.lora_layer_len, &mut rng),
+            )?);
+        }
+        let head = HostTensor::from_f32(
+            &[cfg.head_len],
+            &init_flat(head_layout, cfg.head_len, &mut rng),
+        )?;
+
+        Ok(Self {
+            embed,
+            base,
+            lora,
+            head,
+        })
+    }
+
+    /// Stacked (n_layers, len) views for the fused `train_step` artifact.
+    pub fn stacked(&self) -> Result<(HostTensor, HostTensor)> {
+        let n = self.base.len();
+        let lb = self.base[0].numel();
+        let ll = self.lora[0].numel();
+        let mut bs = Vec::with_capacity(n * lb);
+        let mut ls = Vec::with_capacity(n * ll);
+        for t in &self.base {
+            bs.extend(t.as_f32()?);
+        }
+        for t in &self.lora {
+            ls.extend(t.as_f32()?);
+        }
+        Ok((
+            HostTensor::from_f32(&[n, lb], &bs)?,
+            HostTensor::from_f32(&[n, ll], &ls)?,
+        ))
+    }
+}
+
+/// Initialize one flat parameter vector per its layout semantics.
+fn init_flat(layout: &[LayoutEntry], total: usize, rng: &mut Rng) -> Vec<f32> {
+    let mut v = vec![0f32; total];
+    for e in layout {
+        let seg = &mut v[e.offset..e.offset + e.numel()];
+        if e.name.starts_with("rms") {
+            seg.fill(1.0);
+        } else if e.name.starts_with("a_") {
+            for x in seg.iter_mut() {
+                *x = (rng.gauss() * 0.02) as f32;
+            }
+        } else if e.name.starts_with("b_") {
+            // zeros: adapter starts as identity (B = 0)
+        } else {
+            // base / head weight matrices: N(0, fan_in^-1)
+            let fan_in = e.shape[0].max(1) as f64;
+            let scale = fan_in.powf(-0.5);
+            for x in seg.iter_mut() {
+                *x = (rng.gauss() * scale) as f32;
+            }
+        }
+    }
+    v
+}
+
+/// Wire-traffic ledger for one training step at cut c (what crossed the
+/// device↔server boundary; mirrors the datasize model).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepTraffic {
+    pub smashed_up_bytes: f64,
+    pub grad_down_bytes: f64,
+    pub device_ops: usize,
+    pub server_ops: usize,
+}
+
+impl std::fmt::Debug for SplitExecutor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SplitExecutor")
+            .field("store", &self.store)
+            .field("steps", &self.loss_log.len())
+            .finish()
+    }
+}
+
+/// Device-resident parameter set (perf path: uploaded once, reused
+/// every step; only tokens go up and the loss scalar comes down).
+struct DeviceParams {
+    embed: xla::PjRtBuffer,
+    head: xla::PjRtBuffer,
+    base: Vec<xla::PjRtBuffer>,
+    lora: Vec<xla::PjRtBuffer>,
+    lr: xla::PjRtBuffer,
+}
+
+pub struct SplitExecutor {
+    pub store: ArtifactStore,
+    pub state: ModelState,
+    batchers: Vec<Batcher>,
+    pub lr: f32,
+    pub aggregator: Aggregator,
+    /// (device, loss) per executed step
+    pub loss_log: Vec<(usize, f64)>,
+    pub traffic_log: Vec<StepTraffic>,
+    /// lazily-initialized device-resident parameters (fast path)
+    dev_params: Option<DeviceParams>,
+    /// true when `dev_params.lora` is newer than `state.lora`
+    lora_host_stale: bool,
+}
+
+impl SplitExecutor {
+    pub fn new(store: ArtifactStore, batchers: Vec<Batcher>, lr: f32, seed: u64) -> Result<Self> {
+        let cfg = &store.config;
+        for b in &batchers {
+            if b.batch_size != cfg.batch_size || b.seq_len != cfg.seq_len {
+                bail!(
+                    "batcher ({},{}) does not match artifact config ({},{})",
+                    b.batch_size,
+                    b.seq_len,
+                    cfg.batch_size,
+                    cfg.seq_len
+                );
+            }
+        }
+        let n_layers = cfg.n_layers;
+        let state = ModelState::init(&store, seed)?;
+        Ok(Self {
+            store,
+            state,
+            batchers,
+            lr,
+            aggregator: Aggregator::new(n_layers),
+            loss_log: Vec::new(),
+            traffic_log: Vec::new(),
+            dev_params: None,
+            lora_host_stale: false,
+        })
+    }
+
+    /// Upload all parameters to the device (idempotent).
+    fn ensure_device_params(&mut self) -> Result<()> {
+        if self.dev_params.is_some() {
+            return Ok(());
+        }
+        let embed = self.store.upload(&self.state.embed)?;
+        let head = self.store.upload(&self.state.head)?;
+        let base = self
+            .state
+            .base
+            .iter()
+            .map(|t| self.store.upload(t))
+            .collect::<Result<Vec<_>>>()?;
+        let lora = self
+            .state
+            .lora
+            .iter()
+            .map(|t| self.store.upload(t))
+            .collect::<Result<Vec<_>>>()?;
+        let lr = self.store.upload(&HostTensor::from_f32(&[1], &[self.lr])?)?;
+        self.dev_params = Some(DeviceParams {
+            embed,
+            head,
+            base,
+            lora,
+            lr,
+        });
+        Ok(())
+    }
+
+    /// Pull device-resident adapters back into `state.lora` (after fast
+    /// steps; no-op when already in sync).
+    pub fn sync_lora_to_host(&mut self) -> Result<()> {
+        if !self.lora_host_stale {
+            return Ok(());
+        }
+        if let Some(dp) = &self.dev_params {
+            for (t, buf) in self.state.lora.iter_mut().zip(&dp.lora) {
+                *t = self.store.buffer_to_host(buf)?;
+            }
+        }
+        self.lora_host_stale = false;
+        Ok(())
+    }
+
+    /// One split training step on the DEVICE-RESIDENT fast path: the
+    /// same Stage 2–5 protocol as `train_step`, but parameters live on
+    /// the device across steps and activations/gradients chain between
+    /// segments as PJRT buffers.  Host boundary traffic per step: the
+    /// token/label batch up, one f32 loss down.
+    pub fn train_step_device(&mut self, device_idx: usize, cut: usize, round: usize) -> Result<f64> {
+        let i_layers = self.n_layers();
+        if cut > i_layers {
+            bail!("cut {cut} exceeds model depth {i_layers}");
+        }
+        if device_idx >= self.batchers.len() {
+            bail!("device {device_idx} has no batcher");
+        }
+        self.ensure_device_params()?;
+        let cfg_b = self.store.config.batch_size;
+        let cfg_s = self.store.config.seq_len;
+        let d = self.store.config.d_model;
+
+        let adapter_bytes = (cut * self.store.config.lora_layer_len * 4) as f64;
+        self.aggregator.distribute(device_idx, cut, round, adapter_bytes);
+
+        let (toks, labs) = self.batchers[device_idx].next_batch();
+        let tokens = self
+            .store
+            .upload(&HostTensor::from_i32(&[cfg_b, cfg_s], &toks)?)?;
+        let labels = self
+            .store
+            .upload(&HostTensor::from_i32(&[cfg_b, cfg_s], &labs)?)?;
+
+        let mut traffic = StepTraffic {
+            smashed_up_bytes: (cfg_b * cfg_s * d * 4 + cfg_b * cfg_s * 4) as f64,
+            ..Default::default()
+        };
+
+        // Stage 3: forward chain, stashing layer inputs (buffers)
+        let dp = self.dev_params.take().expect("ensured above");
+        let step = (|| -> Result<(f64, Vec<xla::PjRtBuffer>)> {
+            let mut h = self
+                .store
+                .execute_buffers("embed_fwd", &[&tokens, &dp.embed])?
+                .remove(0);
+            traffic.device_ops += 1;
+            let mut acts: Vec<xla::PjRtBuffer> = Vec::with_capacity(i_layers);
+            for l in 0..i_layers {
+                let out = self
+                    .store
+                    .execute_buffers("layer_fwd", &[&h, &dp.base[l], &dp.lora[l]])?
+                    .remove(0);
+                acts.push(h);
+                h = out;
+                if l < cut {
+                    traffic.device_ops += 1;
+                } else {
+                    traffic.server_ops += 1;
+                }
+            }
+            let mut head_out = self
+                .store
+                .execute_buffers("head_loss_grad", &[&h, &dp.head, &labels])?;
+            traffic.server_ops += 1;
+            let g_h = head_out.remove(1);
+            let loss = self
+                .store
+                .buffer_to_host(&head_out.remove(0))?
+                .as_f32()?[0] as f64;
+
+            // Stage 4: backward chain + in-place adapter updates
+            let mut new_lora: Vec<(usize, xla::PjRtBuffer)> = Vec::with_capacity(i_layers);
+            let mut g = g_h;
+            for l in (0..i_layers).rev() {
+                let mut outs = self.store.execute_buffers(
+                    "layer_bwd",
+                    &[&acts[l], &dp.base[l], &dp.lora[l], &g],
+                )?;
+                let g_lora = outs.remove(1);
+                let g_in = outs.remove(0);
+                let updated = self
+                    .store
+                    .execute_buffers("adapter_sgd", &[&dp.lora[l], &g_lora, &dp.lr])?
+                    .remove(0);
+                new_lora.push((l, updated));
+                if l < cut {
+                    traffic.device_ops += 2;
+                } else {
+                    traffic.server_ops += 2;
+                }
+                if l == cut && cut > 0 {
+                    traffic.grad_down_bytes = (cfg_b * cfg_s * d * 4) as f64;
+                }
+                g = g_in;
+            }
+            let lora_bufs: Vec<xla::PjRtBuffer> = {
+                new_lora.sort_by_key(|(l, _)| *l);
+                new_lora.into_iter().map(|(_, b)| b).collect()
+            };
+            Ok((loss, lora_bufs))
+        })();
+
+        match step {
+            Ok((loss, lora_bufs)) => {
+                self.dev_params = Some(DeviceParams { lora: lora_bufs, ..dp });
+                self.lora_host_stale = true;
+                self.aggregator.server_update(cut, round);
+                self.aggregator.merge(device_idx, cut, round, adapter_bytes);
+                self.loss_log.push((device_idx, loss));
+                self.traffic_log.push(traffic);
+                Ok(loss)
+            }
+            Err(e) => {
+                // restore params so the executor stays usable
+                self.dev_params = Some(dp);
+                Err(e)
+            }
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.store.config.n_layers
+    }
+
+    /// One split training step for `device_idx` at cut `c`.
+    /// Returns the step loss.
+    pub fn train_step(&mut self, device_idx: usize, cut: usize, round: usize) -> Result<f64> {
+        let i_layers = self.n_layers();
+        if cut > i_layers {
+            bail!("cut {cut} exceeds model depth {i_layers}");
+        }
+        if device_idx >= self.batchers.len() {
+            bail!("device {device_idx} has no batcher");
+        }
+        self.sync_lora_to_host()?; // in case fast steps ran before
+        let cfg_b = self.store.config.batch_size;
+        let cfg_s = self.store.config.seq_len;
+        let d = self.store.config.d_model;
+
+        // ---- Stage 2: adapter distribution (control plane) ----
+        let adapter_bytes = (cut * self.store.config.lora_layer_len * 4) as f64;
+        self.aggregator.distribute(device_idx, cut, round, adapter_bytes);
+
+        let (toks, labs) = self.batchers[device_idx].next_batch();
+        let tokens = HostTensor::from_i32(&[cfg_b, cfg_s], &toks)?;
+        let labels = HostTensor::from_i32(&[cfg_b, cfg_s], &labs)?;
+
+        // ---- Stage 3: forward (device then server) ----
+        let mut traffic = StepTraffic::default();
+        let mut h = self
+            .store
+            .execute("embed_fwd", &[&tokens, &self.state.embed])?
+            .remove(0);
+        traffic.device_ops += 1;
+
+        let mut acts: Vec<HostTensor> = Vec::with_capacity(i_layers);
+        for l in 0..i_layers {
+            acts.push(h.clone());
+            let out = self
+                .store
+                .execute("layer_fwd", &[&h, &self.state.base[l], &self.state.lora[l]])?
+                .remove(0);
+            h = out;
+            if l < cut {
+                traffic.device_ops += 1;
+            } else {
+                traffic.server_ops += 1;
+            }
+        }
+        // smashed data crosses up exactly once per step
+        traffic.smashed_up_bytes = (cfg_b * cfg_s * d * 4 + cfg_b * cfg_s * 4) as f64;
+
+        let mut head_out = self
+            .store
+            .execute("head_loss_grad", &[&h, &self.state.head, &labels])?;
+        traffic.server_ops += 1;
+        let g_h = head_out.remove(1);
+        let loss = head_out.remove(0).as_f32()?[0] as f64;
+
+        // ---- Stage 4: backward (server layers, then device layers) ----
+        let lr = HostTensor::from_f32(&[1], &[self.lr])?;
+        let mut g = g_h;
+        for l in (0..i_layers).rev() {
+            let mut outs = self.store.execute(
+                "layer_bwd",
+                &[&acts[l], &self.state.base[l], &self.state.lora[l], &g],
+            )?;
+            let g_lora = outs.remove(1);
+            let g_in = outs.remove(0);
+            let updated = self
+                .store
+                .execute("adapter_sgd", &[&self.state.lora[l], &g_lora, &lr])?
+                .remove(0);
+            self.state.lora[l] = updated;
+            if l < cut {
+                traffic.device_ops += 2;
+            } else {
+                traffic.server_ops += 2;
+            }
+            if l == cut && cut > 0 {
+                // the smashed-data gradient crosses down here
+                traffic.grad_down_bytes = (cfg_b * cfg_s * d * 4) as f64;
+            }
+            g = g_in;
+        }
+        self.aggregator.server_update(cut, round);
+
+        // ---- Stage 5: adapter upload + merge (Eq. 6) ----
+        self.aggregator.merge(device_idx, cut, round, adapter_bytes);
+
+        self.loss_log.push((device_idx, loss));
+        self.traffic_log.push(traffic);
+        // host-side adapters changed: device copies (if any) are stale
+        self.dev_params = None;
+        self.lora_host_stale = false;
+        Ok(loss)
+    }
+
+    /// Fused whole-model step via the `train_step` artifact (ablation
+    /// A4 baseline).  Updates the LoRA state in place.
+    pub fn fused_train_step(&mut self, device_idx: usize) -> Result<f64> {
+        self.sync_lora_to_host()?;
+        let cfg_b = self.store.config.batch_size;
+        let cfg_s = self.store.config.seq_len;
+        let (toks, labs) = self.batchers[device_idx].next_batch();
+        let tokens = HostTensor::from_i32(&[cfg_b, cfg_s], &toks)?;
+        let labels = HostTensor::from_i32(&[cfg_b, cfg_s], &labs)?;
+        let (base_stack, lora_stack) = self.state.stacked()?;
+        let lr = HostTensor::from_f32(&[1], &[self.lr])?;
+        let mut outs = self.store.execute(
+            "train_step",
+            &[
+                &tokens,
+                &labels,
+                &self.state.embed,
+                &base_stack,
+                &lora_stack,
+                &self.state.head,
+                &lr,
+            ],
+        )?;
+        let new_stack = outs.remove(1);
+        let loss = outs.remove(0).as_f32()?[0] as f64;
+        // scatter the stacked result back into per-layer tensors
+        let flat = new_stack.as_f32()?;
+        let ll = self.store.config.lora_layer_len;
+        for (l, t) in self.state.lora.iter_mut().enumerate() {
+            *t = HostTensor::from_f32(&[ll], &flat[l * ll..(l + 1) * ll])?;
+        }
+        self.loss_log.push((device_idx, loss));
+        // host-side adapters changed: device copies (if any) are stale
+        self.dev_params = None;
+        Ok(loss)
+    }
+}
+
+impl TrainBackend for SplitExecutor {
+    fn train_round(
+        &mut self,
+        device_idx: usize,
+        cut: usize,
+        epochs: usize,
+    ) -> Result<BackendStats> {
+        let t0 = std::time::Instant::now();
+        let mut total = 0.0;
+        let round = self.aggregator.merges() as usize;
+        for _ in 0..epochs {
+            // device-resident fast path (see train_step for the host
+            // reference path the tests cross-check against)
+            total += self.train_step_device(device_idx, cut, round)?;
+        }
+        Ok(BackendStats {
+            mean_loss: total / epochs.max(1) as f64,
+            wallclock_s: t0.elapsed().as_secs_f64(),
+        })
+    }
+}

@@ -1,0 +1,19 @@
+//! PJRT runtime (L3 ⇄ L2 boundary): loads the AOT HLO-text artifacts,
+//! compiles them on the PJRT CPU client (`xla` crate), and chains them
+//! into real split LoRA fine-tuning steps.  Python is never on this
+//! path — the artifacts are self-contained after `make artifacts`.
+
+pub mod artifact;
+pub mod executor;
+pub mod tensor;
+
+pub use artifact::{ArtifactStore, LayoutEntry, ManifestConfig, SegmentMeta, SlotMeta};
+pub use executor::{ModelState, SplitExecutor, StepTraffic};
+pub use tensor::{DType, HostTensor};
+
+/// Conventional artifact directory for a named config, resolved
+/// relative to the workspace root (or `EDGESPLIT_ARTIFACTS` override).
+pub fn artifact_dir(config: &str) -> std::path::PathBuf {
+    let base = std::env::var("EDGESPLIT_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+    std::path::Path::new(&base).join(config)
+}

@@ -1,0 +1,194 @@
+//! Host tensors + conversions to/from PJRT `Literal`s.
+//!
+//! Only the two dtypes the artifacts use (f32, i32); shapes are
+//! validated against the manifest before every upload so a drifted
+//! artifact fails loudly instead of silently reinterpreting bytes.
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unsupported dtype '{other}'"),
+        }
+    }
+
+    pub fn element_type(self) -> xla::ElementType {
+        match self {
+            DType::F32 => xla::ElementType::F32,
+            DType::I32 => xla::ElementType::S32,
+        }
+    }
+
+    pub fn size(self) -> usize {
+        4
+    }
+}
+
+/// A host-side tensor (row-major).
+#[derive(Clone, Debug)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    data: Vec<u8>,
+}
+
+impl HostTensor {
+    pub fn from_f32(shape: &[usize], values: &[f32]) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != values.len() {
+            bail!("shape {shape:?} wants {n} elements, got {}", values.len());
+        }
+        let mut data = vec![0u8; n * 4];
+        for (chunk, v) in data.chunks_exact_mut(4).zip(values) {
+            chunk.copy_from_slice(&v.to_le_bytes());
+        }
+        Ok(Self {
+            shape: shape.to_vec(),
+            dtype: DType::F32,
+            data,
+        })
+    }
+
+    pub fn from_i32(shape: &[usize], values: &[i32]) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != values.len() {
+            bail!("shape {shape:?} wants {n} elements, got {}", values.len());
+        }
+        let mut data = vec![0u8; n * 4];
+        for (chunk, v) in data.chunks_exact_mut(4).zip(values) {
+            chunk.copy_from_slice(&v.to_le_bytes());
+        }
+        Ok(Self {
+            shape: shape.to_vec(),
+            dtype: DType::I32,
+            data,
+        })
+    }
+
+    pub fn zeros(shape: &[usize], dtype: DType) -> Self {
+        let n: usize = shape.iter().product();
+        Self {
+            shape: shape.to_vec(),
+            dtype,
+            data: vec![0u8; n * dtype.size()],
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != DType::F32 {
+            bail!("tensor is {:?}, not f32", self.dtype);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn as_i32(&self) -> Result<Vec<i32>> {
+        if self.dtype != DType::I32 {
+            bail!("tensor is {:?}, not i32", self.dtype);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Convert to a PJRT literal (copies).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::create_from_shape_and_untyped_data(
+            self.dtype.element_type(),
+            &self.shape,
+            &self.data,
+        )
+        .context("literal_create_from_shape_and_data")?;
+        Ok(lit)
+    }
+
+    /// Convert back from a PJRT literal.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape().context("literal has no array shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let (dtype, data) = match shape.ty() {
+            xla::ElementType::F32 => {
+                let v: Vec<f32> = lit.to_vec().context("to_vec f32")?;
+                let mut bytes = vec![0u8; v.len() * 4];
+                for (c, x) in bytes.chunks_exact_mut(4).zip(&v) {
+                    c.copy_from_slice(&x.to_le_bytes());
+                }
+                (DType::F32, bytes)
+            }
+            xla::ElementType::S32 => {
+                let v: Vec<i32> = lit.to_vec().context("to_vec i32")?;
+                let mut bytes = vec![0u8; v.len() * 4];
+                for (c, x) in bytes.chunks_exact_mut(4).zip(&v) {
+                    c.copy_from_slice(&x.to_le_bytes());
+                }
+                (DType::I32, bytes)
+            }
+            other => bail!("unsupported literal element type {other:?}"),
+        };
+        Ok(Self {
+            shape: dims,
+            dtype,
+            data,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip_values() {
+        let t = HostTensor::from_f32(&[2, 3], &[1.0, -2.5, 3.0, 0.0, 1e-8, 7.25]).unwrap();
+        assert_eq!(t.numel(), 6);
+        assert_eq!(t.as_f32().unwrap()[1], -2.5);
+    }
+
+    #[test]
+    fn i32_roundtrip_values() {
+        let t = HostTensor::from_i32(&[4], &[1, -2, 300000, 0]).unwrap();
+        assert_eq!(t.as_i32().unwrap(), vec![1, -2, 300000, 0]);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(HostTensor::from_f32(&[2, 2], &[1.0]).is_err());
+    }
+
+    #[test]
+    fn dtype_confusion_rejected() {
+        let t = HostTensor::from_i32(&[1], &[1]).unwrap();
+        assert!(t.as_f32().is_err());
+    }
+
+    #[test]
+    fn zeros_is_zero() {
+        let t = HostTensor::zeros(&[3, 3], DType::F32);
+        assert!(t.as_f32().unwrap().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(DType::parse("f32").unwrap(), DType::F32);
+        assert_eq!(DType::parse("i32").unwrap(), DType::I32);
+        assert!(DType::parse("f64").is_err());
+    }
+}

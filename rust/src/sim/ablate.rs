@@ -1,0 +1,155 @@
+//! Ablation sweeps (DESIGN.md experiment index A1/A2): how the CARD
+//! decision landscape responds to the weight w, the compression ratio
+//! φ, and the channel bandwidth — the design choices the paper fixes in
+//! Table II.
+
+use crate::config::{ChannelState, ExpConfig};
+use crate::coordinator::{Scheduler, Strategy};
+use crate::util::table::Table;
+
+use super::metrics::Summary;
+
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub value: f64,
+    pub mean_delay_s: f64,
+    pub mean_energy_j: f64,
+    pub mean_freq_ghz: f64,
+    pub frac_cut_full: f64,
+}
+
+fn run_point(cfg: &ExpConfig, state: ChannelState) -> anyhow::Result<(Summary, usize)> {
+    let mut sched = Scheduler::new(cfg.clone(), state, Strategy::Card);
+    let records = sched.run_analytic()?;
+    let n_layers = sched.cost_model.n_layers();
+    Ok((Summary::from_records(&records), n_layers))
+}
+
+/// A1: sweep the delay/energy weight w ∈ [0, 1].
+pub fn sweep_w(base: &ExpConfig, values: &[f64]) -> anyhow::Result<Vec<SweepPoint>> {
+    let mut out = Vec::new();
+    for &w in values {
+        let mut cfg = base.clone();
+        cfg.card.w = w;
+        let (s, nl) = run_point(&cfg, ChannelState::Normal)?;
+        let (_, at_i) = s.endpoint_fractions(nl);
+        out.push(SweepPoint {
+            value: w,
+            mean_delay_s: s.delay.mean(),
+            mean_energy_j: s.energy.mean(),
+            mean_freq_ghz: s.freqs_ghz.iter().sum::<f64>() / s.freqs_ghz.len() as f64,
+            frac_cut_full: at_i,
+        });
+    }
+    Ok(out)
+}
+
+/// A2a: sweep the compression ratio φ.
+pub fn sweep_phi(base: &ExpConfig, values: &[f64]) -> anyhow::Result<Vec<SweepPoint>> {
+    let mut out = Vec::new();
+    for &phi in values {
+        let mut cfg = base.clone();
+        cfg.workload.phi = phi;
+        let (s, nl) = run_point(&cfg, ChannelState::Poor)?;
+        let (_, at_i) = s.endpoint_fractions(nl);
+        out.push(SweepPoint {
+            value: phi,
+            mean_delay_s: s.delay.mean(),
+            mean_energy_j: s.energy.mean(),
+            mean_freq_ghz: s.freqs_ghz.iter().sum::<f64>() / s.freqs_ghz.len() as f64,
+            frac_cut_full: at_i,
+        });
+    }
+    Ok(out)
+}
+
+/// A2b: sweep bandwidth [MHz].
+pub fn sweep_bandwidth(base: &ExpConfig, values_mhz: &[f64]) -> anyhow::Result<Vec<SweepPoint>> {
+    let mut out = Vec::new();
+    for &mhz in values_mhz {
+        let mut cfg = base.clone();
+        cfg.channel.bandwidth_hz = mhz * 1e6;
+        let (s, nl) = run_point(&cfg, ChannelState::Normal)?;
+        let (_, at_i) = s.endpoint_fractions(nl);
+        out.push(SweepPoint {
+            value: mhz,
+            mean_delay_s: s.delay.mean(),
+            mean_energy_j: s.energy.mean(),
+            mean_freq_ghz: s.freqs_ghz.iter().sum::<f64>() / s.freqs_ghz.len() as f64,
+            frac_cut_full: at_i,
+        });
+    }
+    Ok(out)
+}
+
+pub fn render(title: &str, label: &str, points: &[SweepPoint]) -> String {
+    let mut t = Table::new(
+        title,
+        &[label, "delay [s]", "energy [J]", "f* [GHz]", "frac cut=I"],
+    );
+    for p in points {
+        t.row(vec![
+            format!("{:.3}", p.value),
+            format!("{:.2}", p.mean_delay_s),
+            format!("{:.1}", p.mean_energy_j),
+            format!("{:.2}", p.mean_freq_ghz),
+            format!("{:.2}", p.frac_cut_full),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ExpConfig {
+        let mut c = ExpConfig::paper();
+        c.workload.rounds = 6;
+        c
+    }
+
+    #[test]
+    fn w_extremes_recover_single_objectives() {
+        let pts = sweep_w(&cfg(), &[0.0, 1.0]).unwrap();
+        // w=0: pure energy — minimal frequency, everything on devices
+        assert!(pts[0].frac_cut_full > 0.99);
+        // w=1: pure delay — max frequency
+        assert!(pts[1].mean_freq_ghz > 2.4);
+        // delay at w=1 must be lower than at w=0
+        assert!(pts[1].mean_delay_s < pts[0].mean_delay_s);
+        // energy at w=0 must be lower than at w=1
+        assert!(pts[0].mean_energy_j < pts[1].mean_energy_j);
+    }
+
+    #[test]
+    fn w_sweep_is_paretoish() {
+        // as w grows, delay (weighted objective) should not increase
+        let pts = sweep_w(&cfg(), &[0.1, 0.3, 0.5, 0.7, 0.9]).unwrap();
+        for pair in pts.windows(2) {
+            assert!(
+                pair[1].mean_delay_s <= pair[0].mean_delay_s * 1.05,
+                "delay should trend down with w"
+            );
+        }
+    }
+
+    #[test]
+    fn heavier_compression_helps_poor_channel_delay() {
+        let pts = sweep_phi(&cfg(), &[0.05, 0.5]).unwrap();
+        assert!(pts[0].mean_delay_s < pts[1].mean_delay_s);
+    }
+
+    #[test]
+    fn more_bandwidth_less_delay() {
+        let pts = sweep_bandwidth(&cfg(), &[20.0, 200.0]).unwrap();
+        assert!(pts[1].mean_delay_s < pts[0].mean_delay_s);
+    }
+
+    #[test]
+    fn render_has_all_rows() {
+        let pts = sweep_w(&cfg(), &[0.2, 0.8]).unwrap();
+        let s = render("t", "w", &pts);
+        assert!(s.contains("0.200") && s.contains("0.800"));
+    }
+}

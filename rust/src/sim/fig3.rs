@@ -1,0 +1,140 @@
+//! Fig. 3 reproduction: per-device CARD decisions across training rounds
+//! under a dynamic (Rayleigh block-fading) channel.
+//!
+//!   (a) optimal cut layer per device per round   — always 0 or I,
+//!       stronger devices at I, weaker at 0, flips with fading;
+//!   (b) server frequency allocation per device per round — higher for
+//!       weaker devices (they offload more).
+
+use crate::config::{ChannelState, ExpConfig};
+use crate::coordinator::{RoundRecord, Scheduler, Strategy};
+use crate::util::table::Table;
+
+#[derive(Clone, Debug)]
+pub struct Fig3Result {
+    pub records: Vec<RoundRecord>,
+    pub n_devices: usize,
+    pub rounds: usize,
+    pub n_layers: usize,
+}
+
+pub fn run(cfg: &ExpConfig, state: ChannelState) -> anyhow::Result<Fig3Result> {
+    let mut sched = Scheduler::new(cfg.clone(), state, Strategy::Card);
+    let records = sched.run_analytic()?;
+    Ok(Fig3Result {
+        n_devices: cfg.devices.len(),
+        rounds: cfg.workload.rounds,
+        n_layers: sched.cost_model.n_layers(),
+        records,
+    })
+}
+
+impl Fig3Result {
+    /// Cut-layer matrix: rows = devices, cols = rounds (Fig. 3a).
+    pub fn cut_matrix(&self) -> Vec<Vec<usize>> {
+        let mut m = vec![vec![0usize; self.rounds]; self.n_devices];
+        for r in &self.records {
+            m[r.device_idx][r.round] = r.cut;
+        }
+        m
+    }
+
+    /// Frequency matrix [GHz]: rows = devices, cols = rounds (Fig. 3b).
+    pub fn freq_matrix(&self) -> Vec<Vec<f64>> {
+        let mut m = vec![vec![0f64; self.rounds]; self.n_devices];
+        for r in &self.records {
+            m[r.device_idx][r.round] = r.freq_hz / 1e9;
+        }
+        m
+    }
+
+    /// Render both panels as tables (what the bench prints).
+    pub fn render(&self, device_names: &[String]) -> String {
+        let mut headers: Vec<String> = vec!["device".into()];
+        headers.extend((1..=self.rounds).map(|n| format!("r{n}")));
+        let hrefs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+
+        let mut t1 = Table::new("Fig. 3(a) — optimal cut layer per round", &hrefs);
+        for (i, row) in self.cut_matrix().iter().enumerate() {
+            let mut cells = vec![device_names[i].clone()];
+            cells.extend(row.iter().map(|c| c.to_string()));
+            t1.row(cells);
+        }
+        let mut t2 = Table::new("Fig. 3(b) — server GPU frequency [GHz] per round", &hrefs);
+        for (i, row) in self.freq_matrix().iter().enumerate() {
+            let mut cells = vec![device_names[i].clone()];
+            cells.extend(row.iter().map(|f| format!("{f:.2}")));
+            t2.row(cells);
+        }
+        format!("{}\n\n{}", t1.render(), t2.render())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ExpConfig {
+        let mut c = ExpConfig::paper();
+        c.workload.rounds = 12;
+        c
+    }
+
+    #[test]
+    fn decisions_are_endpoints() {
+        let r = run(&cfg(), ChannelState::Normal).unwrap();
+        for row in r.cut_matrix() {
+            for c in row {
+                assert!(c == 0 || c == r.n_layers, "interior cut {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn capability_ordering_of_cuts() {
+        // Device 1 mostly keeps layers local; Device 5 mostly offloads.
+        let r = run(&cfg(), ChannelState::Normal).unwrap();
+        let m = r.cut_matrix();
+        let mean = |row: &[usize]| row.iter().sum::<usize>() as f64 / row.len() as f64;
+        assert!(mean(&m[0]) > mean(&m[4]));
+    }
+
+    #[test]
+    fn frequency_allocation_follows_eq16_not_fig3b_narrative() {
+        // DISCREPANCY (documented in EXPERIMENTS.md): the paper's Fig. 3(b)
+        // narrative says weaker devices get a HIGHER server frequency, but
+        // its own Eq. (16) implies the opposite: Q ∝ ∛(ΔE/ΔD), and a weak
+        // device's (c=I, F_min) corner inflates D_max hence ΔD, shrinking
+        // Q — while the F^{m,S}_min floor additionally lifts strong
+        // devices' clamped f*.  We implement Eq. (16) faithfully and
+        // assert ITS direction.
+        let r = run(&cfg(), ChannelState::Normal).unwrap();
+        let f = r.freq_matrix();
+        let mean = |row: &[f64]| row.iter().sum::<f64>() / row.len() as f64;
+        assert!(
+            mean(&f[0]) > mean(&f[4]),
+            "Eq. 16 direction violated: dev1 {} !> dev5 {}",
+            mean(&f[0]),
+            mean(&f[4])
+        );
+        // every allocation respects the per-device feasibility window
+        let cfgx = cfg();
+        for (i, row) in f.iter().enumerate() {
+            let floor = cfgx.devices[i].server_freq_floor(&cfgx.server) / 1e9;
+            for &ghz in row {
+                assert!(ghz >= floor - 1e-9 && ghz <= cfgx.server.max_freq_hz / 1e9 + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn render_contains_all_devices() {
+        let c = cfg();
+        let r = run(&c, ChannelState::Normal).unwrap();
+        let names: Vec<String> = c.devices.iter().map(|d| d.name.clone()).collect();
+        let out = r.render(&names);
+        for n in &names {
+            assert!(out.contains(n.as_str()));
+        }
+    }
+}

@@ -1,0 +1,175 @@
+//! Fig. 4 reproduction: training delay + server energy per round for
+//! CARD vs the paper's two benchmarks (Server-only, Device-only) across
+//! the three channel states (Good/Normal/Poor).
+//!
+//! Headline numbers (paper §V-B): CARD reduces average training delay
+//! by 70.8 % vs Device-only and server energy by 53.1 % vs Server-only.
+
+use crate::config::{ChannelState, ExpConfig};
+use crate::coordinator::{Scheduler, Strategy};
+use crate::util::table::{fmt_joules, fmt_secs, Table};
+
+use super::metrics::{reduction_pct, Summary};
+
+#[derive(Clone, Debug)]
+pub struct Cell {
+    pub strategy: String,
+    pub state: ChannelState,
+    pub mean_delay_s: f64,
+    pub mean_energy_j: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct Fig4Result {
+    pub cells: Vec<Cell>,
+    /// averaged over channel states, as the paper's headline
+    pub delay_reduction_vs_device_only_pct: f64,
+    pub energy_reduction_vs_server_only_pct: f64,
+}
+
+pub const STRATEGIES: [Strategy; 3] = [Strategy::Card, Strategy::ServerOnly, Strategy::DeviceOnly];
+
+pub fn run(cfg: &ExpConfig) -> anyhow::Result<Fig4Result> {
+    let mut cells = Vec::new();
+    for state in ChannelState::ALL {
+        for strat in STRATEGIES {
+            let mut sched = Scheduler::new(cfg.clone(), state, strat);
+            let records = sched.run_analytic()?;
+            let s = Summary::from_records(&records);
+            cells.push(Cell {
+                strategy: strat.name(),
+                state,
+                mean_delay_s: s.delay.mean(),
+                mean_energy_j: s.energy.mean(),
+            });
+        }
+    }
+
+    let mean_over_states = |name: &str, f: fn(&Cell) -> f64| -> f64 {
+        let v: Vec<f64> = cells
+            .iter()
+            .filter(|c| c.strategy == name)
+            .map(f)
+            .collect();
+        v.iter().sum::<f64>() / v.len() as f64
+    };
+    let card_delay = mean_over_states("CARD (proposed)", |c| c.mean_delay_s);
+    let devonly_delay = mean_over_states("Device-only", |c| c.mean_delay_s);
+    let card_energy = mean_over_states("CARD (proposed)", |c| c.mean_energy_j);
+    let servonly_energy = mean_over_states("Server-only", |c| c.mean_energy_j);
+
+    Ok(Fig4Result {
+        cells,
+        delay_reduction_vs_device_only_pct: reduction_pct(devonly_delay, card_delay),
+        energy_reduction_vs_server_only_pct: reduction_pct(servonly_energy, card_energy),
+    })
+}
+
+impl Fig4Result {
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            "Fig. 4 — per-round training delay & server energy",
+            &["channel", "method", "delay", "energy"],
+        );
+        for c in &self.cells {
+            t.row(vec![
+                c.state.name().to_string(),
+                c.strategy.clone(),
+                fmt_secs(c.mean_delay_s),
+                fmt_joules(c.mean_energy_j),
+            ]);
+        }
+        format!(
+            "{}\n\nheadline: delay −{:.1}% vs Device-only (paper: −70.8%), \
+             server energy −{:.1}% vs Server-only (paper: −53.1%)",
+            t.render(),
+            self.delay_reduction_vs_device_only_pct,
+            self.energy_reduction_vs_server_only_pct,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ExpConfig {
+        let mut c = ExpConfig::paper();
+        c.workload.rounds = 10;
+        c
+    }
+
+    #[test]
+    fn produces_nine_cells() {
+        let r = run(&cfg()).unwrap();
+        assert_eq!(r.cells.len(), 9);
+    }
+
+    #[test]
+    fn paper_shape_delay_ordering() {
+        // Server-only fastest, Device-only slowest, CARD in between —
+        // in every channel state (Fig. 4 left panel ordering).
+        let r = run(&cfg()).unwrap();
+        for state in ChannelState::ALL {
+            let get = |name: &str| {
+                r.cells
+                    .iter()
+                    .find(|c| c.state == state && c.strategy == name)
+                    .unwrap()
+                    .mean_delay_s
+            };
+            let so = get("Server-only");
+            let card = get("CARD (proposed)");
+            let donly = get("Device-only");
+            assert!(
+                so <= card && card < donly,
+                "{}: so={so:.1} card={card:.1} donly={donly:.1}",
+                state.name()
+            );
+        }
+    }
+
+    #[test]
+    fn paper_shape_energy_ordering() {
+        // Device-only lowest server energy, Server-only highest, CARD
+        // in between (Fig. 4 right panel).
+        let r = run(&cfg()).unwrap();
+        for state in ChannelState::ALL {
+            let get = |name: &str| {
+                r.cells
+                    .iter()
+                    .find(|c| c.state == state && c.strategy == name)
+                    .unwrap()
+                    .mean_energy_j
+            };
+            assert!(get("Device-only") <= get("CARD (proposed)"));
+            assert!(get("CARD (proposed)") < get("Server-only"));
+        }
+    }
+
+    #[test]
+    fn headline_reductions_substantial() {
+        // We match the paper's *shape*: large double-digit reductions on
+        // both axes (exact 70.8/53.1 depends on their unpublished channel
+        // calibration — see EXPERIMENTS.md).
+        let r = run(&cfg()).unwrap();
+        assert!(
+            r.delay_reduction_vs_device_only_pct > 40.0,
+            "delay reduction {:.1}%",
+            r.delay_reduction_vs_device_only_pct
+        );
+        assert!(
+            r.energy_reduction_vs_server_only_pct > 25.0,
+            "energy reduction {:.1}%",
+            r.energy_reduction_vs_server_only_pct
+        );
+    }
+
+    #[test]
+    fn render_mentions_paper_numbers() {
+        let r = run(&cfg()).unwrap();
+        let s = r.render();
+        assert!(s.contains("70.8"));
+        assert!(s.contains("53.1"));
+    }
+}

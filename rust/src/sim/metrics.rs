@@ -1,0 +1,118 @@
+//! Aggregation of `RoundRecord` streams into the summary statistics the
+//! figures report.
+
+use crate::coordinator::RoundRecord;
+use crate::util::stats::Accum;
+
+/// Per-strategy (or per-cell) aggregate over a set of round records.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    pub delay: Accum,
+    pub energy: Accum,
+    pub device_compute: Accum,
+    pub server_compute: Accum,
+    pub transmission: Accum,
+    pub cost: Accum,
+    pub cuts: Vec<usize>,
+    pub freqs_ghz: Vec<f64>,
+}
+
+impl Summary {
+    pub fn from_records<'a>(records: impl IntoIterator<Item = &'a RoundRecord>) -> Self {
+        let mut s = Summary {
+            delay: Accum::new(),
+            energy: Accum::new(),
+            device_compute: Accum::new(),
+            server_compute: Accum::new(),
+            transmission: Accum::new(),
+            cost: Accum::new(),
+            cuts: Vec::new(),
+            freqs_ghz: Vec::new(),
+        };
+        for r in records {
+            s.delay.push(r.delay_s);
+            s.energy.push(r.energy_j);
+            s.device_compute.push(r.device_compute_s);
+            s.server_compute.push(r.server_compute_s);
+            s.transmission.push(r.transmission_s);
+            s.cost.push(r.cost);
+            s.cuts.push(r.cut);
+            s.freqs_ghz.push(r.freq_hz / 1e9);
+        }
+        s
+    }
+
+    /// Fraction of decisions at each endpoint (Fig. 3a structure).
+    pub fn endpoint_fractions(&self, n_layers: usize) -> (f64, f64) {
+        if self.cuts.is_empty() {
+            return (0.0, 0.0);
+        }
+        let n = self.cuts.len() as f64;
+        let at0 = self.cuts.iter().filter(|&&c| c == 0).count() as f64 / n;
+        let ati = self.cuts.iter().filter(|&&c| c == n_layers).count() as f64 / n;
+        (at0, ati)
+    }
+}
+
+/// Percentage reduction of `ours` relative to `base` (positive = we win).
+pub fn reduction_pct(base: f64, ours: f64) -> f64 {
+    if base == 0.0 {
+        return 0.0;
+    }
+    100.0 * (base - ours) / base
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(cut: usize, delay: f64, energy: f64) -> RoundRecord {
+        RoundRecord {
+            round: 0,
+            device_idx: 0,
+            device_name: "d".into(),
+            strategy: "s".into(),
+            cut,
+            freq_hz: 1e9,
+            cost: 0.5,
+            snr_up_db: 10.0,
+            snr_down_db: 12.0,
+            rate_up_bps: 1e8,
+            rate_down_bps: 1e8,
+            delay_s: delay,
+            device_compute_s: delay * 0.5,
+            server_compute_s: delay * 0.3,
+            transmission_s: delay * 0.2,
+            energy_j: energy,
+            adapter_bytes: 0.0,
+            smashed_bytes_round: 0.0,
+            loss: None,
+            backend_wallclock_s: None,
+        }
+    }
+
+    #[test]
+    fn summary_aggregates() {
+        let rs = vec![rec(0, 10.0, 100.0), rec(32, 20.0, 300.0)];
+        let s = Summary::from_records(&rs);
+        assert_eq!(s.delay.mean(), 15.0);
+        assert_eq!(s.energy.mean(), 200.0);
+        assert_eq!(s.cuts, vec![0, 32]);
+    }
+
+    #[test]
+    fn endpoint_fractions_counts() {
+        let rs = vec![rec(0, 1.0, 1.0), rec(32, 1.0, 1.0), rec(16, 1.0, 1.0), rec(0, 1.0, 1.0)];
+        let s = Summary::from_records(&rs);
+        let (a, b) = s.endpoint_fractions(32);
+        assert!((a - 0.5).abs() < 1e-12);
+        assert!((b - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reduction_math() {
+        assert!((reduction_pct(100.0, 29.2) - 70.8).abs() < 1e-9);
+        assert!((reduction_pct(100.0, 46.9) - 53.1).abs() < 1e-9);
+        assert_eq!(reduction_pct(0.0, 5.0), 0.0);
+    }
+}

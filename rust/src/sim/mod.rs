@@ -1,0 +1,9 @@
+//! Experiment harness: one module per paper figure + ablation sweeps
+//! (see DESIGN.md §5 experiment index).
+
+pub mod ablate;
+pub mod fig3;
+pub mod fig4;
+pub mod metrics;
+
+pub use metrics::{reduction_pct, Summary};

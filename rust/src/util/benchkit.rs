@@ -1,0 +1,176 @@
+//! Micro/meso benchmark harness (no `criterion` in the offline set).
+//!
+//! Warmup + timed iterations with adaptive iteration counts, reporting
+//! mean/median/p95/min and ns-per-op.  Used by every `benches/*.rs`
+//! target (declared `harness = false` in Cargo.toml).
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+use super::stats;
+use super::table::{fmt_secs, Table};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+    pub throughput: Option<(f64, &'static str)>,
+}
+
+pub struct Bencher {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub max_iters: u64,
+    results: Vec<BenchResult>,
+    suite: String,
+}
+
+impl Bencher {
+    pub fn new(suite: &str) -> Self {
+        // Keep wall time sane on the 1-core CI box; EDGESPLIT_BENCH_FAST=1
+        // (used by `cargo test`-driven smoke checks) shrinks everything.
+        let fast = std::env::var("EDGESPLIT_BENCH_FAST").is_ok();
+        Self {
+            warmup: if fast {
+                Duration::from_millis(10)
+            } else {
+                Duration::from_millis(200)
+            },
+            measure: if fast {
+                Duration::from_millis(50)
+            } else {
+                Duration::from_millis(1000)
+            },
+            max_iters: if fast { 1_000 } else { 1_000_000 },
+            results: Vec::new(),
+            suite: suite.to_string(),
+        }
+    }
+
+    /// Time `f` adaptively; returns (and records) the result.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // warmup + calibration
+        let wstart = Instant::now();
+        let mut calib_iters = 0u64;
+        while wstart.elapsed() < self.warmup {
+            f();
+            calib_iters += 1;
+        }
+        let per_iter = self.warmup.as_secs_f64() / calib_iters.max(1) as f64;
+        // choose a batch size so each sample is ≥ ~50 µs (timer noise floor)
+        let batch = ((5e-5 / per_iter).ceil() as u64).clamp(1, self.max_iters);
+        let target_samples = ((self.measure.as_secs_f64() / (per_iter * batch as f64))
+            .ceil() as u64)
+            .clamp(5, 200);
+
+        let mut samples = Vec::with_capacity(target_samples as usize);
+        let mut total_iters = 0u64;
+        for _ in 0..target_samples {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            samples.push(t0.elapsed().as_secs_f64() / batch as f64);
+            total_iters += batch;
+            if total_iters >= self.max_iters {
+                break;
+            }
+        }
+
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: total_iters,
+            mean_s: stats::mean(&samples),
+            median_s: stats::median(&samples),
+            p95_s: stats::percentile(&samples, 95.0),
+            min_s: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+            throughput: None,
+        };
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    /// Like `bench` but annotates items/sec given `items` per call.
+    pub fn bench_throughput<F: FnMut()>(
+        &mut self,
+        name: &str,
+        items: f64,
+        unit: &'static str,
+        f: F,
+    ) -> &BenchResult {
+        self.bench(name, f);
+        let last = self.results.last_mut().unwrap();
+        last.throughput = Some((items / last.mean_s, unit));
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    pub fn report(&self) {
+        let mut t = Table::new(
+            &format!("bench suite: {}", self.suite),
+            &["benchmark", "mean", "median", "p95", "min", "throughput"],
+        );
+        for r in &self.results {
+            t.row(vec![
+                r.name.clone(),
+                fmt_secs(r.mean_s),
+                fmt_secs(r.median_s),
+                fmt_secs(r.p95_s),
+                fmt_secs(r.min_s),
+                match r.throughput {
+                    Some((v, u)) => format!("{v:.1} {u}/s"),
+                    None => "-".to_string(),
+                },
+            ]);
+        }
+        t.print();
+    }
+}
+
+/// Re-export of `std::hint::black_box` for bench bodies.
+pub fn bb<T>(x: T) -> T {
+    black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        std::env::set_var("EDGESPLIT_BENCH_FAST", "1");
+        let mut b = Bencher::new("test");
+        let mut acc = 0u64;
+        let r = b.bench("noop-ish", || {
+            acc = bb(acc.wrapping_add(1));
+        });
+        assert!(r.mean_s > 0.0);
+        assert!(r.iters > 0);
+    }
+
+    #[test]
+    fn throughput_annotation() {
+        std::env::set_var("EDGESPLIT_BENCH_FAST", "1");
+        let mut b = Bencher::new("test");
+        let r = b.bench_throughput("items", 100.0, "item", || {
+            bb(0u64);
+        });
+        assert!(r.throughput.unwrap().0 > 0.0);
+    }
+
+    #[test]
+    fn report_renders() {
+        std::env::set_var("EDGESPLIT_BENCH_FAST", "1");
+        let mut b = Bencher::new("render");
+        b.bench("x", || {
+            bb(1u32);
+        });
+        b.report(); // must not panic
+    }
+}

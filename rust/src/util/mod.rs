@@ -1,0 +1,12 @@
+//! Tooling substrates built from scratch for the offline environment
+//! (no serde/rand/criterion/proptest available): deterministic RNG,
+//! statistics, JSON, table rendering, logging, bench harness, property
+//! testing.
+
+pub mod benchkit;
+pub mod json;
+pub mod logging;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod table;

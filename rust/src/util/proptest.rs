@@ -1,0 +1,87 @@
+//! Tiny property-testing kit (no `proptest`/`quickcheck` offline).
+//!
+//! Deterministic: each case derives from a root seed, so failures print
+//! a reproducible case index + the generated value (via `Debug`).
+//! No shrinking — generators are kept small/structured instead.
+
+use super::rng::Rng;
+
+pub struct PropConfig {
+    pub seed: u64,
+    pub cases: u32,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        Self {
+            seed: 0xED6E_5712,
+            cases: 256,
+        }
+    }
+}
+
+/// Check `prop` on `cases` values drawn by `gen`.  Panics with the case
+/// index, seed, and a debug dump of the failing input.
+pub fn forall<T: std::fmt::Debug>(
+    name: &str,
+    cfg: PropConfig,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut root = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let mut r = root.fork(case as u64);
+        let value = gen(&mut r);
+        if let Err(msg) = prop(&value) {
+            panic!(
+                "property '{name}' failed at case {case}/{} (seed {:#x}):\n  input: {value:?}\n  reason: {msg}",
+                cfg.cases, cfg.seed
+            );
+        }
+    }
+}
+
+/// Convenience: assert with a formatted reason.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err(format!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        forall(
+            "u64 parity",
+            PropConfig::default(),
+            |r| r.next_u64(),
+            |&x| {
+                if (x % 2 == 0) == (x & 1 == 0) {
+                    Ok(())
+                } else {
+                    Err("parity mismatch".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn failing_property_reports() {
+        forall(
+            "always-fails",
+            PropConfig {
+                seed: 1,
+                cases: 10,
+            },
+            |r| r.below(100),
+            |_| Err("nope".into()),
+        );
+    }
+}

@@ -1,0 +1,220 @@
+//! Integration: PJRT runtime executing the real AOT artifacts.
+//!
+//! Requires `artifacts/tiny` (built by `make artifacts`).  Tests
+//! self-skip with a loud message when artifacts are missing so plain
+//! `cargo test` still passes in a fresh checkout.
+
+use edgesplit::data::{Batcher, Corpus};
+use edgesplit::runtime::{artifact_dir, ArtifactStore, HostTensor, SplitExecutor};
+use edgesplit::util::rng::Rng;
+
+fn open_tiny() -> Option<ArtifactStore> {
+    let dir = artifact_dir("tiny");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: {dir:?} missing — run `make artifacts`");
+        return None;
+    }
+    Some(ArtifactStore::open(dir).expect("opening tiny artifacts"))
+}
+
+fn tiny_executor(seed: u64) -> Option<SplitExecutor> {
+    let store = open_tiny()?;
+    let cfg = store.config.clone();
+    let batchers = (0..2)
+        .map(|i| {
+            let mut rng = Rng::new(100 + i as u64);
+            let corpus = Corpus::synthetic(i, 20_000, 0.1, &mut rng);
+            Batcher::new(corpus, cfg.batch_size, cfg.seq_len, 200 + i as u64)
+        })
+        .collect();
+    Some(SplitExecutor::new(store, batchers, 0.5, seed).expect("executor"))
+}
+
+#[test]
+fn manifest_segments_present() {
+    let Some(store) = open_tiny() else { return };
+    for seg in [
+        "embed_fwd",
+        "layer_fwd",
+        "layer_bwd",
+        "head_loss_grad",
+        "adapter_sgd",
+        "train_step",
+    ] {
+        assert!(store.segments.contains_key(seg), "missing {seg}");
+    }
+    assert_eq!(store.config.name, "tiny");
+    assert_eq!(store.config.n_layers, 6);
+}
+
+#[test]
+fn adapter_sgd_numerics() {
+    // independently verifiable segment: out = v - lr*g
+    let Some(mut store) = open_tiny() else { return };
+    let ll = store.config.lora_layer_len;
+    let v: Vec<f32> = (0..ll).map(|i| (i % 7) as f32 * 0.25).collect();
+    let g: Vec<f32> = (0..ll).map(|i| ((i % 3) as f32) - 1.0).collect();
+    let vt = HostTensor::from_f32(&[ll], &v).unwrap();
+    let gt = HostTensor::from_f32(&[ll], &g).unwrap();
+    let lr = HostTensor::from_f32(&[1], &[0.1]).unwrap();
+    let out = store.execute("adapter_sgd", &[&vt, &gt, &lr]).unwrap();
+    let got = out[0].as_f32().unwrap();
+    for i in 0..ll {
+        let want = v[i] - 0.1 * g[i];
+        assert!((got[i] - want).abs() < 1e-6, "elem {i}: {} vs {want}", got[i]);
+    }
+}
+
+#[test]
+fn embed_fwd_is_table_lookup() {
+    let Some(mut store) = open_tiny() else { return };
+    let cfg = store.config.clone();
+    let mut executor_seed_rng = Rng::new(0);
+    let embed_vals: Vec<f32> = (0..cfg.vocab_size * cfg.d_model)
+        .map(|_| executor_seed_rng.gauss() as f32)
+        .collect();
+    let embed = HostTensor::from_f32(&[cfg.vocab_size, cfg.d_model], &embed_vals).unwrap();
+    let toks: Vec<i32> = (0..cfg.batch_size * cfg.seq_len)
+        .map(|i| (i % cfg.vocab_size) as i32)
+        .collect();
+    let tokens = HostTensor::from_i32(&[cfg.batch_size, cfg.seq_len], &toks).unwrap();
+    let h = store.execute("embed_fwd", &[&tokens, &embed]).unwrap().remove(0);
+    assert_eq!(h.shape, vec![cfg.batch_size, cfg.seq_len, cfg.d_model]);
+    let hv = h.as_f32().unwrap();
+    // row 0, position 3 should equal embed row 3
+    for j in 0..cfg.d_model {
+        assert_eq!(hv[3 * cfg.d_model + j], embed_vals[3 * cfg.d_model + j]);
+    }
+}
+
+#[test]
+fn execute_validates_shapes() {
+    let Some(mut store) = open_tiny() else { return };
+    let bad = HostTensor::from_f32(&[3], &[1.0, 2.0, 3.0]).unwrap();
+    let err = store.execute("adapter_sgd", &[&bad, &bad, &bad]).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("manifest wants"), "unexpected error: {msg}");
+    // arity error
+    let err2 = store.execute("adapter_sgd", &[&bad]).unwrap_err();
+    assert!(format!("{err2:#}").contains("expected 3 inputs"));
+}
+
+#[test]
+fn split_training_reduces_loss_and_keeps_protocol_invariants() {
+    let Some(mut ex) = tiny_executor(42) else { return };
+    let i_layers = ex.n_layers();
+    let first = ex.train_step(0, i_layers / 2, 0).expect("step");
+    // byte-level vocab: initial loss near ln(256) ≈ 5.55
+    assert!(
+        (first - (256f64).ln()).abs() < 1.5,
+        "initial loss {first} far from ln(256)"
+    );
+    let mut last = first;
+    for step in 1..12 {
+        // alternate devices and cuts — protocol must hold for any mix
+        let dev = step % 2;
+        let cut = (step * 2) % (i_layers + 1);
+        last = ex.train_step(dev, cut, step).expect("step");
+        assert!(
+            ex.aggregator.is_consistent(),
+            "adapters inconsistent after step {step}"
+        );
+    }
+    assert!(
+        last < first - 0.3,
+        "loss did not decrease: first {first}, last {last}"
+    );
+}
+
+#[test]
+fn chained_and_fused_steps_agree() {
+    // Same seed => identical init & batches; one chained step at any cut
+    // must equal one fused train_step to fp32 tolerance.
+    let Some(mut a) = tiny_executor(7) else { return };
+    let Some(mut b) = tiny_executor(7) else { return };
+    let la = a.train_step(0, 3, 0).unwrap();
+    let lb = b.fused_train_step(0).unwrap();
+    assert!(
+        (la - lb).abs() < 1e-4,
+        "chained loss {la} vs fused loss {lb}"
+    );
+    // adapter states must match too
+    for l in 0..a.n_layers() {
+        let va = a.state.lora[l].as_f32().unwrap();
+        let vb = b.state.lora[l].as_f32().unwrap();
+        let max_err = va
+            .iter()
+            .zip(&vb)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0f32, f32::max);
+        assert!(max_err < 2e-4, "layer {l} adapter divergence {max_err}");
+    }
+}
+
+#[test]
+fn traffic_ledger_matches_datasize_model() {
+    let Some(mut ex) = tiny_executor(3) else { return };
+    let cfg = ex.store.config.clone();
+    ex.train_step(0, 2, 0).unwrap();
+    let t = ex.traffic_log.last().unwrap();
+    let expect_smashed = (cfg.batch_size * cfg.seq_len * cfg.d_model * 4
+        + cfg.batch_size * cfg.seq_len * 4) as f64;
+    assert_eq!(t.smashed_up_bytes, expect_smashed);
+    let expect_grad = (cfg.batch_size * cfg.seq_len * cfg.d_model * 4) as f64;
+    assert_eq!(t.grad_down_bytes, expect_grad);
+    // op split: device ops = embed + c fwd + 2c bwd; server = rest
+    assert_eq!(t.device_ops, 1 + 2 + 2 * 2);
+    assert_eq!(t.server_ops, (6 - 2) + 1 + 2 * (6 - 2));
+}
+
+#[test]
+fn device_resident_fast_path_matches_host_path() {
+    // Same seed: N fast (device-resident) steps must produce the same
+    // losses and adapter state as N host-path steps.
+    let Some(mut fast) = tiny_executor(23) else { return };
+    let Some(mut host) = tiny_executor(23) else { return };
+    for step in 0..4 {
+        let lf = fast.train_step_device(0, 2, step).unwrap();
+        let lh = host.train_step(0, 2, step).unwrap();
+        assert!((lf - lh).abs() < 1e-5, "step {step}: fast {lf} vs host {lh}");
+    }
+    fast.sync_lora_to_host().unwrap();
+    for l in 0..fast.n_layers() {
+        let a = fast.state.lora[l].as_f32().unwrap();
+        let b = host.state.lora[l].as_f32().unwrap();
+        let err = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).fold(0f32, f32::max);
+        assert!(err < 1e-5, "layer {l} adapter divergence {err}");
+    }
+    // protocol invariants hold on the fast path too
+    assert!(fast.aggregator.is_consistent());
+    assert_eq!(fast.aggregator.merges(), 4);
+}
+
+#[test]
+fn mixed_fast_and_host_paths_stay_consistent() {
+    let Some(mut a) = tiny_executor(29) else { return };
+    let Some(mut b) = tiny_executor(29) else { return };
+    // a: fast, host, fast — b: host, host, host
+    let l1 = a.train_step_device(0, 1, 0).unwrap();
+    let l2 = a.train_step(0, 1, 1).unwrap();
+    let l3 = a.train_step_device(0, 1, 2).unwrap();
+    let m1 = b.train_step(0, 1, 0).unwrap();
+    let m2 = b.train_step(0, 1, 1).unwrap();
+    let m3 = b.train_step(0, 1, 2).unwrap();
+    for (x, y) in [(l1, m1), (l2, m2), (l3, m3)] {
+        assert!((x - y).abs() < 1e-5, "{x} vs {y}");
+    }
+}
+
+#[test]
+fn cut_does_not_change_numerics() {
+    // Same seed, different cuts: loss sequence must be identical — the
+    // split moves WHERE ops run, never WHAT is computed.
+    let Some(mut a) = tiny_executor(11) else { return };
+    let Some(mut b) = tiny_executor(11) else { return };
+    for step in 0..3 {
+        let la = a.train_step(0, 0, step).unwrap();
+        let lb = b.train_step(0, a.n_layers(), step).unwrap();
+        assert!((la - lb).abs() < 1e-6, "step {step}: {la} vs {lb}");
+    }
+}

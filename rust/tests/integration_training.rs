@@ -1,0 +1,200 @@
+//! Integration: the full stack — Scheduler (CARD decisions) driving the
+//! SplitExecutor (real PJRT compute) — plus failure-injection tests on
+//! the artifact plumbing.  Requires `artifacts/tiny` (self-skips).
+
+use edgesplit::config::{ChannelState, ExpConfig};
+use edgesplit::coordinator::{Scheduler, Strategy};
+use edgesplit::data::{Batcher, Corpus};
+use edgesplit::runtime::{artifact_dir, ArtifactStore, SplitExecutor};
+use edgesplit::util::rng::Rng;
+
+fn artifacts_available() -> bool {
+    let ok = artifact_dir("tiny").join("manifest.json").exists();
+    if !ok {
+        eprintln!("SKIP: artifacts/tiny missing — run `make artifacts`");
+    }
+    ok
+}
+
+fn executor(seed: u64, n_dev: usize) -> SplitExecutor {
+    let store = ArtifactStore::open(artifact_dir("tiny")).unwrap();
+    let cfg = store.config.clone();
+    let batchers = (0..n_dev)
+        .map(|i| {
+            let mut rng = Rng::new(seed ^ (50 + i as u64));
+            Batcher::new(
+                Corpus::synthetic(i, 20_000, 0.1, &mut rng),
+                cfg.batch_size,
+                cfg.seq_len,
+                seed ^ (70 + i as u64),
+            )
+        })
+        .collect();
+    SplitExecutor::new(store, batchers, 0.5, seed).unwrap()
+}
+
+#[test]
+fn scheduler_drives_real_training_with_card() {
+    if !artifacts_available() {
+        return;
+    }
+    let mut cfg = ExpConfig::paper();
+    cfg.workload.arch = "tiny".into();
+    cfg.workload.rounds = 2;
+    cfg.workload.local_epochs = 2;
+    let mut ex = executor(3, cfg.devices.len());
+    let mut sched = Scheduler::new(cfg, ChannelState::Normal, Strategy::Card);
+    let recs = sched.run(Some(&mut ex)).unwrap();
+    assert_eq!(recs.len(), 10); // 5 devices × 2 rounds
+    assert!(recs.iter().all(|r| r.loss.is_some()));
+    assert_eq!(ex.loss_log.len(), 20); // ×2 epochs
+    // losses finite and in a sane band
+    for (_, l) in &ex.loss_log {
+        assert!(l.is_finite() && *l > 0.0 && *l < 10.0);
+    }
+    assert!(ex.aggregator.is_consistent());
+}
+
+#[test]
+fn every_strategy_trains_identically_in_loss_space() {
+    // The split moves computation, not math: per-step losses under any
+    // strategy must coincide for the same seed (Stage-protocol check at
+    // system level).
+    if !artifacts_available() {
+        return;
+    }
+    let run = |strategy| {
+        let mut cfg = ExpConfig::paper();
+        cfg.workload.arch = "tiny".into();
+        cfg.workload.rounds = 1;
+        cfg.workload.local_epochs = 2;
+        let mut ex = executor(9, cfg.devices.len());
+        let mut sched = Scheduler::new(cfg, ChannelState::Normal, strategy);
+        sched.run(Some(&mut ex)).unwrap();
+        ex.loss_log.iter().map(|x| x.1).collect::<Vec<_>>()
+    };
+    let a = run(Strategy::Card);
+    let b = run(Strategy::DeviceOnly);
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert!((x - y).abs() < 1e-6, "{x} vs {y}");
+    }
+}
+
+#[test]
+fn non_iid_devices_have_different_losses() {
+    if !artifacts_available() {
+        return;
+    }
+    let mut ex = executor(21, 2);
+    let l0 = ex.train_step(0, 3, 0).unwrap();
+    let l1 = ex.train_step(1, 3, 0).unwrap();
+    // different corpora → different losses (but same magnitude)
+    assert!((l0 - l1).abs() > 1e-6);
+    assert!((l0 - l1).abs() < 2.0);
+}
+
+#[test]
+fn longer_training_monotone_trend() {
+    if !artifacts_available() {
+        return;
+    }
+    let mut ex = executor(33, 1);
+    let mut losses = Vec::new();
+    for step in 0..20 {
+        losses.push(ex.train_step(0, 2, step).unwrap());
+    }
+    let head: f64 = losses[..5].iter().sum::<f64>() / 5.0;
+    let tail: f64 = losses[15..].iter().sum::<f64>() / 5.0;
+    assert!(
+        tail < head - 0.2,
+        "no learning trend: head {head:.3} tail {tail:.3}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// failure injection
+// ---------------------------------------------------------------------------
+
+#[test]
+fn missing_artifact_dir_fails_loudly() {
+    let err = ArtifactStore::open("artifacts/definitely-not-here").unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("make artifacts"), "unhelpful error: {msg}");
+}
+
+#[test]
+fn corrupt_manifest_rejected() {
+    let dir = std::env::temp_dir().join("edgesplit-corrupt-manifest");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), "{ not json !").unwrap();
+    let err = ArtifactStore::open(&dir).unwrap_err();
+    assert!(format!("{err:#}").contains("manifest"));
+}
+
+#[test]
+fn manifest_referencing_missing_hlo_rejected() {
+    let dir = std::env::temp_dir().join("edgesplit-missing-hlo");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"config":{"name":"x","vocab_size":4,"d_model":4,"n_layers":1,
+            "n_heads":1,"d_ff":4,"seq_len":4,"batch_size":1,"lora_rank":1,
+            "base_layer_len":4,"lora_layer_len":4,"head_len":4},
+            "artifacts":{"ghost":{"file":"ghost.hlo.txt","inputs":[],"outputs":[]}},
+            "layouts":{}}"#,
+    )
+    .unwrap();
+    let err = ArtifactStore::open(&dir).unwrap_err();
+    assert!(format!("{err:#}").contains("ghost"));
+}
+
+#[test]
+fn garbage_hlo_text_fails_at_compile_not_crash() {
+    if !artifacts_available() {
+        return;
+    }
+    let dir = std::env::temp_dir().join("edgesplit-garbage-hlo");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    // copy a valid manifest but replace one HLO file with garbage
+    let src = artifact_dir("tiny");
+    for entry in std::fs::read_dir(&src).unwrap() {
+        let p = entry.unwrap().path();
+        std::fs::copy(&p, dir.join(p.file_name().unwrap())).unwrap();
+    }
+    std::fs::write(dir.join("adapter_sgd.hlo.txt"), "HloModule broken\n garbage(").unwrap();
+    let mut store = ArtifactStore::open(&dir).unwrap();
+    let ll = store.config.lora_layer_len;
+    let v = edgesplit::runtime::HostTensor::zeros(&[ll], edgesplit::runtime::DType::F32);
+    let lr = edgesplit::runtime::HostTensor::from_f32(&[1], &[0.1]).unwrap();
+    let err = store.execute("adapter_sgd", &[&v, &v, &lr]).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("adapter_sgd"),
+        "error should name the segment: {msg}"
+    );
+}
+
+#[test]
+fn executor_rejects_mismatched_batcher() {
+    if !artifacts_available() {
+        return;
+    }
+    let store = ArtifactStore::open(artifact_dir("tiny")).unwrap();
+    let mut rng = Rng::new(0);
+    let corpus = Corpus::synthetic(0, 10_000, 0.1, &mut rng);
+    let bad = Batcher::new(corpus, 2, 16, 0); // wrong shape for tiny
+    let err = SplitExecutor::new(store, vec![bad], 0.5, 0).unwrap_err();
+    assert!(format!("{err:#}").contains("does not match artifact config"));
+}
+
+#[test]
+fn executor_rejects_out_of_range_cut_and_device() {
+    if !artifacts_available() {
+        return;
+    }
+    let mut ex = executor(5, 1);
+    assert!(ex.train_step(0, 99, 0).is_err());
+    assert!(ex.train_step(7, 0, 0).is_err());
+}

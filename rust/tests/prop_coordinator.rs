@@ -1,0 +1,297 @@
+//! Property-based tests on coordinator invariants (homegrown kit —
+//! util::proptest; no proptest crate offline).
+//!
+//! Each property samples random devices / channels / weights / workloads
+//! and checks a structural invariant of the paper's optimization.
+
+use edgesplit::config::{DeviceSpec, ExpConfig, WorkloadSpec};
+use edgesplit::coordinator::{Card, CostModel, Strategy};
+use edgesplit::model::{DataSizeModel, DelayModel, EnergyModel, FlopModel, LinkRates, LlmArch};
+use edgesplit::prop_assert;
+use edgesplit::util::proptest::{forall, PropConfig};
+use edgesplit::util::rng::Rng;
+
+#[derive(Debug)]
+struct Scenario {
+    dev: DeviceSpec,
+    rates: LinkRates,
+    w: f64,
+    epochs: usize,
+    phi: f64,
+}
+
+fn gen_scenario(r: &mut Rng) -> Scenario {
+    Scenario {
+        dev: DeviceSpec {
+            name: "prop-dev".into(),
+            platform: "synthetic".into(),
+            freq_hz: r.range(0.2e9, 1.4e9),
+            cores: [256.0, 512.0, 1024.0, 2048.0][r.below(4) as usize],
+            flops_per_cycle: 2.0,
+            distance_m: r.range(5.0, 45.0),
+        },
+        rates: LinkRates {
+            up_bps: r.range(3e5, 8e8),
+            down_bps: r.range(3e5, 8e8),
+        },
+        w: r.range(0.01, 0.99),
+        epochs: 1 + r.below(8) as usize,
+        phi: r.range(0.02, 1.0),
+    }
+}
+
+fn cost_model(s: &Scenario) -> (CostModel, ExpConfig) {
+    let mut cfg = ExpConfig::paper();
+    cfg.card.w = s.w;
+    cfg.workload = WorkloadSpec {
+        local_epochs: s.epochs,
+        phi: s.phi,
+        ..WorkloadSpec::default()
+    };
+    let arch = LlmArch::llama1b();
+    let fl = FlopModel::new(&arch, &cfg.workload);
+    let cm = CostModel::new(
+        DelayModel::new(fl.clone(), DataSizeModel::new(&arch, &cfg.workload), &cfg.workload),
+        EnergyModel::new(fl, cfg.workload.local_epochs),
+        s.w,
+    );
+    (cm, cfg)
+}
+
+#[test]
+fn prop_decision_always_feasible() {
+    forall(
+        "CARD decision within constraint set",
+        PropConfig::default(),
+        gen_scenario,
+        |s| {
+            let (cm, cfg) = cost_model(s);
+            let card = Card::new(&cm, &cfg.server);
+            let d = card.decide(&s.dev, s.rates);
+            prop_assert!(d.cut <= cm.n_layers(), "cut {} > I", d.cut);
+            let f_min = s.dev.server_freq_floor(&cfg.server);
+            prop_assert!(
+                d.freq_hz >= f_min - 1.0 && d.freq_hz <= cfg.server.max_freq_hz + 1.0,
+                "f {} outside [{}, {}]",
+                d.freq_hz,
+                f_min,
+                cfg.server.max_freq_hz
+            );
+            prop_assert!(
+                d.cost.is_finite() && d.delay_s > 0.0 && d.energy_j >= 0.0,
+                "degenerate decision {d:?}"
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_card_beats_every_sampled_alternative() {
+    // CARD's (c*, f*) must have U ≤ U(c, f) for ANY sampled feasible (c, f).
+    forall(
+        "CARD global optimality over random alternatives",
+        PropConfig {
+            seed: 0xCAFE,
+            cases: 128,
+        },
+        |r| {
+            let s = gen_scenario(r);
+            let alt_cut = r.below(33) as usize;
+            let alt_t = r.f64();
+            (s, alt_cut, alt_t)
+        },
+        |(s, alt_cut, alt_t)| {
+            let (cm, cfg) = cost_model(s);
+            let card = Card::new(&cm, &cfg.server);
+            let b = cm.bounds(&s.dev, &cfg.server, s.rates);
+            let d = card.decide(&s.dev, s.rates);
+            let f_min = s.dev.server_freq_floor(&cfg.server);
+            let alt_f = f_min + alt_t * (cfg.server.max_freq_hz - f_min);
+            let alt_u = cm.cost(*alt_cut, alt_f, &s.dev, &cfg.server, s.rates, &b);
+            prop_assert!(
+                d.cost <= alt_u + 1e-9,
+                "CARD U={} beaten by (c={alt_cut}, f={alt_f:.3e}) U={alt_u}",
+                d.cost
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_compute_delay_monotone_in_cut() {
+    // The server out-computes every device (F_min assumption), so moving
+    // a layer to the device can only increase total compute delay at
+    // fixed server frequency.
+    forall(
+        "delay monotone in cut",
+        PropConfig::default(),
+        gen_scenario,
+        |s| {
+            let (cm, cfg) = cost_model(s);
+            let f = cfg.server.max_freq_hz;
+            let mut prev = -1.0f64;
+            for c in 0..=cm.n_layers() {
+                let d = cm.delay.compute(c, &s.dev, &cfg.server, f);
+                prop_assert!(d >= prev - 1e-12, "compute delay dipped at c={c}");
+                prev = d;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_energy_strictly_decreasing_in_cut() {
+    forall(
+        "server energy decreasing in cut",
+        PropConfig::default(),
+        gen_scenario,
+        |s| {
+            let (cm, cfg) = cost_model(s);
+            let f = 1.5e9;
+            let mut prev = f64::INFINITY;
+            for c in 0..=cm.n_layers() {
+                let e = cm.energy.round(c, &cfg.server, f);
+                prop_assert!(e < prev, "energy not decreasing at c={c}");
+                prev = e;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_cost_normalized_at_corners() {
+    // U at the two paper corners equals (1-w) and w exactly.
+    forall(
+        "U corner normalization",
+        PropConfig::default(),
+        gen_scenario,
+        |s| {
+            let (cm, cfg) = cost_model(s);
+            let b = cm.bounds(&s.dev, &cfg.server, s.rates);
+            let i = cm.n_layers();
+            let u_fast = cm.cost(0, cfg.server.max_freq_hz, &s.dev, &cfg.server, s.rates, &b);
+            let u_slow = cm.cost(
+                i,
+                s.dev.server_freq_floor(&cfg.server),
+                &s.dev,
+                &cfg.server,
+                s.rates,
+                &b,
+            );
+            prop_assert!(
+                (u_fast - (1.0 - s.w)).abs() < 1e-6,
+                "corner0 {} != 1-w",
+                u_fast
+            );
+            prop_assert!((u_slow - s.w).abs() < 1e-6, "cornerI {} != w", u_slow);
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_strategies_feasible_and_ordered() {
+    // Baselines always feasible; CARD never worse in U; device-only
+    // minimizes server energy among the three.
+    forall(
+        "baseline orderings",
+        PropConfig {
+            seed: 0xBEEF,
+            cases: 128,
+        },
+        gen_scenario,
+        |s| {
+            let (cm, cfg) = cost_model(s);
+            let mut rng = Rng::new(1);
+            let card = Strategy::Card.decide(&cm, &cfg.server, &s.dev, s.rates, &mut rng);
+            let donly = Strategy::DeviceOnly.decide(&cm, &cfg.server, &s.dev, s.rates, &mut rng);
+            let sonly = Strategy::ServerOnly.decide(&cm, &cfg.server, &s.dev, s.rates, &mut rng);
+            prop_assert!(card.cost <= donly.cost + 1e-9, "CARD worse than device-only");
+            prop_assert!(card.cost <= sonly.cost + 1e-9, "CARD worse than server-only");
+            prop_assert!(
+                donly.energy_j <= sonly.energy_j + 1e-9,
+                "device-only should minimize server energy"
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_rate_monotone_in_snr() {
+    use edgesplit::net::spectral_efficiency;
+    forall(
+        "CQI efficiency monotone",
+        PropConfig::default(),
+        |r| (r.range(-30.0, 50.0), r.range(0.0, 10.0)),
+        |&(snr, delta)| {
+            let lo = spectral_efficiency(snr);
+            let hi = spectral_efficiency(snr + delta);
+            prop_assert!(hi >= lo, "efficiency dropped with SNR: {lo} -> {hi}");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_bounds_bracket_realized_costs() {
+    // Any feasible decision's delay/energy lies within the paper's
+    // normalization corners.
+    forall(
+        "bounds bracket realized values",
+        PropConfig::default(),
+        |r| {
+            let s = gen_scenario(r);
+            let c = r.below(33) as usize;
+            let t = r.f64();
+            (s, c, t)
+        },
+        |(s, c, t)| {
+            let (cm, cfg) = cost_model(s);
+            let b = cm.bounds(&s.dev, &cfg.server, s.rates);
+            let f_min = s.dev.server_freq_floor(&cfg.server);
+            let f = f_min + t * (cfg.server.max_freq_hz - f_min);
+            let (d, e) = cm.delay_energy(*c, f, &s.dev, &cfg.server, s.rates);
+            prop_assert!(d <= b.d_max + 1e-9, "delay {d} above D_max {}", b.d_max);
+            prop_assert!(d >= b.d_min - 1e-9, "delay {d} below D_min {}", b.d_min);
+            prop_assert!(e <= b.e_max + 1e-9, "energy {e} above E_max {}", b.e_max);
+            prop_assert!(e >= b.e_min - 1e-9, "energy {e} below E_min {}", b.e_min);
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_aggregator_roundtrip_any_cut_sequence() {
+    use edgesplit::coordinator::Aggregator;
+    forall(
+        "aggregator consistency under random cut sequences",
+        PropConfig::default(),
+        |r| {
+            let n_rounds = 1 + r.below(10) as usize;
+            let cuts: Vec<usize> = (0..n_rounds).map(|_| r.below(33) as usize).collect();
+            let devices: Vec<usize> = (0..n_rounds).map(|_| r.below(5) as usize).collect();
+            (cuts, devices)
+        },
+        |(cuts, devices)| {
+            let mut agg = Aggregator::new(32);
+            for (round, (&c, &d)) in cuts.iter().zip(devices).enumerate() {
+                agg.distribute(d, c, round, c as f64);
+                agg.server_update(c, round);
+                agg.merge(d, c, round, c as f64);
+                prop_assert!(agg.is_consistent(), "inconsistent after round {round}");
+            }
+            prop_assert!(
+                agg.merges() == cuts.len() as u64,
+                "merge count {} != {}",
+                agg.merges(),
+                cuts.len()
+            );
+            Ok(())
+        },
+    );
+}
