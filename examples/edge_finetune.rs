@@ -60,7 +60,7 @@ fn main() -> anyhow::Result<()> {
 
     // CARD decides per round under a Normal fading channel
     cfg.workload.rounds = steps.div_ceil(cfg.workload.local_epochs * n_dev).max(1);
-    let mut sched = Scheduler::new(cfg.clone(), ChannelState::Normal, Strategy::Card);
+    let sched = Scheduler::new(cfg.clone(), ChannelState::Normal, Strategy::Card);
 
     let t0 = std::time::Instant::now();
     let records = sched.run(Some(&mut executor))?;

@@ -9,6 +9,7 @@ use edgesplit::config::{ChannelState, ExpConfig};
 use edgesplit::coordinator::{Scheduler, Strategy};
 use edgesplit::devices::Fleet;
 use edgesplit::sim::{reduction_pct, Summary};
+use edgesplit::util::pool;
 use edgesplit::util::rng::Rng;
 use edgesplit::util::table::{fmt_joules, fmt_secs, Table};
 
@@ -48,11 +49,12 @@ fn main() -> anyhow::Result<()> {
 
     for state in ChannelState::ALL {
         for strat in strategies {
-            let mut sched = Scheduler::new(cfg.clone(), state, strat);
-            let records = sched.run_analytic()?;
+            let sched = Scheduler::new(cfg.clone(), state, strat);
+            // fleet rounds run K devices concurrently; results are
+            // bit-identical to the serial path for the same seed
+            let records = sched.run_parallel(pool::default_parallelism());
             let s = Summary::from_records(&records);
-            let mean_cut =
-                s.cuts.iter().sum::<usize>() as f64 / s.cuts.len().max(1) as f64;
+            let mean_cut = s.mean_cut();
             t.row(vec![
                 state.name().into(),
                 strat.name(),

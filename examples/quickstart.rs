@@ -48,7 +48,7 @@ fn main() -> anyhow::Result<()> {
         &["strategy", "delay", "server energy"],
     );
     for strat in [Strategy::Card, Strategy::ServerOnly, Strategy::DeviceOnly] {
-        let mut sched = Scheduler::new(cfg.clone(), ChannelState::Normal, strat);
+        let sched = Scheduler::new(cfg.clone(), ChannelState::Normal, strat);
         let records = sched.run_analytic()?;
         let s = Summary::from_records(&records);
         cmp.row(vec![

@@ -3,15 +3,26 @@
 
 use std::collections::BTreeMap;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("unknown flag '--{0}' (see --help)")]
     UnknownFlag(String),
-    #[error("flag '--{0}' expects a value")]
     MissingValue(String),
-    #[error("flag '--{0}': cannot parse '{1}' as {2}")]
     BadValue(String, String, &'static str),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::UnknownFlag(name) => write!(f, "unknown flag '--{name}' (see --help)"),
+            CliError::MissingValue(name) => write!(f, "flag '--{name}' expects a value"),
+            CliError::BadValue(name, value, ty) => {
+                write!(f, "flag '--{name}': cannot parse '{value}' as {ty}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 /// Flag specification for help + validation.
 #[derive(Clone, Debug)]

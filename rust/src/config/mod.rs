@@ -1,9 +1,12 @@
 //! Configuration system: TOML-subset parser + typed schema with the
-//! paper's Table I / Table II defaults.
+//! paper's Table I / Table II defaults, plus the scenario registry of
+//! TOML-driven fleet-scale presets.
 
+pub mod scenario;
 pub mod schema;
 pub mod toml;
 
+pub use scenario::Scenario;
 pub use schema::{
     CardSpec, ChannelSpec, ChannelState, ConfigError, DeviceSpec, ExpConfig, ServerSpec,
     WorkloadSpec,

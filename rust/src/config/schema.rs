@@ -275,16 +275,31 @@ impl ExpConfig {
     }
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ConfigError {
-    #[error("failed to read {0}: {1}")]
     Io(String, String),
-    #[error(transparent)]
-    Toml(#[from] TomlError),
-    #[error("invalid config: {0}")]
+    Toml(TomlError),
     Invalid(String),
-    #[error("unknown config key: {0}")]
     UnknownKey(String),
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::Io(path, e) => write!(f, "failed to read {path}: {e}"),
+            ConfigError::Toml(e) => write!(f, "{e}"),
+            ConfigError::Invalid(msg) => write!(f, "invalid config: {msg}"),
+            ConfigError::UnknownKey(key) => write!(f, "unknown config key: {key}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+impl From<TomlError> for ConfigError {
+    fn from(e: TomlError) -> Self {
+        ConfigError::Toml(e)
+    }
 }
 
 // ---------------------------------------------------------------------------

@@ -13,12 +13,19 @@ use std::collections::BTreeMap;
 
 use crate::util::json::Json;
 
-#[derive(Debug, thiserror::Error)]
-#[error("toml parse error at line {line}: {msg}")]
+#[derive(Debug)]
 pub struct TomlError {
     pub line: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for TomlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "toml parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
 
 pub fn parse(text: &str) -> Result<Json, TomlError> {
     let mut root: BTreeMap<String, Json> = BTreeMap::new();

@@ -1,7 +1,7 @@
 //! The split-learning round scheduler — Stages 1–5 of the proposed
-//! framework (§II-B).
+//! framework (§II-B) — generalized into a fleet-scale round engine.
 //!
-//! Per training round n, for the selected device m:
+//! Per training round n, for each participating device m:
 //!   Stage 1  LLM splitting           — strategy decides (c, f*)
 //!   Stage 2  adapter distribution    — A(c) bytes downlink
 //!   Stage 3  forward propagation     — device FP, smashed uplink, server FP
@@ -12,11 +12,23 @@
 //! analytic models (Eqs. 7–11) driven by the realized channel, while an
 //! optional `TrainBackend` (the PJRT split executor) runs the *real*
 //! LoRA fine-tuning for the same (device, cut, epochs) and reports loss.
+//!
+//! ## Parallel fleet rounds
+//!
+//! Every `(round, device)` cell draws from its own RNG stream, derived
+//! counter-style from `(seed, channel state, round, device)` via
+//! `SplitMix64::stream_seed` — never from shared mutable generator
+//! state.  [`Scheduler::device_round`] is therefore a pure function of
+//! its arguments, and [`Scheduler::run_parallel`] can schedule K devices
+//! concurrently on the `util::pool` worker pool while reproducing the
+//! serial path **bit for bit** (asserted by `rust/tests/fleet_parallel.rs`
+//! and the `fleet-sweep` CLI's determinism gate).
 
 use crate::config::{ChannelState, ExpConfig};
 use crate::model::{DataSizeModel, DelayModel, EnergyModel, FlopModel, LlmArch};
 use crate::net::Channel;
-use crate::util::rng::Rng;
+use crate::util::pool;
+use crate::util::rng::{Rng, SplitMix64};
 
 use super::baselines::Strategy;
 use super::cost::CostModel;
@@ -100,105 +112,136 @@ pub struct Scheduler {
     pub cost_model: CostModel,
     pub channel: Channel,
     pub strategy: Strategy,
-    rng: Rng,
+    /// Root of the per-(round, device) RNG stream tree.
+    stream_root: u64,
 }
 
 impl Scheduler {
     pub fn new(cfg: ExpConfig, state: ChannelState, strategy: Strategy) -> Self {
         let cost_model = build_cost_model(&cfg);
         let channel = Channel::new(cfg.channel.clone(), state);
-        let rng = Rng::new(cfg.seed ^ (state.pathloss_exp() as u64) << 32);
+        let stream_root = cfg.seed ^ ((state.pathloss_exp() as u64) << 32);
         Self {
             cfg,
             cost_model,
             channel,
             strategy,
-            rng,
+            stream_root,
         }
     }
 
-    /// Run one training round: every participating device executes
-    /// Stages 1–5 (the paper iterates devices within a round).
+    /// The RNG stream for one `(round, device)` cell — a pure function
+    /// of the scheduler's seed/state and the cell coordinates.
+    fn cell_rng(&self, round: usize, device_idx: usize) -> Rng {
+        Rng::new(SplitMix64::stream_seed(
+            self.stream_root,
+            &[round as u64, device_idx as u64],
+        ))
+    }
+
+    /// Execute Stages 1–5 analytically for one `(round, device)` cell.
+    ///
+    /// Pure with respect to the scheduler (`&self`): the block-fading
+    /// realization and any stochastic decision (Random-cut) both draw
+    /// from the cell's own stream, so cells can run in any order or in
+    /// parallel and produce identical records.
+    pub fn device_round(&self, round: usize, device_idx: usize) -> RoundRecord {
+        let dev = &self.cfg.devices[device_idx];
+        let mut rng = self.cell_rng(round, device_idx);
+
+        // block-fading realization for this (device, round)
+        let link = self.channel.realize(dev, &mut rng);
+
+        // Stage 1: decision
+        let decision = self
+            .strategy
+            .decide(&self.cost_model, &self.cfg.server, dev, link.rates, &mut rng);
+
+        // Stages 2–5: analytic accounting (Eqs. 7–11)
+        let dm = &self.cost_model.delay;
+        let t = self.cfg.workload.local_epochs as f64;
+        let device_compute_s = t * dm.device_compute(decision.cut, dev);
+        let server_compute_s =
+            t * dm.server_compute(decision.cut, &self.cfg.server, decision.freq_hz);
+        let transmission_s = dm.transmission(decision.cut, link.rates);
+
+        RoundRecord {
+            round,
+            device_idx,
+            device_name: dev.name.clone(),
+            strategy: self.strategy.name(),
+            cut: decision.cut,
+            freq_hz: decision.freq_hz,
+            cost: decision.cost,
+            snr_up_db: link.snr_up_db,
+            snr_down_db: link.snr_down_db,
+            rate_up_bps: link.rates.up_bps,
+            rate_down_bps: link.rates.down_bps,
+            delay_s: decision.delay_s,
+            device_compute_s,
+            server_compute_s,
+            transmission_s,
+            energy_j: decision.energy_j,
+            adapter_bytes: dm.sizes.adapter_bytes(decision.cut),
+            smashed_bytes_round: t
+                * (dm.sizes.smashed_wire_bytes(decision.cut)
+                    + dm.sizes.grad_wire_bytes(decision.cut)),
+            loss: None,
+            backend_wallclock_s: None,
+        }
+    }
+
+    /// Run one training round serially: every participating device
+    /// executes Stages 1–5 (the paper iterates devices within a round).
+    /// The optional backend runs the real split fine-tuning per device.
     pub fn run_round<B: TrainBackend + ?Sized>(
-        &mut self,
+        &self,
         round: usize,
         mut backend: Option<&mut B>,
     ) -> anyhow::Result<Vec<RoundRecord>> {
         let mut records = Vec::with_capacity(self.cfg.devices.len());
         for idx in 0..self.cfg.devices.len() {
-            let dev = self.cfg.devices[idx].clone();
-            // block-fading realization for this (device, round)
-            let mut link_rng = self.rng.fork((round as u64) << 16 | idx as u64);
-            let link = self.channel.realize(&dev, &mut link_rng);
-
-            // Stage 1: decision
-            let decision = self.strategy.decide(
-                &self.cost_model,
-                &self.cfg.server,
-                &dev,
-                link.rates,
-                &mut self.rng,
-            );
-
-            // Stages 2–5: analytic accounting (Eqs. 7–11)
-            let dm = &self.cost_model.delay;
-            let t = self.cfg.workload.local_epochs as f64;
-            let device_compute_s = t * dm.device_compute(decision.cut, &dev);
-            let server_compute_s =
-                t * dm.server_compute(decision.cut, &self.cfg.server, decision.freq_hz);
-            let transmission_s = dm.transmission(decision.cut, link.rates);
-
-            // real compute, if a backend is attached
-            let (loss, wallclock) = match backend.as_mut() {
-                Some(b) => {
-                    let stats =
-                        b.train_round(idx, decision.cut, self.cfg.workload.local_epochs)?;
-                    (Some(stats.mean_loss), Some(stats.wallclock_s))
-                }
-                None => (None, None),
-            };
-
-            records.push(RoundRecord {
-                round,
-                device_idx: idx,
-                device_name: dev.name.clone(),
-                strategy: self.strategy.name(),
-                cut: decision.cut,
-                freq_hz: decision.freq_hz,
-                cost: decision.cost,
-                snr_up_db: link.snr_up_db,
-                snr_down_db: link.snr_down_db,
-                rate_up_bps: link.rates.up_bps,
-                rate_down_bps: link.rates.down_bps,
-                delay_s: decision.delay_s,
-                device_compute_s,
-                server_compute_s,
-                transmission_s,
-                energy_j: decision.energy_j,
-                adapter_bytes: dm.sizes.adapter_bytes(decision.cut),
-                smashed_bytes_round: t
-                    * (dm.sizes.smashed_wire_bytes(decision.cut)
-                        + dm.sizes.grad_wire_bytes(decision.cut)),
-                loss,
-                backend_wallclock_s: wallclock,
-            });
+            let mut rec = self.device_round(round, idx);
+            if let Some(b) = backend.as_mut() {
+                let stats = b.train_round(idx, rec.cut, self.cfg.workload.local_epochs)?;
+                rec.loss = Some(stats.mean_loss);
+                rec.backend_wallclock_s = Some(stats.wallclock_s);
+            }
+            records.push(rec);
         }
         Ok(records)
     }
 
-    /// Analytic-only round (no real compute).
-    pub fn run_round_analytic(&mut self, round: usize) -> anyhow::Result<Vec<RoundRecord>> {
+    /// One analytic round with up to `threads` devices in flight —
+    /// bit-identical to [`Scheduler::run_round_analytic`].
+    pub fn run_round_parallel(&self, round: usize, threads: usize) -> Vec<RoundRecord> {
+        let idxs: Vec<usize> = (0..self.cfg.devices.len()).collect();
+        pool::par_map_indexed(threads, &idxs, |_, &idx| self.device_round(round, idx))
+    }
+
+    /// All configured rounds with up to `threads` device-round cells in
+    /// flight — the fleet-scale engine.  Bit-identical to
+    /// [`Scheduler::run_analytic`] for the same config/seed.
+    pub fn run_parallel(&self, threads: usize) -> Vec<RoundRecord> {
+        let cells: Vec<(usize, usize)> = (0..self.cfg.workload.rounds)
+            .flat_map(|n| (0..self.cfg.devices.len()).map(move |i| (n, i)))
+            .collect();
+        pool::par_map_indexed(threads, &cells, |_, &(n, i)| self.device_round(n, i))
+    }
+
+    /// Analytic-only round (no real compute), serial reference path.
+    pub fn run_round_analytic(&self, round: usize) -> anyhow::Result<Vec<RoundRecord>> {
         self.run_round::<NullBackend>(round, None)
     }
 
-    /// Analytic-only full run.
-    pub fn run_analytic(&mut self) -> anyhow::Result<Vec<RoundRecord>> {
+    /// Analytic-only full run, serial reference path.
+    pub fn run_analytic(&self) -> anyhow::Result<Vec<RoundRecord>> {
         self.run::<NullBackend>(None)
     }
 
-    /// Run all configured rounds.
+    /// Run all configured rounds serially (backend-capable path).
     pub fn run<B: TrainBackend + ?Sized>(
-        &mut self,
+        &self,
         mut backend: Option<&mut B>,
     ) -> anyhow::Result<Vec<RoundRecord>> {
         let mut all = Vec::new();
@@ -220,9 +263,16 @@ mod tests {
         cfg
     }
 
+    fn assert_bit_identical(a: &[RoundRecord], b: &[RoundRecord]) {
+        // single comparator crate-wide: the same gate fleet-sweep runs
+        if let Err(e) = crate::sim::fleet::verify_bit_identical(a, b) {
+            panic!("{e:#}");
+        }
+    }
+
     #[test]
     fn round_produces_record_per_device() {
-        let mut s = Scheduler::new(quick_cfg(), ChannelState::Normal, Strategy::Card);
+        let s = Scheduler::new(quick_cfg(), ChannelState::Normal, Strategy::Card);
         let recs = s.run_round_analytic(0).unwrap();
         assert_eq!(recs.len(), 5);
         for r in &recs {
@@ -233,7 +283,7 @@ mod tests {
 
     #[test]
     fn delay_decomposition_consistent() {
-        let mut s = Scheduler::new(quick_cfg(), ChannelState::Normal, Strategy::Card);
+        let s = Scheduler::new(quick_cfg(), ChannelState::Normal, Strategy::Card);
         for r in s.run_round_analytic(0).unwrap() {
             let sum = r.device_compute_s + r.server_compute_s + r.transmission_s;
             assert!(
@@ -249,7 +299,7 @@ mod tests {
     #[test]
     fn deterministic_given_seed() {
         let mk = || {
-            let mut s = Scheduler::new(quick_cfg(), ChannelState::Good, Strategy::Card);
+            let s = Scheduler::new(quick_cfg(), ChannelState::Good, Strategy::Card);
             s.run_analytic().unwrap()
         };
         let a = mk();
@@ -262,12 +312,40 @@ mod tests {
     }
 
     #[test]
+    fn device_round_is_pure_and_order_independent() {
+        let s = Scheduler::new(quick_cfg(), ChannelState::Poor, Strategy::Card);
+        // evaluating a cell twice, or after other cells, changes nothing
+        let first = s.device_round(2, 3);
+        let _noise = (s.device_round(0, 0), s.device_round(3, 4));
+        let again = s.device_round(2, 3);
+        assert_bit_identical(&[first], &[again]);
+    }
+
+    #[test]
+    fn parallel_round_bit_identical_to_serial() {
+        let s = Scheduler::new(quick_cfg(), ChannelState::Normal, Strategy::Card);
+        let serial = s.run_round_analytic(1).unwrap();
+        for threads in [1, 2, 8] {
+            assert_bit_identical(&serial, &s.run_round_parallel(1, threads));
+        }
+    }
+
+    #[test]
+    fn full_parallel_run_bit_identical_to_serial() {
+        for strategy in [Strategy::Card, Strategy::RandomCut, Strategy::StaticCut(16)] {
+            let s = Scheduler::new(quick_cfg(), ChannelState::Poor, strategy);
+            let serial = s.run_analytic().unwrap();
+            assert_bit_identical(&serial, &s.run_parallel(8));
+        }
+    }
+
+    #[test]
     fn channel_dynamics_flip_decisions_somewhere() {
         // Fig. 3(a): cut decisions change across rounds under fading —
         // at least for one device in 20 rounds.
         let mut cfg = quick_cfg();
         cfg.workload.rounds = 20;
-        let mut s = Scheduler::new(cfg, ChannelState::Poor, Strategy::Card);
+        let s = Scheduler::new(cfg, ChannelState::Poor, Strategy::Card);
         let recs = s.run_analytic().unwrap();
         let mut any_flip = false;
         for dev in 0..5 {
@@ -303,9 +381,30 @@ mod tests {
             }
         }
         let mut fake = Fake { calls: 0 };
-        let mut s = Scheduler::new(quick_cfg(), ChannelState::Normal, Strategy::Card);
+        let s = Scheduler::new(quick_cfg(), ChannelState::Normal, Strategy::Card);
         let recs = s.run_round(0, Some(&mut fake)).unwrap();
         assert_eq!(fake.calls, 5);
         assert!(recs.iter().all(|r| r.loss == Some(1.23)));
+    }
+
+    #[test]
+    fn backend_sees_same_decisions_as_analytic_path() {
+        // the backend rides along without perturbing any RNG stream
+        struct Fake;
+        impl TrainBackend for Fake {
+            fn train_round(&mut self, _: usize, _: usize, _: usize) -> anyhow::Result<BackendStats> {
+                Ok(BackendStats {
+                    mean_loss: 0.0,
+                    wallclock_s: 0.0,
+                })
+            }
+        }
+        let s = Scheduler::new(quick_cfg(), ChannelState::Poor, Strategy::Card);
+        let analytic = s.run_round_analytic(0).unwrap();
+        let backed = s.run_round(0, Some(&mut Fake)).unwrap();
+        for (a, b) in analytic.iter().zip(&backed) {
+            assert_eq!(a.cut, b.cut);
+            assert_eq!(a.freq_hz.to_bits(), b.freq_hz.to_bits());
+        }
     }
 }

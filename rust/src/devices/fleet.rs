@@ -32,6 +32,13 @@ impl Fleet {
     /// around the Table I range (0.4–1.4 GHz, 512–2048 cores) and
     /// placements in [5, 45] m.
     pub fn synthetic(n: usize, rng: &mut Rng) -> Self {
+        Self::synthetic_within(n, (5.0, 45.0), rng)
+    }
+
+    /// Like [`Fleet::synthetic`], but places devices in `dist_range` [m]
+    /// — scenario presets position their fleets differently (dense-urban
+    /// close-in, sparse-rural far out) while keeping the Table I tiers.
+    pub fn synthetic_within(n: usize, dist_range: (f64, f64), rng: &mut Rng) -> Self {
         let tiers: [(&str, f64, f64); 4] = [
             ("AGX Orin", 1.3, 2048.0),
             ("AGX Orin", 1.0, 2048.0),
@@ -48,7 +55,7 @@ impl Fleet {
                     freq_hz: ghz * 1e9 * rng.range(0.9, 1.1),
                     cores,
                     flops_per_cycle: 2.0,
-                    distance_m: rng.range(5.0, 45.0),
+                    distance_m: rng.range(dist_range.0, dist_range.1),
                 }
             })
             .collect();
@@ -105,6 +112,17 @@ mod tests {
         cores.sort_unstable();
         cores.dedup();
         assert!(cores.len() > 1);
+    }
+
+    #[test]
+    fn synthetic_within_respects_placement_band() {
+        let mut rng = Rng::new(13);
+        let f = Fleet::synthetic_within(40, (50.0, 120.0), &mut rng);
+        for d in &f.devices {
+            assert!(d.distance_m >= 50.0 && d.distance_m < 120.0, "{}", d.distance_m);
+        }
+        // capability tiers unchanged by placement band
+        assert!(f.devices.iter().all(|d| d.freq_hz > 0.3e9 && d.freq_hz < 1.5e9));
     }
 
     #[test]

@@ -6,17 +6,20 @@
 //! Rust + JAX + Pallas system:
 //!
 //! * **L3 (this crate)** — the split-learning coordinator: the CARD
-//!   cut-layer/frequency algorithm, round scheduler (Stages 1–5),
-//!   wireless-channel and device-fleet simulators, cost models
-//!   (Eqs. 7–12, 16), and a PJRT runtime that executes the real split
-//!   LoRA transformer from AOT-compiled HLO artifacts.
+//!   cut-layer/frequency algorithm, the parallel fleet-scale round
+//!   engine (Stages 1–5, bit-deterministic at any thread count),
+//!   wireless-channel and device-fleet simulators, the TOML-driven
+//!   scenario registry, cost models (Eqs. 7–12, 16), and a PJRT runtime
+//!   that executes the real split LoRA transformer from AOT-compiled
+//!   HLO artifacts.
 //! * **L2 (python/compile)** — JAX split-segment model, lowered once to
 //!   HLO text (`make artifacts`); never on the request path.
 //! * **L1 (python/compile/kernels)** — fused LoRA-linear + RMSNorm
 //!   Pallas kernels inside those segments.
 //!
-//! See DESIGN.md for the architecture and EXPERIMENTS.md for the
-//! paper-vs-measured figures.
+//! See `DESIGN.md` (repo root) for the architecture and
+//! `EXPERIMENTS.md` for the paper-vs-measured figures; `README.md`
+//! covers build/quickstart and the `fleet-sweep` scenario engine.
 
 pub mod cli;
 pub mod config;

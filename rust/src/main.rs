@@ -5,6 +5,7 @@
 //! edgesplit fig3                 # Fig. 3(a)+(b): decisions over rounds
 //! edgesplit fig4                 # Fig. 4: CARD vs baselines × channels
 //! edgesplit ablate --sweep w     # A1/A2 sweeps
+//! edgesplit fleet-sweep          # scenario × device-count grid (parallel)
 //! edgesplit decide --state poor  # one-shot CARD decision per device
 //! edgesplit train --arch tiny    # REAL split fine-tuning (PJRT)
 //! edgesplit show devices|params  # Table I / Table II
@@ -13,13 +14,16 @@
 use anyhow::{anyhow, bail, Result};
 
 use edgesplit::cli::{render_help, Args, FlagSpec};
+use edgesplit::config::scenario::{self, Scenario};
 use edgesplit::config::{ChannelState, ExpConfig};
 use edgesplit::coordinator::{Scheduler, Strategy};
 use edgesplit::data::{Batcher, Corpus};
 use edgesplit::net::Channel;
 use edgesplit::runtime::{artifact_dir, ArtifactStore, SplitExecutor};
-use edgesplit::sim::{ablate, fig3, fig4};
+use edgesplit::sim::{ablate, fig3, fig4, fleet};
+use edgesplit::util::benchkit::Bencher;
 use edgesplit::util::logging;
+use edgesplit::util::pool;
 use edgesplit::util::rng::Rng;
 use edgesplit::util::table::{fmt_bytes, fmt_joules, fmt_secs, Table};
 
@@ -32,6 +36,10 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec { name: "state", value: Some("good|normal|poor"), help: "channel state", default: Some("normal") },
         FlagSpec { name: "strategy", value: Some("card|server-only|device-only|static:C|random"), help: "decision strategy", default: Some("card") },
         FlagSpec { name: "sweep", value: Some("w|phi|bandwidth"), help: "ablation sweep to run", default: Some("w") },
+        FlagSpec { name: "scenario", value: Some("name|all"), help: "fleet-sweep scenario preset (see `show scenarios`)", default: Some("all") },
+        FlagSpec { name: "counts", value: Some("N,N,..."), help: "fleet-sweep device counts", default: Some("10,100,1000,10000") },
+        FlagSpec { name: "threads", value: Some("N"), help: "worker threads for parallel rounds (default: all cores)", default: None },
+        FlagSpec { name: "out", value: Some("file.json"), help: "fleet-sweep JSON output path", default: Some("BENCH_fleet.json") },
         FlagSpec { name: "arch", value: Some("tiny|small"), help: "artifact config for real training", default: Some("tiny") },
         FlagSpec { name: "steps", value: Some("N"), help: "real-training steps (train)", default: Some("30") },
         FlagSpec { name: "lr", value: Some("f"), help: "LoRA learning rate (train)", default: Some("0.5") },
@@ -40,13 +48,14 @@ fn flag_specs() -> Vec<FlagSpec> {
     ]
 }
 
-const SUBCOMMANDS: [(&str, &str); 7] = [
+const SUBCOMMANDS: [(&str, &str); 8] = [
     ("fig3", "reproduce Fig. 3: cut layer + frequency decisions over rounds"),
     ("fig4", "reproduce Fig. 4: delay/energy vs baselines across channel states"),
     ("ablate", "A1/A2 sweeps: w, phi, bandwidth"),
+    ("fleet-sweep", "scenario × device-count grid on the parallel round engine"),
     ("decide", "one-shot CARD decision for each device"),
     ("train", "REAL split fine-tuning over PJRT artifacts"),
-    ("show", "print Table I (devices) / Table II (params) / arch"),
+    ("show", "print Table I (devices) / Table II (params) / arch / scenarios"),
     ("help", "print this help"),
 ];
 
@@ -84,7 +93,8 @@ fn run(argv: &[String]) -> Result<()> {
         Some(path) => ExpConfig::from_file(path)?,
         None => ExpConfig::paper(),
     };
-    if let Some(r) = args.usize_of("rounds")? {
+    let rounds_flag = args.usize_of("rounds")?;
+    if let Some(r) = rounds_flag {
         cfg.workload.rounds = r;
     }
     if let Some(w) = args.f64_of("w")? {
@@ -104,6 +114,14 @@ fn run(argv: &[String]) -> Result<()> {
         "fig3" => cmd_fig3(&cfg, state),
         "fig4" => cmd_fig4(&cfg),
         "ablate" => cmd_ablate(&cfg, args.str_of("sweep").unwrap_or("w")),
+        "fleet-sweep" => cmd_fleet_sweep(
+            cfg.seed,
+            rounds_flag,
+            args.str_of("scenario").unwrap_or("all"),
+            args.str_of("counts").unwrap_or("10,100,1000,10000"),
+            args.usize_of("threads")?,
+            args.str_of("out").unwrap_or("BENCH_fleet.json"),
+        ),
         "decide" => cmd_decide(&cfg, state),
         "train" => cmd_train(
             &cfg,
@@ -150,6 +168,49 @@ fn cmd_ablate(cfg: &ExpConfig, sweep: &str) -> Result<()> {
         }
         other => bail!("unknown sweep '{other}' (w|phi|bandwidth)"),
     }
+    Ok(())
+}
+
+fn cmd_fleet_sweep(
+    seed: u64,
+    rounds: Option<usize>,
+    scenario_sel: &str,
+    counts_s: &str,
+    threads: Option<usize>,
+    out: &str,
+) -> Result<()> {
+    let scenarios: Vec<Scenario> = if scenario_sel.eq_ignore_ascii_case("all") {
+        scenario::ALL.to_vec()
+    } else {
+        vec![Scenario::by_name(scenario_sel).ok_or_else(|| {
+            anyhow!(
+                "unknown scenario '{scenario_sel}' (have: {}, all)",
+                scenario::ALL.map(|s| s.name).join(", ")
+            )
+        })?]
+    };
+    let counts: Vec<usize> = counts_s
+        .split(',')
+        .map(|s| {
+            s.trim()
+                .parse::<usize>()
+                .map_err(|_| anyhow!("bad device count '{}' in --counts", s.trim()))
+        })
+        .collect::<Result<_>>()?;
+    let threads = threads.unwrap_or_else(pool::default_parallelism);
+
+    let mut bench = Bencher::new("fleet-sweep");
+    let sweep = fleet::sweep(&scenarios, &counts, rounds, threads, seed, &mut bench)?;
+    println!("{}\n", sweep.render());
+    println!(
+        "determinism gate: parallel == serial (bit-identical) at n = {} for every scenario\n",
+        counts.iter().min().unwrap()
+    );
+    bench.report();
+
+    std::fs::write(out, sweep.to_json().to_string() + "\n")
+        .map_err(|e| anyhow!("writing {out}: {e}"))?;
+    println!("\nwrote {out} ({} sweep points)", sweep.points.len());
     Ok(())
 }
 
@@ -214,7 +275,7 @@ fn cmd_train(
     sim_cfg.workload.rounds = steps
         .div_ceil(sim_cfg.workload.local_epochs * cfg.devices.len())
         .max(1);
-    let mut sched = Scheduler::new(sim_cfg.clone(), state, strategy);
+    let sched = Scheduler::new(sim_cfg.clone(), state, strategy);
     let records = sched.run(Some(&mut executor))?;
 
     let mut t = Table::new(
@@ -294,7 +355,22 @@ fn cmd_show(cfg: &ExpConfig, what: Option<&str>) -> Result<()> {
             t.row(vec!["trainable (LoRA)".into(), format!("{:.1}M", (arch.n_layers * arch.lora_layer_params()) as f64 / 1e6)]);
             t.print();
         }
-        other => bail!("unknown show target '{other}' (devices|params|arch)"),
+        "scenarios" => {
+            let mut t = Table::new(
+                "scenario registry (fleet-sweep presets)",
+                &["name", "channel", "placement [m]", "summary"],
+            );
+            for sc in scenario::ALL {
+                t.row(vec![
+                    sc.name.to_string(),
+                    sc.state.name().to_string(),
+                    format!("{:.0}-{:.0}", sc.dist_range.0, sc.dist_range.1),
+                    sc.summary.to_string(),
+                ]);
+            }
+            t.print();
+        }
+        other => bail!("unknown show target '{other}' (devices|params|arch|scenarios)"),
     }
     Ok(())
 }

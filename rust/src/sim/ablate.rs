@@ -5,6 +5,7 @@
 
 use crate::config::{ChannelState, ExpConfig};
 use crate::coordinator::{Scheduler, Strategy};
+use crate::util::pool;
 use crate::util::table::Table;
 
 use super::metrics::Summary;
@@ -19,8 +20,9 @@ pub struct SweepPoint {
 }
 
 fn run_point(cfg: &ExpConfig, state: ChannelState) -> anyhow::Result<(Summary, usize)> {
-    let mut sched = Scheduler::new(cfg.clone(), state, Strategy::Card);
-    let records = sched.run_analytic()?;
+    let sched = Scheduler::new(cfg.clone(), state, Strategy::Card);
+    // parallel fleet engine; bit-identical to the serial reference
+    let records = sched.run_parallel(pool::default_parallelism());
     let n_layers = sched.cost_model.n_layers();
     Ok((Summary::from_records(&records), n_layers))
 }

@@ -8,6 +8,7 @@
 
 use crate::config::{ChannelState, ExpConfig};
 use crate::coordinator::{RoundRecord, Scheduler, Strategy};
+use crate::util::pool;
 use crate::util::table::Table;
 
 #[derive(Clone, Debug)]
@@ -19,8 +20,9 @@ pub struct Fig3Result {
 }
 
 pub fn run(cfg: &ExpConfig, state: ChannelState) -> anyhow::Result<Fig3Result> {
-    let mut sched = Scheduler::new(cfg.clone(), state, Strategy::Card);
-    let records = sched.run_analytic()?;
+    let sched = Scheduler::new(cfg.clone(), state, Strategy::Card);
+    // the parallel engine is bit-identical to the serial reference path
+    let records = sched.run_parallel(pool::default_parallelism());
     Ok(Fig3Result {
         n_devices: cfg.devices.len(),
         rounds: cfg.workload.rounds,

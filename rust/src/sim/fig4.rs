@@ -7,6 +7,7 @@
 
 use crate::config::{ChannelState, ExpConfig};
 use crate::coordinator::{Scheduler, Strategy};
+use crate::util::pool;
 use crate::util::table::{fmt_joules, fmt_secs, Table};
 
 use super::metrics::{reduction_pct, Summary};
@@ -30,20 +31,25 @@ pub struct Fig4Result {
 pub const STRATEGIES: [Strategy; 3] = [Strategy::Card, Strategy::ServerOnly, Strategy::DeviceOnly];
 
 pub fn run(cfg: &ExpConfig) -> anyhow::Result<Fig4Result> {
-    let mut cells = Vec::new();
+    // the 3 x 3 (state x strategy) grid is embarrassingly parallel; each
+    // cell's records are bit-identical to a serial run of that cell
+    let mut cases = Vec::new();
     for state in ChannelState::ALL {
         for strat in STRATEGIES {
-            let mut sched = Scheduler::new(cfg.clone(), state, strat);
-            let records = sched.run_analytic()?;
-            let s = Summary::from_records(&records);
-            cells.push(Cell {
-                strategy: strat.name(),
-                state,
-                mean_delay_s: s.delay.mean(),
-                mean_energy_j: s.energy.mean(),
-            });
+            cases.push((state, strat));
         }
     }
+    let cells = pool::par_map_indexed(pool::default_parallelism(), &cases, |_, &(state, strat)| {
+        let sched = Scheduler::new(cfg.clone(), state, strat);
+        let records = sched.run_parallel(1);
+        let s = Summary::from_records(&records);
+        Cell {
+            strategy: strat.name(),
+            state,
+            mean_delay_s: s.delay.mean(),
+            mean_energy_j: s.energy.mean(),
+        }
+    });
 
     let mean_over_states = |name: &str, f: fn(&Cell) -> f64| -> f64 {
         let v: Vec<f64> = cells

@@ -1,0 +1,263 @@
+//! Fleet-scale scenario engine: sweep device counts across the scenario
+//! registry on the parallel round engine, emitting per-scenario
+//! delay/energy summaries (via `util::benchkit`) and a machine-readable
+//! `BENCH_fleet.json` for CI perf-trajectory tracking.
+//!
+//! Every sweep point runs CARD over an `n`-device synthetic fleet for
+//! the scenario's configured rounds with K worker threads.  For the
+//! smallest fleet of each scenario the engine re-runs the serial
+//! reference path and requires **bit-identical** records — the
+//! determinism gate that keeps the parallel engine honest.
+
+use crate::config::scenario::Scenario;
+use crate::coordinator::{RoundRecord, Scheduler, Strategy};
+use crate::util::benchkit::Bencher;
+use crate::util::json::{self, Json};
+use crate::util::table::{fmt_joules, fmt_secs, Table};
+
+use super::metrics::Summary;
+
+/// One (scenario, fleet size) measurement.
+#[derive(Clone, Debug)]
+pub struct FleetPoint {
+    pub scenario: String,
+    pub n_devices: usize,
+    pub rounds: usize,
+    pub threads: usize,
+    pub wall_s: f64,
+    pub device_rounds_per_s: f64,
+    pub mean_delay_s: f64,
+    pub mean_energy_j: f64,
+    pub mean_cut: f64,
+}
+
+/// Full sweep result.
+#[derive(Clone, Debug)]
+pub struct FleetSweep {
+    pub points: Vec<FleetPoint>,
+    pub threads: usize,
+    pub seed: u64,
+}
+
+/// Run the scenario × device-count grid.  `rounds` overrides the preset
+/// round count when given; timings land in `bench` (one entry per
+/// point) so the caller can render the standard benchkit report.
+pub fn sweep(
+    scenarios: &[Scenario],
+    counts: &[usize],
+    rounds: Option<usize>,
+    threads: usize,
+    seed: u64,
+    bench: &mut Bencher,
+) -> anyhow::Result<FleetSweep> {
+    anyhow::ensure!(!scenarios.is_empty(), "no scenarios selected");
+    anyhow::ensure!(!counts.is_empty(), "no device counts selected");
+    let gate_n = *counts.iter().min().unwrap();
+    let mut points = Vec::with_capacity(scenarios.len() * counts.len());
+    for sc in scenarios {
+        for &n in counts {
+            anyhow::ensure!(n > 0, "device count must be >= 1");
+            let mut cfg = sc.config(n, seed)?;
+            if let Some(r) = rounds {
+                cfg.workload.rounds = r;
+            }
+            let n_rounds = cfg.workload.rounds;
+            let sched = Scheduler::new(cfg, sc.state, Strategy::Card);
+
+            let t0 = std::time::Instant::now();
+            let records = sched.run_parallel(threads);
+            let wall = t0.elapsed().as_secs_f64();
+
+            // determinism gate on the smallest fleet of each scenario:
+            // the parallel engine must reproduce the serial reference
+            // bit for bit before any larger point is trusted
+            if n == gate_n {
+                let serial = sched.run_analytic()?;
+                verify_bit_identical(&serial, &records)?;
+            }
+
+            let s = Summary::from_records(&records);
+            let device_rounds = (n * n_rounds) as f64;
+            let rate = device_rounds / wall.max(1e-9);
+            bench.record_once(
+                &format!("{}_n{n}", sc.name),
+                wall,
+                Some((rate, "device-round")),
+            );
+            points.push(FleetPoint {
+                scenario: sc.name.to_string(),
+                n_devices: n,
+                rounds: n_rounds,
+                threads,
+                wall_s: wall,
+                device_rounds_per_s: rate,
+                mean_delay_s: s.delay.mean(),
+                mean_energy_j: s.energy.mean(),
+                mean_cut: s.mean_cut(),
+            });
+        }
+    }
+    Ok(FleetSweep {
+        points,
+        threads,
+        seed,
+    })
+}
+
+/// Require the parallel and serial record streams to agree bit for bit.
+pub fn verify_bit_identical(a: &[RoundRecord], b: &[RoundRecord]) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        a.len() == b.len(),
+        "record count mismatch: {} vs {}",
+        a.len(),
+        b.len()
+    );
+    for (x, y) in a.iter().zip(b) {
+        anyhow::ensure!(
+            x.round == y.round
+                && x.device_idx == y.device_idx
+                && x.cut == y.cut
+                && x.freq_hz.to_bits() == y.freq_hz.to_bits()
+                && x.cost.to_bits() == y.cost.to_bits()
+                && x.delay_s.to_bits() == y.delay_s.to_bits()
+                && x.energy_j.to_bits() == y.energy_j.to_bits()
+                && x.rate_up_bps.to_bits() == y.rate_up_bps.to_bits()
+                && x.rate_down_bps.to_bits() == y.rate_down_bps.to_bits()
+                && x.snr_up_db.to_bits() == y.snr_up_db.to_bits()
+                && x.snr_down_db.to_bits() == y.snr_down_db.to_bits()
+                && x.device_compute_s.to_bits() == y.device_compute_s.to_bits()
+                && x.server_compute_s.to_bits() == y.server_compute_s.to_bits()
+                && x.transmission_s.to_bits() == y.transmission_s.to_bits(),
+            "parallel/serial divergence at round {} device {}",
+            x.round,
+            x.device_idx
+        );
+    }
+    Ok(())
+}
+
+impl FleetSweep {
+    /// ASCII summary table (scenario × fleet size).
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            &format!(
+                "fleet-sweep — parallel round engine ({} workers, seed {})",
+                self.threads, self.seed
+            ),
+            &[
+                "scenario",
+                "devices",
+                "rounds",
+                "wall",
+                "device-rounds/s",
+                "mean delay",
+                "mean energy",
+                "mean cut",
+            ],
+        );
+        for p in &self.points {
+            t.row(vec![
+                p.scenario.clone(),
+                p.n_devices.to_string(),
+                p.rounds.to_string(),
+                fmt_secs(p.wall_s),
+                format!("{:.0}", p.device_rounds_per_s),
+                fmt_secs(p.mean_delay_s),
+                fmt_joules(p.mean_energy_j),
+                format!("{:.1}", p.mean_cut),
+            ]);
+        }
+        t.render()
+    }
+
+    /// Machine-readable dump (the `BENCH_fleet.json` payload).
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("schema", Json::Str("edgesplit/fleet-sweep/v1".into())),
+            // string, not number: u64 seeds above 2^53 would lose
+            // precision through the f64-backed Json::Num
+            ("seed", Json::Str(self.seed.to_string())),
+            ("threads", Json::Num(self.threads as f64)),
+            (
+                "points",
+                Json::Arr(
+                    self.points
+                        .iter()
+                        .map(|p| {
+                            json::obj(vec![
+                                ("scenario", Json::Str(p.scenario.clone())),
+                                ("n_devices", Json::Num(p.n_devices as f64)),
+                                ("rounds", Json::Num(p.rounds as f64)),
+                                ("threads", Json::Num(p.threads as f64)),
+                                ("wall_s", Json::Num(p.wall_s)),
+                                ("device_rounds_per_s", Json::Num(p.device_rounds_per_s)),
+                                ("mean_delay_s", Json::Num(p.mean_delay_s)),
+                                ("mean_energy_j", Json::Num(p.mean_energy_j)),
+                                ("mean_cut", Json::Num(p.mean_cut)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::scenario;
+
+    #[test]
+    fn small_sweep_produces_grid_and_json() {
+        let mut bench = Bencher::new("fleet-sweep-test");
+        let scenarios = [scenario::DENSE_URBAN, scenario::BURSTY_CHANNEL];
+        let sweep = sweep(&scenarios, &[4, 9], Some(2), 4, 7, &mut bench).unwrap();
+        assert_eq!(sweep.points.len(), 4);
+        assert_eq!(bench.results().len(), 4);
+        for p in &sweep.points {
+            assert!(p.mean_delay_s > 0.0 && p.mean_delay_s.is_finite());
+            assert!(p.mean_energy_j >= 0.0);
+            assert_eq!(p.rounds, 2);
+        }
+        let js = sweep.to_json().to_string();
+        assert!(js.contains("\"n_devices\":4"));
+        assert!(js.contains("dense-urban"));
+        assert!(js.contains("fleet-sweep/v1"));
+        // and it round-trips through our own parser
+        assert!(Json::parse(&js).is_ok());
+    }
+
+    #[test]
+    fn determinism_gate_runs_on_smallest_count() {
+        // the gate would Err on divergence; a clean pass is the assertion
+        let mut bench = Bencher::new("gate");
+        let sweep = sweep(
+            &[scenario::HETEROGENEOUS_FLEET],
+            &[6],
+            Some(3),
+            8,
+            123,
+            &mut bench,
+        )
+        .unwrap();
+        assert_eq!(sweep.points.len(), 1);
+    }
+
+    #[test]
+    fn rejects_degenerate_input() {
+        let mut bench = Bencher::new("bad");
+        assert!(sweep(&[], &[4], None, 1, 0, &mut bench).is_err());
+        assert!(sweep(&[scenario::DENSE_URBAN], &[], None, 1, 0, &mut bench).is_err());
+        assert!(sweep(&[scenario::DENSE_URBAN], &[0], None, 1, 0, &mut bench).is_err());
+    }
+
+    #[test]
+    fn render_lists_every_point() {
+        let mut bench = Bencher::new("render");
+        let sweep = sweep(&[scenario::SPARSE_RURAL], &[3, 5], Some(1), 2, 1, &mut bench).unwrap();
+        let out = sweep.render();
+        assert!(out.contains("sparse-rural"));
+        assert!(out.contains("device-rounds/s"));
+    }
+}

@@ -42,6 +42,11 @@ impl Summary {
         s
     }
 
+    /// Mean selected cut layer over all records (0 when empty).
+    pub fn mean_cut(&self) -> f64 {
+        self.cuts.iter().sum::<usize>() as f64 / self.cuts.len().max(1) as f64
+    }
+
     /// Fraction of decisions at each endpoint (Fig. 3a structure).
     pub fn endpoint_fractions(&self, n_layers: usize) -> (f64, f64) {
         if self.cuts.is_empty() {
@@ -98,6 +103,8 @@ mod tests {
         assert_eq!(s.delay.mean(), 15.0);
         assert_eq!(s.energy.mean(), 200.0);
         assert_eq!(s.cuts, vec![0, 32]);
+        assert_eq!(s.mean_cut(), 16.0);
+        assert_eq!(Summary::default().mean_cut(), 0.0);
     }
 
     #[test]

@@ -1,9 +1,12 @@
-//! Experiment harness: one module per paper figure + ablation sweeps
-//! (see DESIGN.md §5 experiment index).
+//! Experiment harness: one module per paper figure, ablation sweeps,
+//! and the fleet-scale scenario engine (see DESIGN.md §5 experiment
+//! index).
 
 pub mod ablate;
 pub mod fig3;
 pub mod fig4;
+pub mod fleet;
 pub mod metrics;
 
+pub use fleet::{FleetPoint, FleetSweep};
 pub use metrics::{reduction_pct, Summary};

@@ -107,6 +107,36 @@ impl Bencher {
         self.results.last().unwrap()
     }
 
+    /// Record an externally-timed single-shot measurement — for
+    /// meso-benchmarks (whole fleet rounds, figure regenerations) that
+    /// are too heavy for adaptive repetition.  `throughput` is an
+    /// optional `(rate, unit)` annotation, already per-second.
+    pub fn record_once(
+        &mut self,
+        name: &str,
+        seconds: f64,
+        throughput: Option<(f64, &'static str)>,
+    ) -> &BenchResult {
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            iters: 1,
+            mean_s: seconds,
+            median_s: seconds,
+            p95_s: seconds,
+            min_s: seconds,
+            throughput,
+        });
+        self.results.last().unwrap()
+    }
+
+    /// Time exactly one invocation of `f` and record it.
+    pub fn bench_once<F: FnOnce()>(&mut self, name: &str, f: F) -> &BenchResult {
+        let t0 = Instant::now();
+        f();
+        let dt = t0.elapsed().as_secs_f64();
+        self.record_once(name, dt, None)
+    }
+
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }
@@ -162,6 +192,21 @@ mod tests {
             bb(0u64);
         });
         assert!(r.throughput.unwrap().0 > 0.0);
+    }
+
+    #[test]
+    fn single_shot_recording() {
+        let mut b = Bencher::new("once");
+        let r = b.bench_once("one-call", || {
+            bb(7u64);
+        });
+        assert_eq!(r.iters, 1);
+        assert!(r.mean_s >= 0.0);
+        let r = b.record_once("external", 0.25, Some((400.0, "device-round")));
+        assert_eq!(r.mean_s, 0.25);
+        assert_eq!(r.throughput, Some((400.0, "device-round")));
+        assert_eq!(b.results().len(), 2);
+        b.report(); // must not panic
     }
 
     #[test]

@@ -6,6 +6,7 @@
 pub mod benchkit;
 pub mod json;
 pub mod logging;
+pub mod pool;
 pub mod proptest;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,90 @@
+//! Dependency-free fork-join worker pool (no `rayon` in the offline
+//! crate set): a scoped-thread `par_map` with work stealing via an
+//! atomic cursor.
+//!
+//! Output order is always the input order, regardless of which worker
+//! finishes first, so callers that pair this with order-independent
+//! per-item RNG streams (see `rng::SplitMix64::stream_seed`) get
+//! bit-identical results at any thread count — the invariant the fleet
+//! round engine is built on.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Worker count to use when the caller has no preference: one per core.
+pub fn default_parallelism() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Map `f` over `items` on up to `threads` workers, returning results in
+/// input order.  `f` receives `(index, &item)`.  Falls back to a plain
+/// serial map for trivial inputs (0/1 items or 1 thread).
+pub fn par_map_indexed<T, R, F>(threads: usize, items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let threads = threads.max(1).min(items.len().max(1));
+    if threads <= 1 || items.len() <= 1 {
+        return items.iter().enumerate().map(|(i, x)| f(i, x)).collect();
+    }
+
+    let cursor = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<R>>> = (0..items.len()).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(i, &items[i]);
+                *slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .unwrap()
+                .expect("pool invariant: every slot filled before join")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_serial_map_in_order() {
+        let xs: Vec<u64> = (0..500).collect();
+        let serial: Vec<u64> = xs.iter().enumerate().map(|(i, &x)| x * 3 + i as u64).collect();
+        for threads in [1, 2, 4, 8, 17] {
+            let par = par_map_indexed(threads, &xs, |i, &x| x * 3 + i as u64);
+            assert_eq!(par, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn empty_and_singleton_inputs() {
+        let empty: [u64; 0] = [];
+        assert!(par_map_indexed(4, &empty, |_, &x| x).is_empty());
+        assert_eq!(par_map_indexed(4, &[41u64], |_, &x| x + 1), vec![42]);
+    }
+
+    #[test]
+    fn more_threads_than_items() {
+        let xs = [1u64, 2, 3];
+        assert_eq!(par_map_indexed(64, &xs, |_, &x| x * x), vec![1, 4, 9]);
+    }
+
+    #[test]
+    fn default_parallelism_positive() {
+        assert!(default_parallelism() >= 1);
+    }
+}

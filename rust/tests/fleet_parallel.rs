@@ -1,0 +1,117 @@
+//! Fleet-scale determinism: the parallel round engine must reproduce
+//! the serial reference path **bit for bit** — for any scenario, seed,
+//! fleet size, thread count, and strategy.  This is the invariant that
+//! makes "as fast as the hardware allows" safe: adding workers can
+//! never change a single figure.
+
+use edgesplit::config::scenario::{Scenario, ALL, DENSE_URBAN};
+use edgesplit::coordinator::{RoundRecord, Scheduler, Strategy};
+use edgesplit::prop_assert;
+use edgesplit::sim::fleet::verify_bit_identical;
+use edgesplit::util::pool;
+use edgesplit::util::proptest::{forall, PropConfig};
+
+/// One comparator for the whole suite — the same gate `fleet-sweep`
+/// runs at the CLI, so the test and runtime checks can't drift apart.
+fn assert_bit_identical(a: &[RoundRecord], b: &[RoundRecord]) {
+    if let Err(e) = verify_bit_identical(a, b) {
+        panic!("{e:#}");
+    }
+}
+
+#[test]
+fn prop_parallel_matches_serial_bitwise() {
+    forall(
+        "parallel fleet round == serial path, bit for bit",
+        PropConfig {
+            seed: 0x00F1_EE75,
+            cases: 24,
+        },
+        |r| {
+            let scenario = ALL[r.below(ALL.len() as u64) as usize].name;
+            let n_devices = 2 + r.below(30) as usize;
+            let seed = r.next_u64();
+            let threads = 1 + r.below(8) as usize;
+            let rounds = 1 + r.below(4) as usize;
+            let strategy = match r.below(3) {
+                0 => Strategy::Card,
+                1 => Strategy::RandomCut,
+                _ => Strategy::StaticCut(1 + r.below(32) as usize),
+            };
+            (scenario, n_devices, seed, threads, rounds, strategy)
+        },
+        |&(name, n_devices, seed, threads, rounds, strategy)| {
+            let sc = Scenario::by_name(name).expect("registry name");
+            let mut cfg = sc.config(n_devices, seed).map_err(|e| e.to_string())?;
+            cfg.workload.rounds = rounds;
+            let sched = Scheduler::new(cfg, sc.state, strategy);
+            let serial = sched.run_analytic().map_err(|e| format!("{e:#}"))?;
+            let parallel = sched.run_parallel(threads);
+            prop_assert!(
+                verify_bit_identical(&serial, &parallel).is_ok(),
+                "parallel != serial for {name} n={n_devices} ({threads} threads)",
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn dense_urban_1000_devices_completes_and_matches_serial() {
+    // ISSUE acceptance: fleet-sweep's 1 000-device dense-urban point
+    // completes, and the parallel metrics match the serial path
+    // bit-identically for a fixed seed.
+    let mut cfg = DENSE_URBAN.config(1000, 7).unwrap();
+    cfg.workload.rounds = 2;
+    let sched = Scheduler::new(cfg, DENSE_URBAN.state, Strategy::Card);
+    let parallel = sched.run_parallel(pool::default_parallelism());
+    assert_eq!(parallel.len(), 2000);
+    assert!(parallel.iter().all(|r| r.delay_s > 0.0 && r.delay_s.is_finite()));
+    let serial = sched.run_analytic().unwrap();
+    assert_bit_identical(&serial, &parallel);
+}
+
+#[test]
+fn every_scenario_runs_at_fleet_scale() {
+    for sc in ALL {
+        let mut cfg = sc.config(25, 1).unwrap();
+        cfg.workload.rounds = 2;
+        let sched = Scheduler::new(cfg, sc.state, Strategy::Card);
+        let recs = sched.run_parallel(4);
+        assert_eq!(recs.len(), 50, "{}", sc.name);
+        for r in &recs {
+            assert!(r.delay_s > 0.0 && r.energy_j >= 0.0, "{}", sc.name);
+            assert!(r.rate_up_bps > 0.0, "{}", sc.name);
+        }
+    }
+}
+
+#[test]
+fn thread_count_never_changes_results() {
+    let mut cfg = DENSE_URBAN.config(17, 99).unwrap();
+    cfg.workload.rounds = 3;
+    let sched = Scheduler::new(cfg, DENSE_URBAN.state, Strategy::Card);
+    let reference = sched.run_parallel(1);
+    for threads in [2, 3, 8, 32] {
+        assert_bit_identical(&reference, &sched.run_parallel(threads));
+    }
+}
+
+#[test]
+fn scenarios_produce_distinct_physics() {
+    // same seed, same fleet size: the registry's channel/placement
+    // differences must show up in the realized metrics
+    let run = |sc: Scenario| {
+        let mut cfg = sc.config(10, 5).unwrap();
+        cfg.workload.rounds = 2;
+        let sched = Scheduler::new(cfg, sc.state, Strategy::Card);
+        let recs = sched.run_parallel(4);
+        recs.iter().map(|r| r.delay_s).sum::<f64>() / recs.len() as f64
+    };
+    let urban = run(DENSE_URBAN);
+    let bursty = run(Scenario::by_name("bursty-channel").unwrap());
+    assert!(
+        (urban - bursty).abs() > 1e-9,
+        "scenarios should realize different mean delays: {urban} vs {bursty}"
+    );
+}

@@ -137,7 +137,7 @@ fn all_strategies_run_through_scheduler() {
         Strategy::StaticCut(16),
         Strategy::RandomCut,
     ] {
-        let mut s = Scheduler::new(quick(), ChannelState::Normal, strat);
+        let s = Scheduler::new(quick(), ChannelState::Normal, strat);
         let recs = s.run_analytic().unwrap();
         assert_eq!(recs.len(), 40, "{}", strat.name());
         let summary = Summary::from_records(&recs);
@@ -148,7 +148,7 @@ fn all_strategies_run_through_scheduler() {
 #[test]
 fn card_cost_dominates_all_baselines_in_simulation() {
     let mk = |s| {
-        let mut sched = Scheduler::new(quick(), ChannelState::Normal, s);
+        let sched = Scheduler::new(quick(), ChannelState::Normal, s);
         let recs = sched.run_analytic().unwrap();
         Summary::from_records(&recs).cost.mean()
     };
@@ -188,7 +188,7 @@ fn config_file_roundtrip_drives_simulation() {
     "#;
     let cfg = ExpConfig::from_toml_str(toml).unwrap();
     cfg.validate().unwrap();
-    let mut s = Scheduler::new(cfg, ChannelState::Good, Strategy::Card);
+    let s = Scheduler::new(cfg, ChannelState::Good, Strategy::Card);
     let recs = s.run_analytic().unwrap();
     assert_eq!(recs.len(), 3);
     // w = 0.9 → delay-hungry → near-max frequency

@@ -43,7 +43,7 @@ fn scheduler_drives_real_training_with_card() {
     cfg.workload.rounds = 2;
     cfg.workload.local_epochs = 2;
     let mut ex = executor(3, cfg.devices.len());
-    let mut sched = Scheduler::new(cfg, ChannelState::Normal, Strategy::Card);
+    let sched = Scheduler::new(cfg, ChannelState::Normal, Strategy::Card);
     let recs = sched.run(Some(&mut ex)).unwrap();
     assert_eq!(recs.len(), 10); // 5 devices × 2 rounds
     assert!(recs.iter().all(|r| r.loss.is_some()));
@@ -69,7 +69,7 @@ fn every_strategy_trains_identically_in_loss_space() {
         cfg.workload.rounds = 1;
         cfg.workload.local_epochs = 2;
         let mut ex = executor(9, cfg.devices.len());
-        let mut sched = Scheduler::new(cfg, ChannelState::Normal, strategy);
+        let sched = Scheduler::new(cfg, ChannelState::Normal, strategy);
         sched.run(Some(&mut ex)).unwrap();
         ex.loss_log.iter().map(|x| x.1).collect::<Vec<_>>()
     };
