@@ -8,6 +8,6 @@ pub mod toml;
 
 pub use scenario::Scenario;
 pub use schema::{
-    CardSpec, ChannelSpec, ChannelState, ConfigError, DeviceSpec, ExpConfig, ServerSpec,
-    WorkloadSpec,
+    CardSpec, ChannelSpec, ChannelState, ChurnSpec, ConfigError, DeviceSpec, ExpConfig,
+    ServerSpec, WorkloadSpec,
 };

@@ -206,6 +206,24 @@ impl Default for CardSpec {
     }
 }
 
+/// Poisson device churn for the DES engine (DESIGN.md §11): devices
+/// alternate exponential present/away periods.  Rates of 0 (the
+/// default) disable churn entirely — every synchronous-engine path and
+/// every preset without a `[churn]` table is churn-free.
+#[derive(Clone, Debug, Default)]
+pub struct ChurnSpec {
+    /// departure rate while present [1/s] (mean uptime = 1/rate)
+    pub depart_rate_hz: f64,
+    /// return rate while away [1/s] (mean away time = 1/rate)
+    pub arrive_rate_hz: f64,
+}
+
+impl ChurnSpec {
+    pub fn enabled(&self) -> bool {
+        self.depart_rate_hz > 0.0
+    }
+}
+
 /// Top-level experiment configuration.
 #[derive(Clone, Debug, Default)]
 pub struct ExpConfig {
@@ -214,6 +232,7 @@ pub struct ExpConfig {
     pub channel: ChannelSpec,
     pub workload: WorkloadSpec,
     pub card: CardSpec,
+    pub churn: ChurnSpec,
     pub seed: u64,
 }
 
@@ -226,6 +245,7 @@ impl ExpConfig {
             channel: ChannelSpec::default(),
             workload: WorkloadSpec::default(),
             card: CardSpec::default(),
+            churn: ChurnSpec::default(),
             seed: 7,
         }
     }
@@ -259,6 +279,14 @@ impl ExpConfig {
         }
         if self.workload.local_epochs == 0 || self.workload.rounds == 0 {
             return inval("local_epochs and rounds must be >= 1".into());
+        }
+        for (name, rate) in [
+            ("churn.depart_rate_hz", self.churn.depart_rate_hz),
+            ("churn.arrive_rate_hz", self.churn.arrive_rate_hz),
+        ] {
+            if !rate.is_finite() || rate < 0.0 {
+                return inval(format!("{name} must be finite and >= 0, got {rate}"));
+            }
         }
         for d in &self.devices {
             if d.server_freq_floor(&self.server) > self.server.max_freq_hz {
@@ -325,6 +353,7 @@ fn apply_tree(cfg: &mut ExpConfig, tree: &Json) -> Result<(), ConfigError> {
             "channel" => apply_channel(&mut cfg.channel, val)?,
             "workload" => apply_workload(&mut cfg.workload, val)?,
             "card" => apply_card(&mut cfg.card, val)?,
+            "churn" => apply_churn(&mut cfg.churn, val)?,
             "sim" => {
                 for (k, v) in val.as_obj().into_iter().flatten() {
                     match k.as_str() {
@@ -431,6 +460,17 @@ fn apply_card(c: &mut CardSpec, val: &Json) -> Result<(), ConfigError> {
     Ok(())
 }
 
+fn apply_churn(c: &mut ChurnSpec, val: &Json) -> Result<(), ConfigError> {
+    for (k, v) in val.as_obj().into_iter().flatten() {
+        match k.as_str() {
+            "depart_rate_hz" => c.depart_rate_hz = num(v, "churn.depart_rate_hz")?,
+            "arrive_rate_hz" => c.arrive_rate_hz = num(v, "churn.arrive_rate_hz")?,
+            _ => return Err(ConfigError::UnknownKey(format!("churn.{k}"))),
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -477,6 +517,27 @@ mod tests {
         assert_eq!(c.devices[0].freq_hz, 0.9e9);
         // untouched defaults survive
         assert_eq!(c.workload.phi, 0.1);
+    }
+
+    #[test]
+    fn churn_defaults_off_and_overrides_parse() {
+        let c = ExpConfig::paper();
+        assert!(!c.churn.enabled());
+        let c = ExpConfig::from_toml_str(
+            "[churn]\ndepart_rate_hz = 0.001\narrive_rate_hz = 0.01\n",
+        )
+        .unwrap();
+        assert!(c.churn.enabled());
+        assert_eq!(c.churn.depart_rate_hz, 0.001);
+        assert_eq!(c.churn.arrive_rate_hz, 0.01);
+        c.validate().unwrap();
+        let mut bad = ExpConfig::paper();
+        bad.churn.depart_rate_hz = -1.0;
+        assert!(bad.validate().is_err());
+        assert!(matches!(
+            ExpConfig::from_toml_str("[churn]\nrate = 1\n"),
+            Err(ConfigError::UnknownKey(_))
+        ));
     }
 
     #[test]

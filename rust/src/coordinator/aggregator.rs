@@ -93,6 +93,34 @@ impl Aggregator {
         self.merges += 1;
     }
 
+    /// Out-of-order-safe variant of [`Aggregator::server_update`] for
+    /// the DES async/semi-sync paths: concurrent device leases may
+    /// interleave arbitrarily, so layer version coordinates advance
+    /// monotonically instead of being overwritten.
+    pub fn server_update_unordered(&mut self, cut: usize, round: usize) {
+        for l in &mut self.layers[cut..] {
+            l.owner = Owner::Server;
+            l.round = l.round.max(round);
+            l.updates += 1;
+        }
+    }
+
+    /// Out-of-order-safe variant of [`Aggregator::merge`]: accepts a
+    /// device's adapters regardless of who currently owns the layers
+    /// (a fresher concurrent lease may already have overwritten them)
+    /// and never regresses a layer's version coordinate.  Used by the
+    /// DES engine, where merges arrive in completion order, not
+    /// distribution order.
+    pub fn merge_unordered(&mut self, _device: usize, cut: usize, round: usize, bytes: f64) {
+        for l in &mut self.layers[..cut] {
+            l.owner = Owner::Server;
+            l.round = l.round.max(round);
+            l.updates += 1;
+        }
+        self.bytes_collected += bytes;
+        self.merges += 1;
+    }
+
     /// All layers consistent at the server (invariant between rounds).
     pub fn is_consistent(&self) -> bool {
         self.layers.iter().all(|l| l.owner == Owner::Server)
@@ -164,5 +192,32 @@ mod tests {
     fn distribute_validates_cut() {
         let mut a = Aggregator::new(4);
         a.distribute(0, 5, 1, 0.0);
+    }
+
+    #[test]
+    fn unordered_merge_tolerates_interleaved_leases() {
+        // two concurrent leases over overlapping prefixes, merged in
+        // completion order (1 before 0) — the ordered path would panic
+        // on the non-owner debug assert
+        let mut a = Aggregator::new(8);
+        a.distribute(0, 6, 1, 1.0);
+        a.distribute(1, 4, 2, 1.0);
+        a.merge_unordered(1, 4, 2, 1.0);
+        a.merge_unordered(0, 6, 1, 1.0);
+        assert!(a.is_consistent());
+        assert_eq!(a.merges(), 2);
+        // version coordinates are monotone: layer 0 keeps round 2 even
+        // though the later merge carried round 1
+        assert_eq!(a.layers[0].round, 2);
+        assert_eq!(a.layers[5].round, 1);
+    }
+
+    #[test]
+    fn unordered_server_update_is_monotone() {
+        let mut a = Aggregator::new(4);
+        a.server_update_unordered(0, 7);
+        a.server_update_unordered(0, 3);
+        assert!(a.layers.iter().all(|l| l.round == 7));
+        assert_eq!(a.staleness(7), 0);
     }
 }

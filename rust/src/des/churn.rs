@@ -1,0 +1,108 @@
+//! Poisson device churn for the DES engine (DESIGN.md §11).
+//!
+//! Every device alternates *present* and *away* periods with
+//! exponential durations: present ~ Exp(`depart_rate_hz`), away ~
+//! Exp(`arrive_rate_hz`).  Each device draws from its own counter-based
+//! SplitMix64 stream (`stream_seed(root, [CHURN_TAG, device])`) and the
+//! draws are consumed in device-local order only, so the realized trace
+//! is a pure function of `(seed, scenario, device)` — event
+//! interleaving, policies, and thread counts can never perturb it.
+
+use crate::config::ChurnSpec;
+use crate::util::rng::{Rng, SplitMix64};
+
+/// Stream-tag namespace for churn draws — distinct from the
+/// `(round, device)` cell tags used by the round engine.
+const CHURN_TAG: u64 = 0xC4_52_4E; // "ChRN"
+
+/// Lazily drawn presence trace for one device.  Devices start present
+/// at t = 0.
+#[derive(Clone, Debug)]
+pub struct ChurnTrace {
+    rng: Rng,
+    depart_rate_hz: f64,
+    arrive_rate_hz: f64,
+}
+
+impl ChurnTrace {
+    pub fn new(root: u64, device: usize, spec: &ChurnSpec) -> ChurnTrace {
+        ChurnTrace {
+            rng: Rng::new(SplitMix64::stream_seed(root, &[CHURN_TAG, device as u64])),
+            depart_rate_hz: spec.depart_rate_hz,
+            arrive_rate_hz: spec.arrive_rate_hz,
+        }
+    }
+
+    /// Does this trace ever generate a departure?
+    pub fn churns(&self) -> bool {
+        self.depart_rate_hz > 0.0
+    }
+
+    /// Duration of the next *present* period [s]; `None` when the
+    /// device never departs (rate 0).
+    pub fn next_present_s(&mut self) -> Option<f64> {
+        if self.depart_rate_hz > 0.0 {
+            Some(self.rng.exp(self.depart_rate_hz))
+        } else {
+            None
+        }
+    }
+
+    /// Duration of the next *away* period [s]; `None` when the device
+    /// never returns (rate 0 — a permanent departure).
+    pub fn next_away_s(&mut self) -> Option<f64> {
+        if self.arrive_rate_hz > 0.0 {
+            Some(self.rng.exp(self.arrive_rate_hz))
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(depart: f64, arrive: f64) -> ChurnSpec {
+        ChurnSpec {
+            depart_rate_hz: depart,
+            arrive_rate_hz: arrive,
+        }
+    }
+
+    #[test]
+    fn zero_rates_mean_no_churn() {
+        let mut t = ChurnTrace::new(7, 0, &spec(0.0, 0.0));
+        assert!(!t.churns());
+        assert_eq!(t.next_present_s(), None);
+        assert_eq!(t.next_away_s(), None);
+    }
+
+    #[test]
+    fn traces_are_deterministic_per_device() {
+        let draw = |device: usize| {
+            let mut t = ChurnTrace::new(42, device, &spec(0.01, 0.1));
+            (0..8).map(|_| t.next_present_s().unwrap()).collect::<Vec<f64>>()
+        };
+        assert_eq!(draw(3), draw(3));
+        assert_ne!(draw(3), draw(4), "devices must get distinct streams");
+    }
+
+    #[test]
+    fn exponential_means_roughly_match_rates() {
+        let mut t = ChurnTrace::new(1, 0, &spec(0.5, 2.0));
+        let n = 20_000;
+        let up: f64 = (0..n).map(|_| t.next_present_s().unwrap()).sum::<f64>() / n as f64;
+        let away: f64 = (0..n).map(|_| t.next_away_s().unwrap()).sum::<f64>() / n as f64;
+        assert!((up - 2.0).abs() < 0.1, "mean uptime {up} != 1/0.5");
+        assert!((away - 0.5).abs() < 0.05, "mean away {away} != 1/2.0");
+    }
+
+    #[test]
+    fn permanent_departure_when_arrival_rate_zero() {
+        let mut t = ChurnTrace::new(9, 2, &spec(1.0, 0.0));
+        assert!(t.churns());
+        assert!(t.next_present_s().is_some());
+        assert_eq!(t.next_away_s(), None);
+    }
+}

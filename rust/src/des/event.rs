@@ -1,0 +1,239 @@
+//! Virtual clock + event queue — the substrate of the discrete-event
+//! fleet engine (DESIGN.md §11).
+//!
+//! Time is a non-negative finite `f64` of virtual seconds wrapped in
+//! [`SimTime`] so it can live in a `BinaryHeap` with a *total* order.
+//! Ties are broken deterministically by insertion sequence number: two
+//! events scheduled for the same instant pop in the order they were
+//! pushed.  Because the event loop is single-threaded and every
+//! stochastic input comes from counter-based RNG streams, a DES run is
+//! a pure function of `(config, seed)` — thread counts, wall-clock, and
+//! host load can never reorder it.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Virtual simulation time [s].  Non-negative and finite by
+/// construction, which makes the raw IEEE-754 bit pattern order-
+/// preserving — that is what `Ord` compares.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SimTime(f64);
+
+impl SimTime {
+    pub const ZERO: SimTime = SimTime(0.0);
+
+    /// Wrap a timestamp; panics on NaN/negative/infinite input because
+    /// a corrupt clock would silently scramble the heap order.
+    pub fn new(t: f64) -> SimTime {
+        assert!(t.is_finite() && t >= 0.0, "SimTime must be finite and >= 0, got {t}");
+        SimTime(t)
+    }
+
+    pub fn secs(self) -> f64 {
+        self.0
+    }
+
+    /// This instant shifted `dt` seconds into the future.
+    pub fn after(self, dt: f64) -> SimTime {
+        assert!(dt.is_finite() && dt >= 0.0, "event delay must be finite and >= 0, got {dt}");
+        SimTime::new(self.0 + dt)
+    }
+}
+
+impl Eq for SimTime {}
+
+impl PartialOrd for SimTime {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for SimTime {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // valid because both sides are non-negative finite
+        self.0.to_bits().cmp(&other.0.to_bits())
+    }
+}
+
+/// Everything that can happen in the fleet timeline.  `device` indexes
+/// `cfg.devices`; `round` is the cell's round coordinate (global round
+/// for sync/semi-sync, the device's personal round for async).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// Churn: the device (re)joins the fleet.
+    Arrive { device: usize },
+    /// Churn: the device leaves; its in-flight work is abandoned.
+    Depart { device: usize },
+    /// Device-side FP + smashed/adapter uplink finished — the job is
+    /// ready for the server compute queue.
+    UplinkDone { device: usize, round: usize },
+    /// One server slot finished a fused batch of jobs; each job's
+    /// gradient downlink starts now.
+    ServerBatchDone { jobs: Vec<(usize, usize)> },
+    /// Gradient/adapter downlink + device BP finished — merge happens.
+    MergeReady { device: usize, round: usize },
+    /// Semi-sync: the straggler deadline for a global round.
+    Deadline { round: usize },
+}
+
+struct Entry {
+    t: SimTime,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.seq == other.seq
+    }
+}
+
+impl Eq for Entry {}
+
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap: invert so the earliest (t, seq)
+        // pops first.  seq breaks time ties FIFO — the determinism rule.
+        (other.t, other.seq).cmp(&(self.t, self.seq))
+    }
+}
+
+/// Min-heap of timed events with a monotone virtual clock.
+pub struct EventQueue {
+    heap: BinaryHeap<Entry>,
+    seq: u64,
+    now: SimTime,
+}
+
+impl Default for EventQueue {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EventQueue {
+    pub fn new() -> EventQueue {
+        EventQueue {
+            heap: BinaryHeap::new(),
+            seq: 0,
+            now: SimTime::ZERO,
+        }
+    }
+
+    /// Current virtual time — advances only in [`EventQueue::pop`].
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Schedule `kind` at absolute time `t` (must not be in the past).
+    pub fn push_at(&mut self, t: SimTime, kind: EventKind) {
+        assert!(t >= self.now, "cannot schedule into the past: {t:?} < {:?}", self.now);
+        self.heap.push(Entry {
+            t,
+            seq: self.seq,
+            kind,
+        });
+        self.seq += 1;
+    }
+
+    /// Schedule `kind` `dt` seconds after the current instant.
+    pub fn push_after(&mut self, dt: f64, kind: EventKind) {
+        self.push_at(self.now.after(dt), kind);
+    }
+
+    /// Pop the earliest event, advancing the clock to it.
+    pub fn pop(&mut self) -> Option<(SimTime, EventKind)> {
+        let e = self.heap.pop()?;
+        debug_assert!(e.t >= self.now, "clock went backwards");
+        self.now = e.t;
+        Some((e.t, e.kind))
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push_at(SimTime::new(3.0), EventKind::Arrive { device: 3 });
+        q.push_at(SimTime::new(1.0), EventKind::Arrive { device: 1 });
+        q.push_at(SimTime::new(2.0), EventKind::Arrive { device: 2 });
+        let order: Vec<usize> = std::iter::from_fn(|| q.pop())
+            .map(|(_, e)| match e {
+                EventKind::Arrive { device } => device,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(order, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn ties_break_fifo() {
+        let mut q = EventQueue::new();
+        for device in 0..10 {
+            q.push_at(SimTime::new(5.0), EventKind::Depart { device });
+        }
+        let order: Vec<usize> = std::iter::from_fn(|| q.pop())
+            .map(|(_, e)| match e {
+                EventKind::Depart { device } => device,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(order, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn clock_is_monotone_and_relative_push_works() {
+        let mut q = EventQueue::new();
+        q.push_after(2.0, EventKind::Arrive { device: 0 });
+        let (t, _) = q.pop().unwrap();
+        assert_eq!(t.secs(), 2.0);
+        assert_eq!(q.now().secs(), 2.0);
+        q.push_after(1.5, EventKind::Arrive { device: 1 });
+        let (t, _) = q.pop().unwrap();
+        assert_eq!(t.secs(), 3.5);
+        assert!(q.is_empty());
+        assert_eq!(q.len(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot schedule into the past")]
+    fn rejects_past_events() {
+        let mut q = EventQueue::new();
+        q.push_at(SimTime::new(2.0), EventKind::Arrive { device: 0 });
+        q.pop();
+        q.push_at(SimTime::new(1.0), EventKind::Arrive { device: 1 });
+    }
+
+    #[test]
+    #[should_panic(expected = "finite")]
+    fn rejects_nan_time() {
+        SimTime::new(f64::NAN);
+    }
+
+    #[test]
+    fn simtime_orders_like_f64() {
+        let xs = [0.0, 1e-300, 0.5, 1.0, 1e9];
+        for (i, &a) in xs.iter().enumerate() {
+            for &b in &xs[i + 1..] {
+                assert!(SimTime::new(a) < SimTime::new(b), "{a} !< {b}");
+            }
+        }
+    }
+}

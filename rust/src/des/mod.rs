@@ -1,0 +1,17 @@
+//! Discrete-event fleet engine (DESIGN.md §11): virtual clock,
+//! deterministic event queue, server compute queue, Poisson device
+//! churn, and sync / semi-sync / async aggregation policies — the
+//! subsystem that replaces the implicit round barrier with explicit
+//! timed events and makes the shared edge server a contended resource.
+
+pub mod churn;
+pub mod engine;
+pub mod event;
+pub mod server;
+pub mod sweep;
+
+pub use churn::ChurnTrace;
+pub use engine::{DesConfig, DesEngine, DesOutcome, DesRecord, Policy};
+pub use event::{EventKind, EventQueue, SimTime};
+pub use server::{ServerQueue, ServerStats};
+pub use sweep::{sweep, DesPoint, DesSweep};

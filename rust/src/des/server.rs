@@ -1,0 +1,282 @@
+//! The shared edge server as a contended resource: a FIFO compute
+//! queue with `capacity` concurrent slots and optional job batching
+//! (DESIGN.md §11).
+//!
+//! Each job runs at the frequency its Stage-1 decision chose, so the
+//! instantaneous server power is the Eq.-11 cubic law summed over the
+//! jobs in service, `P(t) = Σ_j ξ·f_j³`, and the integrated energy is
+//! exactly the sum of the per-job analytic energies — concurrency
+//! changes *when* energy is spent (and the peak power), never the
+//! per-round totals, which is what keeps the `sync` policy
+//! bit-compatible with the barrier engine.
+//!
+//! Batching fuses up to `batch` queued jobs into one slot dispatch;
+//! the fused service time is the max over the batch (the slowest
+//! kernel gates the fused execution).
+
+use std::collections::VecDeque;
+
+use crate::util::stats::Accum;
+
+use super::event::SimTime;
+
+/// One server-side FP/BP work item (a device-round's Stage-3/4 share).
+/// Energy is not tracked here: the engine books each job's analytic
+/// Eq.-11 energy at dispatch, which is exact per the module docs.
+#[derive(Clone, Debug)]
+pub struct Job {
+    pub device: usize,
+    pub round: usize,
+    /// server compute time for the whole round (T epochs) [s]
+    pub service_s: f64,
+    pub enqueued_at: SimTime,
+}
+
+/// A fused dispatch: `jobs` run together on one slot for `service_s`.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub jobs: Vec<Job>,
+    pub service_s: f64,
+}
+
+/// Aggregate queue/occupancy statistics for one DES run.
+#[derive(Clone, Copy, Debug)]
+pub struct ServerStats {
+    pub served_jobs: u64,
+    pub abandoned_jobs: u64,
+    /// total slot-seconds spent serving
+    pub busy_slot_s: f64,
+    /// mean time jobs spent waiting in the queue [s]
+    pub mean_wait_s: f64,
+    pub peak_depth: usize,
+    /// time-averaged queue depth
+    pub mean_depth: f64,
+    /// busy_slot_s / (capacity × makespan), in [0, 1]
+    pub utilization: f64,
+}
+
+pub struct ServerQueue {
+    capacity: usize,
+    batch: usize,
+    busy_slots: usize,
+    waiting: VecDeque<Job>,
+    // stats
+    busy_slot_s: f64,
+    wait: Accum,
+    served: u64,
+    abandoned: u64,
+    peak_depth: usize,
+    depth_area: f64,
+    depth_since_s: f64,
+}
+
+impl ServerQueue {
+    /// `capacity` = concurrent jobs the server can run; `batch` = max
+    /// jobs fused per slot dispatch.  Both are clamped to >= 1.
+    pub fn new(capacity: usize, batch: usize) -> ServerQueue {
+        ServerQueue {
+            capacity: capacity.max(1),
+            batch: batch.max(1),
+            busy_slots: 0,
+            waiting: VecDeque::new(),
+            busy_slot_s: 0.0,
+            wait: Accum::new(),
+            served: 0,
+            abandoned: 0,
+            peak_depth: 0,
+            depth_area: 0.0,
+            depth_since_s: 0.0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn note_depth(&mut self, now: SimTime) {
+        let t = now.secs();
+        self.depth_area += self.waiting.len() as f64 * (t - self.depth_since_s);
+        self.depth_since_s = t;
+    }
+
+    /// Add a job to the queue and dispatch as far as capacity allows.
+    /// `alive(device, round)` filters out cells cancelled (churn,
+    /// straggler dropout) while the job sat in the queue.
+    pub fn enqueue(
+        &mut self,
+        job: Job,
+        now: SimTime,
+        alive: impl Fn(usize, usize) -> bool,
+    ) -> Vec<Batch> {
+        self.note_depth(now);
+        self.waiting.push_back(job);
+        self.peak_depth = self.peak_depth.max(self.waiting.len());
+        self.dispatch(now, alive)
+    }
+
+    /// A slot finished its batch: free it and refill from the queue.
+    pub fn on_batch_done(
+        &mut self,
+        now: SimTime,
+        alive: impl Fn(usize, usize) -> bool,
+    ) -> Vec<Batch> {
+        assert!(self.busy_slots > 0, "batch completion with no busy slot");
+        self.busy_slots -= 1;
+        self.dispatch(now, alive)
+    }
+
+    fn dispatch(&mut self, now: SimTime, alive: impl Fn(usize, usize) -> bool) -> Vec<Batch> {
+        self.note_depth(now);
+        let mut out = Vec::new();
+        while self.busy_slots < self.capacity {
+            let mut jobs: Vec<Job> = Vec::new();
+            while jobs.len() < self.batch {
+                match self.waiting.pop_front() {
+                    Some(j) if alive(j.device, j.round) => jobs.push(j),
+                    Some(_) => self.abandoned += 1,
+                    None => break,
+                }
+            }
+            if jobs.is_empty() {
+                break;
+            }
+            let service_s = jobs.iter().fold(0.0f64, |m, j| m.max(j.service_s));
+            for j in &jobs {
+                self.wait.push(now.secs() - j.enqueued_at.secs());
+            }
+            self.served += jobs.len() as u64;
+            self.busy_slots += 1;
+            self.busy_slot_s += service_s;
+            out.push(Batch { jobs, service_s });
+        }
+        self.note_depth(now);
+        out
+    }
+
+    /// Purge cancelled jobs still sitting in the queue — no slot will
+    /// ever pop them once the simulation has ended, so leaving them in
+    /// would overstate `mean_depth` and undercount `abandoned_jobs`.
+    pub fn flush_cancelled(&mut self, now: SimTime, alive: impl Fn(usize, usize) -> bool) {
+        self.note_depth(now);
+        let before = self.waiting.len();
+        self.waiting.retain(|j| alive(j.device, j.round));
+        self.abandoned += (before - self.waiting.len()) as u64;
+    }
+
+    /// Snapshot the run statistics given the realized makespan.
+    pub fn stats(&self, makespan_s: f64) -> ServerStats {
+        let span = makespan_s.max(f64::MIN_POSITIVE);
+        let tail = self.waiting.len() as f64 * (makespan_s - self.depth_since_s).max(0.0);
+        ServerStats {
+            served_jobs: self.served,
+            abandoned_jobs: self.abandoned,
+            busy_slot_s: self.busy_slot_s,
+            mean_wait_s: if self.wait.count() == 0 { 0.0 } else { self.wait.mean() },
+            peak_depth: self.peak_depth,
+            mean_depth: (self.depth_area + tail) / span,
+            // clamp: a straggler batch still in service when the
+            // simulation terminates can push the raw ratio a hair
+            // past 1 (its full service was booked at dispatch)
+            utilization: (self.busy_slot_s / (self.capacity as f64 * span)).min(1.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(device: usize, service_s: f64, at: f64) -> Job {
+        Job {
+            device,
+            round: 0,
+            service_s,
+            enqueued_at: SimTime::new(at),
+        }
+    }
+
+    const ALIVE: fn(usize, usize) -> bool = |_, _| true;
+
+    #[test]
+    fn capacity_limits_concurrency() {
+        let mut q = ServerQueue::new(2, 1);
+        let t0 = SimTime::ZERO;
+        let b1 = q.enqueue(job(0, 1.0, 0.0), t0, ALIVE);
+        let b2 = q.enqueue(job(1, 1.0, 0.0), t0, ALIVE);
+        let b3 = q.enqueue(job(2, 1.0, 0.0), t0, ALIVE);
+        assert_eq!(b1.len() + b2.len(), 2, "two slots dispatch immediately");
+        assert!(b3.is_empty(), "third job must wait");
+        // a completion frees the slot for the queued job
+        let refill = q.on_batch_done(SimTime::new(1.0), ALIVE);
+        assert_eq!(refill.len(), 1);
+        assert_eq!(refill[0].jobs[0].device, 2);
+        let s = q.stats(2.0);
+        assert_eq!(s.served_jobs, 3);
+        assert_eq!(s.peak_depth, 1);
+    }
+
+    #[test]
+    fn batching_fuses_jobs_and_takes_max_service() {
+        let mut q = ServerQueue::new(1, 4);
+        let t0 = SimTime::ZERO;
+        // first job grabs the only slot solo
+        let b = q.enqueue(job(0, 1.0, 0.0), t0, ALIVE);
+        assert_eq!(b[0].jobs.len(), 1);
+        // three more queue up behind it
+        for d in 1..4 {
+            assert!(q.enqueue(job(d, d as f64, 0.0), t0, ALIVE).is_empty());
+        }
+        let refill = q.on_batch_done(SimTime::new(1.0), ALIVE);
+        assert_eq!(refill.len(), 1);
+        assert_eq!(refill[0].jobs.len(), 3, "queued jobs fuse into one batch");
+        assert_eq!(refill[0].service_s, 3.0, "slowest job gates the batch");
+    }
+
+    #[test]
+    fn cancelled_jobs_are_skipped_at_dispatch() {
+        let mut q = ServerQueue::new(1, 1);
+        let t0 = SimTime::ZERO;
+        q.enqueue(job(0, 1.0, 0.0), t0, ALIVE);
+        q.enqueue(job(1, 1.0, 0.0), t0, ALIVE);
+        q.enqueue(job(2, 1.0, 0.0), t0, ALIVE);
+        // device 1 departs while queued
+        let refill = q.on_batch_done(SimTime::new(1.0), |d, _| d != 1);
+        assert_eq!(refill[0].jobs[0].device, 2);
+        assert_eq!(q.stats(2.0).abandoned_jobs, 1);
+    }
+
+    #[test]
+    fn utilization_and_wait_accounting() {
+        let mut q = ServerQueue::new(1, 1);
+        q.enqueue(job(0, 2.0, 0.0), SimTime::ZERO, ALIVE);
+        q.enqueue(job(1, 2.0, 0.0), SimTime::ZERO, ALIVE);
+        q.on_batch_done(SimTime::new(2.0), ALIVE);
+        q.on_batch_done(SimTime::new(4.0), ALIVE);
+        let s = q.stats(4.0);
+        assert!((s.utilization - 1.0).abs() < 1e-12, "{}", s.utilization);
+        assert!((s.mean_wait_s - 1.0).abs() < 1e-12, "{}", s.mean_wait_s);
+        assert!(s.mean_depth > 0.0 && s.mean_depth < 1.0);
+    }
+
+    #[test]
+    fn flush_purges_dead_waiters_from_depth_stats() {
+        let mut q = ServerQueue::new(1, 1);
+        q.enqueue(job(0, 1.0, 0.0), SimTime::ZERO, ALIVE);
+        q.enqueue(job(1, 1.0, 0.0), SimTime::ZERO, ALIVE);
+        q.enqueue(job(2, 1.0, 0.0), SimTime::ZERO, ALIVE);
+        // devices 1 and 2 cancelled; the run ends at t = 1
+        q.flush_cancelled(SimTime::new(1.0), |d, _| d == 0);
+        let s = q.stats(1.0);
+        assert_eq!(s.abandoned_jobs, 2);
+        // no phantom waiters charged past the flush point
+        assert!((s.mean_depth - 2.0).abs() < 1e-12, "{}", s.mean_depth);
+    }
+
+    #[test]
+    fn degenerate_capacity_clamped() {
+        let mut q = ServerQueue::new(0, 0);
+        assert_eq!(q.capacity(), 1);
+        let b = q.enqueue(job(0, 1.0, 0.0), SimTime::ZERO, ALIVE);
+        assert_eq!(b.len(), 1);
+    }
+}

@@ -1,0 +1,372 @@
+//! `des-sweep`: policy × scenario × device-count grid on the
+//! discrete-event fleet engine, emitting per-point makespan percentiles,
+//! server utilization/queue depth, and energy into `BENCH_des.json`
+//! for CI perf-trajectory tracking (EXPERIMENTS.md).
+//!
+//! Grid points are independent DES runs (each strictly serial and
+//! deterministic), so the sweep fans them out on the worker pool —
+//! thread count changes wall-clock only, never a reported metric.
+
+use crate::config::scenario::Scenario;
+use crate::coordinator::{Scheduler, Strategy};
+use crate::sim::metrics::Percentiles;
+use crate::util::benchkit::Bencher;
+use crate::util::json::{self, Json};
+use crate::util::pool;
+use crate::util::table::{fmt_joules, fmt_secs, Table};
+
+use super::engine::{DesConfig, DesEngine, Policy};
+
+/// One (scenario, policy, fleet size) DES measurement.
+#[derive(Clone, Debug)]
+pub struct DesPoint {
+    pub scenario: String,
+    pub policy: String,
+    pub n_devices: usize,
+    pub rounds: usize,
+    pub capacity: usize,
+    pub batch: usize,
+    pub wall_s: f64,
+    pub makespan_s: f64,
+    /// completed device-round merges
+    pub completed: usize,
+    pub dropped: u64,
+    pub departures: u64,
+    pub arrivals: u64,
+    /// observed per-cell latency percentiles (0 when nothing completed)
+    pub round_latency: Percentiles,
+    pub mean_wait_s: f64,
+    pub server_utilization: f64,
+    pub peak_queue_depth: usize,
+    pub mean_queue_depth: f64,
+    /// Eq.-11 server energy booked at dispatch — includes work wasted
+    /// on dropped stragglers, so policy comparisons see the real bill
+    pub energy_j: f64,
+    /// energy of merged rounds only (excludes wasted work)
+    pub energy_merged_j: f64,
+    pub peak_staleness: usize,
+}
+
+/// Full DES sweep result.
+#[derive(Clone, Debug)]
+pub struct DesSweep {
+    pub points: Vec<DesPoint>,
+    pub threads: usize,
+    pub seed: u64,
+}
+
+/// Run the grid.  `rounds` overrides each preset's round count;
+/// `capacity`/`batch` parameterize the server queue for every point.
+#[allow(clippy::too_many_arguments)]
+pub fn sweep(
+    scenarios: &[Scenario],
+    counts: &[usize],
+    policies: &[Policy],
+    rounds: Option<usize>,
+    capacity: usize,
+    batch: usize,
+    threads: usize,
+    seed: u64,
+    bench: &mut Bencher,
+) -> anyhow::Result<DesSweep> {
+    anyhow::ensure!(!scenarios.is_empty(), "no scenarios selected");
+    anyhow::ensure!(!counts.is_empty(), "no device counts selected");
+    anyhow::ensure!(!policies.is_empty(), "no policies selected");
+    anyhow::ensure!(capacity >= 1, "server capacity must be >= 1");
+    anyhow::ensure!(batch >= 1, "server batch must be >= 1");
+    for &n in counts {
+        anyhow::ensure!(n > 0, "device count must be >= 1");
+    }
+    for p in policies {
+        if let Policy::SemiSync { deadline_factor } = *p {
+            anyhow::ensure!(
+                deadline_factor > 0.0 && deadline_factor.is_finite(),
+                "semi-sync deadline factor must be finite and > 0"
+            );
+        }
+    }
+
+    let mut grid: Vec<(Scenario, usize, Policy)> = Vec::new();
+    for sc in scenarios {
+        for &n in counts {
+            for &p in policies {
+                grid.push((*sc, n, p));
+            }
+        }
+    }
+
+    let results: Vec<anyhow::Result<DesPoint>> =
+        pool::par_map_indexed(threads, &grid, |_, &(sc, n, policy)| {
+            run_point(sc, n, policy, rounds, capacity, batch, seed)
+        });
+    let mut points = Vec::with_capacity(results.len());
+    for r in results {
+        points.push(r?);
+    }
+    for p in &points {
+        let rate = p.completed as f64 / p.wall_s.max(1e-9);
+        bench.record_once(
+            &format!("{}_{}_n{}", p.scenario, p.policy, p.n_devices),
+            p.wall_s,
+            Some((rate, "device-round")),
+        );
+    }
+    Ok(DesSweep {
+        points,
+        threads,
+        seed,
+    })
+}
+
+fn run_point(
+    sc: Scenario,
+    n: usize,
+    policy: Policy,
+    rounds: Option<usize>,
+    capacity: usize,
+    batch: usize,
+    seed: u64,
+) -> anyhow::Result<DesPoint> {
+    let mut cfg = sc.config(n, seed)?;
+    if let Some(r) = rounds {
+        cfg.workload.rounds = r;
+    }
+    let n_rounds = cfg.workload.rounds;
+    let sched = Scheduler::new(cfg, sc.state, Strategy::Card);
+    let des = DesConfig {
+        policy,
+        capacity,
+        batch,
+    };
+    let t0 = std::time::Instant::now();
+    let out = DesEngine::new(&sched, des).run();
+    let wall = t0.elapsed().as_secs_f64();
+
+    let latencies: Vec<f64> = out.records.iter().map(|r| r.latency_s()).collect();
+    let round_latency = if latencies.is_empty() {
+        Percentiles::default()
+    } else {
+        Percentiles::of(&latencies)
+    };
+    Ok(DesPoint {
+        scenario: sc.name.to_string(),
+        policy: policy.name().to_string(),
+        n_devices: n,
+        rounds: n_rounds,
+        capacity,
+        batch,
+        wall_s: wall,
+        makespan_s: out.makespan_s,
+        completed: out.records.len(),
+        dropped: out.dropped,
+        departures: out.departures,
+        arrivals: out.arrivals,
+        round_latency,
+        mean_wait_s: out.server.mean_wait_s,
+        server_utilization: out.server.utilization,
+        peak_queue_depth: out.server.peak_depth,
+        mean_queue_depth: out.server.mean_depth,
+        energy_j: out.energy_spent_j,
+        energy_merged_j: out.records.iter().map(|r| r.record.energy_j).sum(),
+        peak_staleness: out.peak_staleness,
+    })
+}
+
+impl DesSweep {
+    /// ASCII summary table (scenario × fleet size × policy).
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            &format!(
+                "des-sweep — discrete-event fleet engine ({} workers, seed {})",
+                self.threads, self.seed
+            ),
+            &[
+                "scenario",
+                "policy",
+                "devices",
+                "merged",
+                "dropped",
+                "makespan",
+                "p50 rtt",
+                "p95 rtt",
+                "p99 rtt",
+                "util",
+                "peak q",
+                "energy",
+            ],
+        );
+        for p in &self.points {
+            t.row(vec![
+                p.scenario.clone(),
+                p.policy.clone(),
+                p.n_devices.to_string(),
+                p.completed.to_string(),
+                p.dropped.to_string(),
+                fmt_secs(p.makespan_s),
+                fmt_secs(p.round_latency.p50),
+                fmt_secs(p.round_latency.p95),
+                fmt_secs(p.round_latency.p99),
+                format!("{:.0}%", 100.0 * p.server_utilization),
+                p.peak_queue_depth.to_string(),
+                fmt_joules(p.energy_j),
+            ]);
+        }
+        t.render()
+    }
+
+    /// Machine-readable dump (the `BENCH_des.json` payload).
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("schema", Json::Str("edgesplit/des-sweep/v1".into())),
+            // string, not number: u64 seeds above 2^53 would lose
+            // precision through the f64-backed Json::Num
+            ("seed", Json::Str(self.seed.to_string())),
+            ("threads", Json::Num(self.threads as f64)),
+            (
+                "points",
+                Json::Arr(self.points.iter().map(point_json).collect()),
+            ),
+        ])
+    }
+}
+
+fn point_json(p: &DesPoint) -> Json {
+    json::obj(vec![
+        ("scenario", Json::Str(p.scenario.clone())),
+        ("policy", Json::Str(p.policy.clone())),
+        ("n_devices", Json::Num(p.n_devices as f64)),
+        ("rounds", Json::Num(p.rounds as f64)),
+        ("capacity", Json::Num(p.capacity as f64)),
+        ("batch", Json::Num(p.batch as f64)),
+        ("wall_s", Json::Num(p.wall_s)),
+        ("makespan_s", Json::Num(p.makespan_s)),
+        ("completed", Json::Num(p.completed as f64)),
+        ("dropped", Json::Num(p.dropped as f64)),
+        ("departures", Json::Num(p.departures as f64)),
+        ("arrivals", Json::Num(p.arrivals as f64)),
+        ("p50_round_s", Json::Num(p.round_latency.p50)),
+        ("p95_round_s", Json::Num(p.round_latency.p95)),
+        ("p99_round_s", Json::Num(p.round_latency.p99)),
+        ("mean_wait_s", Json::Num(p.mean_wait_s)),
+        ("server_utilization", Json::Num(p.server_utilization)),
+        ("peak_queue_depth", Json::Num(p.peak_queue_depth as f64)),
+        ("mean_queue_depth", Json::Num(p.mean_queue_depth)),
+        ("energy_j", Json::Num(p.energy_j)),
+        ("energy_merged_j", Json::Num(p.energy_merged_j)),
+        ("peak_staleness", Json::Num(p.peak_staleness as f64)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::scenario;
+
+    const ALL_POLICIES: [Policy; 3] = [
+        Policy::Sync,
+        Policy::SemiSync {
+            deadline_factor: 1.5,
+        },
+        Policy::Async,
+    ];
+
+    #[test]
+    fn small_grid_produces_points_and_json() {
+        let mut bench = Bencher::new("des-sweep-test");
+        let sweep = sweep(
+            &[scenario::DENSE_URBAN],
+            &[6],
+            &ALL_POLICIES,
+            Some(2),
+            2,
+            1,
+            4,
+            7,
+            &mut bench,
+        )
+        .unwrap();
+        assert_eq!(sweep.points.len(), 3);
+        assert_eq!(bench.results().len(), 3);
+        for p in &sweep.points {
+            assert!(p.makespan_s > 0.0 && p.makespan_s.is_finite(), "{}", p.policy);
+            assert!(p.server_utilization > 0.0 && p.server_utilization <= 1.0 + 1e-9);
+            assert!(p.completed > 0, "{}", p.policy);
+        }
+        let js = sweep.to_json().to_string();
+        assert!(js.contains("des-sweep/v1"));
+        assert!(js.contains("\"policy\":\"async\""));
+        assert!(js.contains("server_utilization"));
+        assert!(Json::parse(&js).is_ok());
+    }
+
+    #[test]
+    fn sweep_is_deterministic_across_thread_counts() {
+        let run = |threads: usize| {
+            let mut bench = Bencher::new("det");
+            sweep(
+                &[scenario::HETEROGENEOUS_FLEET],
+                &[8],
+                &ALL_POLICIES,
+                Some(2),
+                2,
+                1,
+                threads,
+                11,
+                &mut bench,
+            )
+            .unwrap()
+        };
+        let a = run(1);
+        let b = run(8);
+        assert_eq!(a.points.len(), b.points.len());
+        for (x, y) in a.points.iter().zip(&b.points) {
+            assert_eq!(x.policy, y.policy);
+            assert_eq!(x.makespan_s.to_bits(), y.makespan_s.to_bits(), "{}", x.policy);
+            assert_eq!(x.completed, y.completed);
+            assert_eq!(x.dropped, y.dropped);
+            assert_eq!(
+                x.server_utilization.to_bits(),
+                y.server_utilization.to_bits(),
+                "{}",
+                x.policy
+            );
+            assert_eq!(x.energy_j.to_bits(), y.energy_j.to_bits());
+        }
+    }
+
+    #[test]
+    fn rejects_degenerate_input() {
+        let mut bench = Bencher::new("bad");
+        let sc = [scenario::DENSE_URBAN];
+        assert!(sweep(&[], &[4], &ALL_POLICIES, None, 1, 1, 1, 0, &mut bench).is_err());
+        assert!(sweep(&sc, &[], &ALL_POLICIES, None, 1, 1, 1, 0, &mut bench).is_err());
+        assert!(sweep(&sc, &[4], &[], None, 1, 1, 1, 0, &mut bench).is_err());
+        assert!(sweep(&sc, &[0], &ALL_POLICIES, None, 1, 1, 1, 0, &mut bench).is_err());
+        assert!(sweep(&sc, &[4], &ALL_POLICIES, None, 0, 1, 1, 0, &mut bench).is_err());
+        let bad_deadline = [Policy::SemiSync {
+            deadline_factor: 0.0,
+        }];
+        assert!(sweep(&sc, &[4], &bad_deadline, None, 1, 1, 1, 0, &mut bench).is_err());
+    }
+
+    #[test]
+    fn render_lists_every_point() {
+        let mut bench = Bencher::new("render");
+        let sweep = sweep(
+            &[scenario::SPARSE_RURAL],
+            &[4],
+            &[Policy::Sync, Policy::Async],
+            Some(1),
+            2,
+            1,
+            2,
+            1,
+            &mut bench,
+        )
+        .unwrap();
+        let out = sweep.render();
+        assert!(out.contains("sparse-rural"));
+        assert!(out.contains("async"));
+        assert!(out.contains("p95 rtt"));
+    }
+}

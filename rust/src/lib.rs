@@ -7,11 +7,12 @@
 //!
 //! * **L3 (this crate)** — the split-learning coordinator: the CARD
 //!   cut-layer/frequency algorithm, the parallel fleet-scale round
-//!   engine (Stages 1–5, bit-deterministic at any thread count),
-//!   wireless-channel and device-fleet simulators, the TOML-driven
-//!   scenario registry, cost models (Eqs. 7–12, 16), and a PJRT runtime
-//!   that executes the real split LoRA transformer from AOT-compiled
-//!   HLO artifacts.
+//!   engine (Stages 1–5, bit-deterministic at any thread count), the
+//!   discrete-event fleet engine (`des`: server queueing, device
+//!   churn, sync/semi-sync/async aggregation), wireless-channel and
+//!   device-fleet simulators, the TOML-driven scenario registry, cost
+//!   models (Eqs. 7–12, 16), and a PJRT runtime that executes the real
+//!   split LoRA transformer from AOT-compiled HLO artifacts.
 //! * **L2 (python/compile)** — JAX split-segment model, lowered once to
 //!   HLO text (`make artifacts`); never on the request path.
 //! * **L1 (python/compile/kernels)** — fused LoRA-linear + RMSNorm
@@ -25,6 +26,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod des;
 pub mod devices;
 pub mod model;
 pub mod net;

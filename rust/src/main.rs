@@ -6,6 +6,7 @@
 //! edgesplit fig4                 # Fig. 4: CARD vs baselines × channels
 //! edgesplit ablate --sweep w     # A1/A2 sweeps
 //! edgesplit fleet-sweep          # scenario × device-count grid (parallel)
+//! edgesplit des-sweep            # discrete-event engine: policy × scenario grid
 //! edgesplit decide --state poor  # one-shot CARD decision per device
 //! edgesplit train --arch tiny    # REAL split fine-tuning (PJRT)
 //! edgesplit show devices|params  # Table I / Table II
@@ -18,6 +19,7 @@ use edgesplit::config::scenario::{self, Scenario};
 use edgesplit::config::{ChannelState, ExpConfig};
 use edgesplit::coordinator::{Scheduler, Strategy};
 use edgesplit::data::{Batcher, Corpus};
+use edgesplit::des::{self, Policy};
 use edgesplit::net::Channel;
 use edgesplit::runtime::{artifact_dir, ArtifactStore, SplitExecutor};
 use edgesplit::sim::{ablate, fig3, fig4, fleet};
@@ -36,10 +38,15 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec { name: "state", value: Some("good|normal|poor"), help: "channel state", default: Some("normal") },
         FlagSpec { name: "strategy", value: Some("card|server-only|device-only|static:C|random"), help: "decision strategy", default: Some("card") },
         FlagSpec { name: "sweep", value: Some("w|phi|bandwidth"), help: "ablation sweep to run", default: Some("w") },
-        FlagSpec { name: "scenario", value: Some("name|all"), help: "fleet-sweep scenario preset (see `show scenarios`)", default: Some("all") },
-        FlagSpec { name: "counts", value: Some("N,N,..."), help: "fleet-sweep device counts", default: Some("10,100,1000,10000") },
+        FlagSpec { name: "scenario", value: Some("name|all"), help: "sweep scenario preset (see `show scenarios`)", default: Some("all") },
+        FlagSpec { name: "counts", value: Some("N,N,..."), help: "sweep device counts", default: Some("10,100,1000,10000") },
         FlagSpec { name: "threads", value: Some("N"), help: "worker threads for parallel rounds (default: all cores)", default: None },
-        FlagSpec { name: "out", value: Some("file.json"), help: "fleet-sweep JSON output path", default: Some("BENCH_fleet.json") },
+        FlagSpec { name: "out", value: Some("file.json"), help: "sweep JSON output path (default: BENCH_fleet.json / BENCH_des.json)", default: None },
+        FlagSpec { name: "gate-all", value: None, help: "fleet-sweep: run the serial determinism gate at every grid point (default: largest only)", default: None },
+        FlagSpec { name: "policy", value: Some("sync|semi-sync|async|all"), help: "des-sweep aggregation policy", default: Some("all") },
+        FlagSpec { name: "capacity", value: Some("N"), help: "des-sweep server queue slots", default: Some("4") },
+        FlagSpec { name: "batch", value: Some("N"), help: "des-sweep max jobs fused per server dispatch", default: Some("1") },
+        FlagSpec { name: "deadline-factor", value: Some("f"), help: "des-sweep semi-sync straggler deadline factor", default: Some("1.5") },
         FlagSpec { name: "arch", value: Some("tiny|small"), help: "artifact config for real training", default: Some("tiny") },
         FlagSpec { name: "steps", value: Some("N"), help: "real-training steps (train)", default: Some("30") },
         FlagSpec { name: "lr", value: Some("f"), help: "LoRA learning rate (train)", default: Some("0.5") },
@@ -48,11 +55,12 @@ fn flag_specs() -> Vec<FlagSpec> {
     ]
 }
 
-const SUBCOMMANDS: [(&str, &str); 8] = [
+const SUBCOMMANDS: [(&str, &str); 9] = [
     ("fig3", "reproduce Fig. 3: cut layer + frequency decisions over rounds"),
     ("fig4", "reproduce Fig. 4: delay/energy vs baselines across channel states"),
     ("ablate", "A1/A2 sweeps: w, phi, bandwidth"),
     ("fleet-sweep", "scenario × device-count grid on the parallel round engine"),
+    ("des-sweep", "discrete-event engine: policy × scenario × device-count grid"),
     ("decide", "one-shot CARD decision for each device"),
     ("train", "REAL split fine-tuning over PJRT artifacts"),
     ("show", "print Table I (devices) / Table II (params) / arch / scenarios"),
@@ -120,8 +128,10 @@ fn run(argv: &[String]) -> Result<()> {
             args.str_of("scenario").unwrap_or("all"),
             args.str_of("counts").unwrap_or("10,100,1000,10000"),
             args.usize_of("threads")?,
+            args.bool_of("gate-all"),
             args.str_of("out").unwrap_or("BENCH_fleet.json"),
         ),
+        "des-sweep" => cmd_des_sweep(&args, cfg.seed, rounds_flag),
         "decide" => cmd_decide(&cfg, state),
         "train" => cmd_train(
             &cfg,
@@ -171,40 +181,103 @@ fn cmd_ablate(cfg: &ExpConfig, sweep: &str) -> Result<()> {
     Ok(())
 }
 
-fn cmd_fleet_sweep(
-    seed: u64,
-    rounds: Option<usize>,
-    scenario_sel: &str,
-    counts_s: &str,
-    threads: Option<usize>,
-    out: &str,
-) -> Result<()> {
-    let scenarios: Vec<Scenario> = if scenario_sel.eq_ignore_ascii_case("all") {
-        scenario::ALL.to_vec()
+fn parse_scenarios(scenario_sel: &str) -> Result<Vec<Scenario>> {
+    if scenario_sel.eq_ignore_ascii_case("all") {
+        Ok(scenario::ALL.to_vec())
     } else {
-        vec![Scenario::by_name(scenario_sel).ok_or_else(|| {
+        Ok(vec![Scenario::by_name(scenario_sel).ok_or_else(|| {
             anyhow!(
                 "unknown scenario '{scenario_sel}' (have: {}, all)",
                 scenario::ALL.map(|s| s.name).join(", ")
             )
-        })?]
-    };
-    let counts: Vec<usize> = counts_s
+        })?])
+    }
+}
+
+fn parse_counts(counts_s: &str) -> Result<Vec<usize>> {
+    counts_s
         .split(',')
         .map(|s| {
             s.trim()
                 .parse::<usize>()
                 .map_err(|_| anyhow!("bad device count '{}' in --counts", s.trim()))
         })
-        .collect::<Result<_>>()?;
+        .collect()
+}
+
+fn cmd_fleet_sweep(
+    seed: u64,
+    rounds: Option<usize>,
+    scenario_sel: &str,
+    counts_s: &str,
+    threads: Option<usize>,
+    gate_all: bool,
+    out: &str,
+) -> Result<()> {
+    let scenarios = parse_scenarios(scenario_sel)?;
+    let counts = parse_counts(counts_s)?;
     let threads = threads.unwrap_or_else(pool::default_parallelism);
 
     let mut bench = Bencher::new("fleet-sweep");
-    let sweep = fleet::sweep(&scenarios, &counts, rounds, threads, seed, &mut bench)?;
+    let sweep = fleet::sweep(&scenarios, &counts, rounds, threads, seed, gate_all, &mut bench)?;
+    println!("{}\n", sweep.render());
+    if gate_all {
+        println!("determinism gate: parallel == serial (bit-identical) at every grid point\n");
+    } else {
+        println!(
+            "determinism gate: parallel == serial (bit-identical) at n = {} for every scenario \
+             (--gate-all checks every point)\n",
+            counts.iter().max().unwrap()
+        );
+    }
+    bench.report();
+
+    std::fs::write(out, sweep.to_json().to_string() + "\n")
+        .map_err(|e| anyhow!("writing {out}: {e}"))?;
+    println!("\nwrote {out} ({} sweep points)", sweep.points.len());
+    Ok(())
+}
+
+fn cmd_des_sweep(args: &Args, seed: u64, rounds: Option<usize>) -> Result<()> {
+    let scenarios = parse_scenarios(args.str_of("scenario").unwrap_or("all"))?;
+    let counts = parse_counts(args.str_of("counts").unwrap_or("10,100,1000,10000"))?;
+    let threads = args
+        .usize_of("threads")?
+        .unwrap_or_else(pool::default_parallelism);
+    let capacity = args.usize_of("capacity")?.unwrap_or(4);
+    let batch = args.usize_of("batch")?.unwrap_or(1);
+    let deadline_factor = args.f64_of("deadline-factor")?.unwrap_or(1.5);
+    let policy_sel = args.str_of("policy").unwrap_or("all");
+    let policies: Vec<Policy> = if policy_sel.eq_ignore_ascii_case("all") {
+        vec![
+            Policy::Sync,
+            Policy::SemiSync { deadline_factor },
+            Policy::Async,
+        ]
+    } else {
+        vec![Policy::parse(policy_sel, deadline_factor).ok_or_else(|| {
+            anyhow!("unknown policy '{policy_sel}' (sync|semi-sync|async|all)")
+        })?]
+    };
+    let out = args.str_of("out").unwrap_or("BENCH_des.json");
+
+    let mut bench = Bencher::new("des-sweep");
+    let sweep = des::sweep(
+        &scenarios,
+        &counts,
+        &policies,
+        rounds,
+        capacity,
+        batch,
+        threads,
+        seed,
+        &mut bench,
+    )?;
     println!("{}\n", sweep.render());
     println!(
-        "determinism gate: parallel == serial (bit-identical) at n = {} for every scenario\n",
-        counts.iter().min().unwrap()
+        "server queue: {capacity} slot(s), batch {batch}; every point is a deterministic \
+         single-threaded DES run ({} fanned out across {threads} workers)\n",
+        sweep.points.len()
     );
     bench.report();
 

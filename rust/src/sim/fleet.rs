@@ -4,10 +4,15 @@
 //! `BENCH_fleet.json` for CI perf-trajectory tracking.
 //!
 //! Every sweep point runs CARD over an `n`-device synthetic fleet for
-//! the scenario's configured rounds with K worker threads.  For the
-//! smallest fleet of each scenario the engine re-runs the serial
-//! reference path and requires **bit-identical** records — the
-//! determinism gate that keeps the parallel engine honest.
+//! the scenario's configured rounds with K worker threads.  The
+//! serial-vs-parallel determinism gate re-runs the serial reference
+//! path and requires **bit-identical** records; by default it runs at
+//! exactly one grid point per scenario — the *largest*, where the
+//! parallel engine schedules the most concurrent cells and a
+//! divergence would be most consequential — so the serial baseline is
+//! recomputed once per scenario rather than per point.  `gate_all`
+//! opts back into gating every point (exhaustive, and proportionally
+//! slower: each gated point pays a full single-threaded re-run).
 
 use crate::config::scenario::Scenario;
 use crate::coordinator::{RoundRecord, Scheduler, Strategy};
@@ -27,6 +32,9 @@ pub struct FleetPoint {
     pub wall_s: f64,
     pub device_rounds_per_s: f64,
     pub mean_delay_s: f64,
+    pub p50_delay_s: f64,
+    pub p95_delay_s: f64,
+    pub p99_delay_s: f64,
     pub mean_energy_j: f64,
     pub mean_cut: f64,
 }
@@ -42,17 +50,20 @@ pub struct FleetSweep {
 /// Run the scenario × device-count grid.  `rounds` overrides the preset
 /// round count when given; timings land in `bench` (one entry per
 /// point) so the caller can render the standard benchkit report.
+/// `gate_all` runs the serial-vs-parallel determinism gate at every
+/// grid point instead of only the largest one.
 pub fn sweep(
     scenarios: &[Scenario],
     counts: &[usize],
     rounds: Option<usize>,
     threads: usize,
     seed: u64,
+    gate_all: bool,
     bench: &mut Bencher,
 ) -> anyhow::Result<FleetSweep> {
     anyhow::ensure!(!scenarios.is_empty(), "no scenarios selected");
     anyhow::ensure!(!counts.is_empty(), "no device counts selected");
-    let gate_n = *counts.iter().min().unwrap();
+    let gate_n = *counts.iter().max().unwrap();
     let mut points = Vec::with_capacity(scenarios.len() * counts.len());
     for sc in scenarios {
         for &n in counts {
@@ -68,15 +79,16 @@ pub fn sweep(
             let records = sched.run_parallel(threads);
             let wall = t0.elapsed().as_secs_f64();
 
-            // determinism gate on the smallest fleet of each scenario:
-            // the parallel engine must reproduce the serial reference
-            // bit for bit before any larger point is trusted
-            if n == gate_n {
+            // determinism gate: the parallel engine must reproduce the
+            // serial reference bit for bit — at the largest fleet of
+            // each scenario by default, everywhere with `gate_all`
+            if gate_all || n == gate_n {
                 let serial = sched.run_analytic()?;
                 verify_bit_identical(&serial, &records)?;
             }
 
             let s = Summary::from_records(&records);
+            let pct = s.delay_percentiles();
             let device_rounds = (n * n_rounds) as f64;
             let rate = device_rounds / wall.max(1e-9);
             bench.record_once(
@@ -92,6 +104,9 @@ pub fn sweep(
                 wall_s: wall,
                 device_rounds_per_s: rate,
                 mean_delay_s: s.delay.mean(),
+                p50_delay_s: pct.p50,
+                p95_delay_s: pct.p95,
+                p99_delay_s: pct.p99,
                 mean_energy_j: s.energy.mean(),
                 mean_cut: s.mean_cut(),
             });
@@ -151,6 +166,9 @@ impl FleetSweep {
                 "wall",
                 "device-rounds/s",
                 "mean delay",
+                "p50 delay",
+                "p95 delay",
+                "p99 delay",
                 "mean energy",
                 "mean cut",
             ],
@@ -163,6 +181,9 @@ impl FleetSweep {
                 fmt_secs(p.wall_s),
                 format!("{:.0}", p.device_rounds_per_s),
                 fmt_secs(p.mean_delay_s),
+                fmt_secs(p.p50_delay_s),
+                fmt_secs(p.p95_delay_s),
+                fmt_secs(p.p99_delay_s),
                 fmt_joules(p.mean_energy_j),
                 format!("{:.1}", p.mean_cut),
             ]);
@@ -192,6 +213,9 @@ impl FleetSweep {
                                 ("wall_s", Json::Num(p.wall_s)),
                                 ("device_rounds_per_s", Json::Num(p.device_rounds_per_s)),
                                 ("mean_delay_s", Json::Num(p.mean_delay_s)),
+                                ("p50_delay_s", Json::Num(p.p50_delay_s)),
+                                ("p95_delay_s", Json::Num(p.p95_delay_s)),
+                                ("p99_delay_s", Json::Num(p.p99_delay_s)),
                                 ("mean_energy_j", Json::Num(p.mean_energy_j)),
                                 ("mean_cut", Json::Num(p.mean_cut)),
                             ])
@@ -212,24 +236,28 @@ mod tests {
     fn small_sweep_produces_grid_and_json() {
         let mut bench = Bencher::new("fleet-sweep-test");
         let scenarios = [scenario::DENSE_URBAN, scenario::BURSTY_CHANNEL];
-        let sweep = sweep(&scenarios, &[4, 9], Some(2), 4, 7, &mut bench).unwrap();
+        let sweep = sweep(&scenarios, &[4, 9], Some(2), 4, 7, false, &mut bench).unwrap();
         assert_eq!(sweep.points.len(), 4);
         assert_eq!(bench.results().len(), 4);
         for p in &sweep.points {
             assert!(p.mean_delay_s > 0.0 && p.mean_delay_s.is_finite());
             assert!(p.mean_energy_j >= 0.0);
             assert_eq!(p.rounds, 2);
+            // percentile ordering of the delay tail
+            assert!(p.p50_delay_s <= p.p95_delay_s && p.p95_delay_s <= p.p99_delay_s);
+            assert!(p.p50_delay_s > 0.0);
         }
         let js = sweep.to_json().to_string();
         assert!(js.contains("\"n_devices\":4"));
         assert!(js.contains("dense-urban"));
         assert!(js.contains("fleet-sweep/v1"));
+        assert!(js.contains("p95_delay_s"));
         // and it round-trips through our own parser
         assert!(Json::parse(&js).is_ok());
     }
 
     #[test]
-    fn determinism_gate_runs_on_smallest_count() {
+    fn determinism_gate_runs_on_largest_count() {
         // the gate would Err on divergence; a clean pass is the assertion
         let mut bench = Bencher::new("gate");
         let sweep = sweep(
@@ -238,6 +266,7 @@ mod tests {
             Some(3),
             8,
             123,
+            false,
             &mut bench,
         )
         .unwrap();
@@ -245,19 +274,37 @@ mod tests {
     }
 
     #[test]
+    fn gate_all_covers_every_point() {
+        let mut bench = Bencher::new("gate-all");
+        let sweep = sweep(
+            &[scenario::DENSE_URBAN],
+            &[3, 5, 7],
+            Some(2),
+            4,
+            9,
+            true,
+            &mut bench,
+        )
+        .unwrap();
+        assert_eq!(sweep.points.len(), 3);
+    }
+
+    #[test]
     fn rejects_degenerate_input() {
         let mut bench = Bencher::new("bad");
-        assert!(sweep(&[], &[4], None, 1, 0, &mut bench).is_err());
-        assert!(sweep(&[scenario::DENSE_URBAN], &[], None, 1, 0, &mut bench).is_err());
-        assert!(sweep(&[scenario::DENSE_URBAN], &[0], None, 1, 0, &mut bench).is_err());
+        assert!(sweep(&[], &[4], None, 1, 0, false, &mut bench).is_err());
+        assert!(sweep(&[scenario::DENSE_URBAN], &[], None, 1, 0, false, &mut bench).is_err());
+        assert!(sweep(&[scenario::DENSE_URBAN], &[0], None, 1, 0, false, &mut bench).is_err());
     }
 
     #[test]
     fn render_lists_every_point() {
         let mut bench = Bencher::new("render");
-        let sweep = sweep(&[scenario::SPARSE_RURAL], &[3, 5], Some(1), 2, 1, &mut bench).unwrap();
+        let sweep =
+            sweep(&[scenario::SPARSE_RURAL], &[3, 5], Some(1), 2, 1, false, &mut bench).unwrap();
         let out = sweep.render();
         assert!(out.contains("sparse-rural"));
         assert!(out.contains("device-rounds/s"));
+        assert!(out.contains("p95 delay"));
     }
 }

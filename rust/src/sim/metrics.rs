@@ -2,7 +2,30 @@
 //! figures report.
 
 use crate::coordinator::RoundRecord;
-use crate::util::stats::Accum;
+use crate::util::stats::{self, Accum};
+
+/// p50/p95/p99 snapshot of a sample set — the tail view both
+/// `fleet-sweep` and `des-sweep` report next to means.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Percentiles {
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl Percentiles {
+    /// Linear-interpolated percentiles (NaN on empty input, like
+    /// `stats::percentile`).  Sorts the samples once for all three.
+    pub fn of(xs: &[f64]) -> Percentiles {
+        let mut v: Vec<f64> = xs.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Percentiles {
+            p50: stats::percentile_sorted(&v, 50.0),
+            p95: stats::percentile_sorted(&v, 95.0),
+            p99: stats::percentile_sorted(&v, 99.0),
+        }
+    }
+}
 
 /// Per-strategy (or per-cell) aggregate over a set of round records.
 #[derive(Clone, Debug, Default)]
@@ -15,6 +38,8 @@ pub struct Summary {
     pub cost: Accum,
     pub cuts: Vec<usize>,
     pub freqs_ghz: Vec<f64>,
+    /// raw per-record round delays, kept for percentile reporting
+    pub delay_samples: Vec<f64>,
 }
 
 impl Summary {
@@ -28,9 +53,11 @@ impl Summary {
             cost: Accum::new(),
             cuts: Vec::new(),
             freqs_ghz: Vec::new(),
+            delay_samples: Vec::new(),
         };
         for r in records {
             s.delay.push(r.delay_s);
+            s.delay_samples.push(r.delay_s);
             s.energy.push(r.energy_j);
             s.device_compute.push(r.device_compute_s);
             s.server_compute.push(r.server_compute_s);
@@ -45,6 +72,11 @@ impl Summary {
     /// Mean selected cut layer over all records (0 when empty).
     pub fn mean_cut(&self) -> f64 {
         self.cuts.iter().sum::<usize>() as f64 / self.cuts.len().max(1) as f64
+    }
+
+    /// Round-delay tail percentiles (p50/p95/p99) over the records.
+    pub fn delay_percentiles(&self) -> Percentiles {
+        Percentiles::of(&self.delay_samples)
     }
 
     /// Fraction of decisions at each endpoint (Fig. 3a structure).
@@ -114,6 +146,18 @@ mod tests {
         let (a, b) = s.endpoint_fractions(32);
         assert!((a - 0.5).abs() < 1e-12);
         assert!((b - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn delay_percentiles_track_tail() {
+        let rs: Vec<RoundRecord> = (1..=100).map(|i| rec(0, i as f64, 1.0)).collect();
+        let p = Summary::from_records(&rs).delay_percentiles();
+        assert!((p.p50 - 50.5).abs() < 1e-9, "p50={}", p.p50);
+        assert!((p.p95 - 95.05).abs() < 1e-9, "p95={}", p.p95);
+        assert!((p.p99 - 99.01).abs() < 1e-9, "p99={}", p.p99);
+        assert!(p.p50 <= p.p95 && p.p95 <= p.p99);
+        // empty summaries report NaN, not a panic
+        assert!(Summary::default().delay_percentiles().p50.is_nan());
     }
 
     #[test]

@@ -9,4 +9,4 @@ pub mod fleet;
 pub mod metrics;
 
 pub use fleet::{FleetPoint, FleetSweep};
-pub use metrics::{reduction_pct, Summary};
+pub use metrics::{reduction_pct, Percentiles, Summary};

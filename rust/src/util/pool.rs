@@ -21,13 +21,18 @@ pub fn default_parallelism() -> usize {
 /// Map `f` over `items` on up to `threads` workers, returning results in
 /// input order.  `f` receives `(index, &item)`.  Falls back to a plain
 /// serial map for trivial inputs (0/1 items or 1 thread).
+///
+/// Degenerate worker counts are clamped, never a panic: `threads == 0`
+/// runs serially, and `threads > items.len()` spawns one worker per
+/// item at most (spawning idle workers would only pay thread-start
+/// cost for nothing).
 pub fn par_map_indexed<T, R, F>(threads: usize, items: &[T], f: F) -> Vec<R>
 where
     T: Sync,
     R: Send,
     F: Fn(usize, &T) -> R + Sync,
 {
-    let threads = threads.max(1).min(items.len().max(1));
+    let threads = threads.clamp(1, items.len().max(1));
     if threads <= 1 || items.len() <= 1 {
         return items.iter().enumerate().map(|(i, x)| f(i, x)).collect();
     }
@@ -81,6 +86,29 @@ mod tests {
     fn more_threads_than_items() {
         let xs = [1u64, 2, 3];
         assert_eq!(par_map_indexed(64, &xs, |_, &x| x * x), vec![1, 4, 9]);
+    }
+
+    #[test]
+    fn zero_threads_clamps_to_serial() {
+        // regression: threads == 0 must clamp to 1 worker, not panic
+        // or deadlock
+        let xs: Vec<u64> = (0..20).collect();
+        let expect: Vec<u64> = xs.iter().map(|&x| x + 7).collect();
+        assert_eq!(par_map_indexed(0, &xs, |_, &x| x + 7), expect);
+    }
+
+    #[test]
+    fn degenerate_combinations_never_panic() {
+        // every (threads, items) corner: 0/1/many threads × 0/1/many cells
+        for threads in [0usize, 1, 2, 100] {
+            for n in [0usize, 1, 2, 33] {
+                let xs: Vec<u64> = (0..n as u64).collect();
+                let got = par_map_indexed(threads, &xs, |i, &x| x * 2 + i as u64);
+                let expect: Vec<u64> =
+                    xs.iter().enumerate().map(|(i, &x)| x * 2 + i as u64).collect();
+                assert_eq!(got, expect, "threads={threads} n={n}");
+            }
+        }
     }
 
     #[test]

@@ -81,18 +81,24 @@ pub fn std(xs: &[f64]) -> f64 {
 
 /// Linear-interpolated percentile, p in [0, 100].
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    if xs.is_empty() {
-        return f64::NAN;
-    }
     let mut v: Vec<f64> = xs.to_vec();
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    percentile_sorted(&v, p)
+}
+
+/// Linear-interpolated percentile of an **already sorted** slice —
+/// lets callers taking several percentiles sort once.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
     if lo == hi {
-        v[lo]
+        sorted[lo]
     } else {
-        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+        sorted[lo] + (rank - lo as f64) * (sorted[hi] - sorted[lo])
     }
 }
 
@@ -152,6 +158,9 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 100.0), 3.0);
         assert_eq!(median(&xs), 2.0);
+        // pre-sorted fast path agrees with the sorting wrapper
+        assert_eq!(percentile_sorted(&[1.0, 2.0, 3.0], 50.0), 2.0);
+        assert!(percentile_sorted(&[], 50.0).is_nan());
     }
 
     #[test]

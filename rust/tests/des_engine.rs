@@ -1,0 +1,243 @@
+//! Acceptance tests for the discrete-event fleet engine (ISSUE 2):
+//!
+//! * `sync` reproduces the synchronous round engine's records — and
+//!   therefore its per-round delay/energy totals — **bit-identically**
+//!   on the dense-urban preset;
+//! * `semi-sync` and `async` are deterministic across thread counts;
+//! * both show higher server utilization than the `sync` baseline on
+//!   the heterogeneous-fleet preset (the contended-server payoff).
+
+use edgesplit::config::scenario::{Scenario, DENSE_URBAN, HETEROGENEOUS_FLEET};
+use edgesplit::coordinator::{RoundRecord, Scheduler, Strategy};
+use edgesplit::des::{sweep, DesConfig, DesEngine, DesOutcome, Policy};
+use edgesplit::sim::fleet::verify_bit_identical;
+use edgesplit::util::benchkit::Bencher;
+
+fn run_des(sc: Scenario, n: usize, rounds: usize, seed: u64, des: DesConfig) -> DesOutcome {
+    let mut cfg = sc.config(n, seed).unwrap();
+    cfg.workload.rounds = rounds;
+    let sched = Scheduler::new(cfg, sc.state, Strategy::Card);
+    DesEngine::new(&sched, des).run()
+}
+
+#[test]
+fn sync_des_bit_identical_to_round_engine_on_dense_urban() {
+    let mut cfg = DENSE_URBAN.config(12, 7).unwrap();
+    cfg.workload.rounds = 3;
+    let sched = Scheduler::new(cfg, DENSE_URBAN.state, Strategy::Card);
+    let reference = sched.run_parallel(4);
+
+    let out = DesEngine::new(
+        &sched,
+        DesConfig {
+            policy: Policy::Sync,
+            capacity: 4,
+            batch: 1,
+        },
+    )
+    .run();
+    let des_records: Vec<RoundRecord> = out.records.iter().map(|r| r.record.clone()).collect();
+    if let Err(e) = verify_bit_identical(&reference, &des_records) {
+        panic!("sync DES diverged from the round engine: {e:#}");
+    }
+
+    // per-round delay and energy totals, summed in the engine's record
+    // order, must carry identical bits
+    for round in 0..3 {
+        let total = |records: &[RoundRecord]| -> (f64, f64) {
+            records
+                .iter()
+                .filter(|r| r.round == round)
+                .fold((0.0, 0.0), |(d, e), r| (d + r.delay_s, e + r.energy_j))
+        };
+        let (d_ref, e_ref) = total(&reference);
+        let (d_des, e_des) = total(&des_records);
+        assert_eq!(d_ref.to_bits(), d_des.to_bits(), "round {round} delay total");
+        assert_eq!(e_ref.to_bits(), e_des.to_bits(), "round {round} energy total");
+    }
+}
+
+#[test]
+fn sync_bit_compat_holds_under_server_contention() {
+    // queueing delays the timeline but must never perturb a record
+    let mut cfg = DENSE_URBAN.config(9, 21).unwrap();
+    cfg.workload.rounds = 2;
+    let sched = Scheduler::new(cfg, DENSE_URBAN.state, Strategy::Card);
+    let reference = sched.run_parallel(2);
+    for (capacity, batch) in [(1, 1), (2, 3), (64, 1)] {
+        let out = DesEngine::new(
+            &sched,
+            DesConfig {
+                policy: Policy::Sync,
+                capacity,
+                batch,
+            },
+        )
+        .run();
+        let recs: Vec<RoundRecord> = out.records.iter().map(|r| r.record.clone()).collect();
+        if let Err(e) = verify_bit_identical(&reference, &recs) {
+            panic!("capacity {capacity} batch {batch}: {e:#}");
+        }
+    }
+}
+
+#[test]
+fn semi_sync_and_async_deterministic_across_thread_counts() {
+    // the engine itself is serial; the sweep fans points out across
+    // workers — reported metrics must not depend on the fan-out
+    let policies = [
+        Policy::SemiSync {
+            deadline_factor: 1.2,
+        },
+        Policy::Async,
+    ];
+    let run = |threads: usize| {
+        let mut bench = Bencher::new("des-det");
+        sweep(
+            &[HETEROGENEOUS_FLEET],
+            &[10],
+            &policies,
+            Some(2),
+            2,
+            1,
+            threads,
+            5,
+            &mut bench,
+        )
+        .unwrap()
+    };
+    let a = run(1);
+    let b = run(6);
+    assert_eq!(a.points.len(), b.points.len());
+    for (x, y) in a.points.iter().zip(&b.points) {
+        assert_eq!(x.policy, y.policy);
+        assert_eq!(x.makespan_s.to_bits(), y.makespan_s.to_bits(), "{}", x.policy);
+        assert_eq!(x.completed, y.completed, "{}", x.policy);
+        assert_eq!(x.dropped, y.dropped, "{}", x.policy);
+        assert_eq!(x.departures, y.departures, "{}", x.policy);
+        assert_eq!(
+            x.server_utilization.to_bits(),
+            y.server_utilization.to_bits(),
+            "{}",
+            x.policy
+        );
+        assert_eq!(
+            x.round_latency.p95.to_bits(),
+            y.round_latency.p95.to_bits(),
+            "{}",
+            x.policy
+        );
+        assert_eq!(x.energy_j.to_bits(), y.energy_j.to_bits(), "{}", x.policy);
+    }
+}
+
+#[test]
+fn semi_sync_and_async_beat_sync_utilization_on_heterogeneous_fleet() {
+    let des = |policy| DesConfig {
+        policy,
+        capacity: 2,
+        batch: 1,
+    };
+    let sync = run_des(HETEROGENEOUS_FLEET, 12, 3, 7, des(Policy::Sync));
+    let semi = run_des(
+        HETEROGENEOUS_FLEET,
+        12,
+        3,
+        7,
+        des(Policy::SemiSync {
+            deadline_factor: 1.1,
+        }),
+    );
+    let async_ = run_des(HETEROGENEOUS_FLEET, 12, 3, 7, des(Policy::Async));
+
+    assert!(
+        async_.server.utilization > sync.server.utilization,
+        "async {} !> sync {}",
+        async_.server.utilization,
+        sync.server.utilization
+    );
+    assert!(
+        semi.server.utilization > sync.server.utilization,
+        "semi-sync {} !> sync {}",
+        semi.server.utilization,
+        sync.server.utilization
+    );
+    // the mechanisms behind the numbers: semi-sync sheds stragglers,
+    // async keeps the queue fed without a barrier
+    assert!(semi.dropped > 0, "1.1× deadline shed no stragglers");
+    assert!(async_.peak_staleness > 0, "async observed no staleness");
+}
+
+#[test]
+fn heterogeneous_preset_churn_drives_departures_deterministically() {
+    // the preset ships Poisson churn; cell accounting must stay exact
+    // and repeated runs identical
+    let cfg = HETEROGENEOUS_FLEET.config(8, 3).unwrap();
+    assert!(cfg.churn.enabled(), "preset should carry a [churn] table");
+    let out = run_des(
+        HETEROGENEOUS_FLEET,
+        8,
+        4,
+        3,
+        DesConfig {
+            policy: Policy::Async,
+            capacity: 2,
+            batch: 1,
+        },
+    );
+    assert_eq!(out.launched, out.records.len() as u64 + out.dropped);
+    assert!(out.departures >= out.arrivals);
+    assert!(out.aggregator.is_consistent());
+    let again = run_des(
+        HETEROGENEOUS_FLEET,
+        8,
+        4,
+        3,
+        DesConfig {
+            policy: Policy::Async,
+            capacity: 2,
+            batch: 1,
+        },
+    );
+    assert_eq!(out.makespan_s.to_bits(), again.makespan_s.to_bits());
+    assert_eq!(out.departures, again.departures);
+    assert_eq!(out.records.len(), again.records.len());
+}
+
+#[test]
+fn des_sweep_json_reports_the_utilization_ordering() {
+    // the BENCH_des.json payload itself must witness the acceptance
+    // criterion on the heterogeneous-fleet preset
+    let mut bench = Bencher::new("des-accept");
+    let policies = [
+        Policy::Sync,
+        Policy::SemiSync {
+            deadline_factor: 1.1,
+        },
+        Policy::Async,
+    ];
+    let s = sweep(
+        &[HETEROGENEOUS_FLEET],
+        &[12],
+        &policies,
+        Some(3),
+        2,
+        1,
+        4,
+        7,
+        &mut bench,
+    )
+    .unwrap();
+    let util = |name: &str| {
+        s.points
+            .iter()
+            .find(|p| p.policy == name)
+            .map(|p| p.server_utilization)
+            .unwrap()
+    };
+    assert!(util("semi-sync") > util("sync"));
+    assert!(util("async") > util("sync"));
+    let js = s.to_json().to_string();
+    assert!(js.contains("des-sweep/v1"));
+    assert!(edgesplit::util::json::Json::parse(&js).is_ok());
+}

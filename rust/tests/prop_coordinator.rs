@@ -266,6 +266,61 @@ fn prop_bounds_bracket_realized_costs() {
 }
 
 #[test]
+fn prop_aggregator_out_of_order_merges_stay_consistent_and_bounded() {
+    // DES async invariant: distribute a lease per device, then let the
+    // merges land in *shuffled event order* via the unordered path.
+    // After every merge, staleness relative to the newest version must
+    // be bounded and monotonically non-increasing (merges only advance
+    // layer versions), and once every lease has merged the adapter
+    // stack is consistent at the server again.
+    use edgesplit::coordinator::Aggregator;
+    forall(
+        "aggregator out-of-order merge invariants",
+        PropConfig {
+            seed: 0xA66_000D,
+            cases: 200,
+        },
+        |r| {
+            let n_devices = 1 + r.below(12) as usize;
+            // device d holds a lease over [0, cuts[d]) based on version d+1
+            let cuts: Vec<usize> = (0..n_devices).map(|_| r.below(33) as usize).collect();
+            let mut order: Vec<usize> = (0..n_devices).collect();
+            r.shuffle(&mut order);
+            (cuts, order)
+        },
+        |(cuts, order)| {
+            let mut agg = Aggregator::new(32);
+            let newest = cuts.len(); // highest version any merge carries
+            for (d, &c) in cuts.iter().enumerate() {
+                agg.distribute(d, c, d + 1, c as f64);
+            }
+            let mut prev = usize::MAX;
+            for &d in order {
+                agg.merge_unordered(d, cuts[d], d + 1, cuts[d] as f64);
+                let s = agg.staleness(newest);
+                prop_assert!(s <= newest, "staleness {s} above bound {newest}");
+                prop_assert!(
+                    s <= prev,
+                    "staleness increased across merges: {prev} -> {s}"
+                );
+                prev = s;
+            }
+            prop_assert!(
+                agg.is_consistent(),
+                "stack inconsistent after all shuffled merges: cuts {cuts:?} order {order:?}"
+            );
+            prop_assert!(
+                agg.merges() == cuts.len() as u64,
+                "merge count {} != {}",
+                agg.merges(),
+                cuts.len()
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_aggregator_roundtrip_any_cut_sequence() {
     use edgesplit::coordinator::Aggregator;
     forall(
