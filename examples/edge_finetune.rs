@@ -83,7 +83,7 @@ fn main() -> anyhow::Result<()> {
     for r in records.iter().take(5).chain(records.iter().rev().take(3).rev()) {
         t.row(vec![
             r.round.to_string(),
-            r.device_name.clone(),
+            r.device_name.to_string(),
             r.cut.to_string(),
             r.loss.map(|l| format!("{l:.4}")).unwrap_or_default(),
             fmt_secs(r.delay_s),

@@ -18,6 +18,7 @@ use crate::util::rng::Rng;
 
 use super::card::{Card, Decision};
 use super::cost::CostModel;
+use super::kernel::CutTable;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Strategy {
@@ -52,8 +53,50 @@ impl Strategy {
         }
     }
 
-    /// Decide (cut, frequency) for one device-round.
+    /// A strategy is cacheable when its decision is a pure function of
+    /// `(device, link rates)` — true for everything except Random-cut,
+    /// which consumes the cell RNG and must bypass the decision cache
+    /// (DESIGN.md §12).
+    pub fn cacheable(&self) -> bool {
+        !matches!(self, Strategy::RandomCut)
+    }
+
+    /// Decide (cut, frequency) for one device-round against a
+    /// precomputed [`CutTable`] — the kernel path every engine uses.
+    /// Bit-identical to [`Strategy::decide_ref`].
+    pub fn decide_on(&self, table: &CutTable, rates: LinkRates, rng: &mut Rng) -> Decision {
+        let b = table.bounds(rates);
+        match *self {
+            Strategy::Card => table.scan(table.optimal_frequency(&b), rates, &b),
+            Strategy::ServerOnly => table.at(0, table.terms.f_max, rates, &b),
+            Strategy::DeviceOnly => table.at(table.n_layers(), table.f_min, rates, &b),
+            Strategy::StaticCut(c) => {
+                let c = c.min(table.n_layers());
+                table.at(c, table.optimal_frequency(&b), rates, &b)
+            }
+            Strategy::RandomCut => {
+                let c = rng.below(table.n_layers() as u64 + 1) as usize;
+                table.at(c, table.optimal_frequency(&b), rates, &b)
+            }
+        }
+    }
+
+    /// Decide (cut, frequency) for one device-round, building a
+    /// one-shot table (convenience for callers without a fleet).
     pub fn decide(
+        &self,
+        cm: &CostModel,
+        server: &ServerSpec,
+        dev: &DeviceSpec,
+        rates: LinkRates,
+        rng: &mut Rng,
+    ) -> Decision {
+        self.decide_on(&CutTable::for_device(cm, server, dev), rates, rng)
+    }
+
+    /// The pre-kernel reference path (O(I) model re-evaluation per cost
+    /// call) — kept as the bit-compat oracle and `card-bench` baseline.
+    pub fn decide_ref(
         &self,
         cm: &CostModel,
         server: &ServerSpec,
@@ -74,7 +117,7 @@ impl Strategy {
             }
         };
         match *self {
-            Strategy::Card => card.decide(dev, rates),
+            Strategy::Card => card.decide_ref(dev, rates),
             Strategy::ServerOnly => fixed(0, server.max_freq_hz),
             Strategy::DeviceOnly => fixed(cm.n_layers(), dev.server_freq_floor(server)),
             Strategy::StaticCut(c) => {
@@ -172,6 +215,40 @@ mod tests {
         assert_eq!(Strategy::parse("Server-Only"), Some(Strategy::ServerOnly));
         assert_eq!(Strategy::parse("static:16"), Some(Strategy::StaticCut(16)));
         assert_eq!(Strategy::parse("bogus"), None);
+    }
+
+    #[test]
+    fn kernel_path_bitwise_matches_reference_for_every_strategy() {
+        let (cm, cfg) = setup();
+        for s in [
+            Strategy::Card,
+            Strategy::ServerOnly,
+            Strategy::DeviceOnly,
+            Strategy::StaticCut(16),
+            Strategy::RandomCut,
+        ] {
+            for dev in &cfg.devices {
+                // twin RNG streams so Random-cut draws identically
+                let mut rng_a = Rng::new(99);
+                let mut rng_b = Rng::new(99);
+                let a = s.decide(&cm, &cfg.server, dev, RATES, &mut rng_a);
+                let b = s.decide_ref(&cm, &cfg.server, dev, RATES, &mut rng_b);
+                assert_eq!(a.cut, b.cut, "{} {}", s.name(), dev.name);
+                assert_eq!(a.freq_hz.to_bits(), b.freq_hz.to_bits(), "{}", s.name());
+                assert_eq!(a.cost.to_bits(), b.cost.to_bits(), "{}", s.name());
+                assert_eq!(a.delay_s.to_bits(), b.delay_s.to_bits(), "{}", s.name());
+                assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits(), "{}", s.name());
+            }
+        }
+    }
+
+    #[test]
+    fn random_cut_is_the_only_uncacheable_strategy() {
+        assert!(Strategy::Card.cacheable());
+        assert!(Strategy::ServerOnly.cacheable());
+        assert!(Strategy::DeviceOnly.cacheable());
+        assert!(Strategy::StaticCut(4).cacheable());
+        assert!(!Strategy::RandomCut.cacheable());
     }
 
     #[test]

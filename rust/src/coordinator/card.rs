@@ -21,6 +21,7 @@ use crate::config::{DeviceSpec, ServerSpec};
 use crate::model::LinkRates;
 
 use super::cost::{Bounds, CostModel};
+use super::kernel::CutTable;
 
 /// A CARD (or baseline) decision for one device-round.
 #[derive(Clone, Copy, Debug)]
@@ -69,8 +70,21 @@ impl<'a> Card<'a> {
         q.clamp(f_min, f_max)
     }
 
-    /// Alg. 1: f* via Eq. (16), then brute-force scan c ∈ {0..I}.
+    /// Alg. 1: f* via Eq. (16), then the cut scan — routed through a
+    /// one-shot [`CutTable`] (fleet callers hold persistent tables and
+    /// use the kernel directly; see `Scheduler`).  Bit-identical to
+    /// [`Card::decide_ref`].
     pub fn decide(&self, dev: &DeviceSpec, rates: LinkRates) -> Decision {
+        let table = CutTable::for_device(self.cost_model, self.server, dev);
+        let b = table.bounds(rates);
+        table.scan(table.optimal_frequency(&b), rates, &b)
+    }
+
+    /// The pre-kernel reference scan: f* via Eq. (16), then O(I) cost
+    /// calls that each re-derive the FLOP/size model terms.  Kept as
+    /// the bit-compat oracle for `rust/tests/decision_kernel.rs` and
+    /// the `card-bench` legacy baseline — new callers want `decide`.
+    pub fn decide_ref(&self, dev: &DeviceSpec, rates: LinkRates) -> Decision {
         let cm = self.cost_model;
         let b = cm.bounds(dev, self.server, rates);
         let f_star = self.optimal_frequency(dev, &b);
@@ -287,6 +301,23 @@ mod tests {
         let d0 = card0.decide(&cfg0.devices[2], RATES);
         assert!((d0.freq_hz - cfg0.devices[2].server_freq_floor(&cfg0.server)).abs() < 1.0);
         assert_eq!(d0.cut, cm0.n_layers());
+    }
+
+    #[test]
+    fn kernel_decide_bitwise_matches_reference_scan() {
+        for w in [0.0, 0.2, 0.7, 1.0] {
+            let (cm, cfg) = setup(w);
+            let card = Card::new(&cm, &cfg.server);
+            for dev in &cfg.devices {
+                let a = card.decide(dev, RATES);
+                let b = card.decide_ref(dev, RATES);
+                assert_eq!(a.cut, b.cut, "{} w={w}", dev.name);
+                assert_eq!(a.freq_hz.to_bits(), b.freq_hz.to_bits());
+                assert_eq!(a.cost.to_bits(), b.cost.to_bits());
+                assert_eq!(a.delay_s.to_bits(), b.delay_s.to_bits());
+                assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+            }
+        }
     }
 
     #[test]

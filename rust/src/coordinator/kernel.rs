@@ -1,0 +1,660 @@
+//! The decision kernel (DESIGN.md §12): precomputed cut tables and the
+//! CQI-keyed decision cache that turn the Alg.-1 scan — the innermost
+//! loop of both fleet engines — into a tight, branch-free slice walk.
+//!
+//! ## Why this is exact, not approximate
+//!
+//! Every value the kernel produces is computed with the **same floating
+//! point operations in the same association order** as the reference
+//! `CostModel`/`DelayModel`/`EnergyModel` chain; the only difference is
+//! that f- and rate-independent subterms (η_D(c), η_S(c), wire bytes,
+//! the per-epoch device compute delay) are evaluated once per
+//! `(CostModel, ServerSpec, DeviceSpec)` instead of once per cost call.
+//! IEEE-754 arithmetic is deterministic, so hoisting a subexpression
+//! out of a loop cannot change a single bit of any result — asserted
+//! bitwise against the legacy path by this module's tests and by
+//! `rust/tests/decision_kernel.rs`.
+//!
+//! The cache key is exact for the same reason: realized link rates are
+//! `R = B · y(CQI(SNR))` (net/cqi.rs) with the outage floor also a pure
+//! function of the CQI-0 bucket, so per device there are at most 16×16
+//! distinct `(rate_up, rate_down)` pairs — the `(cqi_up, cqi_down)`
+//! pair *is* the rate pair, and a memoized decision replayed for the
+//! same key is the decision the scan would have produced.  Fading moves
+//! the SNR continuously, but SNR only enters the round record, never
+//! the decision.  Random-cut consumes the cell RNG and must bypass the
+//! cache (`Strategy::cacheable`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::config::{DeviceSpec, ServerSpec};
+use crate::model::LinkRates;
+use crate::net::cqi::cqi_for_snr;
+
+use super::card::Decision;
+use super::cost::{Bounds, CostModel};
+
+/// Cut-indexed terms that depend only on `(CostModel, ServerSpec)` —
+/// shared (via `Arc`) by every device's [`CutTable`] so a 10⁴-device
+/// fleet pays the model evaluation once, not once per device.
+#[derive(Debug)]
+pub struct ModelTerms {
+    /// I — cut candidates are 0..=n_layers
+    pub n_layers: usize,
+    /// T — local epochs per round
+    pub epochs: f64,
+    /// w — Eq. (12) weighting
+    pub w: f64,
+    /// ξ — server power coefficient
+    pub xi: f64,
+    /// T·ξ — the energy prefix before the f² factor (Eq. 11)
+    xi_epochs: f64,
+    /// δ^S — kept separate: legacy throughput is ((f·δ)·σ)
+    server_delta: f64,
+    /// σ^S
+    server_sigma: f64,
+    /// δ^S·σ^S — the Eq.-11 denominator (a single product in legacy too)
+    delta_sigma: f64,
+    /// F^S_max
+    pub f_max: f64,
+    /// η_D(c) — device-side training FLOPs
+    eta_d: Vec<f64>,
+    /// η_S(c) = η − η_D(c) — server-side training FLOPs
+    pub eta_s: Vec<f64>,
+    /// 8·φ·S(c) — smashed uplink bits per local epoch
+    e8_smashed: Vec<f64>,
+    /// 8·φ·S̃(c) — gradient downlink bits per local epoch
+    e8_grad: Vec<f64>,
+    /// 8·A(c) — adapter bits (each direction, once per round)
+    e8_adapter: Vec<f64>,
+    /// A(c) — adapter payload bytes (RoundRecord reporting)
+    pub adapter_bytes: Vec<f64>,
+    /// φ·S(c) + φ·S̃(c) — per-epoch wire bytes (RoundRecord reporting)
+    pub wire_bytes_epoch: Vec<f64>,
+}
+
+impl ModelTerms {
+    pub fn new(cm: &CostModel, server: &ServerSpec) -> Self {
+        let i = cm.n_layers();
+        let fl = &cm.delay.flops;
+        let sz = &cm.delay.sizes;
+        let mut t = ModelTerms {
+            n_layers: i,
+            epochs: cm.delay.epochs,
+            w: cm.w,
+            xi: server.xi,
+            xi_epochs: cm.energy.epochs * server.xi,
+            server_delta: server.flops_per_cycle,
+            server_sigma: server.cores,
+            delta_sigma: server.flops_per_cycle * server.cores,
+            f_max: server.max_freq_hz,
+            eta_d: Vec::with_capacity(i + 1),
+            eta_s: Vec::with_capacity(i + 1),
+            e8_smashed: Vec::with_capacity(i + 1),
+            e8_grad: Vec::with_capacity(i + 1),
+            e8_adapter: Vec::with_capacity(i + 1),
+            adapter_bytes: Vec::with_capacity(i + 1),
+            wire_bytes_epoch: Vec::with_capacity(i + 1),
+        };
+        for c in 0..=i {
+            t.eta_d.push(fl.eta_device(c));
+            t.eta_s.push(fl.eta_server(c));
+            t.e8_smashed.push(8.0 * sz.smashed_wire_bytes(c));
+            t.e8_grad.push(8.0 * sz.grad_wire_bytes(c));
+            t.e8_adapter.push(8.0 * sz.adapter_bytes(c));
+            t.adapter_bytes.push(sz.adapter_bytes(c));
+            t.wire_bytes_epoch.push(sz.smashed_wire_bytes(c) + sz.grad_wire_bytes(c));
+        }
+        t
+    }
+}
+
+/// Per-frequency subterms, computed once per scan instead of once per
+/// cut candidate.  Matches the legacy association exactly:
+/// `thr = (f·δ)·σ` and `e_prefix = ((T·ξ)·f)·f`.
+#[derive(Clone, Copy, Debug)]
+pub struct FreqTerms {
+    pub f_hz: f64,
+    thr: f64,
+    e_prefix: f64,
+}
+
+/// The precomputed decision table for one `(CostModel, ServerSpec,
+/// DeviceSpec)` triple: everything `Card::decide` and the baseline
+/// strategies need, indexed flat by cut layer.
+#[derive(Debug)]
+pub struct CutTable {
+    pub terms: Arc<ModelTerms>,
+    /// η_D(c) / (f^D δ^D σ^D) — per-epoch device compute delay (Eq. 7)
+    pub dev_compute: Vec<f64>,
+    /// F^{m,S}_min — this device's server frequency floor
+    pub f_min: f64,
+}
+
+impl CutTable {
+    pub fn new(terms: Arc<ModelTerms>, dev: &DeviceSpec) -> Self {
+        let dev_thr = dev.throughput();
+        let dev_compute = terms.eta_d.iter().map(|&eta| eta / dev_thr).collect();
+        let f_min = dev_thr / terms.delta_sigma;
+        CutTable {
+            terms,
+            dev_compute,
+            f_min,
+        }
+    }
+
+    /// One-shot convenience for callers without a fleet (tests,
+    /// `decide`, benches): builds a private `ModelTerms`.
+    pub fn for_device(cm: &CostModel, server: &ServerSpec, dev: &DeviceSpec) -> Self {
+        CutTable::new(Arc::new(ModelTerms::new(cm, server)), dev)
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.terms.n_layers
+    }
+
+    #[inline]
+    pub fn freq_terms(&self, f_hz: f64) -> FreqTerms {
+        FreqTerms {
+            f_hz,
+            thr: f_hz * self.terms.server_delta * self.terms.server_sigma,
+            e_prefix: self.terms.xi_epochs * f_hz * f_hz,
+        }
+    }
+
+    /// Eq. (9): round transmission delay at cut `c`.
+    #[inline]
+    pub fn transmission(&self, c: usize, rates: LinkRates) -> f64 {
+        let t = &self.terms;
+        let per_epoch = t.e8_smashed[c] / rates.up_bps + t.e8_grad[c] / rates.down_bps;
+        let adapters = t.e8_adapter[c] / rates.up_bps + t.e8_adapter[c] / rates.down_bps;
+        t.epochs * per_epoch + adapters
+    }
+
+    /// T · d^{S,C} — round server compute delay at cut `c` (Eq. 8 × T).
+    #[inline]
+    pub fn server_compute_round(&self, c: usize, ft: &FreqTerms) -> f64 {
+        self.terms.epochs * (self.terms.eta_s[c] / ft.thr)
+    }
+
+    /// T · d^{D,C} — round device compute delay at cut `c` (Eq. 7 × T).
+    #[inline]
+    pub fn device_compute_round(&self, c: usize) -> f64 {
+        self.terms.epochs * self.dev_compute[c]
+    }
+
+    /// Eq. (10): full round delay.
+    #[inline]
+    pub fn delay(&self, c: usize, ft: &FreqTerms, rates: LinkRates) -> f64 {
+        let compute = self.terms.epochs * (self.dev_compute[c] + self.terms.eta_s[c] / ft.thr);
+        compute + self.transmission(c, rates)
+    }
+
+    /// Eq. (11): round server energy.
+    #[inline]
+    pub fn energy(&self, c: usize, ft: &FreqTerms) -> f64 {
+        ft.e_prefix * self.terms.eta_s[c] / self.terms.delta_sigma
+    }
+
+    /// Eq. (12) under precomputed bounds.
+    #[inline]
+    pub fn cost(&self, d: f64, e: f64, b: &Bounds) -> f64 {
+        let w = self.terms.w;
+        w * (d - b.d_min) / b.delay_span() + (1.0 - w) * (e - b.e_min) / b.energy_span()
+    }
+
+    /// The paper's normalization corners (§III-C) — bit-identical to
+    /// `CostModel::bounds`.
+    pub fn bounds(&self, rates: LinkRates) -> Bounds {
+        let i = self.terms.n_layers;
+        let ft_min = self.freq_terms(self.f_min);
+        let ft_max = self.freq_terms(self.terms.f_max);
+        Bounds {
+            d_max: self.delay(i, &ft_min, rates),
+            e_min: self.energy(i, &ft_min),
+            d_min: self.delay(0, &ft_max, rates),
+            e_max: self.energy(0, &ft_max),
+        }
+    }
+
+    /// Eq. (16): closed-form optimal server frequency — bit-identical
+    /// to `Card::optimal_frequency`.
+    pub fn optimal_frequency(&self, b: &Bounds) -> f64 {
+        let w = self.terms.w;
+        if w >= 1.0 {
+            return self.terms.f_max;
+        }
+        if w <= 0.0 {
+            return self.f_min;
+        }
+        let q = (w * b.energy_span() / (2.0 * self.terms.xi * (1.0 - w) * b.delay_span())).cbrt();
+        q.clamp(self.f_min, self.terms.f_max)
+    }
+
+    /// Alg. 1's lower layer: argmin over c ∈ {0..I} at fixed f — the
+    /// branch-free slice scan that replaces the legacy O(I) model
+    /// re-evaluation.
+    pub fn scan(&self, f_hz: f64, rates: LinkRates, b: &Bounds) -> Decision {
+        let ft = self.freq_terms(f_hz);
+        let mut best = Decision {
+            cut: 0,
+            freq_hz: f_hz,
+            cost: f64::INFINITY,
+            delay_s: 0.0,
+            energy_j: 0.0,
+        };
+        for c in 0..=self.terms.n_layers {
+            let d = self.delay(c, &ft, rates);
+            let e = self.energy(c, &ft);
+            let u = self.cost(d, e, b);
+            if u < best.cost {
+                best = Decision {
+                    cut: c,
+                    freq_hz: f_hz,
+                    cost: u,
+                    delay_s: d,
+                    energy_j: e,
+                };
+            }
+        }
+        best
+    }
+
+    /// Fixed-(c, f) decision — what the baseline strategies emit.
+    pub fn at(&self, c: usize, f_hz: f64, rates: LinkRates, b: &Bounds) -> Decision {
+        let ft = self.freq_terms(f_hz);
+        let d = self.delay(c, &ft, rates);
+        let e = self.energy(c, &ft);
+        Decision {
+            cut: c,
+            freq_hz: f_hz,
+            cost: self.cost(d, e, b),
+            delay_s: d,
+            energy_j: e,
+        }
+    }
+
+    /// Rebuild the full [`Decision`] from a cache hit: `(cut, f*, U*)`
+    /// plus the rates the key encodes.  Delay/energy are recomputed
+    /// through the same kernel ops the scan used, so the realized
+    /// decision is bit-identical to the memoized scan's.
+    pub fn realize(&self, cut: usize, f_hz: f64, cost: f64, rates: LinkRates) -> Decision {
+        let ft = self.freq_terms(f_hz);
+        Decision {
+            cut,
+            freq_hz: f_hz,
+            cost,
+            delay_s: self.delay(cut, &ft, rates),
+            energy_j: self.energy(cut, &ft),
+        }
+    }
+
+    /// The cache-hit fast path: [`CutTable::realize`] fused with the
+    /// round record's Eq.-10 decomposition — `FreqTerms`, the Eq.-8
+    /// division, and the transmission term are each evaluated once
+    /// instead of once for the decision and again for the record.
+    /// Every field is bit-identical to the unfused accessors (the
+    /// shared subterms are the same expressions, computed once).
+    pub fn realize_cell(&self, cut: usize, f_hz: f64, cost: f64, rates: LinkRates) -> CellEval {
+        let ft = self.freq_terms(f_hz);
+        let transmission_s = self.transmission(cut, rates);
+        let sc_epoch = self.terms.eta_s[cut] / ft.thr;
+        let compute = self.terms.epochs * (self.dev_compute[cut] + sc_epoch);
+        CellEval {
+            decision: Decision {
+                cut,
+                freq_hz: f_hz,
+                cost,
+                delay_s: compute + transmission_s,
+                energy_j: self.energy(cut, &ft),
+            },
+            device_compute_s: self.terms.epochs * self.dev_compute[cut],
+            server_compute_s: self.terms.epochs * sc_epoch,
+            transmission_s,
+        }
+    }
+}
+
+/// A decision plus the Eq.-10 decomposition the round record reports,
+/// produced in one kernel pass by [`CutTable::realize_cell`].
+#[derive(Clone, Copy, Debug)]
+pub struct CellEval {
+    pub decision: Decision,
+    /// T · d^{D,C}
+    pub device_compute_s: f64,
+    /// T · d^{S,C}
+    pub server_compute_s: f64,
+    /// D^V (Eq. 9)
+    pub transmission_s: f64,
+}
+
+/// 16 CQI buckets per direction (0 = outage .. 15) — 256 keys/device.
+const CQI_LEVELS: usize = 16;
+const KEYS_PER_DEVICE: usize = CQI_LEVELS * CQI_LEVELS;
+/// Words per slot: [tag = cut+1, f* bits, U* bits].
+const SLOT_WORDS: usize = 3;
+
+/// `n` zeroed `AtomicU64`s backed by `alloc_zeroed` pages: a 10⁴-device
+/// cache reserves ~61 MB of *virtual* zero pages, and resident memory
+/// grows only with slots actually touched (realized CQI pairs), unlike
+/// `resize_with`, which would write — and so commit — every page up
+/// front.
+fn zeroed_atomic_words(n: usize) -> Vec<AtomicU64> {
+    // AtomicU64 documents the same size and bit validity as u64; the
+    // in-place reinterpret additionally needs equal alignment, which
+    // holds on every 64-bit target.  Fall back to the committing path
+    // where it does not (e.g. 32-bit targets with 4-byte-aligned u64).
+    if std::mem::align_of::<AtomicU64>() == std::mem::align_of::<u64>() {
+        let mut raw = std::mem::ManuallyDrop::new(vec![0u64; n]);
+        let (ptr, len, cap) = (raw.as_mut_ptr(), raw.len(), raw.capacity());
+        // SAFETY: identical size/alignment checked above; the zero bit
+        // pattern is a valid AtomicU64; ManuallyDrop forfeits the u64
+        // buffer so ownership transfers exactly once.
+        unsafe { Vec::from_raw_parts(ptr as *mut AtomicU64, len, cap) }
+    } else {
+        let mut slots = Vec::with_capacity(n);
+        slots.resize_with(n, || AtomicU64::new(0));
+        slots
+    }
+}
+
+/// A cache-line-isolated counter: sharded telemetry RMWs land on
+/// separate lines instead of serializing every worker on one.
+#[derive(Debug)]
+#[repr(align(64))]
+struct PaddedCounter(AtomicU64);
+
+/// Telemetry shards — lookups index by `device % 8`, so neighbouring
+/// cells (which differ in device) update different lines.
+const COUNTER_SHARDS: usize = 8;
+
+/// Lock-free memo of `(device, cqi_up, cqi_down) → (cut, f*, U*)`.
+///
+/// Each slot is three `AtomicU64` words written value-first, tag-last
+/// (`Release`) and read tag-first (`Acquire`).  Decisions are pure
+/// functions of the key, so racing writers store identical bits and
+/// the data race on *values* is benign by construction — every
+/// interleaving yields the same slot contents.  Hit/miss counters are
+/// `Relaxed`, device-sharded telemetry for `card-bench`.
+#[derive(Debug)]
+pub struct DecisionCache {
+    slots: Vec<AtomicU64>,
+    hits: [PaddedCounter; COUNTER_SHARDS],
+    misses: [PaddedCounter; COUNTER_SHARDS],
+}
+
+impl DecisionCache {
+    pub fn new(n_devices: usize) -> Self {
+        let n = n_devices * KEYS_PER_DEVICE * SLOT_WORDS;
+        DecisionCache {
+            slots: zeroed_atomic_words(n),
+            hits: std::array::from_fn(|_| PaddedCounter(AtomicU64::new(0))),
+            misses: std::array::from_fn(|_| PaddedCounter(AtomicU64::new(0))),
+        }
+    }
+
+    /// Quantize one round's realized SNRs into the cache key.
+    #[inline]
+    pub fn key(snr_up_db: f64, snr_down_db: f64) -> usize {
+        cqi_for_snr(snr_up_db) as usize * CQI_LEVELS + cqi_for_snr(snr_down_db) as usize
+    }
+
+    #[inline]
+    fn base(&self, device_idx: usize, key: usize) -> usize {
+        debug_assert!(key < KEYS_PER_DEVICE);
+        (device_idx * KEYS_PER_DEVICE + key) * SLOT_WORDS
+    }
+
+    /// `(cut, f*, U*)` if this `(device, key)` was decided before.
+    #[inline]
+    pub fn lookup(&self, device_idx: usize, key: usize) -> Option<(usize, f64, f64)> {
+        let base = self.base(device_idx, key);
+        let shard = device_idx % COUNTER_SHARDS;
+        let tag = self.slots[base].load(Ordering::Acquire);
+        if tag == 0 {
+            self.misses[shard].0.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        self.hits[shard].0.fetch_add(1, Ordering::Relaxed);
+        let f_bits = self.slots[base + 1].load(Ordering::Relaxed);
+        let u_bits = self.slots[base + 2].load(Ordering::Relaxed);
+        Some((
+            (tag - 1) as usize,
+            f64::from_bits(f_bits),
+            f64::from_bits(u_bits),
+        ))
+    }
+
+    #[inline]
+    pub fn store(&self, device_idx: usize, key: usize, cut: usize, f_hz: f64, cost: f64) {
+        let base = self.base(device_idx, key);
+        self.slots[base + 1].store(f_hz.to_bits(), Ordering::Relaxed);
+        self.slots[base + 2].store(cost.to_bits(), Ordering::Relaxed);
+        self.slots[base].store(cut as u64 + 1, Ordering::Release);
+    }
+
+    /// `(hits, misses)` since construction.
+    pub fn stats(&self) -> (u64, u64) {
+        let sum = |shards: &[PaddedCounter; COUNTER_SHARDS]| {
+            shards.iter().map(|c| c.0.load(Ordering::Relaxed)).sum::<u64>()
+        };
+        (sum(&self.hits), sum(&self.misses))
+    }
+
+    /// Fraction of lookups answered from the cache (0 when unused).
+    pub fn hit_rate(&self) -> f64 {
+        let (h, m) = self.stats();
+        if h + m == 0 {
+            0.0
+        } else {
+            h as f64 / (h + m) as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExpConfig;
+    use crate::coordinator::card::Card;
+    use crate::coordinator::scheduler::build_cost_model;
+
+    fn setup() -> (CostModel, ExpConfig) {
+        let cfg = ExpConfig::paper();
+        (build_cost_model(&cfg), cfg)
+    }
+
+    const RATE_GRID: [LinkRates; 4] = [
+        LinkRates {
+            up_bps: 300e6,
+            down_bps: 500e6,
+        },
+        LinkRates {
+            up_bps: 15.23e6 / 50.0,
+            down_bps: 87.7e6,
+        },
+        LinkRates {
+            up_bps: 555.47e6,
+            down_bps: 555.47e6,
+        },
+        LinkRates {
+            up_bps: 60.16e6,
+            down_bps: 15.23e6,
+        },
+    ];
+
+    #[test]
+    fn table_terms_bitwise_match_legacy_models() {
+        let (cm, cfg) = setup();
+        let terms = Arc::new(ModelTerms::new(&cm, &cfg.server));
+        for dev in &cfg.devices {
+            let table = CutTable::new(terms.clone(), dev);
+            assert_eq!(
+                table.f_min.to_bits(),
+                dev.server_freq_floor(&cfg.server).to_bits(),
+                "{}",
+                dev.name
+            );
+            for rates in RATE_GRID {
+                for f_hz in [table.f_min, 1.7e9, cfg.server.max_freq_hz] {
+                    let ft = table.freq_terms(f_hz);
+                    for c in 0..=cm.n_layers() {
+                        let d_ref = cm.delay.round(c, dev, &cfg.server, f_hz, rates);
+                        let e_ref = cm.energy.round(c, &cfg.server, f_hz);
+                        assert_eq!(
+                            table.delay(c, &ft, rates).to_bits(),
+                            d_ref.to_bits(),
+                            "{} c={c} f={f_hz}",
+                            dev.name
+                        );
+                        assert_eq!(
+                            table.energy(c, &ft).to_bits(),
+                            e_ref.to_bits(),
+                            "{} c={c} f={f_hz}",
+                            dev.name
+                        );
+                        assert_eq!(
+                            table.transmission(c, rates).to_bits(),
+                            cm.delay.transmission(c, rates).to_bits()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn table_bounds_and_cost_bitwise_match_legacy() {
+        let (cm, cfg) = setup();
+        for dev in &cfg.devices {
+            let table = CutTable::for_device(&cm, &cfg.server, dev);
+            for rates in RATE_GRID {
+                let b_ref = cm.bounds(dev, &cfg.server, rates);
+                let b = table.bounds(rates);
+                assert_eq!(b.d_min.to_bits(), b_ref.d_min.to_bits());
+                assert_eq!(b.d_max.to_bits(), b_ref.d_max.to_bits());
+                assert_eq!(b.e_min.to_bits(), b_ref.e_min.to_bits());
+                assert_eq!(b.e_max.to_bits(), b_ref.e_max.to_bits());
+                let ft = table.freq_terms(2.0e9);
+                for c in [0, 8, cm.n_layers()] {
+                    let u_ref = cm.cost(c, 2.0e9, dev, &cfg.server, rates, &b_ref);
+                    let d = table.delay(c, &ft, rates);
+                    let e = table.energy(c, &ft);
+                    assert_eq!(table.cost(d, e, &b).to_bits(), u_ref.to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scan_bitwise_matches_legacy_decide() {
+        for w in [0.0, 0.05, 0.2, 0.5, 0.8, 1.0] {
+            let (mut cm, cfg) = setup();
+            cm.w = w;
+            let card = Card::new(&cm, &cfg.server);
+            for dev in &cfg.devices {
+                let table = CutTable::for_device(&cm, &cfg.server, dev);
+                for rates in RATE_GRID {
+                    let legacy = card.decide_ref(dev, rates);
+                    let b = table.bounds(rates);
+                    let f_star = table.optimal_frequency(&b);
+                    assert_eq!(
+                        f_star.to_bits(),
+                        card.optimal_frequency(dev, &b).to_bits(),
+                        "{} w={w}",
+                        dev.name
+                    );
+                    let fast = table.scan(f_star, rates, &b);
+                    assert_eq!(fast.cut, legacy.cut, "{} w={w}", dev.name);
+                    assert_eq!(fast.freq_hz.to_bits(), legacy.freq_hz.to_bits());
+                    assert_eq!(fast.cost.to_bits(), legacy.cost.to_bits());
+                    assert_eq!(fast.delay_s.to_bits(), legacy.delay_s.to_bits());
+                    assert_eq!(fast.energy_j.to_bits(), legacy.energy_j.to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn realize_reproduces_scan_bitwise() {
+        let (cm, cfg) = setup();
+        let dev = &cfg.devices[2];
+        let table = CutTable::for_device(&cm, &cfg.server, dev);
+        for rates in RATE_GRID {
+            let b = table.bounds(rates);
+            let d = table.scan(table.optimal_frequency(&b), rates, &b);
+            let r = table.realize(d.cut, d.freq_hz, d.cost, rates);
+            assert_eq!(r.delay_s.to_bits(), d.delay_s.to_bits());
+            assert_eq!(r.energy_j.to_bits(), d.energy_j.to_bits());
+            assert_eq!(r.cost.to_bits(), d.cost.to_bits());
+            // the fused hit path matches the unfused accessors bitwise
+            let cell = table.realize_cell(d.cut, d.freq_hz, d.cost, rates);
+            let ft = table.freq_terms(d.freq_hz);
+            assert_eq!(cell.decision.delay_s.to_bits(), d.delay_s.to_bits());
+            assert_eq!(cell.decision.energy_j.to_bits(), d.energy_j.to_bits());
+            assert_eq!(
+                cell.device_compute_s.to_bits(),
+                table.device_compute_round(d.cut).to_bits()
+            );
+            assert_eq!(
+                cell.server_compute_s.to_bits(),
+                table.server_compute_round(d.cut, &ft).to_bits()
+            );
+            assert_eq!(
+                cell.transmission_s.to_bits(),
+                table.transmission(d.cut, rates).to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn cache_roundtrip_and_counters() {
+        let cache = DecisionCache::new(3);
+        let key = DecisionCache::key(12.0, -8.0);
+        assert!(cache.lookup(1, key).is_none());
+        cache.store(1, key, 32, 2.46e9, 0.125);
+        let (c, f, u) = cache.lookup(1, key).unwrap();
+        assert_eq!(c, 32);
+        assert_eq!(f.to_bits(), 2.46e9f64.to_bits());
+        assert_eq!(u.to_bits(), 0.125f64.to_bits());
+        // same key, different device: independent slot
+        assert!(cache.lookup(2, key).is_none());
+        let (h, m) = cache.stats();
+        assert_eq!((h, m), (1, 2));
+        assert!((cache.hit_rate() - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cache_key_tracks_cqi_buckets() {
+        // same CQI bucket -> same key; different bucket -> different key
+        assert_eq!(DecisionCache::key(6.0, 12.0), DecisionCache::key(7.8, 13.9));
+        assert_ne!(DecisionCache::key(6.0, 12.0), DecisionCache::key(9.0, 12.0));
+        // outage maps to its own bucket
+        assert_eq!(DecisionCache::key(-30.0, -30.0), 0);
+        assert!(DecisionCache::key(50.0, 50.0) < 256);
+    }
+
+    #[test]
+    fn concurrent_fills_converge() {
+        let cache = std::sync::Arc::new(DecisionCache::new(1));
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                let cache = cache.clone();
+                scope.spawn(move || {
+                    for _ in 0..1000 {
+                        match cache.lookup(0, 7) {
+                            Some((c, f, u)) => {
+                                assert_eq!(c, 5);
+                                assert_eq!(f.to_bits(), 1.5e9f64.to_bits());
+                                assert_eq!(u.to_bits(), 0.25f64.to_bits());
+                            }
+                            None => cache.store(0, 7, 5, 1.5e9, 0.25),
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(cache.lookup(0, 7).unwrap().0, 5);
+    }
+}

@@ -6,10 +6,12 @@ pub mod aggregator;
 pub mod baselines;
 pub mod card;
 pub mod cost;
+pub mod kernel;
 pub mod scheduler;
 
 pub use aggregator::Aggregator;
 pub use baselines::Strategy;
 pub use card::{Card, Decision};
 pub use cost::{Bounds, CostModel};
+pub use kernel::{CellEval, CutTable, DecisionCache, ModelTerms};
 pub use scheduler::{build_cost_model, BackendStats, RoundRecord, Scheduler, TrainBackend};

@@ -24,14 +24,19 @@
 //! serial path **bit for bit** (asserted by `rust/tests/fleet_parallel.rs`
 //! and the `fleet-sweep` CLI's determinism gate).
 
+use std::sync::Arc;
+
 use crate::config::{ChannelState, ExpConfig};
 use crate::model::{DataSizeModel, DelayModel, EnergyModel, FlopModel, LlmArch};
+use crate::net::channel::LinkRealization;
 use crate::net::Channel;
 use crate::util::pool;
 use crate::util::rng::{Rng, SplitMix64};
 
 use super::baselines::Strategy;
+use super::card::Decision;
 use super::cost::CostModel;
+use super::kernel::{CellEval, CutTable, DecisionCache, ModelTerms};
 
 /// Real-compute hook (implemented by `runtime::SplitExecutor`).
 pub trait TrainBackend {
@@ -65,8 +70,10 @@ impl TrainBackend for NullBackend {
 pub struct RoundRecord {
     pub round: usize,
     pub device_idx: usize,
-    pub device_name: String,
-    pub strategy: String,
+    /// interned — one allocation per device, not per record
+    pub device_name: Arc<str>,
+    /// interned — one allocation per scheduler
+    pub strategy: Arc<str>,
     // Stage 1 decision
     pub cut: usize,
     pub freq_hz: f64,
@@ -114,6 +121,18 @@ pub struct Scheduler {
     pub strategy: Strategy,
     /// Root of the per-(round, device) RNG stream tree.
     stream_root: u64,
+    /// Decision kernel: one precomputed cut table per device, sharing
+    /// one `ModelTerms` (DESIGN.md §12).
+    tables: Vec<CutTable>,
+    /// CQI-keyed decision memo (bypassed by non-cacheable strategies).
+    cache: DecisionCache,
+    /// Interned device names (one `Arc` clone per record, no `String`).
+    names: Vec<Arc<str>>,
+    strategy_name: Arc<str>,
+    /// Per-device (uplink, downlink) mean SNR [dB] — pathloss is a pure
+    /// function of the fixed placement, so it is computed once here and
+    /// only the per-round fading term varies.
+    mean_snrs: Vec<(f64, f64)>,
 }
 
 impl Scheduler {
@@ -121,13 +140,51 @@ impl Scheduler {
         let cost_model = build_cost_model(&cfg);
         let channel = Channel::new(cfg.channel.clone(), state);
         let stream_root = cfg.seed ^ ((state.pathloss_exp() as u64) << 32);
+        let terms = Arc::new(ModelTerms::new(&cost_model, &cfg.server));
+        let tables = cfg.devices.iter().map(|d| CutTable::new(terms.clone(), d)).collect();
+        // non-cacheable strategies never touch the cache — skip the
+        // n_devices × 256-slot allocation entirely
+        let cache_devices = if strategy.cacheable() {
+            cfg.devices.len()
+        } else {
+            0
+        };
+        let cache = DecisionCache::new(cache_devices);
+        let names = cfg.devices.iter().map(|d| Arc::from(d.name.as_str())).collect();
+        let strategy_name: Arc<str> = Arc::from(strategy.name().as_str());
+        let mut mean_snrs = Vec::with_capacity(cfg.devices.len());
+        for d in &cfg.devices {
+            let up = channel.mean_snr_db(d.distance_m, channel.spec.tx_power_device_dbm);
+            let down = channel.mean_snr_db(d.distance_m, channel.spec.tx_power_ap_dbm);
+            mean_snrs.push((up, down));
+        }
         Self {
             cfg,
             cost_model,
             channel,
             strategy,
             stream_root,
+            tables,
+            cache,
+            names,
+            strategy_name,
+            mean_snrs,
         }
+    }
+
+    /// The per-device cut tables (read-only kernel view).
+    pub fn tables(&self) -> &[CutTable] {
+        &self.tables
+    }
+
+    /// Decision-cache `(hits, misses)` since construction.
+    pub fn cache_stats(&self) -> (u64, u64) {
+        self.cache.stats()
+    }
+
+    /// Decision-cache hit rate since construction.
+    pub fn cache_hit_rate(&self) -> f64 {
+        self.cache.hit_rate()
     }
 
     /// The RNG stream for one `(round, device)` cell — a pure function
@@ -139,37 +196,74 @@ impl Scheduler {
         ))
     }
 
-    /// Execute Stages 1–5 analytically for one `(round, device)` cell.
+    /// Block-fading realization for one cell, from the precomputed
+    /// per-device mean SNRs — bit-identical to `Channel::realize`.
+    #[inline]
+    fn realize_link(&self, device_idx: usize, rng: &mut Rng) -> LinkRealization {
+        let (mean_up, mean_down) = self.mean_snrs[device_idx];
+        self.channel.realize_from_means(mean_up, mean_down, rng)
+    }
+
+    /// Execute Stages 1–5 analytically for one `(round, device)` cell,
+    /// through the decision kernel and (for cacheable strategies) the
+    /// CQI-keyed decision cache.
     ///
     /// Pure with respect to the scheduler (`&self`): the block-fading
     /// realization and any stochastic decision (Random-cut) both draw
-    /// from the cell's own stream, so cells can run in any order or in
-    /// parallel and produce identical records.
+    /// from the cell's own stream, and cache hits replay exactly what
+    /// the scan would compute (DESIGN.md §12), so cells can run in any
+    /// order or in parallel and produce identical records.
     pub fn device_round(&self, round: usize, device_idx: usize) -> RoundRecord {
-        let dev = &self.cfg.devices[device_idx];
         let mut rng = self.cell_rng(round, device_idx);
+        let link = self.realize_link(device_idx, &mut rng);
+        let table = &self.tables[device_idx];
 
-        // block-fading realization for this (device, round)
-        let link = self.channel.realize(dev, &mut rng);
+        // Stage 1: decision — memoized per (device, CQI pair)
+        if self.strategy.cacheable() {
+            let key = DecisionCache::key(link.snr_up_db, link.snr_down_db);
+            if let Some((cut, f_hz, cost)) = self.cache.lookup(device_idx, key) {
+                // hit fast path: decision + record decomposition fused
+                let cell = table.realize_cell(cut, f_hz, cost, link.rates);
+                return self.record_from_cell(round, device_idx, &link, cell);
+            }
+            let d = self.strategy.decide_on(table, link.rates, &mut rng);
+            self.cache.store(device_idx, key, d.cut, d.freq_hz, d.cost);
+            self.cell_record(round, device_idx, &link, d)
+        } else {
+            let d = self.strategy.decide_on(table, link.rates, &mut rng);
+            self.cell_record(round, device_idx, &link, d)
+        }
+    }
 
-        // Stage 1: decision
+    /// The kernel scan with the cache bypassed — the uncached reference
+    /// the cache property tests compare against.
+    pub fn device_round_uncached(&self, round: usize, device_idx: usize) -> RoundRecord {
+        let mut rng = self.cell_rng(round, device_idx);
+        let link = self.realize_link(device_idx, &mut rng);
         let decision = self
             .strategy
-            .decide(&self.cost_model, &self.cfg.server, dev, link.rates, &mut rng);
+            .decide_on(&self.tables[device_idx], link.rates, &mut rng);
+        self.cell_record(round, device_idx, &link, decision)
+    }
 
-        // Stages 2–5: analytic accounting (Eqs. 7–11)
+    /// The pre-kernel cell path — full model re-evaluation per cost
+    /// call, no tables, no cache.  Retained as the bit-compat oracle
+    /// (`rust/tests/decision_kernel.rs`) and `card-bench` baseline.
+    pub fn device_round_ref(&self, round: usize, device_idx: usize) -> RoundRecord {
+        let dev = &self.cfg.devices[device_idx];
+        let mut rng = self.cell_rng(round, device_idx);
+        let link = self.channel.realize(dev, &mut rng);
+        let decision = self
+            .strategy
+            .decide_ref(&self.cost_model, &self.cfg.server, dev, link.rates, &mut rng);
+
         let dm = &self.cost_model.delay;
         let t = self.cfg.workload.local_epochs as f64;
-        let device_compute_s = t * dm.device_compute(decision.cut, dev);
-        let server_compute_s =
-            t * dm.server_compute(decision.cut, &self.cfg.server, decision.freq_hz);
-        let transmission_s = dm.transmission(decision.cut, link.rates);
-
         RoundRecord {
             round,
             device_idx,
-            device_name: dev.name.clone(),
-            strategy: self.strategy.name(),
+            device_name: self.names[device_idx].clone(),
+            strategy: self.strategy_name.clone(),
             cut: decision.cut,
             freq_hz: decision.freq_hz,
             cost: decision.cost,
@@ -178,14 +272,87 @@ impl Scheduler {
             rate_up_bps: link.rates.up_bps,
             rate_down_bps: link.rates.down_bps,
             delay_s: decision.delay_s,
-            device_compute_s,
-            server_compute_s,
-            transmission_s,
+            device_compute_s: t * dm.device_compute(decision.cut, dev),
+            server_compute_s: t
+                * dm.server_compute(decision.cut, &self.cfg.server, decision.freq_hz),
+            transmission_s: dm.transmission(decision.cut, link.rates),
             energy_j: decision.energy_j,
             adapter_bytes: dm.sizes.adapter_bytes(decision.cut),
             smashed_bytes_round: t
                 * (dm.sizes.smashed_wire_bytes(decision.cut)
                     + dm.sizes.grad_wire_bytes(decision.cut)),
+            loss: None,
+            backend_wallclock_s: None,
+        }
+    }
+
+    /// Build the round record from a fused [`CellEval`] (cache-hit fast
+    /// path) — bit-identical to [`Scheduler::cell_record`].
+    fn record_from_cell(
+        &self,
+        round: usize,
+        device_idx: usize,
+        link: &LinkRealization,
+        cell: CellEval,
+    ) -> RoundRecord {
+        let table = &self.tables[device_idx];
+        let t = self.cfg.workload.local_epochs as f64;
+        let d = cell.decision;
+        RoundRecord {
+            round,
+            device_idx,
+            device_name: self.names[device_idx].clone(),
+            strategy: self.strategy_name.clone(),
+            cut: d.cut,
+            freq_hz: d.freq_hz,
+            cost: d.cost,
+            snr_up_db: link.snr_up_db,
+            snr_down_db: link.snr_down_db,
+            rate_up_bps: link.rates.up_bps,
+            rate_down_bps: link.rates.down_bps,
+            delay_s: d.delay_s,
+            device_compute_s: cell.device_compute_s,
+            server_compute_s: cell.server_compute_s,
+            transmission_s: cell.transmission_s,
+            energy_j: d.energy_j,
+            adapter_bytes: table.terms.adapter_bytes[d.cut],
+            smashed_bytes_round: t * table.terms.wire_bytes_epoch[d.cut],
+            loss: None,
+            backend_wallclock_s: None,
+        }
+    }
+
+    /// Stages 2–5: analytic accounting (Eqs. 7–11) from kernel terms.
+    fn cell_record(
+        &self,
+        round: usize,
+        device_idx: usize,
+        link: &LinkRealization,
+        decision: Decision,
+    ) -> RoundRecord {
+        let table = &self.tables[device_idx];
+        let ft = table.freq_terms(decision.freq_hz);
+        let t = self.cfg.workload.local_epochs as f64;
+        let cut = decision.cut;
+        RoundRecord {
+            round,
+            device_idx,
+            device_name: self.names[device_idx].clone(),
+            strategy: self.strategy_name.clone(),
+            cut,
+            freq_hz: decision.freq_hz,
+            cost: decision.cost,
+            snr_up_db: link.snr_up_db,
+            snr_down_db: link.snr_down_db,
+            rate_up_bps: link.rates.up_bps,
+            rate_down_bps: link.rates.down_bps,
+            delay_s: decision.delay_s,
+            device_compute_s: table.device_compute_round(cut),
+            server_compute_s: table.server_compute_round(cut, &ft),
+            transmission_s: table.transmission(cut, link.rates),
+            energy_j: decision.energy_j,
+            adapter_bytes: table.terms.adapter_bytes[cut],
+            smashed_bytes_round: t * table.terms.wire_bytes_epoch[cut],
             loss: None,
             backend_wallclock_s: None,
         }
@@ -227,6 +394,31 @@ impl Scheduler {
             .flat_map(|n| (0..self.cfg.devices.len()).map(move |i| (n, i)))
             .collect();
         pool::par_map_indexed(threads, &cells, |_, &(n, i)| self.device_round(n, i))
+    }
+
+    /// All configured rounds through the kernel scan with the decision
+    /// cache bypassed — serial; the reference stream for the cache
+    /// bit-compat property tests.
+    pub fn run_uncached(&self) -> Vec<RoundRecord> {
+        let mut all = Vec::with_capacity(self.cfg.workload.rounds * self.cfg.devices.len());
+        for n in 0..self.cfg.workload.rounds {
+            for i in 0..self.cfg.devices.len() {
+                all.push(self.device_round_uncached(n, i));
+            }
+        }
+        all
+    }
+
+    /// All configured rounds through the pre-kernel reference path —
+    /// serial; the legacy oracle for the kernel bit-compat tests.
+    pub fn run_ref(&self) -> Vec<RoundRecord> {
+        let mut all = Vec::with_capacity(self.cfg.workload.rounds * self.cfg.devices.len());
+        for n in 0..self.cfg.workload.rounds {
+            for i in 0..self.cfg.devices.len() {
+                all.push(self.device_round_ref(n, i));
+            }
+        }
+        all
     }
 
     /// Analytic-only round (no real compute), serial reference path.
@@ -337,6 +529,38 @@ mod tests {
             let serial = s.run_analytic().unwrap();
             assert_bit_identical(&serial, &s.run_parallel(8));
         }
+    }
+
+    #[test]
+    fn cached_engine_bitwise_matches_uncached_and_legacy() {
+        for strategy in [
+            Strategy::Card,
+            Strategy::ServerOnly,
+            Strategy::DeviceOnly,
+            Strategy::StaticCut(16),
+            Strategy::RandomCut,
+        ] {
+            let s = Scheduler::new(quick_cfg(), ChannelState::Poor, strategy);
+            let cached = s.run_analytic().unwrap();
+            assert_bit_identical(&cached, &s.run_uncached());
+            assert_bit_identical(&cached, &s.run_ref());
+        }
+    }
+
+    #[test]
+    fn cache_hits_accumulate_for_card_but_not_random_cut() {
+        let mut cfg = quick_cfg();
+        cfg.workload.rounds = 30;
+        let s = Scheduler::new(cfg.clone(), ChannelState::Normal, Strategy::Card);
+        s.run_analytic().unwrap();
+        let (hits, misses) = s.cache_stats();
+        assert!(hits > 0, "30 rounds of fading must revisit a CQI pair");
+        assert!(misses > 0);
+        assert!(s.cache_hit_rate() > 0.0 && s.cache_hit_rate() < 1.0);
+        // Random-cut bypasses the cache entirely
+        let r = Scheduler::new(cfg, ChannelState::Normal, Strategy::RandomCut);
+        r.run_analytic().unwrap();
+        assert_eq!(r.cache_stats(), (0, 0));
     }
 
     #[test]

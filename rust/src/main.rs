@@ -7,6 +7,7 @@
 //! edgesplit ablate --sweep w     # A1/A2 sweeps
 //! edgesplit fleet-sweep          # scenario × device-count grid (parallel)
 //! edgesplit des-sweep            # discrete-event engine: policy × scenario grid
+//! edgesplit card-bench           # decision kernel: legacy vs table vs cached
 //! edgesplit decide --state poor  # one-shot CARD decision per device
 //! edgesplit train --arch tiny    # REAL split fine-tuning (PJRT)
 //! edgesplit show devices|params  # Table I / Table II
@@ -22,7 +23,7 @@ use edgesplit::data::{Batcher, Corpus};
 use edgesplit::des::{self, Policy};
 use edgesplit::net::Channel;
 use edgesplit::runtime::{artifact_dir, ArtifactStore, SplitExecutor};
-use edgesplit::sim::{ablate, fig3, fig4, fleet};
+use edgesplit::sim::{ablate, cardbench, fig3, fig4, fleet};
 use edgesplit::util::benchkit::Bencher;
 use edgesplit::util::logging;
 use edgesplit::util::pool;
@@ -40,9 +41,11 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec { name: "sweep", value: Some("w|phi|bandwidth"), help: "ablation sweep to run", default: Some("w") },
         FlagSpec { name: "scenario", value: Some("name|all"), help: "sweep scenario preset (see `show scenarios`)", default: Some("all") },
         FlagSpec { name: "counts", value: Some("N,N,..."), help: "sweep device counts", default: Some("10,100,1000,10000") },
-        FlagSpec { name: "threads", value: Some("N"), help: "worker threads for parallel rounds (default: all cores)", default: None },
+        FlagSpec { name: "threads", value: Some("N"), help: "parallel participants per job (default: all cores; the persistent pool caps extra threads at core count — results are identical at any value)", default: None },
         FlagSpec { name: "out", value: Some("file.json"), help: "sweep JSON output path (default: BENCH_fleet.json / BENCH_des.json)", default: None },
         FlagSpec { name: "gate-all", value: None, help: "fleet-sweep: run the serial determinism gate at every grid point (default: largest only)", default: None },
+        FlagSpec { name: "devices", value: Some("N"), help: "card-bench fleet size", default: Some("10000") },
+        FlagSpec { name: "check", value: Some("file.json"), help: "card-bench: fail if decision speedups drop >30% vs this committed baseline", default: None },
         FlagSpec { name: "policy", value: Some("sync|semi-sync|async|all"), help: "des-sweep aggregation policy", default: Some("all") },
         FlagSpec { name: "capacity", value: Some("N"), help: "des-sweep server queue slots", default: Some("4") },
         FlagSpec { name: "batch", value: Some("N"), help: "des-sweep max jobs fused per server dispatch", default: Some("1") },
@@ -55,12 +58,13 @@ fn flag_specs() -> Vec<FlagSpec> {
     ]
 }
 
-const SUBCOMMANDS: [(&str, &str); 9] = [
+const SUBCOMMANDS: [(&str, &str); 10] = [
     ("fig3", "reproduce Fig. 3: cut layer + frequency decisions over rounds"),
     ("fig4", "reproduce Fig. 4: delay/energy vs baselines across channel states"),
     ("ablate", "A1/A2 sweeps: w, phi, bandwidth"),
     ("fleet-sweep", "scenario × device-count grid on the parallel round engine"),
     ("des-sweep", "discrete-event engine: policy × scenario × device-count grid"),
+    ("card-bench", "decision-kernel microbench: legacy vs cut-table vs cached (+pool)"),
     ("decide", "one-shot CARD decision for each device"),
     ("train", "REAL split fine-tuning over PJRT artifacts"),
     ("show", "print Table I (devices) / Table II (params) / arch / scenarios"),
@@ -132,6 +136,7 @@ fn run(argv: &[String]) -> Result<()> {
             args.str_of("out").unwrap_or("BENCH_fleet.json"),
         ),
         "des-sweep" => cmd_des_sweep(&args, cfg.seed, rounds_flag),
+        "card-bench" => cmd_card_bench(&args, cfg.seed, rounds_flag),
         "decide" => cmd_decide(&cfg, state),
         "train" => cmd_train(
             &cfg,
@@ -287,6 +292,45 @@ fn cmd_des_sweep(args: &Args, seed: u64, rounds: Option<usize>) -> Result<()> {
     Ok(())
 }
 
+fn cmd_card_bench(args: &Args, seed: u64, rounds: Option<usize>) -> Result<()> {
+    let scenario_sel = args.str_of("scenario").unwrap_or("all");
+    let scenario = if scenario_sel.eq_ignore_ascii_case("all") {
+        // card-bench measures one preset, not a grid — say so instead
+        // of silently reinterpreting the shared flag's default
+        println!("card-bench benches a single preset: using heterogeneous-fleet (pass --scenario <name> to pick another)\n");
+        scenario::HETEROGENEOUS_FLEET
+    } else {
+        parse_scenarios(scenario_sel)?[0]
+    };
+    let n_devices = args.usize_of("devices")?.unwrap_or(10_000);
+    let rounds = rounds.unwrap_or(10);
+    let threads = args
+        .usize_of("threads")?
+        .unwrap_or_else(pool::default_parallelism);
+    let out = args.str_of("out").unwrap_or("BENCH_card.json");
+
+    let mut bench = Bencher::new("card-bench");
+    let result = cardbench::run(&scenario, n_devices, rounds, threads, seed, &mut bench)?;
+    println!("{}\n", result.render());
+    bench.report();
+
+    // write the measurement before any guard verdict so a failing run
+    // still leaves its BENCH_card.json behind for inspection
+    std::fs::write(out, result.to_json().to_string() + "\n")
+        .map_err(|e| anyhow!("writing {out}: {e}"))?;
+    println!("\nwrote {out}");
+
+    if let Some(baseline_path) = args.str_of("check") {
+        let text = std::fs::read_to_string(baseline_path)
+            .map_err(|e| anyhow!("reading baseline {baseline_path}: {e}"))?;
+        let baseline = edgesplit::util::json::Json::parse(&text)
+            .map_err(|e| anyhow!("parsing baseline {baseline_path}: {e}"))?;
+        result.check_against(&baseline)?;
+        println!("regression guard: speedups within 30% of {baseline_path}");
+    }
+    Ok(())
+}
+
 fn cmd_decide(cfg: &ExpConfig, state: ChannelState) -> Result<()> {
     let cm = edgesplit::coordinator::build_cost_model(cfg);
     let channel = Channel::new(cfg.channel.clone(), state);
@@ -358,7 +402,7 @@ fn cmd_train(
     for r in &records {
         t.row(vec![
             r.round.to_string(),
-            r.device_name.clone(),
+            r.device_name.to_string(),
             r.cut.to_string(),
             r.loss.map(|l| format!("{l:.4}")).unwrap_or_default(),
             fmt_secs(r.delay_s),

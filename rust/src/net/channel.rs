@@ -43,15 +43,28 @@ impl Channel {
 
     /// Realize one round's links for a device (block fading).
     pub fn realize(&self, dev: &DeviceSpec, rng: &mut Rng) -> LinkRealization {
+        let mean_up = self.mean_snr_db(dev.distance_m, self.spec.tx_power_device_dbm);
+        let mean_down = self.mean_snr_db(dev.distance_m, self.spec.tx_power_ap_dbm);
+        self.realize_from_means(mean_up, mean_down, rng)
+    }
+
+    /// [`Channel::realize`] with the (placement-pure) mean SNRs already
+    /// computed — the fleet engine precomputes them per device so the
+    /// per-round cost is just the fading draw.  Draws the same RNG
+    /// stream in the same order, so the realization is bit-identical.
+    pub fn realize_from_means(
+        &self,
+        mean_up_db: f64,
+        mean_down_db: f64,
+        rng: &mut Rng,
+    ) -> LinkRealization {
         let (g_up, g_down) = if self.spec.fading {
             (rng.rayleigh_power(), rng.rayleigh_power())
         } else {
             (1.0, 1.0)
         };
-        let snr_up = self.mean_snr_db(dev.distance_m, self.spec.tx_power_device_dbm)
-            + lin_to_db(g_up);
-        let snr_down = self.mean_snr_db(dev.distance_m, self.spec.tx_power_ap_dbm)
-            + lin_to_db(g_down);
+        let snr_up = mean_up_db + lin_to_db(g_up);
+        let snr_down = mean_down_db + lin_to_db(g_down);
         LinkRealization {
             snr_up_db: snr_up,
             snr_down_db: snr_down,
@@ -138,6 +151,24 @@ mod tests {
             ch.realize(&d, &mut r1).rates.up_bps,
             ch.realize(&d, &mut r2).rates.up_bps
         );
+    }
+
+    #[test]
+    fn realize_from_means_bitwise_matches_realize() {
+        let ch = Channel::new(ChannelSpec::default(), Normal);
+        let d = dev(25.0);
+        let mean_up = ch.mean_snr_db(d.distance_m, ch.spec.tx_power_device_dbm);
+        let mean_down = ch.mean_snr_db(d.distance_m, ch.spec.tx_power_ap_dbm);
+        let mut r1 = Rng::new(77);
+        let mut r2 = Rng::new(77);
+        for _ in 0..50 {
+            let a = ch.realize(&d, &mut r1);
+            let b = ch.realize_from_means(mean_up, mean_down, &mut r2);
+            assert_eq!(a.snr_up_db.to_bits(), b.snr_up_db.to_bits());
+            assert_eq!(a.snr_down_db.to_bits(), b.snr_down_db.to_bits());
+            assert_eq!(a.rates.up_bps.to_bits(), b.rates.up_bps.to_bits());
+            assert_eq!(a.rates.down_bps.to_bits(), b.rates.down_bps.to_bits());
+        }
     }
 
     #[test]

@@ -36,16 +36,13 @@ pub const CQI_TABLE: [CqiEntry; 15] = [
 ];
 
 /// CQI index for a given SNR (0 = outage: below CQI-1 threshold).
+///
+/// Binary search over the (monotone) threshold column: the index is
+/// exactly the number of thresholds at or below `snr_db`.  This sits on
+/// the decision cache's key path (coordinator/kernel.rs), so it runs
+/// once per link per round.
 pub fn cqi_for_snr(snr_db: f64) -> u8 {
-    let mut best = 0;
-    for e in &CQI_TABLE {
-        if snr_db >= e.snr_db {
-            best = e.index;
-        } else {
-            break;
-        }
-    }
-    best
+    CQI_TABLE.partition_point(|e| e.snr_db <= snr_db) as u8
 }
 
 /// y(SNR): spectral efficiency [bit/s/Hz].  Outage -> 0.
@@ -86,6 +83,44 @@ mod tests {
         assert_eq!(cqi_for_snr(-6.71), 0);
         assert_eq!(cqi_for_snr(10.3), 9);
         assert_eq!(cqi_for_snr(10.29), 8);
+    }
+
+    /// The pre-PR linear scan, kept as the equivalence oracle.
+    fn cqi_for_snr_linear(snr_db: f64) -> u8 {
+        let mut best = 0;
+        for e in &CQI_TABLE {
+            if snr_db >= e.snr_db {
+                best = e.index;
+            } else {
+                break;
+            }
+        }
+        best
+    }
+
+    #[test]
+    fn binary_search_matches_linear_scan_on_dense_grid() {
+        // dense sweep across (and far beyond) the table's span,
+        // including every threshold and its immediate neighbourhood
+        let mut snr = -30.0;
+        while snr <= 40.0 {
+            assert_eq!(cqi_for_snr(snr), cqi_for_snr_linear(snr), "snr={snr}");
+            snr += 0.01;
+        }
+        for e in &CQI_TABLE {
+            for s in [
+                e.snr_db,
+                e.snr_db - 1e-12,
+                e.snr_db + 1e-12,
+                e.snr_db - 0.05,
+                e.snr_db + 0.05,
+            ] {
+                assert_eq!(cqi_for_snr(s), cqi_for_snr_linear(s), "snr={s}");
+            }
+        }
+        for s in [f64::NEG_INFINITY, f64::INFINITY, -1e9, 1e9] {
+            assert_eq!(cqi_for_snr(s), cqi_for_snr_linear(s), "snr={s}");
+        }
     }
 
     #[test]

@@ -1,0 +1,348 @@
+//! `card-bench`: the decision-kernel microbenchmark (DESIGN.md §12,
+//! EXPERIMENTS.md) — measures the Alg.-1 decision path three ways over
+//! one realized channel trace and emits `BENCH_card.json` so the perf
+//! trajectory is machine-readable from CI:
+//!
+//! * **legacy** — the pre-kernel scan (`Strategy::decide_ref`): every
+//!   cost call re-derives the FLOP/size model terms;
+//! * **kernel** — the precomputed `CutTable` slice scan;
+//! * **cached** — the kernel behind the CQI-keyed decision cache.
+//!
+//! All three modes see the *same* per-cell link realizations, and the
+//! kernel/cached decisions are asserted bit-identical to legacy before
+//! any rate is reported — a benchmark that drifted from the reference
+//! would be measuring a different computation.
+//!
+//! The regression guard (`--check`) compares **speedups** (kernel and
+//! cached decisions/sec normalized by the same-run legacy rate), not
+//! raw decisions/sec: raw rates track the host CPU, while the ratio is
+//! a property of the code.  The guard fails when a speedup drops below
+//! 70% of the committed baseline's — i.e. a >30% decisions/sec
+//! regression relative to what the baseline machine would see.
+
+use crate::config::scenario::{Scenario, HETEROGENEOUS_FLEET};
+use crate::coordinator::{Decision, DecisionCache, Scheduler, Strategy};
+use crate::net::channel::LinkRealization;
+use crate::util::benchkit::Bencher;
+use crate::util::json::{self, Json};
+use crate::util::pool;
+use crate::util::rng::Rng;
+
+/// One full `card-bench` measurement.
+#[derive(Clone, Debug)]
+pub struct CardBench {
+    pub scenario: String,
+    pub n_devices: usize,
+    pub rounds: usize,
+    pub threads: usize,
+    pub seed: u64,
+    /// decisions timed per mode (n_devices × rounds)
+    pub decisions: usize,
+    pub legacy_decisions_per_s: f64,
+    pub kernel_decisions_per_s: f64,
+    pub cached_decisions_per_s: f64,
+    pub speedup_kernel_vs_legacy: f64,
+    pub speedup_cached_vs_legacy: f64,
+    pub cache_hit_rate: f64,
+    /// full engine cells/sec (decision + channel + record), serial
+    pub cells_serial_per_s: f64,
+    /// same on the persistent worker pool with `threads` participants
+    pub cells_pooled_per_s: f64,
+    pub pool_speedup: f64,
+}
+
+/// Position-dependent digest over **every** `Decision` field: a
+/// divergence in any field at any cell — including two opposite-sign
+/// divergences that a plain sum would cancel — changes the value.
+fn digest(acc: u64, idx: usize, d: &Decision) -> u64 {
+    let mut h = acc ^ (idx as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    for bits in [
+        d.cut as u64,
+        d.freq_hz.to_bits(),
+        d.cost.to_bits(),
+        d.delay_s.to_bits(),
+        d.energy_j.to_bits(),
+    ] {
+        h = (h ^ bits).wrapping_mul(0x100_0000_01B3);
+    }
+    h
+}
+
+/// Run the benchmark on `scenario` with an `n_devices` synthetic fleet.
+pub fn run(
+    scenario: &Scenario,
+    n_devices: usize,
+    rounds: usize,
+    threads: usize,
+    seed: u64,
+    bench: &mut Bencher,
+) -> anyhow::Result<CardBench> {
+    anyhow::ensure!(n_devices > 0, "device count must be >= 1");
+    anyhow::ensure!(rounds > 0, "rounds must be >= 1");
+    let mut cfg = scenario.config(n_devices, seed)?;
+    cfg.workload.rounds = rounds;
+    let sched = Scheduler::new(cfg.clone(), scenario.state, Strategy::Card);
+
+    // one shared channel trace: every mode decides on identical rates
+    let mut rng = Rng::new(seed ^ 0xCA7D);
+    let mut cells: Vec<(usize, LinkRealization)> = Vec::with_capacity(n_devices * rounds);
+    for _ in 0..rounds {
+        for (i, dev) in cfg.devices.iter().enumerate() {
+            cells.push((i, sched.channel.realize(dev, &mut rng)));
+        }
+    }
+    let decisions = cells.len();
+
+    // --- legacy: pre-kernel scan, full model re-evaluation ------------
+    let mut dummy = Rng::new(0); // CARD never draws from it
+    let t0 = std::time::Instant::now();
+    let mut legacy_digest = 0u64;
+    for (idx, &(i, link)) in cells.iter().enumerate() {
+        let d = Strategy::Card.decide_ref(
+            &sched.cost_model,
+            &cfg.server,
+            &cfg.devices[i],
+            link.rates,
+            &mut dummy,
+        );
+        legacy_digest = digest(legacy_digest, idx, &d);
+    }
+    let legacy_s = t0.elapsed().as_secs_f64();
+
+    // --- kernel: precomputed cut-table scan ---------------------------
+    let tables = sched.tables();
+    let t0 = std::time::Instant::now();
+    let mut kernel_digest = 0u64;
+    for (idx, &(i, link)) in cells.iter().enumerate() {
+        let d = Strategy::Card.decide_on(&tables[i], link.rates, &mut dummy);
+        kernel_digest = digest(kernel_digest, idx, &d);
+    }
+    let kernel_s = t0.elapsed().as_secs_f64();
+    anyhow::ensure!(
+        kernel_digest == legacy_digest,
+        "kernel scan diverged from the legacy reference — refusing to report"
+    );
+
+    // --- cached: kernel behind the CQI-keyed memo ---------------------
+    let cache = DecisionCache::new(n_devices);
+    let t0 = std::time::Instant::now();
+    let mut cached_digest = 0u64;
+    for (idx, &(i, link)) in cells.iter().enumerate() {
+        let key = DecisionCache::key(link.snr_up_db, link.snr_down_db);
+        let d = match cache.lookup(i, key) {
+            Some((cut, f_hz, cost)) => tables[i].realize(cut, f_hz, cost, link.rates),
+            None => {
+                let d = Strategy::Card.decide_on(&tables[i], link.rates, &mut dummy);
+                cache.store(i, key, d.cut, d.freq_hz, d.cost);
+                d
+            }
+        };
+        cached_digest = digest(cached_digest, idx, &d);
+    }
+    let cached_s = t0.elapsed().as_secs_f64();
+    anyhow::ensure!(
+        cached_digest == legacy_digest,
+        "cached path diverged from the legacy reference — refusing to report"
+    );
+
+    // --- whole-engine cells/sec: serial vs persistent pool ------------
+    // fresh schedulers so both start from a cold decision cache
+    let serial_sched = Scheduler::new(cfg.clone(), scenario.state, Strategy::Card);
+    let t0 = std::time::Instant::now();
+    let serial_records = serial_sched.run_analytic()?;
+    let serial_s = t0.elapsed().as_secs_f64();
+
+    let pooled_sched = Scheduler::new(cfg, scenario.state, Strategy::Card);
+    // warm the persistent pool so the timed window measures cells, not
+    // the one-time worker spawn
+    pool::global().workers();
+    let t0 = std::time::Instant::now();
+    let pooled_records = pooled_sched.run_parallel(threads);
+    let pooled_s = t0.elapsed().as_secs_f64();
+    super::fleet::verify_bit_identical(&serial_records, &pooled_records)?;
+
+    let per_s = |elapsed: f64| decisions as f64 / elapsed.max(1e-9);
+    let result = CardBench {
+        scenario: scenario.name.to_string(),
+        n_devices,
+        rounds,
+        threads,
+        seed,
+        decisions,
+        legacy_decisions_per_s: per_s(legacy_s),
+        kernel_decisions_per_s: per_s(kernel_s),
+        cached_decisions_per_s: per_s(cached_s),
+        speedup_kernel_vs_legacy: legacy_s / kernel_s.max(1e-12),
+        speedup_cached_vs_legacy: legacy_s / cached_s.max(1e-12),
+        cache_hit_rate: cache.hit_rate(),
+        cells_serial_per_s: per_s(serial_s),
+        cells_pooled_per_s: per_s(pooled_s),
+        pool_speedup: serial_s / pooled_s.max(1e-12),
+    };
+    let rows = [
+        ("decide_legacy", legacy_s, result.legacy_decisions_per_s, "decision"),
+        ("decide_kernel", kernel_s, result.kernel_decisions_per_s, "decision"),
+        ("decide_cached", cached_s, result.cached_decisions_per_s, "decision"),
+        ("cells_serial", serial_s, result.cells_serial_per_s, "cell"),
+        ("cells_pooled", pooled_s, result.cells_pooled_per_s, "cell"),
+    ];
+    for (name, secs, rate, unit) in rows {
+        bench.record_once(name, secs, Some((rate, unit)));
+    }
+    Ok(result)
+}
+
+/// Run with the acceptance-spec defaults: heterogeneous-fleet preset.
+pub fn run_default(
+    n_devices: usize,
+    rounds: usize,
+    threads: usize,
+    seed: u64,
+    bench: &mut Bencher,
+) -> anyhow::Result<CardBench> {
+    run(&HETEROGENEOUS_FLEET, n_devices, rounds, threads, seed, bench)
+}
+
+impl CardBench {
+    /// Human summary (what the CLI prints above the bench table).
+    pub fn render(&self) -> String {
+        format!(
+            "card-bench — {} × {} devices × {} rounds (seed {})\n\
+             decisions/sec   legacy {:>12.0}   kernel {:>12.0} ({:.1}×)   cached {:>12.0} ({:.1}×)\n\
+             cache hit-rate  {:.1}%\n\
+             cells/sec       serial {:>12.0}   pooled {:>12.0} ({:.1}× on {} threads)",
+            self.scenario,
+            self.n_devices,
+            self.rounds,
+            self.seed,
+            self.legacy_decisions_per_s,
+            self.kernel_decisions_per_s,
+            self.speedup_kernel_vs_legacy,
+            self.cached_decisions_per_s,
+            self.speedup_cached_vs_legacy,
+            100.0 * self.cache_hit_rate,
+            self.cells_serial_per_s,
+            self.cells_pooled_per_s,
+            self.pool_speedup,
+            self.threads,
+        )
+    }
+
+    /// Machine-readable dump (the `BENCH_card.json` payload).
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("schema", Json::Str("edgesplit/card-bench/v1".into())),
+            ("scenario", Json::Str(self.scenario.clone())),
+            ("n_devices", Json::Num(self.n_devices as f64)),
+            ("rounds", Json::Num(self.rounds as f64)),
+            ("threads", Json::Num(self.threads as f64)),
+            // string, not number: u64 seeds above 2^53 would lose
+            // precision through the f64-backed Json::Num
+            ("seed", Json::Str(self.seed.to_string())),
+            ("decisions", Json::Num(self.decisions as f64)),
+            ("legacy_decisions_per_s", Json::Num(self.legacy_decisions_per_s)),
+            ("kernel_decisions_per_s", Json::Num(self.kernel_decisions_per_s)),
+            ("cached_decisions_per_s", Json::Num(self.cached_decisions_per_s)),
+            ("speedup_kernel_vs_legacy", Json::Num(self.speedup_kernel_vs_legacy)),
+            ("speedup_cached_vs_legacy", Json::Num(self.speedup_cached_vs_legacy)),
+            ("cache_hit_rate", Json::Num(self.cache_hit_rate)),
+            ("cells_serial_per_s", Json::Num(self.cells_serial_per_s)),
+            ("cells_pooled_per_s", Json::Num(self.cells_pooled_per_s)),
+            ("pool_speedup", Json::Num(self.pool_speedup)),
+        ])
+    }
+
+    /// The CI regression guard: fail when a decision-path speedup drops
+    /// below 70% of the committed baseline's (see the module docs for
+    /// why speedups, not raw rates, are compared).
+    pub fn check_against(&self, baseline: &Json) -> anyhow::Result<()> {
+        let field = |name: &str| -> anyhow::Result<f64> {
+            baseline
+                .get(name)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("baseline is missing numeric field '{name}'"))
+        };
+        let kernel_floor = 0.7 * field("speedup_kernel_vs_legacy")?;
+        let cached_floor = 0.7 * field("speedup_cached_vs_legacy")?;
+        anyhow::ensure!(
+            self.speedup_kernel_vs_legacy >= kernel_floor,
+            "decision-kernel regression: kernel speedup {:.2}× fell below 70% of the \
+             committed baseline ({:.2}× floor)",
+            self.speedup_kernel_vs_legacy,
+            kernel_floor
+        );
+        anyhow::ensure!(
+            self.speedup_cached_vs_legacy >= cached_floor,
+            "decision-cache regression: cached speedup {:.2}× fell below 70% of the \
+             committed baseline ({:.2}× floor)",
+            self.speedup_cached_vs_legacy,
+            cached_floor
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> CardBench {
+        let mut bench = Bencher::new("card-bench-test");
+        run_default(40, 3, 2, 5, &mut bench).unwrap()
+    }
+
+    #[test]
+    fn measures_all_three_modes_and_agrees() {
+        let r = quick();
+        assert_eq!(r.decisions, 120);
+        assert!(r.legacy_decisions_per_s > 0.0);
+        assert!(r.kernel_decisions_per_s > 0.0);
+        assert!(r.cached_decisions_per_s > 0.0);
+        assert!(r.speedup_kernel_vs_legacy > 0.0);
+        assert!(r.cache_hit_rate >= 0.0 && r.cache_hit_rate <= 1.0);
+        assert!(r.cells_serial_per_s > 0.0 && r.cells_pooled_per_s > 0.0);
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let r = quick();
+        let js = r.to_json().to_string();
+        assert!(js.contains("card-bench/v1"));
+        assert!(js.contains("speedup_kernel_vs_legacy"));
+        assert!(js.contains("cache_hit_rate"));
+        let parsed = Json::parse(&js).unwrap();
+        assert_eq!(parsed.get("n_devices").and_then(Json::as_usize), Some(r.n_devices));
+    }
+
+    #[test]
+    fn check_accepts_self_and_rejects_inflated_baseline() {
+        let r = quick();
+        // a result always clears a baseline of itself
+        r.check_against(&Json::parse(&r.to_json().to_string()).unwrap()).unwrap();
+        // a baseline claiming an absurd speedup must trip the guard
+        let inflated = json::obj(vec![
+            ("speedup_kernel_vs_legacy", Json::Num(1e9)),
+            ("speedup_cached_vs_legacy", Json::Num(1e9)),
+        ]);
+        assert!(r.check_against(&inflated).is_err());
+        // and a malformed baseline is an error, not a silent pass
+        assert!(r.check_against(&Json::Null).is_err());
+    }
+
+    #[test]
+    fn rejects_degenerate_input() {
+        let mut bench = Bencher::new("bad");
+        assert!(run_default(0, 2, 1, 0, &mut bench).is_err());
+        assert!(run_default(4, 0, 1, 0, &mut bench).is_err());
+    }
+
+    #[test]
+    fn render_mentions_every_mode() {
+        let s = quick().render();
+        assert!(s.contains("legacy"));
+        assert!(s.contains("kernel"));
+        assert!(s.contains("cached"));
+        assert!(s.contains("cache hit-rate"));
+        assert!(s.contains("pooled"));
+    }
+}

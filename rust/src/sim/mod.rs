@@ -3,10 +3,12 @@
 //! index).
 
 pub mod ablate;
+pub mod cardbench;
 pub mod fig3;
 pub mod fig4;
 pub mod fleet;
 pub mod metrics;
 
+pub use cardbench::CardBench;
 pub use fleet::{FleetPoint, FleetSweep};
 pub use metrics::{reduction_pct, Percentiles, Summary};

@@ -1,15 +1,43 @@
-//! Dependency-free fork-join worker pool (no `rayon` in the offline
-//! crate set): a scoped-thread `par_map` with work stealing via an
-//! atomic cursor.
+//! Dependency-free **persistent** fork-join worker pool (no `rayon` in
+//! the offline crate set).
 //!
-//! Output order is always the input order, regardless of which worker
-//! finishes first, so callers that pair this with order-independent
-//! per-item RNG streams (see `rng::SplitMix64::stream_seed`) get
-//! bit-identical results at any thread count — the invariant the fleet
-//! round engine is built on.
+//! Workers are spawned once per [`WorkerPool`] (the process-wide
+//! [`global`] pool lives for the whole run) and sleep on a condvar
+//! between jobs, so fleet engines pay thread-start cost once — not once
+//! per round, as the previous `std::thread::scope` implementation did.
+//! Items are claimed in chunks off an atomic cursor and results are
+//! written **lock-free** straight into their final slot (the previous
+//! per-item `Mutex<Option<R>>` is gone).
+//!
+//! Output order is always the input order (`results[i]` comes from
+//! `items[i]`, whichever worker computed it), so callers that pair this
+//! with order-independent per-item RNG streams (see
+//! `rng::SplitMix64::stream_seed`) get bit-identical results at any
+//! worker count — the invariant the fleet round engine is built on.
+//!
+//! ## Job protocol (what makes the borrowed closures sound)
+//!
+//! [`WorkerPool::run_map`] publishes a type-erased pointer to a stack
+//! `JobCtx` that borrows `items`, `f`, and the result buffer.  The
+//! publishing thread participates in the claim loop itself and does not
+//! return until, under the pool mutex, every helper that joined the job
+//! has left it (`active == 0`) and the job slot is cleared — so no
+//! worker can observe the context after `run_map` returns.  A worker
+//! that wakes late sees either a cleared slot (sleeps) or joins while
+//! the publisher is still blocked (counted in `active`).  If the pool
+//! is already busy (nested or concurrent call) the job runs inline on
+//! the caller — bit-identical by the ordering invariant.
+//!
+//! A panicking task is caught on the worker, recorded, and re-raised on
+//! the caller after the job drains; results computed before the panic
+//! are leaked (never dropped), which is safe, just not tidy.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::any::Any;
+use std::mem::{ManuallyDrop, MaybeUninit};
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
 
 /// Worker count to use when the caller has no preference: one per core.
 pub fn default_parallelism() -> usize {
@@ -18,47 +46,283 @@ pub fn default_parallelism() -> usize {
         .unwrap_or(1)
 }
 
-/// Map `f` over `items` on up to `threads` workers, returning results in
-/// input order.  `f` receives `(index, &item)`.  Falls back to a plain
-/// serial map for trivial inputs (0/1 items or 1 thread).
+/// Type-erased handle to a caller-owned `JobCtx`.
+#[derive(Clone, Copy)]
+struct Job {
+    ctx: *const (),
+    run: unsafe fn(*const ()),
+}
+
+// SAFETY: `ctx` points at a `JobCtx` whose borrowed contents are `Sync`
+// and which the publishing thread keeps alive until every participant
+// has left `run` (see the module docs' job protocol).
+unsafe impl Send for Job {}
+
+struct Slot {
+    job: Option<Job>,
+    /// bumped per published job so a worker never joins one twice
+    generation: u64,
+    /// helpers still allowed to join the current job
+    tickets: usize,
+    /// helpers currently inside `run`
+    active: usize,
+    shutdown: bool,
+}
+
+struct Shared {
+    slot: Mutex<Slot>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+}
+
+/// Persistent fork-join pool; see the module docs.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+/// Everything one `run_map` job shares with its participants.
+struct JobCtx<'a, T, R, F> {
+    items: &'a [T],
+    /// write-only result slots; index i is claimed by exactly one
+    /// participant via `cursor`, so writes never race
+    results: *mut MaybeUninit<R>,
+    f: &'a F,
+    cursor: AtomicUsize,
+    chunk: usize,
+    /// fast-path flag: participants stop claiming once a task panicked
+    panicked: AtomicBool,
+    /// first panic's payload, re-raised on the caller (cold path)
+    panic_payload: Mutex<Option<Box<dyn Any + Send + 'static>>>,
+}
+
+/// The claim loop every participant (workers and the caller) runs.
+///
+/// SAFETY: `ctx` must point at a live `JobCtx<'_, T, R, F>` whose
+/// `results` buffer has space for `items.len()` slots.
+unsafe fn run_job<T, R, F>(ctx: *const ())
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let ctx = &*(ctx as *const JobCtx<'_, T, R, F>);
+    let len = ctx.items.len();
+    loop {
+        // once any task panicked the job's results are doomed — stop
+        // claiming instead of computing the rest of the input
+        if ctx.panicked.load(Ordering::Relaxed) {
+            return;
+        }
+        let start = ctx.cursor.fetch_add(ctx.chunk, Ordering::Relaxed);
+        if start >= len {
+            return;
+        }
+        let end = (start + ctx.chunk).min(len);
+        for i in start..end {
+            match catch_unwind(AssertUnwindSafe(|| (ctx.f)(i, &ctx.items[i]))) {
+                Ok(r) => ctx.results.add(i).write(MaybeUninit::new(r)),
+                Err(payload) => {
+                    // payload first, flag second: whoever sees the flag
+                    // finds a payload to re-raise
+                    let mut slot = ctx.panic_payload.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(payload);
+                    }
+                    drop(slot);
+                    ctx.panicked.store(true, Ordering::Release);
+                    return;
+                }
+            }
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    let mut seen_gen = 0u64;
+    loop {
+        let job = {
+            let mut s = shared.slot.lock().unwrap();
+            loop {
+                if s.shutdown {
+                    return;
+                }
+                if let Some(job) = s.job {
+                    if s.generation != seen_gen {
+                        seen_gen = s.generation;
+                        if s.tickets > 0 {
+                            s.tickets -= 1;
+                            s.active += 1;
+                            break job;
+                        }
+                        // over the caller's thread budget: sit this
+                        // one out (generation marked seen)
+                    }
+                }
+                s = shared.work_cv.wait(s).unwrap();
+            }
+        };
+        // SAFETY: the publisher keeps the ctx alive until `active`
+        // returns to 0, which cannot happen before the decrement below.
+        unsafe { (job.run)(job.ctx) };
+        let mut s = shared.slot.lock().unwrap();
+        s.active -= 1;
+        if s.active == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+impl WorkerPool {
+    /// Spawn `workers` persistent worker threads.
+    pub fn new(workers: usize) -> Self {
+        let shared = Arc::new(Shared {
+            slot: Mutex::new(Slot {
+                job: None,
+                generation: 0,
+                tickets: 0,
+                active: 0,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|_| {
+                let shared = shared.clone();
+                std::thread::spawn(move || worker_loop(shared))
+            })
+            .collect();
+        WorkerPool { shared, handles }
+    }
+
+    /// Number of persistent workers (the caller participates too).
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Map `f` over `items` with up to `threads` participants (this
+    /// thread plus at most `threads − 1` pool workers), returning
+    /// results in input order.  Serial for trivial inputs, when
+    /// `threads <= 1`, or when the pool is busy with another job.
+    pub fn run_map<T, R, F>(&self, threads: usize, items: &[T], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(usize, &T) -> R + Sync,
+    {
+        let len = items.len();
+        let threads = threads.clamp(1, len.max(1));
+        if threads <= 1 || len <= 1 {
+            return items.iter().enumerate().map(|(i, x)| f(i, x)).collect();
+        }
+
+        let mut results: Vec<MaybeUninit<R>> = Vec::with_capacity(len);
+        // SAFETY: MaybeUninit slots need no initialization; each is
+        // written exactly once (claim protocol) before being read, and
+        // never read as `R` on the panic path.
+        unsafe { results.set_len(len) };
+
+        let ctx = JobCtx {
+            items,
+            results: results.as_mut_ptr(),
+            f: &f,
+            cursor: AtomicUsize::new(0),
+            // ~8 claims per participant amortizes the cursor without
+            // starving the tail
+            chunk: (len / (threads * 8)).max(1),
+            panicked: AtomicBool::new(false),
+            panic_payload: Mutex::new(None),
+        };
+
+        let published = {
+            let mut s = self.shared.slot.lock().unwrap();
+            if s.job.is_none() && !self.handles.is_empty() {
+                s.job = Some(Job {
+                    ctx: &ctx as *const JobCtx<'_, T, R, F> as *const (),
+                    run: run_job::<T, R, F>,
+                });
+                s.generation = s.generation.wrapping_add(1);
+                s.tickets = (threads - 1).min(self.handles.len());
+                self.shared.work_cv.notify_all();
+                true
+            } else {
+                false // busy pool (nested/concurrent job): run inline
+            }
+        };
+
+        // the caller always participates in its own job
+        // SAFETY: ctx is live for this whole call; see module docs.
+        unsafe { run_job::<T, R, F>(&ctx as *const JobCtx<'_, T, R, F> as *const ()) };
+
+        if published {
+            let mut s = self.shared.slot.lock().unwrap();
+            while s.active > 0 {
+                s = self.shared.done_cv.wait(s).unwrap();
+            }
+            // same critical section as the last active observation: a
+            // late-waking worker now sees the cleared slot and sleeps
+            s.job = None;
+            s.tickets = 0;
+        }
+
+        if ctx.panicked.load(Ordering::Acquire) {
+            // Vec<MaybeUninit<R>> drops only the buffer — written
+            // results leak rather than risking a drop of an
+            // uninitialized slot
+            let payload = ctx.panic_payload.lock().unwrap().take();
+            drop(results);
+            match payload {
+                Some(p) => resume_unwind(p),
+                None => panic!("worker pool: a parallel task panicked"),
+            }
+        }
+
+        // SAFETY: every slot 0..len was written exactly once;
+        // MaybeUninit<R> has the same layout as R.
+        let mut results = ManuallyDrop::new(results);
+        unsafe { Vec::from_raw_parts(results.as_mut_ptr() as *mut R, len, results.capacity()) }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut s = self.shared.slot.lock().unwrap();
+            s.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The process-wide pool every `par_map_indexed` call shares — spawned
+/// on first use with one worker per core, alive until process exit.
+pub fn global() -> &'static WorkerPool {
+    static GLOBAL: OnceLock<WorkerPool> = OnceLock::new();
+    GLOBAL.get_or_init(|| WorkerPool::new(default_parallelism()))
+}
+
+/// Map `f` over `items` on up to `threads` participants of the
+/// [`global`] persistent pool, returning results in input order.  `f`
+/// receives `(index, &item)`.  Falls back to a plain serial map for
+/// trivial inputs (0/1 items or 1 thread).  Unlike the old scoped-
+/// thread pool, `threads` beyond the pool's worker count + 1 (the
+/// caller) gain nothing — participants cap at the core count; results
+/// are bit-identical at any value.
 ///
 /// Degenerate worker counts are clamped, never a panic: `threads == 0`
-/// runs serially, and `threads > items.len()` spawns one worker per
-/// item at most (spawning idle workers would only pay thread-start
-/// cost for nothing).
+/// runs serially, and `threads > items.len()` uses at most one
+/// participant per item.
 pub fn par_map_indexed<T, R, F>(threads: usize, items: &[T], f: F) -> Vec<R>
 where
     T: Sync,
     R: Send,
     F: Fn(usize, &T) -> R + Sync,
 {
-    let threads = threads.clamp(1, items.len().max(1));
-    if threads <= 1 || items.len() <= 1 {
-        return items.iter().enumerate().map(|(i, x)| f(i, x)).collect();
-    }
-
-    let cursor = AtomicUsize::new(0);
-    let slots: Vec<Mutex<Option<R>>> = (0..items.len()).map(|_| Mutex::new(None)).collect();
-    std::thread::scope(|scope| {
-        for _ in 0..threads {
-            scope.spawn(|| loop {
-                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= items.len() {
-                    break;
-                }
-                let r = f(i, &items[i]);
-                *slots[i].lock().unwrap() = Some(r);
-            });
-        }
-    });
-    slots
-        .into_iter()
-        .map(|m| {
-            m.into_inner()
-                .unwrap()
-                .expect("pool invariant: every slot filled before join")
-        })
-        .collect()
+    global().run_map(threads, items, f)
 }
 
 #[cfg(test)]
@@ -112,7 +376,88 @@ mod tests {
     }
 
     #[test]
+    fn pool_persists_across_many_jobs() {
+        // the whole point: repeated rounds reuse the same workers
+        let pool = WorkerPool::new(4);
+        let xs: Vec<u64> = (0..256).collect();
+        for round in 0..50u64 {
+            // x == i for this input, so the expected value is 2i + round
+            let got = pool.run_map(4, &xs, |i, &x| x + round + i as u64);
+            let expect: Vec<u64> = (0..256u64).map(|i| 2 * i + round).collect();
+            assert_eq!(got, expect, "round={round}");
+        }
+        assert_eq!(pool.workers(), 4);
+    }
+
+    #[test]
+    fn nested_calls_fall_back_to_serial_without_deadlock() {
+        let xs: Vec<u64> = (0..64).collect();
+        let got = par_map_indexed(4, &xs, |_, &x| {
+            let inner: Vec<u64> = par_map_indexed(4, &[x, x + 1], |_, &y| y * 2);
+            inner[0] + inner[1]
+        });
+        let expect: Vec<u64> = xs.iter().map(|&x| x * 2 + (x + 1) * 2).collect();
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn zero_worker_pool_runs_inline() {
+        let pool = WorkerPool::new(0);
+        let xs: Vec<u64> = (0..10).collect();
+        assert_eq!(pool.run_map(8, &xs, |_, &x| x + 1), (1..=10).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn concurrent_top_level_callers_are_safe() {
+        // threads race the global pool; the loser of the publish runs
+        // inline — every caller must produce correct, ordered output
+        let xs: Vec<u64> = (0..300).collect();
+        // x == i for this input, so x * 5 + i == 6i
+        let expect: Vec<u64> = (0..300u64).map(|i| i * 6).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                let (xs, expect) = (&xs, &expect);
+                scope.spawn(move || {
+                    for _ in 0..20 {
+                        let got = par_map_indexed(4, xs, |i, &x| x * 5 + i as u64);
+                        assert_eq!(&got, expect);
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn panicking_task_propagates_to_caller() {
+        let pool = WorkerPool::new(2);
+        let xs: Vec<u64> = (0..64).collect();
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.run_map(2, &xs, |_, &x| {
+                if x == 13 {
+                    panic!("boom");
+                }
+                x
+            })
+        }));
+        // the ORIGINAL payload propagates, not a generic wrapper
+        let payload = result.expect_err("panic must propagate");
+        assert_eq!(payload.downcast_ref::<&str>(), Some(&"boom"));
+        // the pool survives and keeps serving jobs
+        assert_eq!(pool.run_map(2, &xs[..4], |_, &x| x + 1), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
     fn default_parallelism_positive() {
         assert!(default_parallelism() >= 1);
+    }
+
+    #[test]
+    fn heavier_payload_types_round_trip() {
+        // non-Copy results exercise the MaybeUninit hand-off
+        let xs: Vec<u64> = (0..100).collect();
+        let got: Vec<String> = par_map_indexed(4, &xs, |i, &x| format!("{i}:{x}"));
+        for (i, s) in got.iter().enumerate() {
+            assert_eq!(s, &format!("{i}:{i}"));
+        }
     }
 }

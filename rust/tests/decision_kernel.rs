@@ -1,0 +1,96 @@
+//! Decision-kernel bit-compat property suite (DESIGN.md §12).
+//!
+//! The acceptance bar for the kernel overhaul: for every scenario
+//! preset × seed × strategy, the cached decision path (cut tables +
+//! CQI-keyed memo, any thread count) produces a record stream
+//! **bit-identical** to the uncached kernel scan AND to the pre-kernel
+//! reference path that re-derives the model terms per cost call.
+//! Random-cut participates too: it must *bypass* the cache (it draws
+//! from the cell RNG) yet still match the reference draw for draw.
+
+use edgesplit::config::scenario;
+use edgesplit::coordinator::{Scheduler, Strategy};
+use edgesplit::sim::fleet::verify_bit_identical;
+
+const STRATEGIES: [Strategy; 5] = [
+    Strategy::Card,
+    Strategy::ServerOnly,
+    Strategy::DeviceOnly,
+    Strategy::StaticCut(13),
+    Strategy::RandomCut,
+];
+
+#[test]
+fn cached_path_bit_identical_across_presets_seeds_strategies() {
+    for sc in scenario::ALL {
+        for seed in [1u64, 99] {
+            for strategy in STRATEGIES {
+                let mut cfg = sc.config(17, seed).unwrap();
+                cfg.workload.rounds = 5;
+                cfg.churn = Default::default(); // synchronous engine: churn-free
+                let sched = Scheduler::new(cfg, sc.state, strategy);
+
+                // parallel + cached (the production path)...
+                let cached = sched.run_parallel(4);
+                // ...vs the kernel scan with the cache bypassed...
+                let uncached = sched.run_uncached();
+                // ...vs the pre-kernel full-recompute reference
+                let legacy = sched.run_ref();
+
+                let ctx = format!("{} seed={seed} {}", sc.name, strategy.name());
+                if let Err(e) = verify_bit_identical(&cached, &uncached) {
+                    panic!("cached vs uncached [{ctx}]: {e:#}");
+                }
+                if let Err(e) = verify_bit_identical(&cached, &legacy) {
+                    panic!("cached vs legacy [{ctx}]: {e:#}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn random_cut_bypasses_cache_and_card_uses_it() {
+    let cfg = |rounds: usize| {
+        let mut c = scenario::HETEROGENEOUS_FLEET.config(12, 3).unwrap();
+        c.workload.rounds = rounds;
+        c.churn = Default::default();
+        c
+    };
+    let state = scenario::HETEROGENEOUS_FLEET.state;
+    let card = Scheduler::new(cfg(25), state, Strategy::Card);
+    card.run_parallel(4);
+    let (hits, misses) = card.cache_stats();
+    assert!(hits > 0, "25 fading rounds must revisit CQI pairs");
+    assert!(misses > 0, "first sight of each CQI pair must miss");
+
+    let random = Scheduler::new(cfg(25), state, Strategy::RandomCut);
+    random.run_parallel(4);
+    assert_eq!(random.cache_stats(), (0, 0), "Random-cut must never touch the cache");
+}
+
+#[test]
+fn cache_warmup_order_does_not_change_results() {
+    // evaluate cells in two different orders (round-major vs
+    // device-major): the cache fills in a different sequence, yet every
+    // record must come out bit-identical
+    let mut cfg = scenario::BURSTY_CHANNEL.config(9, 11).unwrap();
+    cfg.workload.rounds = 6;
+    cfg.churn = Default::default();
+    let state = scenario::BURSTY_CHANNEL.state;
+    let a = Scheduler::new(cfg.clone(), state, Strategy::Card);
+    let b = Scheduler::new(cfg, state, Strategy::Card);
+
+    let round_major: Vec<_> = (0..6)
+        .flat_map(|n| (0..9).map(move |i| (n, i)))
+        .map(|(n, i)| a.device_round(n, i))
+        .collect();
+    let mut device_major: Vec<_> = (0..9)
+        .flat_map(|i| (0..6).map(move |n| (n, i)))
+        .map(|(n, i)| b.device_round(n, i))
+        .collect();
+    device_major.sort_by_key(|r| (r.round, r.device_idx));
+    if let Err(e) = verify_bit_identical(&round_major, &device_major) {
+        panic!("warmup order changed records: {e:#}");
+    }
+}
