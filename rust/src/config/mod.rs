@@ -9,5 +9,5 @@ pub mod toml;
 pub use scenario::Scenario;
 pub use schema::{
     CardSpec, ChannelSpec, ChannelState, ChurnSpec, ConfigError, DeviceSpec, ExpConfig,
-    ServerSpec, WorkloadSpec,
+    FadingModel, FadingProcessSpec, MobilityModel, MobilitySpec, ServerSpec, WorkloadSpec,
 };

@@ -59,8 +59,31 @@ pub const BURSTY_CHANNEL: Scenario = Scenario {
     toml: include_str!("../../../config/presets/bursty_channel.toml"),
 };
 
+pub const CORRELATED_INDOOR: Scenario = Scenario {
+    name: "correlated-indoor",
+    summary: "Gauss-Markov fading (rho = 0.95): SNR drifts instead of resampling (alpha = 4)",
+    state: ChannelState::Normal,
+    dist_range: (5.0, 30.0),
+    toml: include_str!("../../../config/presets/correlated_indoor.toml"),
+};
+
+pub const MOBILE_VEHICULAR: Scenario = Scenario {
+    name: "mobile-vehicular",
+    summary: "Jakes Doppler fading over 12 m/s waypoint-loop trajectories (alpha = 4)",
+    state: ChannelState::Normal,
+    dist_range: (20.0, 120.0),
+    toml: include_str!("../../../config/presets/mobile_vehicular.toml"),
+};
+
 /// Every registered scenario, in presentation order.
-pub const ALL: [Scenario; 4] = [DENSE_URBAN, SPARSE_RURAL, HETEROGENEOUS_FLEET, BURSTY_CHANNEL];
+pub const ALL: [Scenario; 6] = [
+    DENSE_URBAN,
+    SPARSE_RURAL,
+    HETEROGENEOUS_FLEET,
+    BURSTY_CHANNEL,
+    CORRELATED_INDOOR,
+    MOBILE_VEHICULAR,
+];
 
 impl Scenario {
     /// Case-insensitive lookup by registry name.
@@ -165,5 +188,27 @@ mod tests {
         let bursty = BURSTY_CHANNEL.config(4, 0).unwrap();
         assert!(bursty.channel.fading);
         assert!((bursty.workload.phi - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn process_presets_select_their_channel_models() {
+        use crate::config::{FadingModel, MobilityModel};
+        let indoor = CORRELATED_INDOOR.config(4, 0).unwrap();
+        assert_eq!(indoor.channel.process.model, FadingModel::Markov);
+        assert_eq!(indoor.channel.process.rho, 0.95);
+        assert_eq!(indoor.channel.process.window, 48);
+        assert!(!indoor.mobility.enabled());
+        let vehicular = MOBILE_VEHICULAR.config(4, 0).unwrap();
+        assert_eq!(vehicular.channel.process.model, FadingModel::Jakes);
+        assert_eq!(vehicular.channel.process.doppler, 0.12);
+        assert_eq!(vehicular.mobility.model, MobilityModel::Waypoint);
+        assert_eq!(vehicular.mobility.speed_mps, 12.0);
+        assert!(vehicular.mobility.enabled());
+        // the legacy presets stay on the memoryless default
+        for sc in [DENSE_URBAN, SPARSE_RURAL, HETEROGENEOUS_FLEET, BURSTY_CHANNEL] {
+            let cfg = sc.config(4, 0).unwrap();
+            assert_eq!(cfg.channel.process.model, FadingModel::Iid, "{}", sc.name);
+            assert!(!cfg.mobility.enabled(), "{}", sc.name);
+        }
     }
 }

@@ -127,6 +127,141 @@ pub fn default_devices() -> Vec<DeviceSpec> {
     ]
 }
 
+/// Which fading *process* generates the per-round channel gains
+/// (DESIGN.md §13).  All three are counter-indexed: the gain of any
+/// `(device, round)` cell is a pure O(1) function of the seed, so the
+/// parallel engines stay bit-identical to serial under every model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FadingModel {
+    /// Memoryless Rayleigh block fading — one i.i.d. |CN(0,1)|² draw
+    /// per link per round (the paper's model, and the default).
+    Iid,
+    /// Gauss–Markov (AR(1)) correlated Rayleigh fading with lag-1
+    /// field autocorrelation `rho`, realized as a windowed moving
+    /// average of counter-indexed Gaussian innovations.
+    Markov,
+    /// Jakes-spectrum fading: sum of `paths` sinusoids with
+    /// device-seeded phases/arrival angles and normalized Doppler
+    /// `doppler` per round.
+    Jakes,
+}
+
+impl FadingModel {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "iid" => Some(FadingModel::Iid),
+            "markov" | "ar1" | "gauss-markov" => Some(FadingModel::Markov),
+            "jakes" => Some(FadingModel::Jakes),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FadingModel::Iid => "iid",
+            FadingModel::Markov => "markov",
+            FadingModel::Jakes => "jakes",
+        }
+    }
+
+    pub const ALL: [FadingModel; 3] = [FadingModel::Iid, FadingModel::Markov, FadingModel::Jakes];
+}
+
+/// `[channel.process]` — the pluggable fading process and its knobs.
+/// Parameters irrelevant to the selected model are ignored.
+#[derive(Clone, Debug)]
+pub struct FadingProcessSpec {
+    pub model: FadingModel,
+    /// markov: lag-1 field autocorrelation ρ ∈ [0, 1)
+    pub rho: f64,
+    /// markov: moving-average window W (innovations remembered; the
+    /// lag-τ autocorrelation is ρ^τ up to a ρ^{2(W-τ)} truncation term)
+    pub window: usize,
+    /// jakes: normalized Doppler per round, f_D·T_round
+    pub doppler: f64,
+    /// jakes: number of sum-of-sinusoid propagation paths
+    pub paths: usize,
+}
+
+impl Default for FadingProcessSpec {
+    fn default() -> Self {
+        Self {
+            model: FadingModel::Iid,
+            rho: 0.9,
+            window: 32,
+            doppler: 0.05,
+            paths: 16,
+        }
+    }
+}
+
+/// Device mobility model for the `[mobility]` table (DESIGN.md §13).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MobilityModel {
+    /// Frozen placement — `DeviceSpec::distance_m` for every round (the
+    /// paper's setting, and the default).
+    Static,
+    /// Constant-velocity straight line along a device-seeded heading.
+    Linear,
+    /// Ping-pong between the start position and a device-seeded
+    /// waypoint at most `range_m` away.
+    Waypoint,
+}
+
+impl MobilityModel {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "static" => Some(MobilityModel::Static),
+            "linear" => Some(MobilityModel::Linear),
+            "waypoint" | "waypoint-loop" => Some(MobilityModel::Waypoint),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            MobilityModel::Static => "static",
+            MobilityModel::Linear => "linear",
+            MobilityModel::Waypoint => "waypoint",
+        }
+    }
+}
+
+/// `[mobility]` — turns the per-device placement into a per-round
+/// distance trajectory with a closed-form position at any round.
+#[derive(Clone, Debug)]
+pub struct MobilitySpec {
+    pub model: MobilityModel,
+    /// device speed [m/s]
+    pub speed_mps: f64,
+    /// virtual seconds of movement per training round (the mobility
+    /// clock tick — rounds, not wall time, index the trajectory)
+    pub round_s: f64,
+    /// waypoint: maximum excursion from the start placement [m]
+    pub range_m: f64,
+    /// distance floor so trajectories never cross the AP [m]
+    pub min_distance_m: f64,
+}
+
+impl Default for MobilitySpec {
+    fn default() -> Self {
+        Self {
+            model: MobilityModel::Static,
+            speed_mps: 1.0,
+            round_s: 1.0,
+            range_m: 25.0,
+            min_distance_m: 1.0,
+        }
+    }
+}
+
+impl MobilitySpec {
+    /// Static placements keep the placement-pure mean-SNR fast path.
+    pub fn enabled(&self) -> bool {
+        self.model != MobilityModel::Static
+    }
+}
+
 /// Wireless channel parameterization (3GPP-flavoured; DESIGN.md §6).
 #[derive(Clone, Debug)]
 pub struct ChannelSpec {
@@ -146,6 +281,8 @@ pub struct ChannelSpec {
     pub d0_m: f64,
     /// Rayleigh block fading per round on/off
     pub fading: bool,
+    /// `[channel.process]` — which fading process draws the gains
+    pub process: FadingProcessSpec,
 }
 
 impl Default for ChannelSpec {
@@ -159,6 +296,7 @@ impl Default for ChannelSpec {
             pl0_db: 40.0,
             d0_m: 1.0,
             fading: true,
+            process: FadingProcessSpec::default(),
         }
     }
 }
@@ -233,6 +371,7 @@ pub struct ExpConfig {
     pub workload: WorkloadSpec,
     pub card: CardSpec,
     pub churn: ChurnSpec,
+    pub mobility: MobilitySpec,
     pub seed: u64,
 }
 
@@ -246,6 +385,7 @@ impl ExpConfig {
             workload: WorkloadSpec::default(),
             card: CardSpec::default(),
             churn: ChurnSpec::default(),
+            mobility: MobilitySpec::default(),
             seed: 7,
         }
     }
@@ -286,6 +426,45 @@ impl ExpConfig {
         ] {
             if !rate.is_finite() || rate < 0.0 {
                 return inval(format!("{name} must be finite and >= 0, got {rate}"));
+            }
+        }
+        let p = &self.channel.process;
+        if !p.rho.is_finite() || !(0.0..1.0).contains(&p.rho) {
+            return inval(format!("channel.process.rho must be in [0,1), got {}", p.rho));
+        }
+        if p.window == 0 || p.window > 4096 {
+            return inval(format!(
+                "channel.process.window must be in [1, 4096], got {}",
+                p.window
+            ));
+        }
+        if !p.doppler.is_finite() || p.doppler < 0.0 {
+            return inval(format!(
+                "channel.process.doppler must be finite and >= 0, got {}",
+                p.doppler
+            ));
+        }
+        if p.paths == 0 || p.paths > 1024 {
+            return inval(format!(
+                "channel.process.paths must be in [1, 1024], got {}",
+                p.paths
+            ));
+        }
+        let m = &self.mobility;
+        for (name, v) in [
+            ("mobility.speed_mps", m.speed_mps),
+            ("mobility.range_m", m.range_m),
+        ] {
+            if !v.is_finite() || v < 0.0 {
+                return inval(format!("{name} must be finite and >= 0, got {v}"));
+            }
+        }
+        for (name, v) in [
+            ("mobility.round_s", m.round_s),
+            ("mobility.min_distance_m", m.min_distance_m),
+        ] {
+            if !v.is_finite() || v <= 0.0 {
+                return inval(format!("{name} must be finite and > 0, got {v}"));
             }
         }
         for d in &self.devices {
@@ -354,6 +533,7 @@ fn apply_tree(cfg: &mut ExpConfig, tree: &Json) -> Result<(), ConfigError> {
             "workload" => apply_workload(&mut cfg.workload, val)?,
             "card" => apply_card(&mut cfg.card, val)?,
             "churn" => apply_churn(&mut cfg.churn, val)?,
+            "mobility" => apply_mobility(&mut cfg.mobility, val)?,
             "sim" => {
                 for (k, v) in val.as_obj().into_iter().flatten() {
                     match k.as_str() {
@@ -429,7 +609,50 @@ fn apply_channel(c: &mut ChannelSpec, val: &Json) -> Result<(), ConfigError> {
             "fading" => {
                 c.fading = matches!(v, Json::Bool(true));
             }
+            "process" => apply_fading_process(&mut c.process, v)?,
             _ => return Err(ConfigError::UnknownKey(format!("channel.{k}"))),
+        }
+    }
+    Ok(())
+}
+
+fn apply_fading_process(p: &mut FadingProcessSpec, val: &Json) -> Result<(), ConfigError> {
+    for (k, v) in val.as_obj().into_iter().flatten() {
+        match k.as_str() {
+            "model" => {
+                let s = string(v, "channel.process.model")?;
+                p.model = FadingModel::parse(&s).ok_or_else(|| {
+                    ConfigError::Invalid(format!(
+                        "channel.process.model must be iid|markov|jakes, got '{s}'"
+                    ))
+                })?;
+            }
+            "rho" => p.rho = num(v, "channel.process.rho")?,
+            "window" => p.window = num(v, "channel.process.window")? as usize,
+            "doppler" => p.doppler = num(v, "channel.process.doppler")?,
+            "paths" => p.paths = num(v, "channel.process.paths")? as usize,
+            _ => return Err(ConfigError::UnknownKey(format!("channel.process.{k}"))),
+        }
+    }
+    Ok(())
+}
+
+fn apply_mobility(m: &mut MobilitySpec, val: &Json) -> Result<(), ConfigError> {
+    for (k, v) in val.as_obj().into_iter().flatten() {
+        match k.as_str() {
+            "model" => {
+                let s = string(v, "mobility.model")?;
+                m.model = MobilityModel::parse(&s).ok_or_else(|| {
+                    ConfigError::Invalid(format!(
+                        "mobility.model must be static|linear|waypoint, got '{s}'"
+                    ))
+                })?;
+            }
+            "speed_mps" => m.speed_mps = num(v, "mobility.speed_mps")?,
+            "round_s" => m.round_s = num(v, "mobility.round_s")?,
+            "range_m" => m.range_m = num(v, "mobility.range_m")?,
+            "min_distance_m" => m.min_distance_m = num(v, "mobility.min_distance_m")?,
+            _ => return Err(ConfigError::UnknownKey(format!("mobility.{k}"))),
         }
     }
     Ok(())
@@ -538,6 +761,75 @@ mod tests {
             ExpConfig::from_toml_str("[churn]\nrate = 1\n"),
             Err(ConfigError::UnknownKey(_))
         ));
+    }
+
+    #[test]
+    fn channel_process_defaults_iid_and_overrides_parse() {
+        let c = ExpConfig::paper();
+        assert_eq!(c.channel.process.model, FadingModel::Iid);
+        assert!(!c.mobility.enabled());
+        let c = ExpConfig::from_toml_str(
+            "[channel.process]\nmodel = \"markov\"\nrho = 0.95\nwindow = 48\n\
+             [mobility]\nmodel = \"waypoint\"\nspeed_mps = 12\nround_s = 5\nrange_m = 60\n",
+        )
+        .unwrap();
+        assert_eq!(c.channel.process.model, FadingModel::Markov);
+        assert_eq!(c.channel.process.rho, 0.95);
+        assert_eq!(c.channel.process.window, 48);
+        assert_eq!(c.mobility.model, MobilityModel::Waypoint);
+        assert_eq!(c.mobility.speed_mps, 12.0);
+        assert_eq!(c.mobility.round_s, 5.0);
+        assert_eq!(c.mobility.range_m, 60.0);
+        assert!(c.mobility.enabled());
+        c.validate().unwrap();
+        // untouched process knobs keep their defaults
+        assert_eq!(c.channel.process.doppler, 0.05);
+        assert_eq!(c.channel.process.paths, 16);
+    }
+
+    #[test]
+    fn fading_model_and_mobility_parse_names() {
+        assert_eq!(FadingModel::parse("IID"), Some(FadingModel::Iid));
+        assert_eq!(FadingModel::parse("gauss-markov"), Some(FadingModel::Markov));
+        assert_eq!(FadingModel::parse("jakes"), Some(FadingModel::Jakes));
+        assert_eq!(FadingModel::parse("rician"), None);
+        for m in FadingModel::ALL {
+            assert_eq!(FadingModel::parse(m.name()), Some(m));
+        }
+        assert_eq!(MobilityModel::parse("waypoint-loop"), Some(MobilityModel::Waypoint));
+        assert_eq!(MobilityModel::parse("teleport"), None);
+    }
+
+    #[test]
+    fn process_and_mobility_validation_bounds() {
+        let mut c = ExpConfig::paper();
+        c.channel.process.rho = 1.0; // divergent AR(1) normalizer
+        assert!(c.validate().is_err());
+        c = ExpConfig::paper();
+        c.channel.process.window = 0;
+        assert!(c.validate().is_err());
+        c = ExpConfig::paper();
+        c.channel.process.paths = 0;
+        assert!(c.validate().is_err());
+        c = ExpConfig::paper();
+        c.channel.process.doppler = -0.1;
+        assert!(c.validate().is_err());
+        c = ExpConfig::paper();
+        c.mobility.speed_mps = f64::NAN;
+        assert!(c.validate().is_err());
+        c = ExpConfig::paper();
+        c.mobility.round_s = 0.0;
+        assert!(c.validate().is_err());
+        // unknown nested keys are typo errors, not silently ignored
+        assert!(matches!(
+            ExpConfig::from_toml_str("[channel.process]\nrh = 0.5\n"),
+            Err(ConfigError::UnknownKey(_))
+        ));
+        assert!(matches!(
+            ExpConfig::from_toml_str("[mobility]\nvelocity = 3\n"),
+            Err(ConfigError::UnknownKey(_))
+        ));
+        assert!(ExpConfig::from_toml_str("[channel.process]\nmodel = \"rician\"\n").is_err());
     }
 
     #[test]

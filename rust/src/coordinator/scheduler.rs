@@ -23,13 +23,21 @@
 //! concurrently on the `util::pool` worker pool while reproducing the
 //! serial path **bit for bit** (asserted by `rust/tests/fleet_parallel.rs`
 //! and the `fleet-sweep` CLI's determinism gate).
+//!
+//! The channel itself is a pluggable [`LinkProcess`] (DESIGN.md §13):
+//! i.i.d. / Gauss–Markov / Jakes fading over static or mobile
+//! placements.  Every process is counter-indexed — the realization of
+//! a cell stays a pure function of `(config, seed, round, device)` —
+//! so the purity contract above holds for all of them, and the
+//! CQI-keyed decision cache stays exact (decisions depend on the link
+//! only through the quantized rate pair).
 
 use std::sync::Arc;
 
 use crate::config::{ChannelState, ExpConfig};
 use crate::model::{DataSizeModel, DelayModel, EnergyModel, FlopModel, LlmArch};
 use crate::net::channel::LinkRealization;
-use crate::net::Channel;
+use crate::net::{Channel, LinkProcess};
 use crate::util::pool;
 use crate::util::rng::{Rng, SplitMix64};
 
@@ -117,7 +125,11 @@ pub fn build_cost_model(cfg: &ExpConfig) -> CostModel {
 pub struct Scheduler {
     pub cfg: ExpConfig,
     pub cost_model: CostModel,
-    pub channel: Channel,
+    /// The link realization process: pathloss over the (possibly
+    /// moving) placement + the configured fading process
+    /// (DESIGN.md §13).  Keeps the placement-pure mean-SNR fast path
+    /// whenever mobility is off.
+    pub link: LinkProcess,
     pub strategy: Strategy,
     /// Root of the per-(round, device) RNG stream tree.
     stream_root: u64,
@@ -129,10 +141,6 @@ pub struct Scheduler {
     /// Interned device names (one `Arc` clone per record, no `String`).
     names: Vec<Arc<str>>,
     strategy_name: Arc<str>,
-    /// Per-device (uplink, downlink) mean SNR [dB] — pathloss is a pure
-    /// function of the fixed placement, so it is computed once here and
-    /// only the per-round fading term varies.
-    mean_snrs: Vec<(f64, f64)>,
 }
 
 impl Scheduler {
@@ -140,6 +148,7 @@ impl Scheduler {
         let cost_model = build_cost_model(&cfg);
         let channel = Channel::new(cfg.channel.clone(), state);
         let stream_root = cfg.seed ^ ((state.pathloss_exp() as u64) << 32);
+        let link = LinkProcess::new(channel, &cfg, stream_root);
         let terms = Arc::new(ModelTerms::new(&cost_model, &cfg.server));
         let tables = cfg.devices.iter().map(|d| CutTable::new(terms.clone(), d)).collect();
         // non-cacheable strategies never touch the cache — skip the
@@ -152,23 +161,16 @@ impl Scheduler {
         let cache = DecisionCache::new(cache_devices);
         let names = cfg.devices.iter().map(|d| Arc::from(d.name.as_str())).collect();
         let strategy_name: Arc<str> = Arc::from(strategy.name().as_str());
-        let mut mean_snrs = Vec::with_capacity(cfg.devices.len());
-        for d in &cfg.devices {
-            let up = channel.mean_snr_db(d.distance_m, channel.spec.tx_power_device_dbm);
-            let down = channel.mean_snr_db(d.distance_m, channel.spec.tx_power_ap_dbm);
-            mean_snrs.push((up, down));
-        }
         Self {
             cfg,
             cost_model,
-            channel,
+            link,
             strategy,
             stream_root,
             tables,
             cache,
             names,
             strategy_name,
-            mean_snrs,
         }
     }
 
@@ -196,12 +198,12 @@ impl Scheduler {
         ))
     }
 
-    /// Block-fading realization for one cell, from the precomputed
-    /// per-device mean SNRs — bit-identical to `Channel::realize`.
+    /// Link realization for one cell through the configured
+    /// [`LinkProcess`] — under the default i.i.d. process with static
+    /// placement, bit-identical to the pre-process `Channel::realize`.
     #[inline]
-    fn realize_link(&self, device_idx: usize, rng: &mut Rng) -> LinkRealization {
-        let (mean_up, mean_down) = self.mean_snrs[device_idx];
-        self.channel.realize_from_means(mean_up, mean_down, rng)
+    fn realize_link(&self, round: usize, device_idx: usize, rng: &mut Rng) -> LinkRealization {
+        self.link.realize(device_idx, round, rng)
     }
 
     /// Execute Stages 1–5 analytically for one `(round, device)` cell,
@@ -215,7 +217,7 @@ impl Scheduler {
     /// order or in parallel and produce identical records.
     pub fn device_round(&self, round: usize, device_idx: usize) -> RoundRecord {
         let mut rng = self.cell_rng(round, device_idx);
-        let link = self.realize_link(device_idx, &mut rng);
+        let link = self.realize_link(round, device_idx, &mut rng);
         let table = &self.tables[device_idx];
 
         // Stage 1: decision — memoized per (device, CQI pair)
@@ -239,7 +241,7 @@ impl Scheduler {
     /// the cache property tests compare against.
     pub fn device_round_uncached(&self, round: usize, device_idx: usize) -> RoundRecord {
         let mut rng = self.cell_rng(round, device_idx);
-        let link = self.realize_link(device_idx, &mut rng);
+        let link = self.realize_link(round, device_idx, &mut rng);
         let decision = self
             .strategy
             .decide_on(&self.tables[device_idx], link.rates, &mut rng);
@@ -252,7 +254,7 @@ impl Scheduler {
     pub fn device_round_ref(&self, round: usize, device_idx: usize) -> RoundRecord {
         let dev = &self.cfg.devices[device_idx];
         let mut rng = self.cell_rng(round, device_idx);
-        let link = self.channel.realize(dev, &mut rng);
+        let link = self.link.realize_ref(device_idx, round, &mut rng);
         let decision = self
             .strategy
             .decide_ref(&self.cost_model, &self.cfg.server, dev, link.rates, &mut rng);
@@ -561,6 +563,52 @@ mod tests {
         let r = Scheduler::new(cfg, ChannelState::Normal, Strategy::RandomCut);
         r.run_analytic().unwrap();
         assert_eq!(r.cache_stats(), (0, 0));
+    }
+
+    #[test]
+    fn correlated_and_mobile_engines_stay_bit_deterministic() {
+        use crate::config::{FadingModel, MobilityModel};
+        for model in FadingModel::ALL {
+            for mobile in [false, true] {
+                let mut cfg = quick_cfg();
+                cfg.channel.process.model = model;
+                if mobile {
+                    cfg.mobility.model = MobilityModel::Waypoint;
+                    cfg.mobility.speed_mps = 4.0;
+                    cfg.mobility.round_s = 10.0;
+                }
+                cfg.validate().unwrap();
+                for strategy in [Strategy::Card, Strategy::RandomCut] {
+                    let s = Scheduler::new(cfg.clone(), ChannelState::Normal, strategy);
+                    let serial = s.run_analytic().unwrap();
+                    for threads in [1, 4, 8] {
+                        assert_bit_identical(&serial, &s.run_parallel(threads));
+                    }
+                    // uncached and legacy reference paths agree too
+                    assert_bit_identical(&serial, &s.run_uncached());
+                    assert_bit_identical(&serial, &s.run_ref());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn markov_fading_hits_the_decision_cache_harder_than_iid() {
+        use crate::config::FadingModel;
+        let mut cfg = quick_cfg();
+        cfg.workload.rounds = 20;
+        let iid = Scheduler::new(cfg.clone(), ChannelState::Normal, Strategy::Card);
+        iid.run_analytic().unwrap();
+        cfg.channel.process.model = FadingModel::Markov;
+        cfg.channel.process.rho = 0.95;
+        let markov = Scheduler::new(cfg, ChannelState::Normal, Strategy::Card);
+        markov.run_analytic().unwrap();
+        assert!(
+            markov.cache_hit_rate() > iid.cache_hit_rate(),
+            "correlated fading revisits CQI keys: markov {} <= iid {}",
+            markov.cache_hit_rate(),
+            iid.cache_hit_rate()
+        );
     }
 
     #[test]

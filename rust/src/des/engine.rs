@@ -17,6 +17,22 @@
 //! instant through the [`Aggregator`]'s unordered (monotone) paths;
 //! async merges carry the version they were *based on*, so
 //! `Aggregator::staleness` reports real lag when stale merges land.
+//!
+//! ## Channel-process semantics on the virtual timeline
+//!
+//! The pluggable channel (`LinkProcess`, DESIGN.md §13) is sampled by
+//! **round index**, not by virtual time: fading is block fading — one
+//! realization per `(device, round)` cell, frozen for that cell's
+//! whole timeline — and mobility advances one `round_s` tick per
+//! round.  Under `sync`/`semi-sync` the round index is the global
+//! round; under `async` it is the device's *personal* round counter,
+//! so a fast device walks its correlated fading trace (and its
+//! trajectory) faster in virtual time than a slow one.  The process
+//! clock and the virtual clock are deliberately distinct: keeping
+//! channel sampling round-indexed is what preserves the sync policy's
+//! bit-identity with the barrier engine and keeps every cell a pure
+//! function of `(config, seed, round, device)` regardless of event
+//! interleaving.
 
 use std::collections::BTreeMap;
 
@@ -630,6 +646,24 @@ mod tests {
         assert!(out.aggregator.is_consistent());
         assert_eq!(out.launched as usize, out.records.len());
         assert_eq!(out.dropped, 0);
+    }
+
+    #[test]
+    fn sync_policy_reproduces_round_engine_under_correlated_mobile_channels() {
+        use crate::config::{FadingModel, MobilityModel};
+        let mut cfg = quick_cfg(3);
+        cfg.channel.process.model = FadingModel::Markov;
+        cfg.mobility.model = MobilityModel::Linear;
+        cfg.mobility.speed_mps = 3.0;
+        cfg.mobility.round_s = 10.0;
+        let sched = Scheduler::new(cfg.clone(), ChannelState::Normal, Strategy::Card);
+        let reference = sched.run_parallel(4);
+        let out = engine_outcome(cfg, Policy::Sync, 64);
+        let des_records: Vec<RoundRecord> =
+            out.records.iter().map(|r| r.record.clone()).collect();
+        if let Err(e) = verify_bit_identical(&reference, &des_records) {
+            panic!("{e:#}");
+        }
     }
 
     #[test]

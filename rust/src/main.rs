@@ -37,6 +37,7 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec { name: "w", value: Some("0..1"), help: "delay/energy weight (Eq. 12)", default: None },
         FlagSpec { name: "seed", value: Some("u64"), help: "root RNG seed", default: None },
         FlagSpec { name: "state", value: Some("good|normal|poor"), help: "channel state", default: Some("normal") },
+        FlagSpec { name: "channel-model", value: Some("iid|markov|jakes"), help: "fading process override for config-driven commands (fig3/fig4/ablate/decide/train); sweeps take it from their scenario presets", default: None },
         FlagSpec { name: "strategy", value: Some("card|server-only|device-only|static:C|random"), help: "decision strategy", default: Some("card") },
         FlagSpec { name: "sweep", value: Some("w|phi|bandwidth"), help: "ablation sweep to run", default: Some("w") },
         FlagSpec { name: "scenario", value: Some("name|all"), help: "sweep scenario preset (see `show scenarios`)", default: Some("all") },
@@ -114,6 +115,20 @@ fn run(argv: &[String]) -> Result<()> {
     }
     if let Some(s) = args.u64_of("seed")? {
         cfg.seed = s;
+    }
+    if let Some(m) = args.str_of("channel-model") {
+        // the sweep subcommands rebuild their configs from scenario
+        // presets, which define their own [channel.process] — reject
+        // the override there instead of silently ignoring it
+        if matches!(cmd, "fleet-sweep" | "des-sweep" | "card-bench") {
+            bail!(
+                "--channel-model does not apply to {cmd}: its presets define the \
+                 channel process — pick a preset instead (e.g. --scenario \
+                 correlated-indoor for markov, mobile-vehicular for jakes)"
+            );
+        }
+        cfg.channel.process.model = edgesplit::config::FadingModel::parse(m)
+            .ok_or_else(|| anyhow!("bad --channel-model '{m}' (iid|markov|jakes)"))?;
     }
     cfg.validate()?;
 
@@ -333,14 +348,20 @@ fn cmd_card_bench(args: &Args, seed: u64, rounds: Option<usize>) -> Result<()> {
 
 fn cmd_decide(cfg: &ExpConfig, state: ChannelState) -> Result<()> {
     let cm = edgesplit::coordinator::build_cost_model(cfg);
+    // realize round 0 through the configured link process so
+    // --channel-model / [channel.process] / [mobility] apply here too
+    // (the same stream-root derivation the Scheduler uses; for the
+    // default iid process this is bit-identical to Channel::realize)
     let channel = Channel::new(cfg.channel.clone(), state);
+    let stream_root = cfg.seed ^ ((state.pathloss_exp() as u64) << 32);
+    let link_process = edgesplit::net::LinkProcess::new(channel, cfg, stream_root);
     let mut rng = Rng::new(cfg.seed);
     let mut t = Table::new(
         &format!("CARD decisions — {} channel", state.name()),
         &["device", "SNR up [dB]", "rate up", "cut c*", "f* [GHz]", "delay", "energy", "U"],
     );
-    for dev in &cfg.devices {
-        let link = channel.realize(dev, &mut rng);
+    for (idx, dev) in cfg.devices.iter().enumerate() {
+        let link = link_process.realize(idx, 0, &mut rng);
         let d = Strategy::Card.decide(&cm, &cfg.server, dev, link.rates, &mut rng);
         t.row(vec![
             dev.name.clone(),
@@ -475,12 +496,17 @@ fn cmd_show(cfg: &ExpConfig, what: Option<&str>) -> Result<()> {
         "scenarios" => {
             let mut t = Table::new(
                 "scenario registry (fleet-sweep presets)",
-                &["name", "channel", "placement [m]", "summary"],
+                &["name", "channel", "process", "mobility", "placement [m]", "summary"],
             );
             for sc in scenario::ALL {
+                // expand a 1-device fleet to read the preset's channel
+                // process / mobility tables
+                let preset = sc.config(1, 0)?;
                 t.row(vec![
                     sc.name.to_string(),
                     sc.state.name().to_string(),
+                    preset.channel.process.model.name().to_string(),
+                    preset.mobility.model.name().to_string(),
                     format!("{:.0}-{:.0}", sc.dist_range.0, sc.dist_range.1),
                     sc.summary.to_string(),
                 ]);

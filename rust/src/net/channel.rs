@@ -63,6 +63,23 @@ impl Channel {
         } else {
             (1.0, 1.0)
         };
+        self.realize_with_gains(mean_up_db, mean_down_db, g_up, g_down)
+    }
+
+    /// Realize a link from mean SNRs and externally supplied fading
+    /// power gains — the seam the pluggable [`FadingProcess`] plugs
+    /// into (`net/link.rs`).  With the gains the i.i.d. path would have
+    /// drawn, this is bit-identical to [`Channel::realize_from_means`]
+    /// (same operations, same association).
+    ///
+    /// [`FadingProcess`]: super::fading::FadingProcess
+    pub fn realize_with_gains(
+        &self,
+        mean_up_db: f64,
+        mean_down_db: f64,
+        g_up: f64,
+        g_down: f64,
+    ) -> LinkRealization {
         let snr_up = mean_up_db + lin_to_db(g_up);
         let snr_down = mean_down_db + lin_to_db(g_down);
         LinkRealization {
@@ -76,14 +93,16 @@ impl Channel {
     }
 
     /// R = B · y(SNR).  Outage is floored to a minimal control-channel
-    /// rate (CQI-1 at 1/50 of the band) instead of 0 — division-safe and
-    /// matches retransmission-until-success behaviour.
+    /// rate (CQI-1 at 1/50 of the band, `net::cqi`'s named floor
+    /// constants) instead of 0 — division-safe and matches
+    /// retransmission-until-success behaviour.
     pub fn rate_bps(&self, snr_db: f64) -> f64 {
         let eff = spectral_efficiency(snr_db);
         if eff > 0.0 {
             self.spec.bandwidth_hz * eff
         } else {
-            self.spec.bandwidth_hz * 0.1523 / 50.0
+            self.spec.bandwidth_hz * super::cqi::OUTAGE_FLOOR_EFFICIENCY
+                / super::cqi::OUTAGE_BAND_DIVISOR
         }
     }
 }
@@ -169,6 +188,30 @@ mod tests {
             assert_eq!(a.rates.up_bps.to_bits(), b.rates.up_bps.to_bits());
             assert_eq!(a.rates.down_bps.to_bits(), b.rates.down_bps.to_bits());
         }
+    }
+
+    #[test]
+    fn realize_with_gains_bitwise_matches_rng_path() {
+        let ch = Channel::new(ChannelSpec::default(), Normal);
+        let mut r1 = Rng::new(5);
+        for _ in 0..50 {
+            // replay the exact gains the RNG path will draw
+            let mut probe = r1.clone();
+            let (g_up, g_down) = (probe.rayleigh_power(), probe.rayleigh_power());
+            let a = ch.realize_from_means(18.0, 25.0, &mut r1);
+            let b = ch.realize_with_gains(18.0, 25.0, g_up, g_down);
+            assert_eq!(a.snr_up_db.to_bits(), b.snr_up_db.to_bits());
+            assert_eq!(a.snr_down_db.to_bits(), b.snr_down_db.to_bits());
+            assert_eq!(a.rates.up_bps.to_bits(), b.rates.up_bps.to_bits());
+            assert_eq!(a.rates.down_bps.to_bits(), b.rates.down_bps.to_bits());
+        }
+    }
+
+    #[test]
+    fn outage_floor_rate_pinned_to_named_constants() {
+        let ch = Channel::new(ChannelSpec::default(), Poor);
+        let expect = ch.spec.bandwidth_hz * 0.1523 / 50.0;
+        assert_eq!(ch.rate_bps(-40.0).to_bits(), expect.to_bits());
     }
 
     #[test]

@@ -35,6 +35,16 @@ pub const CQI_TABLE: [CqiEntry; 15] = [
     CqiEntry { index: 15, snr_db: 22.7,  efficiency: 5.5547, modulation: "64QAM"  },
 ];
 
+/// Spectral efficiency the outage floor is pinned to: CQI-1, the
+/// table's lowest rung.  An outage link falls back to this efficiency
+/// on 1/[`OUTAGE_BAND_DIVISOR`] of the band instead of 0 bit/s —
+/// division-safe and matching retransmission-until-success behaviour
+/// (`Channel::rate_bps`).
+pub const OUTAGE_FLOOR_EFFICIENCY: f64 = CQI_TABLE[0].efficiency;
+
+/// Fraction of the band (as a divisor) granted to an outage link.
+pub const OUTAGE_BAND_DIVISOR: f64 = 50.0;
+
 /// CQI index for a given SNR (0 = outage: below CQI-1 threshold).
 ///
 /// Binary search over the (monotone) threshold column: the index is
@@ -126,6 +136,21 @@ mod tests {
     #[test]
     fn step_function_between_thresholds() {
         assert_eq!(spectral_efficiency(6.0), spectral_efficiency(7.9));
+    }
+
+    #[test]
+    fn outage_floor_is_cqi1_on_a_fiftieth_of_the_band() {
+        // the floor constant is pinned to the table's CQI-1 row — if the
+        // table ever changes, the outage floor must move with it
+        assert_eq!(
+            OUTAGE_FLOOR_EFFICIENCY.to_bits(),
+            CQI_TABLE[0].efficiency.to_bits()
+        );
+        assert_eq!(CQI_TABLE[0].index, 1);
+        assert_eq!(OUTAGE_FLOOR_EFFICIENCY.to_bits(), 0.1523f64.to_bits());
+        assert_eq!(OUTAGE_BAND_DIVISOR.to_bits(), 50.0f64.to_bits());
+        // the floor is below even a full-band CQI-1 link
+        assert!(OUTAGE_FLOOR_EFFICIENCY / OUTAGE_BAND_DIVISOR < CQI_TABLE[0].efficiency);
     }
 
     #[test]

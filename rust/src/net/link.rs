@@ -1,0 +1,247 @@
+//! [`LinkProcess`]: the per-fleet link realization process
+//! (DESIGN.md §13) — pathloss over a (possibly moving) placement,
+//! composed with a pluggable fading process.
+//!
+//! This replaces the scheduler's hardwired "precomputed mean SNRs +
+//! i.i.d. Rayleigh draw" path.  The contract is unchanged: realizing
+//! the link of any `(device, round)` cell is a pure function of
+//! `(config, seed, cell coordinates)`, so the parallel engines remain
+//! bit-identical to serial under every process/mobility combination.
+//! Under the default `iid` process with static mobility, the fast path
+//! reproduces the pre-refactor engine **bit for bit**: the same
+//! precomputed means, the same two Rayleigh draws from the same cell
+//! RNG, the same arithmetic.
+
+use crate::config::ExpConfig;
+use crate::util::rng::{Rng, SplitMix64};
+
+use super::channel::{Channel, LinkRealization};
+use super::fading::FadingProcess;
+use super::mobility::Mobility;
+
+/// Stream-tag prefixes for the process sub-roots.  The first tag is
+/// `u64::MAX` — unreachable as a round index — so process streams can
+/// never collide with the scheduler's `[round, device]` cell streams
+/// hanging off the same root.
+const FADING_TAG: [u64; 2] = [u64::MAX, 0xFADE];
+const MOBILITY_TAG: [u64; 2] = [u64::MAX, 0x0B17E];
+
+/// Fading + mobility over one fleet's links.
+#[derive(Clone, Debug)]
+pub struct LinkProcess {
+    pub channel: Channel,
+    fading: FadingProcess,
+    mobility: Mobility,
+    /// Per-device `(uplink, downlink)` mean SNR [dB], precomputed when
+    /// every trajectory is static — pathloss is then a pure function
+    /// of the fixed placement, and the per-round cost is just the
+    /// fading evaluation (the pre-refactor fast path).
+    static_means: Option<Vec<(f64, f64)>>,
+}
+
+impl LinkProcess {
+    /// Build the link process for a fleet.
+    ///
+    /// `stream_root` is the scheduler's `(seed, channel state)` root —
+    /// the fading process hangs its counter streams off it so fading
+    /// realizations differ across channel states exactly like the
+    /// i.i.d. cell streams do.  Mobility trajectories seed from
+    /// `cfg.seed` alone: like device placements, they are part of the
+    /// *scenario*, identical across the channel states a Fig.-4-style
+    /// sweep compares.
+    pub fn new(channel: Channel, cfg: &ExpConfig, stream_root: u64) -> Self {
+        let fading_root = SplitMix64::stream_seed(stream_root, &FADING_TAG);
+        let mobility_root = SplitMix64::stream_seed(cfg.seed, &MOBILITY_TAG);
+        let fading = FadingProcess::new(&cfg.channel.process, fading_root, cfg.devices.len());
+        let mobility = Mobility::new(&cfg.mobility, &cfg.devices, mobility_root);
+        let static_means = if mobility.is_static() {
+            Some(
+                cfg.devices
+                    .iter()
+                    .map(|d| Self::means_of(&channel, d.distance_m))
+                    .collect(),
+            )
+        } else {
+            None
+        };
+        LinkProcess {
+            channel,
+            fading,
+            mobility,
+            static_means,
+        }
+    }
+
+    fn means_of(channel: &Channel, distance_m: f64) -> (f64, f64) {
+        (
+            channel.mean_snr_db(distance_m, channel.spec.tx_power_device_dbm),
+            channel.mean_snr_db(distance_m, channel.spec.tx_power_ap_dbm),
+        )
+    }
+
+    /// Whether the placement is frozen (mean-SNR fast path active).
+    pub fn is_static(&self) -> bool {
+        self.static_means.is_some()
+    }
+
+    /// Whether the fading process is the memoryless default.
+    pub fn is_iid(&self) -> bool {
+        self.fading.is_iid()
+    }
+
+    /// Distance to the AP of `device` at `round` [m] (telemetry).
+    pub fn distance_at(&self, device: usize, round: usize) -> f64 {
+        self.mobility.distance_at(device, round)
+    }
+
+    /// Mean (no-fading) SNRs for a cell, recomputed from the trajectory.
+    fn means_at(&self, device: usize, round: usize) -> (f64, f64) {
+        Self::means_of(&self.channel, self.mobility.distance_at(device, round))
+    }
+
+    /// Realize one `(device, round)` link — the engine fast path.
+    /// `rng` must be the cell's own counter-derived stream; only the
+    /// `iid` process consumes it (two Rayleigh draws, the pre-process
+    /// order).
+    pub fn realize(&self, device: usize, round: usize, rng: &mut Rng) -> LinkRealization {
+        let (mean_up, mean_down) = match &self.static_means {
+            Some(means) => means[device],
+            None => self.means_at(device, round),
+        };
+        self.realize_from(mean_up, mean_down, device, round, rng)
+    }
+
+    /// [`LinkProcess::realize`] with every placement-derived term
+    /// recomputed from scratch — the full-recompute reference path
+    /// (`Scheduler::device_round_ref`).  Bit-identical to the fast
+    /// path: the precomputed means are these same expressions.
+    pub fn realize_ref(&self, device: usize, round: usize, rng: &mut Rng) -> LinkRealization {
+        let (mean_up, mean_down) = self.means_at(device, round);
+        self.realize_from(mean_up, mean_down, device, round, rng)
+    }
+
+    fn realize_from(
+        &self,
+        mean_up: f64,
+        mean_down: f64,
+        device: usize,
+        round: usize,
+        rng: &mut Rng,
+    ) -> LinkRealization {
+        let (g_up, g_down) = if self.channel.spec.fading {
+            self.fading.gains(device, round, rng)
+        } else {
+            (1.0, 1.0)
+        };
+        self.channel.realize_with_gains(mean_up, mean_down, g_up, g_down)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ChannelState, FadingModel, MobilityModel};
+
+    fn cfg() -> ExpConfig {
+        ExpConfig::paper()
+    }
+
+    fn process(cfg: &ExpConfig, state: ChannelState) -> LinkProcess {
+        let channel = Channel::new(cfg.channel.clone(), state);
+        let stream_root = cfg.seed ^ ((state.pathloss_exp() as u64) << 32);
+        LinkProcess::new(channel, cfg, stream_root)
+    }
+
+    #[test]
+    fn default_process_bitwise_matches_legacy_channel_realize() {
+        // iid + static: LinkProcess must reproduce Channel::realize
+        // exactly, drawing the same stream in the same order
+        let cfg = cfg();
+        let lp = process(&cfg, ChannelState::Normal);
+        assert!(lp.is_static() && lp.is_iid());
+        for (i, dev) in cfg.devices.iter().enumerate() {
+            for round in [0usize, 3, 17] {
+                let mut r1 = Rng::new(round as u64 * 31 + i as u64);
+                let mut r2 = r1.clone();
+                let a = lp.channel.realize(dev, &mut r1);
+                let b = lp.realize(i, round, &mut r2);
+                assert_eq!(a.snr_up_db.to_bits(), b.snr_up_db.to_bits());
+                assert_eq!(a.snr_down_db.to_bits(), b.snr_down_db.to_bits());
+                assert_eq!(a.rates.up_bps.to_bits(), b.rates.up_bps.to_bits());
+                assert_eq!(a.rates.down_bps.to_bits(), b.rates.down_bps.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn ref_path_bitwise_matches_fast_path_everywhere() {
+        for model in FadingModel::ALL {
+            for mobile in [false, true] {
+                let mut c = cfg();
+                c.channel.process.model = model;
+                if mobile {
+                    c.mobility.model = MobilityModel::Linear;
+                    c.mobility.speed_mps = 2.0;
+                    c.mobility.round_s = 15.0;
+                }
+                let lp = process(&c, ChannelState::Poor);
+                assert_eq!(lp.is_static(), !mobile);
+                for i in 0..c.devices.len() {
+                    for round in [0usize, 5, 40] {
+                        let mut r1 = Rng::new(7);
+                        let mut r2 = Rng::new(7);
+                        let a = lp.realize(i, round, &mut r1);
+                        let b = lp.realize_ref(i, round, &mut r2);
+                        assert_eq!(a.snr_up_db.to_bits(), b.snr_up_db.to_bits(), "{model:?}");
+                        assert_eq!(a.rates.up_bps.to_bits(), b.rates.up_bps.to_bits());
+                        assert_eq!(a.rates.down_bps.to_bits(), b.rates.down_bps.to_bits());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mobility_moves_the_mean_snr() {
+        let mut c = cfg();
+        c.channel.fading = false; // isolate the pathloss term
+        c.mobility.model = MobilityModel::Linear;
+        c.mobility.speed_mps = 5.0;
+        c.mobility.round_s = 20.0;
+        let lp = process(&c, ChannelState::Normal);
+        assert!(!lp.is_static());
+        let mut rng = Rng::new(0);
+        let s0 = lp.realize(0, 0, &mut rng).snr_up_db;
+        let s9 = lp.realize(0, 9, &mut rng).snr_up_db;
+        assert!(
+            (s0 - s9).abs() > 0.5,
+            "100 m/round of motion must move the mean SNR ({s0} vs {s9})"
+        );
+        // and round 0 matches the static placement exactly
+        let mut static_cfg = cfg();
+        static_cfg.channel.fading = false;
+        let static_lp = process(&static_cfg, ChannelState::Normal);
+        let mut r = Rng::new(0);
+        assert_eq!(
+            static_lp.realize(0, 0, &mut r).snr_up_db.to_bits(),
+            s0.to_bits()
+        );
+    }
+
+    #[test]
+    fn fading_off_disables_every_process() {
+        for model in FadingModel::ALL {
+            let mut c = cfg();
+            c.channel.fading = false;
+            c.channel.process.model = model;
+            let lp = process(&c, ChannelState::Good);
+            let mut r1 = Rng::new(1);
+            let mut r2 = Rng::new(2);
+            // no fading: realization is rng-independent and repeatable
+            assert_eq!(
+                lp.realize(2, 4, &mut r1).snr_up_db.to_bits(),
+                lp.realize(2, 4, &mut r2).snr_up_db.to_bits()
+            );
+        }
+    }
+}

@@ -1,0 +1,270 @@
+//! Device mobility: closed-form per-round distance trajectories
+//! (DESIGN.md §13).
+//!
+//! The paper freezes each device at `DeviceSpec::distance_m`.
+//! [`Mobility`] generalizes that placement into a trajectory whose
+//! position at round `n` is a **closed-form O(1) function** of
+//! `(seed, device, n)` — no integration, no per-round state — so the
+//! fleet engines keep their any-order/any-thread bit-determinism, and
+//! the DES engine's round-indexed channel sampling needs no new
+//! machinery.  The AP sits at the origin; every device starts on the
+//! x-axis at its configured placement distance.
+//!
+//! * **static** — `d(n) = d₀` (the default; schedulers keep their
+//!   placement-pure mean-SNR fast path).
+//! * **linear** — constant velocity along a device-seeded heading:
+//!   `pos(n) = (d₀ + v·n·cosψ, v·n·sinψ)` with `v = speed·round_s`.
+//! * **waypoint** — ping-pong between the start position A and a
+//!   device-seeded waypoint B (≤ `range_m` away): position is the
+//!   triangle-wave interpolation of the A→B segment.
+//!
+//! Distances are floored at `min_distance_m` so a trajectory can pass
+//! near — never through — the AP.
+
+use crate::config::{DeviceSpec, MobilityModel, MobilitySpec};
+use crate::util::rng::{Rng, SplitMix64};
+
+/// Per-fleet mobility plan: one closed-form trajectory per device.
+#[derive(Clone, Debug)]
+pub struct Mobility {
+    min_distance_m: f64,
+    paths: Vec<Trajectory>,
+}
+
+#[derive(Clone, Copy, Debug)]
+enum Trajectory {
+    Static {
+        d0: f64,
+    },
+    Linear {
+        x0: f64,
+        /// velocity per round [m/round]
+        vx: f64,
+        vy: f64,
+    },
+    Waypoint {
+        ax: f64,
+        ay: f64,
+        bx: f64,
+        by: f64,
+        /// fraction of the A→B segment traversed per round
+        step: f64,
+    },
+}
+
+impl Mobility {
+    /// Build trajectories for a fleet.  `root` seeds the per-device
+    /// heading/waypoint draws; it should derive from the experiment
+    /// seed only (not the channel state), so Fig.-4-style state sweeps
+    /// compare identical trajectories.
+    pub fn new(spec: &MobilitySpec, devices: &[DeviceSpec], root: u64) -> Self {
+        let v_round = spec.speed_mps * spec.round_s;
+        let paths = devices
+            .iter()
+            .enumerate()
+            .map(|(i, dev)| {
+                let d0 = dev.distance_m;
+                match spec.model {
+                    MobilityModel::Static => Trajectory::Static { d0 },
+                    _ if v_round == 0.0 => Trajectory::Static { d0 },
+                    MobilityModel::Linear => {
+                        let mut rng = Rng::new(SplitMix64::stream_seed(root, &[i as u64]));
+                        let psi = rng.range(0.0, 2.0 * std::f64::consts::PI);
+                        Trajectory::Linear {
+                            x0: d0,
+                            vx: v_round * psi.cos(),
+                            vy: v_round * psi.sin(),
+                        }
+                    }
+                    MobilityModel::Waypoint => {
+                        // waypoint drawn relative to the *start position*
+                        // so |B - A| <= range_m, honouring the spec's
+                        // "maximum excursion from the start placement"
+                        let mut rng = Rng::new(SplitMix64::stream_seed(root, &[i as u64]));
+                        let beta = rng.range(0.0, 2.0 * std::f64::consts::PI);
+                        let excursion = rng.range(0.0, spec.range_m);
+                        let (bx, by) = (d0 + excursion * beta.cos(), excursion * beta.sin());
+                        let len = ((bx - d0) * (bx - d0) + by * by).sqrt();
+                        if len == 0.0 {
+                            Trajectory::Static { d0 }
+                        } else {
+                            Trajectory::Waypoint {
+                                ax: d0,
+                                ay: 0.0,
+                                bx,
+                                by,
+                                step: v_round / len,
+                            }
+                        }
+                    }
+                }
+            })
+            .collect();
+        Mobility {
+            min_distance_m: spec.min_distance_m,
+            paths,
+        }
+    }
+
+    /// Whether every trajectory is frozen (the mean-SNR fast path).
+    pub fn is_static(&self) -> bool {
+        self.paths.iter().all(|t| matches!(t, Trajectory::Static { .. }))
+    }
+
+    /// Distance to the AP [m] of `device` at round `round` — a pure
+    /// closed-form function of the plan and the round index.
+    pub fn distance_at(&self, device: usize, round: usize) -> f64 {
+        let d = match self.paths[device] {
+            Trajectory::Static { d0 } => return d0,
+            Trajectory::Linear { x0, vx, vy } => {
+                let t = round as f64;
+                let (x, y) = (x0 + vx * t, vy * t);
+                (x * x + y * y).sqrt()
+            }
+            Trajectory::Waypoint { ax, ay, bx, by, step } => {
+                // triangle wave: 0 → 1 → 0 → … along the A→B segment
+                let u = (step * round as f64).rem_euclid(2.0);
+                let frac = if u <= 1.0 { u } else { 2.0 - u };
+                let (x, y) = (ax + frac * (bx - ax), ay + frac * (by - ay));
+                (x * x + y * y).sqrt()
+            }
+        };
+        d.max(self.min_distance_m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn devices(dists: &[f64]) -> Vec<DeviceSpec> {
+        dists
+            .iter()
+            .enumerate()
+            .map(|(i, &d)| DeviceSpec {
+                name: format!("d{i}"),
+                platform: "p".into(),
+                freq_hz: 1e9,
+                cores: 1024.0,
+                flops_per_cycle: 2.0,
+                distance_m: d,
+            })
+            .collect()
+    }
+
+    fn spec(model: MobilityModel) -> MobilitySpec {
+        MobilitySpec {
+            model,
+            speed_mps: 3.0,
+            round_s: 10.0,
+            range_m: 40.0,
+            min_distance_m: 1.0,
+        }
+    }
+
+    #[test]
+    fn static_returns_the_placement_exactly() {
+        let devs = devices(&[10.0, 37.5]);
+        let m = Mobility::new(&spec(MobilityModel::Static), &devs, 7);
+        assert!(m.is_static());
+        for (i, dev) in devs.iter().enumerate() {
+            for round in [0, 1, 999] {
+                assert_eq!(m.distance_at(i, round).to_bits(), dev.distance_m.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn zero_speed_degenerates_to_static() {
+        let devs = devices(&[20.0]);
+        let mut s = spec(MobilityModel::Linear);
+        s.speed_mps = 0.0;
+        let m = Mobility::new(&s, &devs, 7);
+        assert!(m.is_static());
+    }
+
+    #[test]
+    fn linear_starts_at_placement_and_moves() {
+        let devs = devices(&[25.0, 40.0]);
+        let m = Mobility::new(&spec(MobilityModel::Linear), &devs, 3);
+        assert!(!m.is_static());
+        for i in 0..devs.len() {
+            assert!((m.distance_at(i, 0) - devs[i].distance_m).abs() < 1e-12);
+            // 30 m per round: round 5 must have moved the device
+            assert!((m.distance_at(i, 5) - devs[i].distance_m).abs() > 1.0);
+            // straight-line motion: displacement from start grows
+            // monotonically, so distance eventually grows unboundedly
+            assert!(m.distance_at(i, 500) > m.distance_at(i, 5));
+        }
+    }
+
+    #[test]
+    fn linear_distance_obeys_the_triangle_inequality() {
+        let devs = devices(&[30.0]);
+        let m = Mobility::new(&spec(MobilityModel::Linear), &devs, 11);
+        let step = 30.0; // speed 3 m/s × 10 s/round
+        for n in 0..20 {
+            // the device walks exactly n·step metres from its start, so
+            // its AP distance can change by at most that much
+            assert!((m.distance_at(0, n) - 30.0).abs() <= n as f64 * step + 1e-9);
+        }
+    }
+
+    #[test]
+    fn waypoint_ping_pongs_within_bounds() {
+        let devs = devices(&[20.0, 35.0, 8.0]);
+        let s = spec(MobilityModel::Waypoint);
+        let m = Mobility::new(&s, &devs, 5);
+        assert!(!m.is_static());
+        for i in 0..devs.len() {
+            let d0 = devs[i].distance_m;
+            let mut min_d = f64::INFINITY;
+            let mut max_d: f64 = 0.0;
+            for n in 0..400 {
+                let d = m.distance_at(i, n);
+                // the device never strays more than range_m from its
+                // start position, so its AP distance can deviate from
+                // d0 by at most range_m (triangle inequality)
+                assert!(d >= s.min_distance_m, "{d}");
+                assert!((d - d0).abs() <= s.range_m + 1e-9, "{d} vs d0={d0}");
+                min_d = min_d.min(d);
+                max_d = max_d.max(d);
+            }
+            assert!(max_d > min_d, "waypoint trajectory never moved");
+            // ping-pong: the device returns near its start, repeatedly
+            let near_start = (0..400)
+                .filter(|&n| (m.distance_at(i, n) - d0).abs() < 1.0)
+                .count();
+            assert!(near_start >= 2, "no loop closure for device {i}");
+        }
+    }
+
+    #[test]
+    fn trajectories_are_pure_and_seeded() {
+        let devs = devices(&[15.0, 28.0]);
+        let a = Mobility::new(&spec(MobilityModel::Waypoint), &devs, 9);
+        let b = Mobility::new(&spec(MobilityModel::Waypoint), &devs, 9);
+        let c = Mobility::new(&spec(MobilityModel::Waypoint), &devs, 10);
+        let mut diverged = false;
+        for n in 0..50 {
+            assert_eq!(a.distance_at(0, n).to_bits(), b.distance_at(0, n).to_bits());
+            if a.distance_at(0, n).to_bits() != c.distance_at(0, n).to_bits() {
+                diverged = true;
+            }
+        }
+        assert!(diverged, "seed must steer the waypoint draw");
+    }
+
+    #[test]
+    fn min_distance_floor_holds() {
+        // a device starting 2 m out with a 40 m excursion budget can
+        // pass arbitrarily close to the AP — the floor must hold
+        let devs = devices(&[2.0]);
+        let mut s = spec(MobilityModel::Linear);
+        s.min_distance_m = 1.5;
+        let m = Mobility::new(&s, &devs, 1);
+        for n in 0..200 {
+            assert!(m.distance_at(0, n) >= 1.5);
+        }
+    }
+}

@@ -1,10 +1,18 @@
-//! Wireless-network substrate: log-distance pathloss, Rayleigh block
-//! fading, AWGN, and the 3GPP TS 38.214 CQI -> spectral-efficiency
-//! mapping the paper cites for its rate model (§III-A2).
+//! Wireless-network substrate: log-distance pathloss, pluggable
+//! fading processes (i.i.d. Rayleigh / Gauss–Markov / Jakes) over
+//! static or mobile placements, AWGN, and the 3GPP TS 38.214 CQI ->
+//! spectral-efficiency mapping the paper cites for its rate model
+//! (§III-A2).  See DESIGN.md §6 and §13.
 
 pub mod channel;
 pub mod cqi;
+pub mod fading;
+pub mod link;
+pub mod mobility;
 pub mod pathloss;
 
 pub use channel::{Channel, LinkRealization};
 pub use cqi::{cqi_for_snr, spectral_efficiency, CQI_TABLE};
+pub use fading::FadingProcess;
+pub use link::LinkProcess;
+pub use mobility::Mobility;

@@ -19,14 +19,29 @@
 //! a property of the code.  The guard fails when a speedup drops below
 //! 70% of the committed baseline's — i.e. a >30% decisions/sec
 //! regression relative to what the baseline machine would see.
+//!
+//! The bench also runs one full engine pass per **fading process**
+//! (iid/markov/jakes, DESIGN.md §13) and reports each run's
+//! decision-cache hit rate: correlated channels revisit CQI keys, so
+//! their hit rates should sit above the memoryless default's — the
+//! per-process block in `BENCH_card.json` tracks that across PRs.
 
 use crate::config::scenario::{Scenario, HETEROGENEOUS_FLEET};
+use crate::config::FadingModel;
 use crate::coordinator::{Decision, DecisionCache, Scheduler, Strategy};
 use crate::net::channel::LinkRealization;
 use crate::util::benchkit::Bencher;
 use crate::util::json::{self, Json};
 use crate::util::pool;
 use crate::util::rng::Rng;
+
+/// Decision-cache behaviour of one fading process on the benched
+/// preset: how hard correlated channels lean on the CQI-keyed memo.
+#[derive(Clone, Debug)]
+pub struct ProcessHitRate {
+    pub process: String,
+    pub hit_rate: f64,
+}
 
 /// One full `card-bench` measurement.
 #[derive(Clone, Debug)]
@@ -49,6 +64,10 @@ pub struct CardBench {
     /// same on the persistent worker pool with `threads` participants
     pub cells_pooled_per_s: f64,
     pub pool_speedup: f64,
+    /// decision-cache hit rate of a full engine run under each fading
+    /// process (same preset/fleet/rounds) — correlated processes
+    /// revisit CQI keys, so their hit rates should sit above `iid`'s
+    pub process_hit_rates: Vec<ProcessHitRate>,
 }
 
 /// Position-dependent digest over **every** `Decision` field: a
@@ -83,12 +102,13 @@ pub fn run(
     cfg.workload.rounds = rounds;
     let sched = Scheduler::new(cfg.clone(), scenario.state, Strategy::Card);
 
-    // one shared channel trace: every mode decides on identical rates
+    // one shared channel trace through the configured link process:
+    // every mode decides on identical rates
     let mut rng = Rng::new(seed ^ 0xCA7D);
     let mut cells: Vec<(usize, LinkRealization)> = Vec::with_capacity(n_devices * rounds);
-    for _ in 0..rounds {
-        for (i, dev) in cfg.devices.iter().enumerate() {
-            cells.push((i, sched.channel.realize(dev, &mut rng)));
+    for n in 0..rounds {
+        for i in 0..cfg.devices.len() {
+            cells.push((i, sched.link.realize(i, n, &mut rng)));
         }
     }
     let decisions = cells.len();
@@ -152,7 +172,7 @@ pub fn run(
     let serial_records = serial_sched.run_analytic()?;
     let serial_s = t0.elapsed().as_secs_f64();
 
-    let pooled_sched = Scheduler::new(cfg, scenario.state, Strategy::Card);
+    let pooled_sched = Scheduler::new(cfg.clone(), scenario.state, Strategy::Card);
     // warm the persistent pool so the timed window measures cells, not
     // the one-time worker spawn
     pool::global().workers();
@@ -160,6 +180,28 @@ pub fn run(
     let pooled_records = pooled_sched.run_parallel(threads);
     let pooled_s = t0.elapsed().as_secs_f64();
     super::fleet::verify_bit_identical(&serial_records, &pooled_records)?;
+
+    // --- decision-cache hit rate per fading process --------------------
+    // same preset/fleet/rounds, one full engine run per process: the
+    // first real workout of the PR-3 cache under correlated channels.
+    // The preset's own process already ran as the pooled measurement —
+    // reuse its hit rate instead of re-running the engine.
+    let mut process_hit_rates = Vec::with_capacity(FadingModel::ALL.len());
+    for model in FadingModel::ALL {
+        let hit_rate = if model == cfg.channel.process.model {
+            pooled_sched.cache_hit_rate()
+        } else {
+            let mut pcfg = cfg.clone();
+            pcfg.channel.process.model = model;
+            let s = Scheduler::new(pcfg, scenario.state, Strategy::Card);
+            s.run_parallel(threads);
+            s.cache_hit_rate()
+        };
+        process_hit_rates.push(ProcessHitRate {
+            process: model.name().to_string(),
+            hit_rate,
+        });
+    }
 
     let per_s = |elapsed: f64| decisions as f64 / elapsed.max(1e-9);
     let result = CardBench {
@@ -178,6 +220,7 @@ pub fn run(
         cells_serial_per_s: per_s(serial_s),
         cells_pooled_per_s: per_s(pooled_s),
         pool_speedup: serial_s / pooled_s.max(1e-12),
+        process_hit_rates,
     };
     let rows = [
         ("decide_legacy", legacy_s, result.legacy_decisions_per_s, "decision"),
@@ -206,10 +249,17 @@ pub fn run_default(
 impl CardBench {
     /// Human summary (what the CLI prints above the bench table).
     pub fn render(&self) -> String {
+        let by_process = self
+            .process_hit_rates
+            .iter()
+            .map(|p| format!("{} {:.1}%", p.process, 100.0 * p.hit_rate))
+            .collect::<Vec<_>>()
+            .join("   ");
         format!(
             "card-bench — {} × {} devices × {} rounds (seed {})\n\
              decisions/sec   legacy {:>12.0}   kernel {:>12.0} ({:.1}×)   cached {:>12.0} ({:.1}×)\n\
              cache hit-rate  {:.1}%\n\
+             hit-rate by fading process   {}\n\
              cells/sec       serial {:>12.0}   pooled {:>12.0} ({:.1}× on {} threads)",
             self.scenario,
             self.n_devices,
@@ -221,6 +271,7 @@ impl CardBench {
             self.cached_decisions_per_s,
             self.speedup_cached_vs_legacy,
             100.0 * self.cache_hit_rate,
+            by_process,
             self.cells_serial_per_s,
             self.cells_pooled_per_s,
             self.pool_speedup,
@@ -249,6 +300,15 @@ impl CardBench {
             ("cells_serial_per_s", Json::Num(self.cells_serial_per_s)),
             ("cells_pooled_per_s", Json::Num(self.cells_pooled_per_s)),
             ("pool_speedup", Json::Num(self.pool_speedup)),
+            (
+                "process_hit_rates",
+                json::obj(
+                    self.process_hit_rates
+                        .iter()
+                        .map(|p| (p.process.as_str(), Json::Num(p.hit_rate)))
+                        .collect(),
+                ),
+            ),
         ])
     }
 
@@ -304,14 +364,46 @@ mod tests {
     }
 
     #[test]
+    fn reports_hit_rates_for_every_fading_process() {
+        let mut bench = Bencher::new("card-bench-process");
+        // enough rounds for correlated fading to revisit CQI keys
+        let r = run_default(30, 12, 2, 5, &mut bench).unwrap();
+        assert_eq!(r.process_hit_rates.len(), 3);
+        let rate = |name: &str| {
+            r.process_hit_rates
+                .iter()
+                .find(|p| p.process == name)
+                .unwrap_or_else(|| panic!("missing process '{name}'"))
+                .hit_rate
+        };
+        for name in ["iid", "markov", "jakes"] {
+            assert!((0.0..=1.0).contains(&rate(name)), "{name}");
+        }
+        // the acceptance bar: correlated fading leans on the decision
+        // cache harder than the memoryless default
+        assert!(
+            rate("markov") > rate("iid"),
+            "markov {} should beat iid {}",
+            rate("markov"),
+            rate("iid")
+        );
+    }
+
+    #[test]
     fn json_round_trips() {
         let r = quick();
         let js = r.to_json().to_string();
         assert!(js.contains("card-bench/v1"));
         assert!(js.contains("speedup_kernel_vs_legacy"));
         assert!(js.contains("cache_hit_rate"));
+        assert!(js.contains("process_hit_rates"));
+        assert!(js.contains("markov"));
         let parsed = Json::parse(&js).unwrap();
         assert_eq!(parsed.get("n_devices").and_then(Json::as_usize), Some(r.n_devices));
+        assert!(parsed
+            .at(&["process_hit_rates", "iid"])
+            .and_then(Json::as_f64)
+            .is_some());
     }
 
     #[test]

@@ -15,10 +15,14 @@ pub struct Percentiles {
 
 impl Percentiles {
     /// Linear-interpolated percentiles (NaN on empty input, like
-    /// `stats::percentile`).  Sorts the samples once for all three.
+    /// `stats::percentile`).  Sorts the samples once for all three;
+    /// `total_cmp` keeps NaN samples (a poisoned upstream metric) from
+    /// panicking the sort — they order to the extremes (above +∞, or
+    /// below -∞ for sign-bit-set NaN), skewing the tail rather than
+    /// crashing the whole sweep.
     pub fn of(xs: &[f64]) -> Percentiles {
         let mut v: Vec<f64> = xs.to_vec();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.sort_by(|a, b| a.total_cmp(b));
         Percentiles {
             p50: stats::percentile_sorted(&v, 50.0),
             p95: stats::percentile_sorted(&v, 95.0),
@@ -44,17 +48,9 @@ pub struct Summary {
 
 impl Summary {
     pub fn from_records<'a>(records: impl IntoIterator<Item = &'a RoundRecord>) -> Self {
-        let mut s = Summary {
-            delay: Accum::new(),
-            energy: Accum::new(),
-            device_compute: Accum::new(),
-            server_compute: Accum::new(),
-            transmission: Accum::new(),
-            cost: Accum::new(),
-            cuts: Vec::new(),
-            freqs_ghz: Vec::new(),
-            delay_samples: Vec::new(),
-        };
+        // Accum::default() == Accum::new() (sentinel-correct), so the
+        // derived Default covers every field
+        let mut s = Summary::default();
         for r in records {
             s.delay.push(r.delay_s);
             s.delay_samples.push(r.delay_s);
@@ -158,6 +154,27 @@ mod tests {
         assert!(p.p50 <= p.p95 && p.p95 <= p.p99);
         // empty summaries report NaN, not a panic
         assert!(Summary::default().delay_percentiles().p50.is_nan());
+    }
+
+    #[test]
+    fn percentiles_tolerate_nan_samples() {
+        // a poisoned sample must not panic the sort; NaN orders above
+        // +inf under total_cmp, so finite percentiles stay sane
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        let p = Percentiles::of(&xs);
+        assert!((p.p50 - 2.5).abs() < 1e-9, "p50={}", p.p50);
+        assert!(p.p99.is_nan(), "NaN should surface in the tail");
+    }
+
+    #[test]
+    fn default_summary_accums_are_sentinel_correct() {
+        // Default::default() must behave like Accum::new(): pushing one
+        // sample makes it both min and max (a zeroed default would
+        // report min = 0.0 here)
+        let mut s = Summary::default();
+        s.delay.push(5.0);
+        assert_eq!(s.delay.min(), 5.0);
+        assert_eq!(s.delay.max(), 5.0);
     }
 
     #[test]

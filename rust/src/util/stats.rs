@@ -1,13 +1,22 @@
 //! Descriptive statistics for metrics/bench reporting (no external deps).
 
 /// Online accumulator (Welford) — used by the round metrics and benchkit.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct Accum {
     n: u64,
     mean: f64,
     m2: f64,
     min: f64,
     max: f64,
+}
+
+/// `default()` must equal `new()`: a derived (zeroed) impl would start
+/// `min`/`max` at 0.0 instead of the ±∞ sentinels and corrupt the
+/// extrema of any accumulator built via `..Default::default()`.
+impl Default for Accum {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl Accum {

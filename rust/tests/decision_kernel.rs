@@ -1,14 +1,15 @@
-//! Decision-kernel bit-compat property suite (DESIGN.md §12).
+//! Decision-kernel bit-compat property suite (DESIGN.md §12, §13).
 //!
 //! The acceptance bar for the kernel overhaul: for every scenario
-//! preset × seed × strategy, the cached decision path (cut tables +
-//! CQI-keyed memo, any thread count) produces a record stream
-//! **bit-identical** to the uncached kernel scan AND to the pre-kernel
-//! reference path that re-derives the model terms per cost call.
-//! Random-cut participates too: it must *bypass* the cache (it draws
-//! from the cell RNG) yet still match the reference draw for draw.
+//! preset × seed × strategy — and every channel process × mobility
+//! combination — the cached decision path (cut tables + CQI-keyed
+//! memo, any thread count) produces a record stream **bit-identical**
+//! to the uncached kernel scan AND to the pre-kernel reference path
+//! that re-derives the model terms per cost call.  Random-cut
+//! participates too: it must *bypass* the cache (it draws from the
+//! cell RNG) yet still match the reference draw for draw.
 
-use edgesplit::config::scenario;
+use edgesplit::config::{scenario, ExpConfig, FadingModel, MobilityModel};
 use edgesplit::coordinator::{Scheduler, Strategy};
 use edgesplit::sim::fleet::verify_bit_identical;
 
@@ -47,6 +48,83 @@ fn cached_path_bit_identical_across_presets_seeds_strategies() {
             }
         }
     }
+}
+
+/// A heterogeneous-fleet base config with the given channel process
+/// and (optionally) linear mobility layered on.
+fn process_cfg(model: FadingModel, mobile: bool) -> ExpConfig {
+    let mut cfg = scenario::HETEROGENEOUS_FLEET.config(11, 5).unwrap();
+    cfg.workload.rounds = 6;
+    cfg.churn = Default::default();
+    cfg.channel.process.model = model;
+    if mobile {
+        cfg.mobility.model = MobilityModel::Linear;
+        cfg.mobility.speed_mps = 3.0;
+        cfg.mobility.round_s = 20.0;
+    }
+    cfg.validate().unwrap();
+    cfg
+}
+
+#[test]
+fn bit_compat_matrix_across_channel_processes_and_mobility() {
+    let state = scenario::HETEROGENEOUS_FLEET.state;
+    for model in FadingModel::ALL {
+        for mobile in [false, true] {
+            for strategy in STRATEGIES {
+                let sched = Scheduler::new(process_cfg(model, mobile), state, strategy);
+
+                // parallel + cached (the production path), at several
+                // thread counts...
+                let cached = sched.run_parallel(4);
+                let ctx = format!("{model:?} mobile={mobile} {}", strategy.name());
+                for threads in [1, 8] {
+                    if let Err(e) = verify_bit_identical(&cached, &sched.run_parallel(threads)) {
+                        panic!("thread-count divergence [{ctx}]: {e:#}");
+                    }
+                }
+                // ...vs the kernel scan with the cache bypassed...
+                if let Err(e) = verify_bit_identical(&cached, &sched.run_uncached()) {
+                    panic!("cached vs uncached [{ctx}]: {e:#}");
+                }
+                // ...vs the full-recompute reference
+                if let Err(e) = verify_bit_identical(&cached, &sched.run_ref()) {
+                    panic!("cached vs legacy [{ctx}]: {e:#}");
+                }
+            }
+        }
+    }
+}
+
+/// Lag-1 Pearson autocorrelation of a series.
+fn lag1_autocorr(xs: &[f64]) -> f64 {
+    edgesplit::util::stats::pearson(&xs[..xs.len() - 1], &xs[1..])
+}
+
+#[test]
+fn correlated_processes_produce_correlated_snr_traces() {
+    let state = scenario::HETEROGENEOUS_FLEET.state;
+    let trace = |model: FadingModel| -> Vec<f64> {
+        let mut cfg = process_cfg(model, false);
+        cfg.workload.rounds = 200;
+        let sched = Scheduler::new(cfg, state, Strategy::Card);
+        (0..200).map(|n| sched.device_round(n, 0).snr_up_db).collect()
+    };
+    let r_iid = lag1_autocorr(&trace(FadingModel::Iid));
+    let r_markov = lag1_autocorr(&trace(FadingModel::Markov));
+    let r_jakes = lag1_autocorr(&trace(FadingModel::Jakes));
+    assert!(
+        r_iid.abs() < 0.25,
+        "iid SNR trace should be memoryless, lag-1 r = {r_iid}"
+    );
+    assert!(
+        r_markov > 0.5,
+        "markov SNR trace should be round-to-round correlated, lag-1 r = {r_markov}"
+    );
+    assert!(
+        r_jakes > 0.5,
+        "jakes SNR trace should be round-to-round correlated, lag-1 r = {r_jakes}"
+    );
 }
 
 #[test]
