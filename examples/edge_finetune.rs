@@ -12,8 +12,9 @@
 //!   lr     LoRA learning rate (default 0.5)
 
 use edgesplit::config::{ChannelState, ExpConfig};
-use edgesplit::coordinator::{Scheduler, Strategy, TrainBackend};
+use edgesplit::coordinator::{Strategy, TrainBackend};
 use edgesplit::data::{Batcher, Corpus};
+use edgesplit::exp::ExperimentBuilder;
 use edgesplit::runtime::{artifact_dir, ArtifactStore, SplitExecutor};
 use edgesplit::sim::reduction_pct;
 use edgesplit::util::rng::Rng;
@@ -58,12 +59,16 @@ fn main() -> anyhow::Result<()> {
         .collect();
     let mut executor = SplitExecutor::new(store, batchers, lr, cfg.seed)?;
 
-    // CARD decides per round under a Normal fading channel
+    // CARD decides per round under a Normal fading channel; the
+    // unified experiment API drives the real backend alongside
     cfg.workload.rounds = steps.div_ceil(cfg.workload.local_epochs * n_dev).max(1);
-    let sched = Scheduler::new(cfg.clone(), ChannelState::Normal, Strategy::Card);
+    let experiment = ExperimentBuilder::from_config(cfg.clone())
+        .channel_state(ChannelState::Normal)
+        .strategy(Strategy::Card)
+        .build()?;
 
     let t0 = std::time::Instant::now();
-    let records = sched.run(Some(&mut executor))?;
+    let records = experiment.run_trained(&mut executor)?;
     let wall = t0.elapsed().as_secs_f64();
 
     // ---- loss curve ----

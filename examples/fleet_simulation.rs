@@ -6,10 +6,10 @@
 //!   cargo run --release --example fleet_simulation
 
 use edgesplit::config::{ChannelState, ExpConfig};
-use edgesplit::coordinator::{Scheduler, Strategy};
+use edgesplit::coordinator::Strategy;
 use edgesplit::devices::Fleet;
-use edgesplit::sim::{reduction_pct, Summary};
-use edgesplit::util::pool;
+use edgesplit::exp::ExperimentBuilder;
+use edgesplit::sim::reduction_pct;
 use edgesplit::util::rng::Rng;
 use edgesplit::util::table::{fmt_joules, fmt_secs, Table};
 
@@ -49,11 +49,13 @@ fn main() -> anyhow::Result<()> {
 
     for state in ChannelState::ALL {
         for strat in strategies {
-            let sched = Scheduler::new(cfg.clone(), state, strat);
             // fleet rounds run K devices concurrently; results are
             // bit-identical to the serial path for the same seed
-            let records = sched.run_parallel(pool::default_parallelism());
-            let s = Summary::from_records(&records);
+            let experiment = ExperimentBuilder::from_config(cfg.clone())
+                .channel_state(state)
+                .strategy(strat)
+                .build()?;
+            let (s, _) = experiment.run_summary()?;
             let mean_cut = s.mean_cut();
             t.row(vec![
                 state.name().into(),

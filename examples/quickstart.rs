@@ -7,9 +7,9 @@
 //!   cargo run --release --example quickstart
 
 use edgesplit::config::{ChannelState, ExpConfig};
-use edgesplit::coordinator::{build_cost_model, Scheduler, Strategy};
+use edgesplit::coordinator::{build_cost_model, Strategy};
+use edgesplit::exp::ExperimentBuilder;
 use edgesplit::net::Channel;
-use edgesplit::sim::Summary;
 use edgesplit::util::rng::Rng;
 use edgesplit::util::table::{fmt_joules, fmt_secs, Table};
 
@@ -41,16 +41,19 @@ fn main() -> anyhow::Result<()> {
     }
     t.print();
 
-    // 3. full multi-round simulation, CARD vs the two paper baselines
+    // 3. full multi-round simulation through the unified experiment
+    //    API, CARD vs the two paper baselines — builder in, summary out
     println!();
     let mut cmp = Table::new(
         "8 rounds, mean per-round cost (Normal channel)",
         &["strategy", "delay", "server energy"],
     );
     for strat in [Strategy::Card, Strategy::ServerOnly, Strategy::DeviceOnly] {
-        let sched = Scheduler::new(cfg.clone(), ChannelState::Normal, strat);
-        let records = sched.run_analytic()?;
-        let s = Summary::from_records(&records);
+        let experiment = ExperimentBuilder::from_config(cfg.clone())
+            .channel_state(ChannelState::Normal)
+            .strategy(strat)
+            .build()?;
+        let (s, _) = experiment.run_summary()?;
         cmp.row(vec![
             strat.name(),
             fmt_secs(s.delay.mean()),

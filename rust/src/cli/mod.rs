@@ -8,6 +8,7 @@ pub enum CliError {
     UnknownFlag(String),
     MissingValue(String),
     BadValue(String, String, &'static str),
+    UnexpectedPositional(String),
 }
 
 impl std::fmt::Display for CliError {
@@ -18,6 +19,10 @@ impl std::fmt::Display for CliError {
             CliError::BadValue(name, value, ty) => {
                 write!(f, "flag '--{name}': cannot parse '{value}' as {ty}")
             }
+            CliError::UnexpectedPositional(arg) => write!(
+                f,
+                "unexpected positional argument '{arg}' (options are flags: --name value; see --help)"
+            ),
         }
     }
 }
@@ -81,6 +86,17 @@ impl Args {
 
     pub fn positional(&self) -> &[String] {
         &self.positional
+    }
+
+    /// Reject stray positional arguments beyond the `allowed` leading
+    /// ones (the subcommand name, plus e.g. `show`'s target) — every
+    /// subcommand is flag-only past those, so anything extra is a typo
+    /// that used to be silently ignored.
+    pub fn expect_positionals(&self, allowed: usize) -> Result<(), CliError> {
+        match self.positional.get(allowed) {
+            Some(extra) => Err(CliError::UnexpectedPositional(extra.clone())),
+            None => Ok(()),
+        }
     }
 
     pub fn str_of(&self, name: &str) -> Option<&str> {
@@ -209,6 +225,20 @@ mod tests {
             Args::parse(&sv(&["--rounds"]), &specs()),
             Err(CliError::MissingValue(_))
         ));
+    }
+
+    #[test]
+    fn rejects_unexpected_positionals() {
+        let a = Args::parse(&sv(&["fig3", "stray", "--rounds", "7"]), &specs()).unwrap();
+        // the subcommand itself is fine...
+        assert!(a.expect_positionals(2).is_ok());
+        // ...but anything past the allowance is a typed error naming it
+        let err = a.expect_positionals(1).unwrap_err();
+        assert!(matches!(&err, CliError::UnexpectedPositional(s) if s == "stray"));
+        assert!(err.to_string().contains("stray"));
+        // flag-only invocations always pass
+        let b = Args::parse(&sv(&["fig4"]), &specs()).unwrap();
+        assert!(b.expect_positionals(1).is_ok());
     }
 
     #[test]

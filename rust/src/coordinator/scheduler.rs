@@ -122,6 +122,10 @@ pub fn build_cost_model(cfg: &ExpConfig) -> CostModel {
     )
 }
 
+/// The round scheduler.  Its `run*` family is the in-crate substrate of
+/// the unified experiment API (`exp::Engine`, DESIGN.md §14): construct
+/// experiments through `exp::ExperimentBuilder`; outside `exp/` only
+/// the bit-compat property suites call `run*` directly.
 pub struct Scheduler {
     pub cfg: ExpConfig,
     pub cost_model: CostModel,
@@ -458,8 +462,8 @@ mod tests {
     }
 
     fn assert_bit_identical(a: &[RoundRecord], b: &[RoundRecord]) {
-        // single comparator crate-wide: the same gate fleet-sweep runs
-        if let Err(e) = crate::sim::fleet::verify_bit_identical(a, b) {
+        // single comparator crate-wide: the same gate both sweeps run
+        if let Err(e) = crate::exp::verify::verify_bit_identical(a, b) {
             panic!("{e:#}");
         }
     }

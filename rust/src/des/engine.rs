@@ -35,6 +35,7 @@
 //! interleaving.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use crate::coordinator::{Aggregator, RoundRecord, Scheduler};
 use crate::util::stats;
@@ -135,20 +136,28 @@ pub struct DesOutcome {
 }
 
 /// Discrete-event engine over a [`Scheduler`]'s config and cost model.
-pub struct DesEngine<'a> {
-    sched: &'a Scheduler,
+/// Owns the scheduler through an `Arc` (shared with the caller and the
+/// `exp::Engine` wrapper) — no borrowed lifetime, so the engine can
+/// live inside trait objects.
+pub struct DesEngine {
+    sched: Arc<Scheduler>,
     des: DesConfig,
 }
 
-impl<'a> DesEngine<'a> {
-    pub fn new(sched: &'a Scheduler, des: DesConfig) -> DesEngine<'a> {
+impl DesEngine {
+    pub fn new(sched: Arc<Scheduler>, des: DesConfig) -> DesEngine {
         DesEngine { sched, des }
+    }
+
+    /// The scheduler this engine evaluates cells through.
+    pub fn scheduler(&self) -> &Scheduler {
+        &self.sched
     }
 
     /// Run the simulation to completion.  Strictly serial and
     /// deterministic; see the module docs for why.
     pub fn run(&self) -> DesOutcome {
-        Sim::new(self.sched, self.des).run()
+        Sim::new(&self.sched, self.des).run()
     }
 }
 
@@ -611,7 +620,7 @@ mod tests {
     use super::*;
     use crate::config::{ChannelState, ExpConfig};
     use crate::coordinator::Strategy;
-    use crate::sim::fleet::verify_bit_identical;
+    use crate::exp::verify::verify_bit_identical;
 
     fn quick_cfg(rounds: usize) -> ExpConfig {
         let mut cfg = ExpConfig::paper();
@@ -620,9 +629,9 @@ mod tests {
     }
 
     fn engine_outcome(cfg: ExpConfig, policy: Policy, capacity: usize) -> DesOutcome {
-        let sched = Scheduler::new(cfg, ChannelState::Normal, Strategy::Card);
+        let sched = Arc::new(Scheduler::new(cfg, ChannelState::Normal, Strategy::Card));
         DesEngine::new(
-            &sched,
+            sched,
             DesConfig {
                 policy,
                 capacity,

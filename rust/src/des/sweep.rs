@@ -3,19 +3,26 @@
 //! server utilization/queue depth, and energy into `BENCH_des.json`
 //! for CI perf-trajectory tracking (EXPERIMENTS.md).
 //!
-//! Grid points are independent DES runs (each strictly serial and
-//! deterministic), so the sweep fans them out on the worker pool —
-//! thread count changes wall-clock only, never a reported metric.
+//! Grid points are independent [`crate::exp::ExperimentBuilder`]-built
+//! DES experiments (each strictly serial and deterministic), so the
+//! sweep fans them out on the worker pool — thread count changes
+//! wall-clock only, never a reported metric.  Per-cell latency samples
+//! and merged energy stream through an `exp::DesSink`.  The sweep runs
+//! the shared determinism gate
+//! ([`crate::exp::verify::verify_des_sync_matches_round_engine`]) at
+//! the largest fleet of every scenario: churn-free sync DES must
+//! reproduce the serial round engine bit for bit.
 
 use crate::config::scenario::Scenario;
-use crate::coordinator::{Scheduler, Strategy};
+use crate::coordinator::RoundRecord;
+use crate::exp::{self, DesSink, ExperimentBuilder, MetricsSink, Report, ReportMeta};
 use crate::sim::metrics::Percentiles;
 use crate::util::benchkit::Bencher;
 use crate::util::json::{self, Json};
 use crate::util::pool;
 use crate::util::table::{fmt_joules, fmt_secs, Table};
 
-use super::engine::{DesConfig, DesEngine, Policy};
+use super::engine::{DesConfig, DesRecord, Policy};
 
 /// One (scenario, policy, fleet size) DES measurement.
 #[derive(Clone, Debug)]
@@ -86,22 +93,30 @@ pub fn sweep(
         }
     }
 
-    let mut grid: Vec<(Scenario, usize, Policy)> = Vec::new();
+    // a (sync, largest-fleet) grid point doubles as its scenario's
+    // determinism-gate run when the preset is churn-free — its records
+    // are collected so the gate never re-runs the simulation
+    let gate_n = *counts.iter().max().unwrap();
+    let mut grid: Vec<(Scenario, usize, Policy, bool)> = Vec::new();
     for sc in scenarios {
         for &n in counts {
             for &p in policies {
-                grid.push((*sc, n, p));
+                let gate = n == gate_n && matches!(p, Policy::Sync);
+                grid.push((*sc, n, p, gate));
             }
         }
     }
 
-    let results: Vec<anyhow::Result<DesPoint>> =
-        pool::par_map_indexed(threads, &grid, |_, &(sc, n, policy)| {
-            run_point(sc, n, policy, rounds, capacity, batch, seed)
+    let results: Vec<anyhow::Result<(DesPoint, Option<Vec<RoundRecord>>)>> =
+        pool::par_map_indexed(threads, &grid, |_, &(sc, n, policy, gate)| {
+            run_point(sc, n, policy, rounds, capacity, batch, seed, gate)
         });
     let mut points = Vec::with_capacity(results.len());
+    let mut gate_records = Vec::with_capacity(results.len());
     for r in results {
-        points.push(r?);
+        let (point, records) = r?;
+        points.push(point);
+        gate_records.push(records);
     }
     for p in &points {
         let rate = p.completed as f64 / p.wall_s.max(1e-9);
@@ -111,6 +126,33 @@ pub fn sweep(
             Some((rate, "device-round")),
         );
     }
+
+    // shared determinism gate at each scenario's largest fleet: the
+    // churn-free sync-policy DES timeline must reproduce the serial
+    // round engine's records bit for bit.  Reuse the gate point's own
+    // records when the sweep produced them; otherwise (no sync policy
+    // selected, or a churny preset) run the dedicated churn-free check.
+    for sc in scenarios {
+        let mut cfg = sc.config(gate_n, seed)?;
+        if let Some(r) = rounds {
+            cfg.workload.rounds = r;
+        }
+        let reused = grid
+            .iter()
+            .zip(&gate_records)
+            .find_map(|((gsc, _, _, _), records)| {
+                (gsc.name == sc.name).then_some(records.as_ref()).flatten()
+            });
+        match reused {
+            Some(records) => {
+                exp::verify::verify_des_records_match_round_engine(&cfg, sc.state, records)?
+            }
+            None => {
+                exp::verify::verify_des_sync_matches_round_engine(&cfg, sc.state, capacity, batch)?
+            }
+        }
+    }
+
     Ok(DesSweep {
         points,
         threads,
@@ -118,6 +160,27 @@ pub fn sweep(
     })
 }
 
+/// Sink for gated grid points: the standard [`DesSink`] observables
+/// plus (when `collect` is set) the analytic records the determinism
+/// gate verifies, so the gate never re-runs the simulation.
+struct GateSink {
+    des: DesSink,
+    collect: bool,
+    records: Vec<RoundRecord>,
+}
+
+impl MetricsSink for GateSink {
+    fn on_record(&mut self, _rec: &RoundRecord) {}
+
+    fn on_des_record(&mut self, rec: &DesRecord) {
+        self.des.on_des_record(rec);
+        if self.collect {
+            self.records.push(rec.record.clone());
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
 fn run_point(
     sc: Scenario,
     n: usize,
@@ -126,29 +189,43 @@ fn run_point(
     capacity: usize,
     batch: usize,
     seed: u64,
-) -> anyhow::Result<DesPoint> {
-    let mut cfg = sc.config(n, seed)?;
+    gate: bool,
+) -> anyhow::Result<(DesPoint, Option<Vec<RoundRecord>>)> {
+    let mut builder = ExperimentBuilder::preset(sc.name)
+        .devices(n)
+        .seed(seed)
+        .des(DesConfig {
+            policy,
+            capacity,
+            batch,
+        });
     if let Some(r) = rounds {
-        cfg.workload.rounds = r;
+        builder = builder.rounds(r);
     }
-    let n_rounds = cfg.workload.rounds;
-    let sched = Scheduler::new(cfg, sc.state, Strategy::Card);
-    let des = DesConfig {
-        policy,
-        capacity,
-        batch,
+    let experiment = builder.build()?;
+    let n_rounds = experiment.config().workload.rounds;
+    // the gate contract is churn-free sync-vs-round-engine bit
+    // identity, so a churny preset's records cannot serve as the gate
+    let collect = gate && !experiment.config().churn.enabled();
+
+    let mut sink = GateSink {
+        des: DesSink::default(),
+        collect,
+        records: Vec::new(),
     };
     let t0 = std::time::Instant::now();
-    let out = DesEngine::new(&sched, des).run();
+    let outcome = experiment.run_into(&mut sink)?;
     let wall = t0.elapsed().as_secs_f64();
+    let des = outcome
+        .des
+        .ok_or_else(|| anyhow::anyhow!("event engine must report DES stats"))?;
 
-    let latencies: Vec<f64> = out.records.iter().map(|r| r.latency_s()).collect();
-    let round_latency = if latencies.is_empty() {
+    let round_latency = if sink.des.latencies.is_empty() {
         Percentiles::default()
     } else {
-        Percentiles::of(&latencies)
+        Percentiles::of(&sink.des.latencies)
     };
-    Ok(DesPoint {
+    let point = DesPoint {
         scenario: sc.name.to_string(),
         policy: policy.name().to_string(),
         n_devices: n,
@@ -156,20 +233,21 @@ fn run_point(
         capacity,
         batch,
         wall_s: wall,
-        makespan_s: out.makespan_s,
-        completed: out.records.len(),
-        dropped: out.dropped,
-        departures: out.departures,
-        arrivals: out.arrivals,
+        makespan_s: des.makespan_s,
+        completed: outcome.cells,
+        dropped: des.dropped,
+        departures: des.departures,
+        arrivals: des.arrivals,
         round_latency,
-        mean_wait_s: out.server.mean_wait_s,
-        server_utilization: out.server.utilization,
-        peak_queue_depth: out.server.peak_depth,
-        mean_queue_depth: out.server.mean_depth,
-        energy_j: out.energy_spent_j,
-        energy_merged_j: out.records.iter().map(|r| r.record.energy_j).sum(),
-        peak_staleness: out.peak_staleness,
-    })
+        mean_wait_s: des.server.mean_wait_s,
+        server_utilization: des.server.utilization,
+        peak_queue_depth: des.server.peak_depth,
+        mean_queue_depth: des.server.mean_depth,
+        energy_j: des.energy_spent_j,
+        energy_merged_j: sink.des.energy_merged_j,
+        peak_staleness: des.peak_staleness,
+    };
+    Ok((point, collect.then_some(sink.records)))
 }
 
 impl DesSweep {
@@ -214,7 +292,7 @@ impl DesSweep {
         t.render()
     }
 
-    /// Machine-readable dump (the `BENCH_des.json` payload).
+    /// Emitter payload (the `data` member of the report envelope).
     pub fn to_json(&self) -> Json {
         json::obj(vec![
             ("schema", Json::Str("edgesplit/des-sweep/v1".into())),
@@ -227,6 +305,22 @@ impl DesSweep {
                 Json::Arr(self.points.iter().map(point_json).collect()),
             ),
         ])
+    }
+
+    /// The enveloped report (`BENCH_des.json`): shared
+    /// `schema_version`/`meta` wrapper around [`DesSweep::to_json`].
+    pub fn report(&self, scenario_sel: &str, rounds: Option<usize>) -> Report {
+        Report::new(
+            ReportMeta {
+                kind: "des-sweep",
+                preset: scenario_sel.to_string(),
+                seed: self.seed,
+                threads: self.threads,
+                rounds,
+            },
+            self.to_json(),
+            self.render(),
+        )
     }
 }
 
@@ -297,6 +391,27 @@ mod tests {
         assert!(js.contains("\"policy\":\"async\""));
         assert!(js.contains("server_utilization"));
         assert!(Json::parse(&js).is_ok());
+    }
+
+    #[test]
+    fn report_wraps_payload_in_versioned_envelope() {
+        let mut bench = Bencher::new("des-envelope");
+        let sweep = sweep(
+            &[scenario::DENSE_URBAN],
+            &[4],
+            &[Policy::Sync],
+            Some(1),
+            2,
+            1,
+            2,
+            3,
+            &mut bench,
+        )
+        .unwrap();
+        let j = sweep.report("all", Some(1)).to_json();
+        assert_eq!(j.get("schema_version").and_then(Json::as_usize), Some(1));
+        assert_eq!(j.at(&["meta", "preset"]).and_then(Json::as_str), Some("all"));
+        assert!(j.at(&["data", "points"]).is_some());
     }
 
     #[test]

@@ -1,0 +1,398 @@
+//! [`ExperimentBuilder`]: the one way experiments are constructed —
+//! scenario preset or explicit config, strategy, channel/mobility
+//! overrides, seed, threads, rounds, engine choice — with typed
+//! [`BuildError`] validation instead of ad-hoc flag plumbing.
+
+use std::fmt;
+use std::sync::Arc;
+
+use crate::config::scenario::{self, Scenario};
+use crate::config::{ChannelState, ConfigError, ExpConfig, FadingModel, MobilitySpec};
+use crate::coordinator::{RoundRecord, Scheduler, Strategy, TrainBackend};
+use crate::des::{DesConfig, DesEngine, Policy};
+use crate::sim::metrics::Summary;
+use crate::util::pool;
+
+use super::engine::{Engine, EventEngine, ExecMode, RoundEngine, RunOutcome};
+use super::sink::{CollectSink, MetricsSink, SummarySink};
+
+/// Which engine executes the experiment.
+#[derive(Clone, Copy, Debug)]
+pub enum EngineChoice {
+    /// Per-round parallel fleet engine (the default).
+    Round,
+    /// Discrete-event fleet engine: server queue, churn, aggregation
+    /// policy.
+    Des(DesConfig),
+}
+
+/// Typed validation errors from [`ExperimentBuilder::build`].
+#[derive(Debug)]
+pub enum BuildError {
+    /// Preset name not in the scenario registry.
+    UnknownPreset(String),
+    /// The named preset base needs an explicit fleet size (`devices(n)`).
+    MissingFleetSize(String),
+    /// `devices(n)` only applies to preset bases — an explicit config
+    /// already carries its fleet.
+    FleetSizeWithoutPreset,
+    /// `devices(0)`.
+    ZeroDevices,
+    /// `rounds(0)` (or a config with no rounds).
+    ZeroRounds,
+    /// The named `Uncached`/`Ref` oracle exists only on the round engine.
+    OracleOnEventEngine(&'static str),
+    /// Degenerate DES knobs (capacity/batch/deadline factor).
+    InvalidDes(String),
+    /// Config-level validation failed (`ExpConfig::validate` et al.).
+    Config(ConfigError),
+}
+
+impl fmt::Display for BuildError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            BuildError::UnknownPreset(name) => {
+                let known: Vec<&str> = scenario::ALL.iter().map(|s| s.name).collect();
+                write!(f, "unknown preset '{name}' (have: {})", known.join(", "))
+            }
+            BuildError::MissingFleetSize(preset) => {
+                write!(f, "preset '{preset}' needs an explicit fleet size — call .devices(n)")
+            }
+            BuildError::FleetSizeWithoutPreset => write!(
+                f,
+                ".devices(n) only applies to preset bases; an explicit config already carries its fleet"
+            ),
+            BuildError::ZeroDevices => write!(f, "fleet size must be >= 1"),
+            BuildError::ZeroRounds => write!(f, "rounds must be >= 1"),
+            BuildError::OracleOnEventEngine(mode) => write!(
+                f,
+                "ExecMode::{mode} is a round-engine oracle — the event engine only runs ExecMode::Cached"
+            ),
+            BuildError::InvalidDes(msg) => write!(f, "invalid DES config: {msg}"),
+            BuildError::Config(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for BuildError {}
+
+impl From<ConfigError> for BuildError {
+    fn from(e: ConfigError) -> Self {
+        BuildError::Config(e)
+    }
+}
+
+enum Base {
+    Preset(String),
+    Config(Box<ExpConfig>),
+}
+
+/// Builder for a validated, runnable [`Experiment`].
+///
+/// ```no_run
+/// # fn main() -> anyhow::Result<()> {
+/// use edgesplit::exp::ExperimentBuilder;
+///
+/// let exp = ExperimentBuilder::preset("dense-urban")
+///     .devices(100)
+///     .rounds(5)
+///     .seed(7)
+///     .build()?;
+/// let (summary, outcome) = exp.run_summary()?;
+/// println!("{} cells, mean delay {:.2}s", outcome.cells, summary.delay.mean());
+/// # Ok(())
+/// # }
+/// ```
+pub struct ExperimentBuilder {
+    base: Base,
+    n_devices: Option<usize>,
+    state: Option<ChannelState>,
+    strategy: Strategy,
+    seed: Option<u64>,
+    rounds: Option<usize>,
+    threads: Option<usize>,
+    mode: ExecMode,
+    engine: EngineChoice,
+    channel_model: Option<FadingModel>,
+    mobility: Option<MobilitySpec>,
+}
+
+impl ExperimentBuilder {
+    /// Start from a scenario-registry preset (see `show scenarios`).
+    /// The preset supplies the channel state, channel process, and
+    /// workload; `devices(n)` is required to size the synthetic fleet.
+    pub fn preset(name: &str) -> Self {
+        Self::with_base(Base::Preset(name.to_string()))
+    }
+
+    /// Start from the paper's testbed (Tables I + II).
+    pub fn paper() -> Self {
+        Self::with_base(Base::Config(Box::new(ExpConfig::paper())))
+    }
+
+    /// Start from an explicit, caller-assembled config.
+    pub fn from_config(cfg: ExpConfig) -> Self {
+        Self::with_base(Base::Config(Box::new(cfg)))
+    }
+
+    fn with_base(base: Base) -> Self {
+        ExperimentBuilder {
+            base,
+            n_devices: None,
+            state: None,
+            strategy: Strategy::Card,
+            seed: None,
+            rounds: None,
+            threads: None,
+            mode: ExecMode::Cached,
+            engine: EngineChoice::Round,
+            channel_model: None,
+            mobility: None,
+        }
+    }
+
+    /// Synthetic fleet size (preset bases only).
+    pub fn devices(mut self, n: usize) -> Self {
+        self.n_devices = Some(n);
+        self
+    }
+
+    /// Channel state (pathloss regime) override; presets default to
+    /// their registered state, config bases to `Normal`.
+    pub fn channel_state(mut self, state: ChannelState) -> Self {
+        self.state = Some(state);
+        self
+    }
+
+    /// Decision strategy (default: CARD).
+    pub fn strategy(mut self, strategy: Strategy) -> Self {
+        self.strategy = strategy;
+        self
+    }
+
+    /// Root RNG seed (presets default to 0, configs to their own
+    /// seed).  On a preset base the seed also drives synthetic fleet
+    /// placement; on a config base the fleet was already assembled by
+    /// the caller, so the override reaches only the RNG streams —
+    /// reseed at `Scenario::config`/fleet-construction time if the
+    /// placement itself must move.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = Some(seed);
+        self
+    }
+
+    /// Training-round override.
+    pub fn rounds(mut self, rounds: usize) -> Self {
+        self.rounds = Some(rounds);
+        self
+    }
+
+    /// Worker-pool participants for the round engine's `Cached` mode
+    /// (default: all cores; `0` means default).  Results are
+    /// bit-identical at any value.
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = Some(threads);
+        self
+    }
+
+    /// Execution mode of the round engine (default: `Cached`).
+    pub fn mode(mut self, mode: ExecMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    /// Engine choice (default: the round engine).
+    pub fn engine(mut self, engine: EngineChoice) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    /// Shorthand for `engine(EngineChoice::Des(des))`.
+    pub fn des(self, des: DesConfig) -> Self {
+        self.engine(EngineChoice::Des(des))
+    }
+
+    /// Fading-process override (`[channel.process]` / `--channel-model`).
+    pub fn channel_model(mut self, model: FadingModel) -> Self {
+        self.channel_model = Some(model);
+        self
+    }
+
+    /// Mobility override (`[mobility]`).
+    pub fn mobility(mut self, mobility: MobilitySpec) -> Self {
+        self.mobility = Some(mobility);
+        self
+    }
+
+    /// Validate and assemble the experiment.
+    pub fn build(self) -> Result<Experiment, BuildError> {
+        let (mut cfg, preset_state, preset_name) = match &self.base {
+            Base::Preset(name) => {
+                let sc: Scenario = Scenario::by_name(name)
+                    .ok_or_else(|| BuildError::UnknownPreset(name.clone()))?;
+                let n = self
+                    .n_devices
+                    .ok_or_else(|| BuildError::MissingFleetSize(sc.name.to_string()))?;
+                if n == 0 {
+                    return Err(BuildError::ZeroDevices);
+                }
+                let cfg = sc.config(n, self.seed.unwrap_or(0))?;
+                (cfg, Some(sc.state), Some(sc.name.to_string()))
+            }
+            Base::Config(cfg) => {
+                if self.n_devices.is_some() {
+                    return Err(BuildError::FleetSizeWithoutPreset);
+                }
+                ((**cfg).clone(), None, None)
+            }
+        };
+        if let Some(s) = self.seed {
+            cfg.seed = s;
+        }
+        if let Some(r) = self.rounds {
+            cfg.workload.rounds = r;
+        }
+        if let Some(m) = self.channel_model {
+            cfg.channel.process.model = m;
+        }
+        if let Some(mb) = self.mobility {
+            cfg.mobility = mb;
+        }
+        if cfg.workload.rounds == 0 {
+            return Err(BuildError::ZeroRounds);
+        }
+        if let EngineChoice::Des(des) = &self.engine {
+            if self.mode != ExecMode::Cached {
+                return Err(BuildError::OracleOnEventEngine(self.mode.name()));
+            }
+            if des.capacity == 0 {
+                return Err(BuildError::InvalidDes("server capacity must be >= 1".into()));
+            }
+            if des.batch == 0 {
+                return Err(BuildError::InvalidDes("server batch must be >= 1".into()));
+            }
+            if let Policy::SemiSync { deadline_factor } = des.policy {
+                if !deadline_factor.is_finite() || deadline_factor <= 0.0 {
+                    return Err(BuildError::InvalidDes(format!(
+                        "semi-sync deadline factor must be finite and > 0, got {deadline_factor}"
+                    )));
+                }
+            }
+        }
+        cfg.validate()?;
+
+        let state = self.state.or(preset_state).unwrap_or(ChannelState::Normal);
+        let threads = match self.threads {
+            Some(t) if t > 0 => t,
+            _ => pool::default_parallelism(),
+        };
+        let sched = Arc::new(Scheduler::new(cfg, state, self.strategy));
+        let (engine, is_event): (Box<dyn Engine>, bool) = match self.engine {
+            EngineChoice::Round => (
+                Box::new(RoundEngine::new(sched.clone(), self.mode, threads)),
+                false,
+            ),
+            EngineChoice::Des(des) => (
+                Box::new(EventEngine::new(DesEngine::new(sched.clone(), des))),
+                true,
+            ),
+        };
+        Ok(Experiment {
+            sched,
+            engine,
+            is_event,
+            mode: self.mode,
+            threads,
+            preset: preset_name,
+        })
+    }
+}
+
+/// A validated, runnable experiment: a [`Scheduler`] plus the boxed
+/// [`Engine`] that executes it.
+pub struct Experiment {
+    sched: Arc<Scheduler>,
+    engine: Box<dyn Engine>,
+    is_event: bool,
+    mode: ExecMode,
+    threads: usize,
+    preset: Option<String>,
+}
+
+impl fmt::Debug for Experiment {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Experiment")
+            .field("preset", &self.preset)
+            .field("mode", &self.mode)
+            .field("threads", &self.threads)
+            .field("is_event", &self.is_event)
+            .finish_non_exhaustive()
+    }
+}
+
+impl Experiment {
+    /// Read-only view of the underlying scheduler (cost model, cut
+    /// tables, cache statistics, config).
+    pub fn scheduler(&self) -> &Scheduler {
+        &self.sched
+    }
+
+    pub fn config(&self) -> &ExpConfig {
+        &self.sched.cfg
+    }
+
+    pub fn mode(&self) -> ExecMode {
+        self.mode
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// The preset this experiment was built from, if any.
+    pub fn preset(&self) -> Option<&str> {
+        self.preset.as_deref()
+    }
+
+    /// `true` when the discrete-event engine backs this experiment.
+    pub fn is_event_engine(&self) -> bool {
+        self.is_event
+    }
+
+    /// Stream the run into `sink` — the generic entry point.
+    pub fn run_into(&self, sink: &mut dyn MetricsSink) -> anyhow::Result<RunOutcome> {
+        self.engine.run(sink)
+    }
+
+    /// Run and materialize every record (figures, bit-compat gates).
+    pub fn run_collect(&self) -> anyhow::Result<Vec<RoundRecord>> {
+        let mut sink = CollectSink::default();
+        self.run_into(&mut sink)?;
+        Ok(sink.records)
+    }
+
+    /// Run and aggregate online into a [`Summary`].
+    pub fn run_summary(&self) -> anyhow::Result<(Summary, RunOutcome)> {
+        let mut sink = SummarySink::default();
+        let outcome = self.run_into(&mut sink)?;
+        Ok((sink.summary, outcome))
+    }
+
+    /// Run with a real-training backend riding along (the PJRT split
+    /// executor): serial, round engine + `Cached` mode only.
+    pub fn run_trained<B: TrainBackend + ?Sized>(
+        &self,
+        backend: &mut B,
+    ) -> anyhow::Result<Vec<RoundRecord>> {
+        anyhow::ensure!(
+            !self.is_event,
+            "run_trained: the event engine has no backend hook — use the round engine"
+        );
+        anyhow::ensure!(
+            self.mode == ExecMode::Cached,
+            "run_trained: oracle modes ({}) do not drive backends",
+            self.mode.name()
+        );
+        self.sched.run(Some(backend))
+    }
+}

@@ -1,0 +1,174 @@
+//! The [`Engine`] trait: one `run(sink)` entry point for every
+//! execution regime, replacing the seven overlapping `Scheduler::run*`
+//! variants at the public surface.
+//!
+//! Two implementations:
+//!
+//! * [`RoundEngine`] — the per-round parallel fleet engine.  Its
+//!   [`ExecMode`] selects the production path (`Cached`) or one of the
+//!   two retained oracles (`Uncached`: kernel scan without the decision
+//!   cache; `Ref`: the pre-kernel full-recompute path).  All three emit
+//!   bit-identical record streams (`rust/tests/decision_kernel.rs`).
+//! * [`EventEngine`] — the discrete-event fleet engine (`des::DesEngine`):
+//!   server queueing, churn, sync/semi-sync/async aggregation.
+//!
+//! Both stream records into a [`MetricsSink`] in round-major order; the
+//! round engine holds at most one round of records in memory at a time.
+
+use std::sync::Arc;
+
+use crate::coordinator::Scheduler;
+use crate::des::{DesEngine, ServerStats};
+
+use super::sink::MetricsSink;
+
+/// How the round engine evaluates cells.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Production path: decision kernel + CQI-keyed cache, cells fanned
+    /// out across the worker pool (serial when `threads <= 1`).
+    Cached,
+    /// Oracle: kernel scan with the decision cache bypassed (serial).
+    Uncached,
+    /// Oracle: pre-kernel full model re-evaluation per cost call
+    /// (serial) — the legacy bit-compat reference.
+    Ref,
+}
+
+impl ExecMode {
+    pub const ALL: [ExecMode; 3] = [ExecMode::Cached, ExecMode::Uncached, ExecMode::Ref];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecMode::Cached => "cached",
+            ExecMode::Uncached => "uncached",
+            ExecMode::Ref => "ref",
+        }
+    }
+}
+
+/// Engine-level observables of a DES run (per-record data goes through
+/// the sink; these are the run-wide aggregates).
+#[derive(Clone, Debug)]
+pub struct DesRunStats {
+    pub makespan_s: f64,
+    pub server: ServerStats,
+    /// cells abandoned to churn or the straggler deadline
+    pub dropped: u64,
+    /// cells launched (== records + dropped)
+    pub launched: u64,
+    pub departures: u64,
+    pub arrivals: u64,
+    pub peak_staleness: usize,
+    /// Eq.-11 server energy booked at job dispatch [J] — counts work
+    /// later wasted on cancelled stragglers, which merged records omit
+    pub energy_spent_j: f64,
+    pub aggregator_consistent: bool,
+}
+
+/// What a completed engine run reports back, beyond the record stream.
+#[derive(Clone, Debug)]
+pub struct RunOutcome {
+    /// records pushed into the sink
+    pub cells: usize,
+    /// DES observables — `Some` iff the [`EventEngine`] ran
+    pub des: Option<DesRunStats>,
+}
+
+/// One entry point for every execution regime.  Implementations must
+/// emit records in round-major `(round, device)` order and be pure
+/// functions of `(config, seed)` — thread counts and event
+/// interleavings may change wall-clock, never a record.
+pub trait Engine {
+    fn run(&self, sink: &mut dyn MetricsSink) -> anyhow::Result<RunOutcome>;
+}
+
+/// The per-round parallel fleet engine over a shared [`Scheduler`].
+pub struct RoundEngine {
+    sched: Arc<Scheduler>,
+    mode: ExecMode,
+    threads: usize,
+}
+
+impl RoundEngine {
+    pub fn new(sched: Arc<Scheduler>, mode: ExecMode, threads: usize) -> Self {
+        RoundEngine {
+            sched,
+            mode,
+            threads,
+        }
+    }
+}
+
+impl Engine for RoundEngine {
+    fn run(&self, sink: &mut dyn MetricsSink) -> anyhow::Result<RunOutcome> {
+        let rounds = self.sched.cfg.workload.rounds;
+        let devices = self.sched.cfg.devices.len();
+        let mut cells = 0usize;
+        for round in 0..rounds {
+            match self.mode {
+                ExecMode::Cached if self.threads > 1 => {
+                    // one round in flight at a time: bounded memory,
+                    // bit-identical to the serial stream
+                    for rec in self.sched.run_round_parallel(round, self.threads) {
+                        sink.on_record_owned(rec);
+                        cells += 1;
+                    }
+                }
+                ExecMode::Cached => {
+                    for i in 0..devices {
+                        sink.on_record_owned(self.sched.device_round(round, i));
+                        cells += 1;
+                    }
+                }
+                ExecMode::Uncached => {
+                    for i in 0..devices {
+                        sink.on_record_owned(self.sched.device_round_uncached(round, i));
+                        cells += 1;
+                    }
+                }
+                ExecMode::Ref => {
+                    for i in 0..devices {
+                        sink.on_record_owned(self.sched.device_round_ref(round, i));
+                        cells += 1;
+                    }
+                }
+            }
+        }
+        Ok(RunOutcome { cells, des: None })
+    }
+}
+
+/// The discrete-event fleet engine behind the unified trait.
+pub struct EventEngine {
+    des: DesEngine,
+}
+
+impl EventEngine {
+    pub fn new(des: DesEngine) -> Self {
+        EventEngine { des }
+    }
+}
+
+impl Engine for EventEngine {
+    fn run(&self, sink: &mut dyn MetricsSink) -> anyhow::Result<RunOutcome> {
+        let out = self.des.run();
+        for rec in &out.records {
+            sink.on_des_record(rec);
+        }
+        Ok(RunOutcome {
+            cells: out.records.len(),
+            des: Some(DesRunStats {
+                makespan_s: out.makespan_s,
+                server: out.server,
+                dropped: out.dropped,
+                launched: out.launched,
+                departures: out.departures,
+                arrivals: out.arrivals,
+                peak_staleness: out.peak_staleness,
+                energy_spent_j: out.energy_spent_j,
+                aggregator_consistent: out.aggregator.is_consistent(),
+            }),
+        })
+    }
+}

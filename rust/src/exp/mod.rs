@@ -1,0 +1,45 @@
+//! Unified experiment API (DESIGN.md §14): **one builder, one engine
+//! trait, one report schema** for every run mode.
+//!
+//! The paper's contribution is a single decision loop (CARD, Eqs. 7–16)
+//! evaluated under many execution regimes — per-round parallel fleet,
+//! discrete-event queueing, strategy baselines, parameter ablations.
+//! Before this module each regime had its own ad-hoc surface; now every
+//! experiment flows through the same four stages:
+//!
+//! ```text
+//! ExperimentBuilder ──build()──► Experiment ──run──► Engine ──► MetricsSink
+//!   preset/config,                holds the           round      streams
+//!   strategy, seed,               Scheduler +         or DES     records;
+//!   rounds, threads,              a boxed Engine      engine     aggregates
+//!   ExecMode, engine                                             online
+//!                                        │
+//!                                        ▼
+//!                                   RunOutcome (+ Report envelope for
+//!                                   every BENCH_*.json emitter)
+//! ```
+//!
+//! * [`ExperimentBuilder`] replaces direct `Scheduler::new` + flag
+//!   plumbing, with typed [`BuildError`] validation.
+//! * The [`Engine`] trait collapses `Scheduler::{run, run_parallel,
+//!   run_uncached, run_ref, run_analytic}` into one entry point; the
+//!   `_ref`/`_uncached` oracles survive as [`ExecMode`] variants, so
+//!   the bit-compat property suites keep their teeth.
+//! * [`MetricsSink`] streams records as the engine produces them, so
+//!   sweeps aggregate [`crate::sim::Summary`]/percentiles online
+//!   instead of materializing every `RoundRecord` per grid point.
+//! * [`Report`] gives all five `BENCH_*.json` emitters one versioned
+//!   envelope (`schema_version` + `meta`).
+//! * [`verify`] hosts the shared serial-vs-parallel (and DES-sync-vs-
+//!   round-engine) determinism gates both sweeps run.
+
+pub mod builder;
+pub mod engine;
+pub mod report;
+pub mod sink;
+pub mod verify;
+
+pub use builder::{BuildError, EngineChoice, Experiment, ExperimentBuilder};
+pub use engine::{DesRunStats, Engine, ExecMode, RunOutcome};
+pub use report::{Report, ReportMeta, SCHEMA_VERSION};
+pub use sink::{CollectSink, DesSink, MetricsSink, NullSink, SummarySink};

@@ -1,0 +1,138 @@
+//! [`Report`]: the one versioned envelope every `BENCH_*.json` emitter
+//! goes through.
+//!
+//! ```json
+//! {
+//!   "schema_version": 1,
+//!   "kind": "fleet-sweep",
+//!   "meta": { "preset": "dense-urban", "seed": "7", "threads": 8, "rounds": 2 },
+//!   "data": { ...emitter-specific payload (unchanged shapes)... }
+//! }
+//! ```
+//!
+//! CI checks that every uploaded bench artifact parses and carries
+//! `schema_version` + `meta.preset`; downstream tooling keys on
+//! `schema_version` instead of sniffing per-emitter `data.schema`
+//! strings.
+
+use crate::util::json::{self, Json};
+
+/// Version of the shared envelope (not of the per-kind `data` payload —
+/// those keep their own `schema` strings inside `data`).
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Envelope metadata common to every emitter.
+#[derive(Clone, Debug)]
+pub struct ReportMeta {
+    /// emitter kind: `fleet-sweep` | `des-sweep` | `card-bench`
+    pub kind: &'static str,
+    /// scenario selector the run used (`all`, or a registry name)
+    pub preset: String,
+    pub seed: u64,
+    pub threads: usize,
+    /// round-count override, when one applied
+    pub rounds: Option<usize>,
+}
+
+/// A rendered + machine-readable experiment report.
+pub struct Report {
+    pub meta: ReportMeta,
+    /// emitter-specific payload (the pre-envelope JSON shape)
+    pub body: Json,
+    rendered: String,
+}
+
+impl Report {
+    pub fn new(meta: ReportMeta, body: Json, rendered: String) -> Self {
+        Report {
+            meta,
+            body,
+            rendered,
+        }
+    }
+
+    /// Human-readable summary (what the CLI prints).
+    pub fn render(&self) -> &str {
+        &self.rendered
+    }
+
+    /// The versioned envelope around the emitter payload.  Consumes
+    /// the report: the payload is moved into the envelope, not cloned.
+    pub fn to_json(self) -> Json {
+        json::obj(vec![
+            ("schema_version", Json::Num(SCHEMA_VERSION as f64)),
+            ("kind", Json::Str(self.meta.kind.to_string())),
+            (
+                "meta",
+                json::obj(vec![
+                    ("preset", Json::Str(self.meta.preset)),
+                    // string, not number: u64 seeds above 2^53 would
+                    // lose precision through the f64-backed Json::Num
+                    ("seed", Json::Str(self.meta.seed.to_string())),
+                    ("threads", Json::Num(self.meta.threads as f64)),
+                    (
+                        "rounds",
+                        match self.meta.rounds {
+                            Some(r) => Json::Num(r as f64),
+                            None => Json::Null,
+                        },
+                    ),
+                ]),
+            ),
+            ("data", self.body),
+        ])
+    }
+
+    /// Write the envelope (newline-terminated) to `path`, consuming
+    /// the report.
+    pub fn write(self, path: &str) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().to_string() + "\n")
+            .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> Report {
+        Report::new(
+            ReportMeta {
+                kind: "fleet-sweep",
+                preset: "dense-urban".into(),
+                seed: u64::MAX,
+                threads: 8,
+                rounds: Some(2),
+            },
+            json::obj(vec![("points", Json::Arr(vec![]))]),
+            "rendered table".into(),
+        )
+    }
+
+    #[test]
+    fn envelope_carries_version_kind_meta_and_data() {
+        let j = report().to_json();
+        assert_eq!(j.get("schema_version").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(j.get("kind").and_then(Json::as_str), Some("fleet-sweep"));
+        assert_eq!(j.at(&["meta", "preset"]).and_then(Json::as_str), Some("dense-urban"));
+        // u64::MAX survives as a string
+        assert_eq!(
+            j.at(&["meta", "seed"]).and_then(Json::as_str),
+            Some(u64::MAX.to_string().as_str())
+        );
+        assert_eq!(j.at(&["meta", "rounds"]).and_then(Json::as_f64), Some(2.0));
+        assert!(j.at(&["data", "points"]).is_some());
+    }
+
+    #[test]
+    fn envelope_round_trips_through_the_parser() {
+        let s = report().to_json().to_string();
+        let parsed = Json::parse(&s).unwrap();
+        assert_eq!(parsed.get("schema_version").and_then(Json::as_usize), Some(1));
+    }
+
+    #[test]
+    fn render_is_the_human_summary() {
+        assert_eq!(report().render(), "rendered table");
+    }
+}

@@ -1,0 +1,87 @@
+//! Streaming metric sinks: the engine pushes each record as it is
+//! produced, so aggregating consumers never have to hold a full
+//! `rounds × devices` record vector per grid point.
+
+use crate::coordinator::RoundRecord;
+use crate::des::DesRecord;
+use crate::sim::metrics::Summary;
+
+/// Receives the record stream an [`super::Engine`] produces, in the
+/// engine's canonical (round-major) order.
+///
+/// The DES engine calls [`MetricsSink::on_des_record`] with its timed
+/// observables; the default implementation forwards the embedded
+/// analytic record, so sinks that only care about `RoundRecord`s work
+/// unchanged under both engines.
+pub trait MetricsSink {
+    fn on_record(&mut self, rec: &RoundRecord);
+
+    /// Owned-record fast path: engines that own the records they
+    /// stream (the round engine) hand them over without a clone.
+    /// Sinks that materialize records override this; the default
+    /// forwards by reference.
+    fn on_record_owned(&mut self, rec: RoundRecord) {
+        self.on_record(&rec);
+    }
+
+    fn on_des_record(&mut self, rec: &DesRecord) {
+        self.on_record(&rec.record);
+    }
+}
+
+/// Discards everything (engine side effects only — e.g. warming the
+/// decision cache to read its hit rate afterwards).
+pub struct NullSink;
+
+impl MetricsSink for NullSink {
+    fn on_record(&mut self, _rec: &RoundRecord) {}
+}
+
+/// Materializes the full record stream (figures and bit-compat gates
+/// that genuinely need every record).
+#[derive(Default)]
+pub struct CollectSink {
+    pub records: Vec<RoundRecord>,
+}
+
+impl MetricsSink for CollectSink {
+    fn on_record(&mut self, rec: &RoundRecord) {
+        self.records.push(rec.clone());
+    }
+
+    fn on_record_owned(&mut self, rec: RoundRecord) {
+        self.records.push(rec);
+    }
+}
+
+/// Aggregates the stream into a [`Summary`] online — what the sweeps
+/// use instead of materializing records per grid point.
+#[derive(Default)]
+pub struct SummarySink {
+    pub summary: Summary,
+}
+
+impl MetricsSink for SummarySink {
+    fn on_record(&mut self, rec: &RoundRecord) {
+        self.summary.push(rec);
+    }
+}
+
+/// DES observables the `des-sweep` reports: per-cell end-to-end latency
+/// samples (for percentiles) and the energy of merged rounds only
+/// (`energy_merged_j` — the dispatch-time bill lives in
+/// [`super::DesRunStats::energy_spent_j`]).
+#[derive(Default)]
+pub struct DesSink {
+    pub latencies: Vec<f64>,
+    pub energy_merged_j: f64,
+}
+
+impl MetricsSink for DesSink {
+    fn on_record(&mut self, _rec: &RoundRecord) {}
+
+    fn on_des_record(&mut self, rec: &DesRecord) {
+        self.latencies.push(rec.latency_s());
+        self.energy_merged_j += rec.record.energy_j;
+    }
+}

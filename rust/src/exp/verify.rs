@@ -1,0 +1,110 @@
+//! Shared determinism gates — the bit-level comparators both sweeps
+//! (and every bit-compat test suite) run, hoisted here so the CLI
+//! gates and the property tests can never drift apart.
+
+use std::sync::Arc;
+
+use crate::config::{ChannelState, ExpConfig};
+use crate::coordinator::{RoundRecord, Scheduler, Strategy};
+use crate::des::{DesConfig, DesEngine, Policy};
+
+use super::builder::Experiment;
+
+/// Require two record streams to agree **bit for bit** on every field
+/// the experiments report.
+pub fn verify_bit_identical(a: &[RoundRecord], b: &[RoundRecord]) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        a.len() == b.len(),
+        "record count mismatch: {} vs {}",
+        a.len(),
+        b.len()
+    );
+    for (x, y) in a.iter().zip(b) {
+        anyhow::ensure!(
+            x.round == y.round
+                && x.device_idx == y.device_idx
+                && x.cut == y.cut
+                && x.freq_hz.to_bits() == y.freq_hz.to_bits()
+                && x.cost.to_bits() == y.cost.to_bits()
+                && x.delay_s.to_bits() == y.delay_s.to_bits()
+                && x.energy_j.to_bits() == y.energy_j.to_bits()
+                && x.rate_up_bps.to_bits() == y.rate_up_bps.to_bits()
+                && x.rate_down_bps.to_bits() == y.rate_down_bps.to_bits()
+                && x.snr_up_db.to_bits() == y.snr_up_db.to_bits()
+                && x.snr_down_db.to_bits() == y.snr_down_db.to_bits()
+                && x.device_compute_s.to_bits() == y.device_compute_s.to_bits()
+                && x.server_compute_s.to_bits() == y.server_compute_s.to_bits()
+                && x.transmission_s.to_bits() == y.transmission_s.to_bits(),
+            "parallel/serial divergence at round {} device {}",
+            x.round,
+            x.device_idx
+        );
+    }
+    Ok(())
+}
+
+/// The fleet-sweep gate: the experiment's configured (parallel, cached)
+/// round engine must reproduce the serial reference path bit for bit.
+pub fn verify_round_determinism(exp: &Experiment) -> anyhow::Result<()> {
+    let parallel = exp.run_collect()?;
+    verify_records_match_serial(exp, &parallel)
+}
+
+/// Gate variant for callers that already hold the experiment's record
+/// stream (e.g. a sweep's gated grid point): compares it against a
+/// fresh serial reference run without re-running the parallel engine.
+pub fn verify_records_match_serial(
+    exp: &Experiment,
+    parallel: &[RoundRecord],
+) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        !exp.is_event_engine(),
+        "the round-determinism gate applies to the round engine"
+    );
+    let serial = exp.scheduler().run_analytic()?;
+    verify_bit_identical(&serial, parallel)
+}
+
+/// Gate variant for callers that already hold a churn-free sync-policy
+/// DES record stream (e.g. a des-sweep grid point at the gate
+/// configuration): compares it against a fresh serial round-engine run
+/// of `cfg` without re-running the simulation.  Runs CARD, the
+/// strategy every sweep point uses.
+pub fn verify_des_records_match_round_engine(
+    cfg: &ExpConfig,
+    state: ChannelState,
+    records: &[RoundRecord],
+) -> anyhow::Result<()> {
+    let sched = Scheduler::new(cfg.clone(), state, Strategy::Card);
+    let serial = sched.run_analytic()?;
+    verify_bit_identical(&serial, records)
+}
+
+/// The des-sweep gate: on a churn-free copy of `cfg`, the sync-policy
+/// discrete-event engine must reproduce the serial round engine's
+/// record stream bit for bit (the DES bit-compat contract,
+/// DESIGN.md §11).  Runs CARD, the strategy every sweep point uses.
+pub fn verify_des_sync_matches_round_engine(
+    cfg: &ExpConfig,
+    state: ChannelState,
+    capacity: usize,
+    batch: usize,
+) -> anyhow::Result<()> {
+    let mut cfg = cfg.clone();
+    // with churn enabled, departing devices legitimately drop cells the
+    // barrier engine would still run — gate on the churn-free contract
+    cfg.churn = Default::default();
+    let sched = Arc::new(Scheduler::new(cfg, state, Strategy::Card));
+    let out = DesEngine::new(
+        sched.clone(),
+        DesConfig {
+            policy: Policy::Sync,
+            capacity,
+            batch,
+        },
+    )
+    .run();
+    let des_records: Vec<RoundRecord> = out.records.iter().map(|r| r.record.clone()).collect();
+    let serial = sched.run_analytic()?;
+    verify_bit_identical(&serial, &des_records)
+}

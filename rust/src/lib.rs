@@ -18,6 +18,10 @@
 //! * **L1 (python/compile/kernels)** — fused LoRA-linear + RMSNorm
 //!   Pallas kernels inside those segments.
 //!
+//! Experiments are constructed and reported through the unified
+//! [`exp`] API: `exp::ExperimentBuilder` → `exp::Engine` (round or
+//! discrete-event) → `exp::MetricsSink` → `exp::Report` (DESIGN.md §14).
+//!
 //! See `DESIGN.md` (repo root) for the architecture and
 //! `EXPERIMENTS.md` for the paper-vs-measured figures; `README.md`
 //! covers build/quickstart and the `fleet-sweep` scenario engine.
@@ -28,6 +32,7 @@ pub mod coordinator;
 pub mod data;
 pub mod des;
 pub mod devices;
+pub mod exp;
 pub mod model;
 pub mod net;
 pub mod runtime;

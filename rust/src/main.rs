@@ -18,10 +18,10 @@ use anyhow::{anyhow, bail, Result};
 use edgesplit::cli::{render_help, Args, FlagSpec};
 use edgesplit::config::scenario::{self, Scenario};
 use edgesplit::config::{ChannelState, ExpConfig};
-use edgesplit::coordinator::{Scheduler, Strategy};
+use edgesplit::coordinator::Strategy;
 use edgesplit::data::{Batcher, Corpus};
 use edgesplit::des::{self, Policy};
-use edgesplit::net::Channel;
+use edgesplit::exp::ExperimentBuilder;
 use edgesplit::runtime::{artifact_dir, ArtifactStore, SplitExecutor};
 use edgesplit::sim::{ablate, cardbench, fig3, fig4, fleet};
 use edgesplit::util::benchkit::Bencher;
@@ -101,6 +101,9 @@ fn run(argv: &[String]) -> Result<()> {
         );
         return Ok(());
     }
+    // every subcommand is flag-only past its name (`show` takes one
+    // extra target) — stray positionals were silently ignored before
+    args.expect_positionals(if cmd == "show" { 2 } else { 1 })?;
 
     let mut cfg = match args.str_of("config") {
         Some(path) => ExpConfig::from_file(path)?,
@@ -240,7 +243,8 @@ fn cmd_fleet_sweep(
 
     let mut bench = Bencher::new("fleet-sweep");
     let sweep = fleet::sweep(&scenarios, &counts, rounds, threads, seed, gate_all, &mut bench)?;
-    println!("{}\n", sweep.render());
+    let report = sweep.report(scenario_sel, rounds);
+    println!("{}\n", report.render());
     if gate_all {
         println!("determinism gate: parallel == serial (bit-identical) at every grid point\n");
     } else {
@@ -252,14 +256,14 @@ fn cmd_fleet_sweep(
     }
     bench.report();
 
-    std::fs::write(out, sweep.to_json().to_string() + "\n")
-        .map_err(|e| anyhow!("writing {out}: {e}"))?;
+    report.write(out)?;
     println!("\nwrote {out} ({} sweep points)", sweep.points.len());
     Ok(())
 }
 
 fn cmd_des_sweep(args: &Args, seed: u64, rounds: Option<usize>) -> Result<()> {
-    let scenarios = parse_scenarios(args.str_of("scenario").unwrap_or("all"))?;
+    let scenario_sel = args.str_of("scenario").unwrap_or("all");
+    let scenarios = parse_scenarios(scenario_sel)?;
     let counts = parse_counts(args.str_of("counts").unwrap_or("10,100,1000,10000"))?;
     let threads = args
         .usize_of("threads")?
@@ -293,16 +297,21 @@ fn cmd_des_sweep(args: &Args, seed: u64, rounds: Option<usize>) -> Result<()> {
         seed,
         &mut bench,
     )?;
-    println!("{}\n", sweep.render());
+    let report = sweep.report(scenario_sel, rounds);
+    println!("{}\n", report.render());
     println!(
         "server queue: {capacity} slot(s), batch {batch}; every point is a deterministic \
-         single-threaded DES run ({} fanned out across {threads} workers)\n",
+         single-threaded DES run ({} fanned out across {threads} workers)",
         sweep.points.len()
+    );
+    println!(
+        "determinism gate: churn-free sync DES == serial round engine (bit-identical) at \
+         n = {} for every scenario\n",
+        counts.iter().max().unwrap()
     );
     bench.report();
 
-    std::fs::write(out, sweep.to_json().to_string() + "\n")
-        .map_err(|e| anyhow!("writing {out}: {e}"))?;
+    report.write(out)?;
     println!("\nwrote {out} ({} sweep points)", sweep.points.len());
     Ok(())
 }
@@ -326,13 +335,13 @@ fn cmd_card_bench(args: &Args, seed: u64, rounds: Option<usize>) -> Result<()> {
 
     let mut bench = Bencher::new("card-bench");
     let result = cardbench::run(&scenario, n_devices, rounds, threads, seed, &mut bench)?;
-    println!("{}\n", result.render());
+    let report = result.report();
+    println!("{}\n", report.render());
     bench.report();
 
     // write the measurement before any guard verdict so a failing run
     // still leaves its BENCH_card.json behind for inspection
-    std::fs::write(out, result.to_json().to_string() + "\n")
-        .map_err(|e| anyhow!("writing {out}: {e}"))?;
+    report.write(out)?;
     println!("\nwrote {out}");
 
     if let Some(baseline_path) = args.str_of("check") {
@@ -347,31 +356,29 @@ fn cmd_card_bench(args: &Args, seed: u64, rounds: Option<usize>) -> Result<()> {
 }
 
 fn cmd_decide(cfg: &ExpConfig, state: ChannelState) -> Result<()> {
-    let cm = edgesplit::coordinator::build_cost_model(cfg);
-    // realize round 0 through the configured link process so
-    // --channel-model / [channel.process] / [mobility] apply here too
-    // (the same stream-root derivation the Scheduler uses; for the
-    // default iid process this is bit-identical to Channel::realize)
-    let channel = Channel::new(cfg.channel.clone(), state);
-    let stream_root = cfg.seed ^ ((state.pathloss_exp() as u64) << 32);
-    let link_process = edgesplit::net::LinkProcess::new(channel, cfg, stream_root);
-    let mut rng = Rng::new(cfg.seed);
+    // one analytic round through the unified experiment API — the exact
+    // per-cell RNG streams, link process, and decision kernel every
+    // engine uses, so what `decide` prints is what a round-0 run does
+    let experiment = ExperimentBuilder::from_config(cfg.clone())
+        .channel_state(state)
+        .rounds(1)
+        .threads(1)
+        .build()?;
+    let records = experiment.run_collect()?;
     let mut t = Table::new(
         &format!("CARD decisions — {} channel", state.name()),
         &["device", "SNR up [dB]", "rate up", "cut c*", "f* [GHz]", "delay", "energy", "U"],
     );
-    for (idx, dev) in cfg.devices.iter().enumerate() {
-        let link = link_process.realize(idx, 0, &mut rng);
-        let d = Strategy::Card.decide(&cm, &cfg.server, dev, link.rates, &mut rng);
+    for r in &records {
         t.row(vec![
-            dev.name.clone(),
-            format!("{:.1}", link.snr_up_db),
-            format!("{}/s", fmt_bytes(link.rates.up_bps / 8.0)),
-            d.cut.to_string(),
-            format!("{:.2}", d.freq_hz / 1e9),
-            fmt_secs(d.delay_s),
-            fmt_joules(d.energy_j),
-            format!("{:.3}", d.cost),
+            r.device_name.to_string(),
+            format!("{:.1}", r.snr_up_db),
+            format!("{}/s", fmt_bytes(r.rate_up_bps / 8.0)),
+            r.cut.to_string(),
+            format!("{:.2}", r.freq_hz / 1e9),
+            fmt_secs(r.delay_s),
+            fmt_joules(r.energy_j),
+            format!("{:.3}", r.cost),
         ]);
     }
     t.print();
@@ -413,8 +420,11 @@ fn cmd_train(
     sim_cfg.workload.rounds = steps
         .div_ceil(sim_cfg.workload.local_epochs * cfg.devices.len())
         .max(1);
-    let sched = Scheduler::new(sim_cfg.clone(), state, strategy);
-    let records = sched.run(Some(&mut executor))?;
+    let experiment = ExperimentBuilder::from_config(sim_cfg)
+        .channel_state(state)
+        .strategy(strategy)
+        .build()?;
+    let records = experiment.run_trained(&mut executor)?;
 
     let mut t = Table::new(
         &format!("real split fine-tuning ({} strategy)", strategy.name()),

@@ -4,8 +4,7 @@
 //! Table II.
 
 use crate::config::{ChannelState, ExpConfig};
-use crate::coordinator::{Scheduler, Strategy};
-use crate::util::pool;
+use crate::exp::ExperimentBuilder;
 use crate::util::table::Table;
 
 use super::metrics::Summary;
@@ -20,11 +19,14 @@ pub struct SweepPoint {
 }
 
 fn run_point(cfg: &ExpConfig, state: ChannelState) -> anyhow::Result<(Summary, usize)> {
-    let sched = Scheduler::new(cfg.clone(), state, Strategy::Card);
-    // parallel fleet engine; bit-identical to the serial reference
-    let records = sched.run_parallel(pool::default_parallelism());
-    let n_layers = sched.cost_model.n_layers();
-    Ok((Summary::from_records(&records), n_layers))
+    // parallel fleet engine, summarized online; bit-identical to the
+    // serial reference path
+    let experiment = ExperimentBuilder::from_config(cfg.clone())
+        .channel_state(state)
+        .build()?;
+    let n_layers = experiment.scheduler().cost_model.n_layers();
+    let (s, _) = experiment.run_summary()?;
+    Ok((s, n_layers))
 }
 
 /// A1: sweep the delay/energy weight w ∈ [0, 1].

@@ -28,7 +28,8 @@
 
 use crate::config::scenario::{Scenario, HETEROGENEOUS_FLEET};
 use crate::config::FadingModel;
-use crate::coordinator::{Decision, DecisionCache, Scheduler, Strategy};
+use crate::coordinator::{Decision, DecisionCache, Strategy};
+use crate::exp::{self, ExperimentBuilder, NullSink, Report, ReportMeta};
 use crate::net::channel::LinkRealization;
 use crate::util::benchkit::Bencher;
 use crate::util::json::{self, Json};
@@ -100,7 +101,13 @@ pub fn run(
     anyhow::ensure!(rounds > 0, "rounds must be >= 1");
     let mut cfg = scenario.config(n_devices, seed)?;
     cfg.workload.rounds = rounds;
-    let sched = Scheduler::new(cfg.clone(), scenario.state, Strategy::Card);
+    // the base experiment supplies the kernel view (link process, cut
+    // tables, cost model) every timed mode scans over
+    let base = ExperimentBuilder::from_config(cfg.clone())
+        .channel_state(scenario.state)
+        .threads(1)
+        .build()?;
+    let sched = base.scheduler();
 
     // one shared channel trace through the configured link process:
     // every mode decides on identical rates
@@ -166,20 +173,26 @@ pub fn run(
     );
 
     // --- whole-engine cells/sec: serial vs persistent pool ------------
-    // fresh schedulers so both start from a cold decision cache
-    let serial_sched = Scheduler::new(cfg.clone(), scenario.state, Strategy::Card);
+    // fresh experiments so both start from a cold decision cache
+    let serial_exp = ExperimentBuilder::from_config(cfg.clone())
+        .channel_state(scenario.state)
+        .threads(1)
+        .build()?;
     let t0 = std::time::Instant::now();
-    let serial_records = serial_sched.run_analytic()?;
+    let serial_records = serial_exp.run_collect()?;
     let serial_s = t0.elapsed().as_secs_f64();
 
-    let pooled_sched = Scheduler::new(cfg.clone(), scenario.state, Strategy::Card);
+    let pooled_exp = ExperimentBuilder::from_config(cfg.clone())
+        .channel_state(scenario.state)
+        .threads(threads)
+        .build()?;
     // warm the persistent pool so the timed window measures cells, not
     // the one-time worker spawn
     pool::global().workers();
     let t0 = std::time::Instant::now();
-    let pooled_records = pooled_sched.run_parallel(threads);
+    let pooled_records = pooled_exp.run_collect()?;
     let pooled_s = t0.elapsed().as_secs_f64();
-    super::fleet::verify_bit_identical(&serial_records, &pooled_records)?;
+    exp::verify::verify_bit_identical(&serial_records, &pooled_records)?;
 
     // --- decision-cache hit rate per fading process --------------------
     // same preset/fleet/rounds, one full engine run per process: the
@@ -189,13 +202,16 @@ pub fn run(
     let mut process_hit_rates = Vec::with_capacity(FadingModel::ALL.len());
     for model in FadingModel::ALL {
         let hit_rate = if model == cfg.channel.process.model {
-            pooled_sched.cache_hit_rate()
+            pooled_exp.scheduler().cache_hit_rate()
         } else {
             let mut pcfg = cfg.clone();
             pcfg.channel.process.model = model;
-            let s = Scheduler::new(pcfg, scenario.state, Strategy::Card);
-            s.run_parallel(threads);
-            s.cache_hit_rate()
+            let e = ExperimentBuilder::from_config(pcfg)
+                .channel_state(scenario.state)
+                .threads(threads)
+                .build()?;
+            e.run_into(&mut NullSink)?;
+            e.scheduler().cache_hit_rate()
         };
         process_hit_rates.push(ProcessHitRate {
             process: model.name().to_string(),
@@ -279,7 +295,23 @@ impl CardBench {
         )
     }
 
-    /// Machine-readable dump (the `BENCH_card.json` payload).
+    /// The enveloped report (`BENCH_card.json`): shared
+    /// `schema_version`/`meta` wrapper around [`CardBench::to_json`].
+    pub fn report(&self) -> Report {
+        Report::new(
+            ReportMeta {
+                kind: "card-bench",
+                preset: self.scenario.clone(),
+                seed: self.seed,
+                threads: self.threads,
+                rounds: Some(self.rounds),
+            },
+            self.to_json(),
+            self.render(),
+        )
+    }
+
+    /// Emitter payload (the `data` member of the report envelope).
     pub fn to_json(&self) -> Json {
         json::obj(vec![
             ("schema", Json::Str("edgesplit/card-bench/v1".into())),
@@ -317,8 +349,12 @@ impl CardBench {
     /// why speedups, not raw rates, are compared).
     pub fn check_against(&self, baseline: &Json) -> anyhow::Result<()> {
         let field = |name: &str| -> anyhow::Result<f64> {
+            // accept both the flat committed-baseline shape and a full
+            // report envelope (speedups under `data`), so a baseline
+            // regenerated from an emitted BENCH_card.json keeps working
             baseline
-                .get(name)
+                .at(&["data", name])
+                .or_else(|| baseline.get(name))
                 .and_then(Json::as_f64)
                 .ok_or_else(|| anyhow::anyhow!("baseline is missing numeric field '{name}'"))
         };
@@ -404,13 +440,24 @@ mod tests {
             .at(&["process_hit_rates", "iid"])
             .and_then(Json::as_f64)
             .is_some());
+        // the report envelope wraps the same payload
+        let env = Json::parse(&r.report().to_json().to_string()).unwrap();
+        assert_eq!(env.get("schema_version").and_then(Json::as_usize), Some(1));
+        assert_eq!(
+            env.at(&["meta", "preset"]).and_then(Json::as_str),
+            Some(r.scenario.as_str())
+        );
+        assert!(env.at(&["data", "cache_hit_rate"]).is_some());
     }
 
     #[test]
     fn check_accepts_self_and_rejects_inflated_baseline() {
         let r = quick();
-        // a result always clears a baseline of itself
+        // a result always clears a baseline of itself — flat payload or
+        // full report envelope
         r.check_against(&Json::parse(&r.to_json().to_string()).unwrap()).unwrap();
+        r.check_against(&Json::parse(&r.report().to_json().to_string()).unwrap())
+            .unwrap();
         // a baseline claiming an absurd speedup must trip the guard
         let inflated = json::obj(vec![
             ("speedup_kernel_vs_legacy", Json::Num(1e9)),

@@ -7,8 +7,8 @@
 //!       weaker devices (they offload more).
 
 use crate::config::{ChannelState, ExpConfig};
-use crate::coordinator::{RoundRecord, Scheduler, Strategy};
-use crate::util::pool;
+use crate::coordinator::RoundRecord;
+use crate::exp::ExperimentBuilder;
 use crate::util::table::Table;
 
 #[derive(Clone, Debug)]
@@ -20,13 +20,17 @@ pub struct Fig3Result {
 }
 
 pub fn run(cfg: &ExpConfig, state: ChannelState) -> anyhow::Result<Fig3Result> {
-    let sched = Scheduler::new(cfg.clone(), state, Strategy::Card);
-    // the parallel engine is bit-identical to the serial reference path
-    let records = sched.run_parallel(pool::default_parallelism());
+    // the parallel round engine is bit-identical to the serial
+    // reference path, so the figure is reproducible at any thread count
+    let experiment = ExperimentBuilder::from_config(cfg.clone())
+        .channel_state(state)
+        .build()?;
+    let n_layers = experiment.scheduler().cost_model.n_layers();
+    let records = experiment.run_collect()?;
     Ok(Fig3Result {
         n_devices: cfg.devices.len(),
         rounds: cfg.workload.rounds,
-        n_layers: sched.cost_model.n_layers(),
+        n_layers,
         records,
     })
 }

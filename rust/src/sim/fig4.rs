@@ -6,11 +6,12 @@
 //! by 70.8 % vs Device-only and server energy by 53.1 % vs Server-only.
 
 use crate::config::{ChannelState, ExpConfig};
-use crate::coordinator::{Scheduler, Strategy};
+use crate::coordinator::Strategy;
+use crate::exp::ExperimentBuilder;
 use crate::util::pool;
 use crate::util::table::{fmt_joules, fmt_secs, Table};
 
-use super::metrics::{reduction_pct, Summary};
+use super::metrics::reduction_pct;
 
 #[derive(Clone, Debug)]
 pub struct Cell {
@@ -39,17 +40,28 @@ pub fn run(cfg: &ExpConfig) -> anyhow::Result<Fig4Result> {
             cases.push((state, strat));
         }
     }
-    let cells = pool::par_map_indexed(pool::default_parallelism(), &cases, |_, &(state, strat)| {
-        let sched = Scheduler::new(cfg.clone(), state, strat);
-        let records = sched.run_parallel(1);
-        let s = Summary::from_records(&records);
-        Cell {
-            strategy: strat.name(),
-            state,
-            mean_delay_s: s.delay.mean(),
-            mean_energy_j: s.energy.mean(),
-        }
-    });
+    let results = pool::par_map_indexed(
+        pool::default_parallelism(),
+        &cases,
+        |_, &(state, strat)| -> anyhow::Result<Cell> {
+            let experiment = ExperimentBuilder::from_config(cfg.clone())
+                .channel_state(state)
+                .strategy(strat)
+                .threads(1)
+                .build()?;
+            let (s, _) = experiment.run_summary()?;
+            Ok(Cell {
+                strategy: strat.name(),
+                state,
+                mean_delay_s: s.delay.mean(),
+                mean_energy_j: s.energy.mean(),
+            })
+        },
+    );
+    let mut cells = Vec::with_capacity(results.len());
+    for r in results {
+        cells.push(r?);
+    }
 
     let mean_over_states = |name: &str, f: fn(&Cell) -> f64| -> f64 {
         let v: Vec<f64> = cells

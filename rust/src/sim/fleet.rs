@@ -3,24 +3,26 @@
 //! delay/energy summaries (via `util::benchkit`) and a machine-readable
 //! `BENCH_fleet.json` for CI perf-trajectory tracking.
 //!
-//! Every sweep point runs CARD over an `n`-device synthetic fleet for
-//! the scenario's configured rounds with K worker threads.  The
-//! serial-vs-parallel determinism gate re-runs the serial reference
-//! path and requires **bit-identical** records; by default it runs at
+//! Every sweep point is an [`exp::ExperimentBuilder`]-built experiment:
+//! CARD over an `n`-device synthetic fleet for the scenario's
+//! configured rounds, streamed through an `exp::SummarySink` so the
+//! grid never materializes a full record vector per point.  The
+//! serial-vs-parallel determinism gate is the shared
+//! [`exp::verify::verify_records_match_serial`]; by default it runs at
 //! exactly one grid point per scenario — the *largest*, where the
 //! parallel engine schedules the most concurrent cells and a
-//! divergence would be most consequential — so the serial baseline is
-//! recomputed once per scenario rather than per point.  `gate_all`
-//! opts back into gating every point (exhaustive, and proportionally
-//! slower: each gated point pays a full single-threaded re-run).
+//! divergence would be most consequential — reusing the point's own
+//! collected records so only the serial reference is re-run.
+//! `gate_all` opts back into gating every point (exhaustive, and
+//! proportionally slower: each gated point pays a full
+//! single-threaded re-run).
 
 use crate::config::scenario::Scenario;
-use crate::coordinator::{RoundRecord, Scheduler, Strategy};
+use crate::exp::{self, ExperimentBuilder, Report, ReportMeta};
+use crate::sim::metrics::Summary;
 use crate::util::benchkit::Bencher;
 use crate::util::json::{self, Json};
 use crate::util::table::{fmt_joules, fmt_secs, Table};
-
-use super::metrics::Summary;
 
 /// One (scenario, fleet size) measurement.
 #[derive(Clone, Debug)]
@@ -68,26 +70,41 @@ pub fn sweep(
     for sc in scenarios {
         for &n in counts {
             anyhow::ensure!(n > 0, "device count must be >= 1");
-            let mut cfg = sc.config(n, seed)?;
+            let mut builder = ExperimentBuilder::preset(sc.name)
+                .devices(n)
+                .seed(seed)
+                .threads(threads);
             if let Some(r) = rounds {
-                cfg.workload.rounds = r;
+                builder = builder.rounds(r);
             }
-            let n_rounds = cfg.workload.rounds;
-            let sched = Scheduler::new(cfg, sc.state, Strategy::Card);
+            let experiment = builder.build()?;
+            let n_rounds = experiment.config().workload.rounds;
+            let gated = gate_all || n == gate_n;
 
+            // gated points materialize their records once so the
+            // determinism gate can compare them against the serial
+            // reference without re-running the parallel engine; every
+            // other point streams through the online summary
             let t0 = std::time::Instant::now();
-            let records = sched.run_parallel(threads);
+            let (online, gate_records) = if gated {
+                (None, Some(experiment.run_collect()?))
+            } else {
+                (Some(experiment.run_summary()?.0), None)
+            };
             let wall = t0.elapsed().as_secs_f64();
 
             // determinism gate: the parallel engine must reproduce the
             // serial reference bit for bit — at the largest fleet of
-            // each scenario by default, everywhere with `gate_all`
-            if gate_all || n == gate_n {
-                let serial = sched.run_analytic()?;
-                verify_bit_identical(&serial, &records)?;
-            }
+            // each scenario by default, everywhere with `gate_all`.
+            // Gated records are summarized outside the timed window so
+            // wall_s keeps tracking the engine alone.
+            let s = if let Some(records) = &gate_records {
+                exp::verify::verify_records_match_serial(&experiment, records)?;
+                Summary::from_records(records)
+            } else {
+                online.expect("non-gated points stream their summary")
+            };
 
-            let s = Summary::from_records(&records);
             let pct = s.delay_percentiles();
             let device_rounds = (n * n_rounds) as f64;
             let rate = device_rounds / wall.max(1e-9);
@@ -117,38 +134,6 @@ pub fn sweep(
         threads,
         seed,
     })
-}
-
-/// Require the parallel and serial record streams to agree bit for bit.
-pub fn verify_bit_identical(a: &[RoundRecord], b: &[RoundRecord]) -> anyhow::Result<()> {
-    anyhow::ensure!(
-        a.len() == b.len(),
-        "record count mismatch: {} vs {}",
-        a.len(),
-        b.len()
-    );
-    for (x, y) in a.iter().zip(b) {
-        anyhow::ensure!(
-            x.round == y.round
-                && x.device_idx == y.device_idx
-                && x.cut == y.cut
-                && x.freq_hz.to_bits() == y.freq_hz.to_bits()
-                && x.cost.to_bits() == y.cost.to_bits()
-                && x.delay_s.to_bits() == y.delay_s.to_bits()
-                && x.energy_j.to_bits() == y.energy_j.to_bits()
-                && x.rate_up_bps.to_bits() == y.rate_up_bps.to_bits()
-                && x.rate_down_bps.to_bits() == y.rate_down_bps.to_bits()
-                && x.snr_up_db.to_bits() == y.snr_up_db.to_bits()
-                && x.snr_down_db.to_bits() == y.snr_down_db.to_bits()
-                && x.device_compute_s.to_bits() == y.device_compute_s.to_bits()
-                && x.server_compute_s.to_bits() == y.server_compute_s.to_bits()
-                && x.transmission_s.to_bits() == y.transmission_s.to_bits(),
-            "parallel/serial divergence at round {} device {}",
-            x.round,
-            x.device_idx
-        );
-    }
-    Ok(())
 }
 
 impl FleetSweep {
@@ -191,7 +176,7 @@ impl FleetSweep {
         t.render()
     }
 
-    /// Machine-readable dump (the `BENCH_fleet.json` payload).
+    /// Emitter payload (the `data` member of the report envelope).
     pub fn to_json(&self) -> Json {
         json::obj(vec![
             ("schema", Json::Str("edgesplit/fleet-sweep/v1".into())),
@@ -225,6 +210,22 @@ impl FleetSweep {
             ),
         ])
     }
+
+    /// The enveloped report (`BENCH_fleet*.json`): shared
+    /// `schema_version`/`meta` wrapper around [`FleetSweep::to_json`].
+    pub fn report(&self, scenario_sel: &str, rounds: Option<usize>) -> Report {
+        Report::new(
+            ReportMeta {
+                kind: "fleet-sweep",
+                preset: scenario_sel.to_string(),
+                seed: self.seed,
+                threads: self.threads,
+                rounds,
+            },
+            self.to_json(),
+            self.render(),
+        )
+    }
 }
 
 #[cfg(test)]
@@ -254,6 +255,17 @@ mod tests {
         assert!(js.contains("p95_delay_s"));
         // and it round-trips through our own parser
         assert!(Json::parse(&js).is_ok());
+    }
+
+    #[test]
+    fn report_wraps_payload_in_versioned_envelope() {
+        let mut bench = Bencher::new("fleet-envelope");
+        let sweep =
+            sweep(&[scenario::DENSE_URBAN], &[3], Some(1), 2, 7, false, &mut bench).unwrap();
+        let j = sweep.report("dense-urban", Some(1)).to_json();
+        assert_eq!(j.get("schema_version").and_then(Json::as_usize), Some(1));
+        assert_eq!(j.at(&["meta", "preset"]).and_then(Json::as_str), Some("dense-urban"));
+        assert!(j.at(&["data", "points"]).is_some());
     }
 
     #[test]

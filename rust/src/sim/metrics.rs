@@ -52,17 +52,24 @@ impl Summary {
         // derived Default covers every field
         let mut s = Summary::default();
         for r in records {
-            s.delay.push(r.delay_s);
-            s.delay_samples.push(r.delay_s);
-            s.energy.push(r.energy_j);
-            s.device_compute.push(r.device_compute_s);
-            s.server_compute.push(r.server_compute_s);
-            s.transmission.push(r.transmission_s);
-            s.cost.push(r.cost);
-            s.cuts.push(r.cut);
-            s.freqs_ghz.push(r.freq_hz / 1e9);
+            s.push(r);
         }
         s
+    }
+
+    /// Fold one record into the aggregate — the online path
+    /// `exp::SummarySink` streams through, so sweeps never hold a full
+    /// record vector per grid point.  `from_records` is this in a loop.
+    pub fn push(&mut self, r: &RoundRecord) {
+        self.delay.push(r.delay_s);
+        self.delay_samples.push(r.delay_s);
+        self.energy.push(r.energy_j);
+        self.device_compute.push(r.device_compute_s);
+        self.server_compute.push(r.server_compute_s);
+        self.transmission.push(r.transmission_s);
+        self.cost.push(r.cost);
+        self.cuts.push(r.cut);
+        self.freqs_ghz.push(r.freq_hz / 1e9);
     }
 
     /// Mean selected cut layer over all records (0 when empty).

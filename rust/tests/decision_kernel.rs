@@ -1,17 +1,20 @@
-//! Decision-kernel bit-compat property suite (DESIGN.md §12, §13).
+//! Decision-kernel bit-compat property suite (DESIGN.md §12, §13) —
+//! driven through the unified experiment API (DESIGN.md §14).
 //!
 //! The acceptance bar for the kernel overhaul: for every scenario
 //! preset × seed × strategy — and every channel process × mobility
-//! combination — the cached decision path (cut tables + CQI-keyed
-//! memo, any thread count) produces a record stream **bit-identical**
-//! to the uncached kernel scan AND to the pre-kernel reference path
-//! that re-derives the model terms per cost call.  Random-cut
-//! participates too: it must *bypass* the cache (it draws from the
-//! cell RNG) yet still match the reference draw for draw.
+//! combination — `ExecMode::Cached` (cut tables + CQI-keyed memo, any
+//! thread count) produces a record stream **bit-identical** to
+//! `ExecMode::Uncached` (kernel scan, cache bypassed) AND to
+//! `ExecMode::Ref` (the pre-kernel reference path that re-derives the
+//! model terms per cost call).  Random-cut participates too: it must
+//! *bypass* the cache (it draws from the cell RNG) yet still match the
+//! reference draw for draw.
 
 use edgesplit::config::{scenario, ExpConfig, FadingModel, MobilityModel};
-use edgesplit::coordinator::{Scheduler, Strategy};
-use edgesplit::sim::fleet::verify_bit_identical;
+use edgesplit::coordinator::{RoundRecord, Scheduler, Strategy};
+use edgesplit::exp::verify::verify_bit_identical;
+use edgesplit::exp::{ExecMode, ExperimentBuilder};
 
 const STRATEGIES: [Strategy; 5] = [
     Strategy::Card,
@@ -22,21 +25,29 @@ const STRATEGIES: [Strategy; 5] = [
 ];
 
 #[test]
-fn cached_path_bit_identical_across_presets_seeds_strategies() {
+fn exec_modes_bit_identical_across_presets_seeds_strategies() {
     for sc in scenario::ALL {
         for seed in [1u64, 99] {
             for strategy in STRATEGIES {
-                let mut cfg = sc.config(17, seed).unwrap();
-                cfg.workload.rounds = 5;
-                cfg.churn = Default::default(); // synchronous engine: churn-free
-                let sched = Scheduler::new(cfg, sc.state, strategy);
-
+                let run = |mode: ExecMode| -> Vec<RoundRecord> {
+                    ExperimentBuilder::preset(sc.name)
+                        .devices(17)
+                        .seed(seed)
+                        .rounds(5)
+                        .strategy(strategy)
+                        .threads(4)
+                        .mode(mode)
+                        .build()
+                        .unwrap_or_else(|e| panic!("{}: {e}", sc.name))
+                        .run_collect()
+                        .unwrap()
+                };
                 // parallel + cached (the production path)...
-                let cached = sched.run_parallel(4);
+                let cached = run(ExecMode::Cached);
                 // ...vs the kernel scan with the cache bypassed...
-                let uncached = sched.run_uncached();
+                let uncached = run(ExecMode::Uncached);
                 // ...vs the pre-kernel full-recompute reference
-                let legacy = sched.run_ref();
+                let legacy = run(ExecMode::Ref);
 
                 let ctx = format!("{} seed={seed} {}", sc.name, strategy.name());
                 if let Err(e) = verify_bit_identical(&cached, &uncached) {
@@ -72,23 +83,32 @@ fn bit_compat_matrix_across_channel_processes_and_mobility() {
     for model in FadingModel::ALL {
         for mobile in [false, true] {
             for strategy in STRATEGIES {
-                let sched = Scheduler::new(process_cfg(model, mobile), state, strategy);
-
+                let run = |mode: ExecMode, threads: usize| -> Vec<RoundRecord> {
+                    ExperimentBuilder::from_config(process_cfg(model, mobile))
+                        .channel_state(state)
+                        .strategy(strategy)
+                        .threads(threads)
+                        .mode(mode)
+                        .build()
+                        .unwrap()
+                        .run_collect()
+                        .unwrap()
+                };
                 // parallel + cached (the production path), at several
-                // thread counts...
-                let cached = sched.run_parallel(4);
+                // thread counts (1 = the serial in-engine loop)...
+                let cached = run(ExecMode::Cached, 4);
                 let ctx = format!("{model:?} mobile={mobile} {}", strategy.name());
                 for threads in [1, 8] {
-                    if let Err(e) = verify_bit_identical(&cached, &sched.run_parallel(threads)) {
+                    if let Err(e) = verify_bit_identical(&cached, &run(ExecMode::Cached, threads)) {
                         panic!("thread-count divergence [{ctx}]: {e:#}");
                     }
                 }
                 // ...vs the kernel scan with the cache bypassed...
-                if let Err(e) = verify_bit_identical(&cached, &sched.run_uncached()) {
+                if let Err(e) = verify_bit_identical(&cached, &run(ExecMode::Uncached, 1)) {
                     panic!("cached vs uncached [{ctx}]: {e:#}");
                 }
                 // ...vs the full-recompute reference
-                if let Err(e) = verify_bit_identical(&cached, &sched.run_ref()) {
+                if let Err(e) = verify_bit_identical(&cached, &run(ExecMode::Ref, 1)) {
                     panic!("cached vs legacy [{ctx}]: {e:#}");
                 }
             }

@@ -7,28 +7,30 @@
 //! * both show higher server utilization than the `sync` baseline on
 //!   the heterogeneous-fleet preset (the contended-server payoff).
 
+use std::sync::Arc;
+
 use edgesplit::config::scenario::{Scenario, DENSE_URBAN, HETEROGENEOUS_FLEET};
 use edgesplit::coordinator::{RoundRecord, Scheduler, Strategy};
 use edgesplit::des::{sweep, DesConfig, DesEngine, DesOutcome, Policy};
-use edgesplit::sim::fleet::verify_bit_identical;
+use edgesplit::exp::verify::verify_bit_identical;
 use edgesplit::util::benchkit::Bencher;
 
 fn run_des(sc: Scenario, n: usize, rounds: usize, seed: u64, des: DesConfig) -> DesOutcome {
     let mut cfg = sc.config(n, seed).unwrap();
     cfg.workload.rounds = rounds;
-    let sched = Scheduler::new(cfg, sc.state, Strategy::Card);
-    DesEngine::new(&sched, des).run()
+    let sched = Arc::new(Scheduler::new(cfg, sc.state, Strategy::Card));
+    DesEngine::new(sched, des).run()
 }
 
 #[test]
 fn sync_des_bit_identical_to_round_engine_on_dense_urban() {
     let mut cfg = DENSE_URBAN.config(12, 7).unwrap();
     cfg.workload.rounds = 3;
-    let sched = Scheduler::new(cfg, DENSE_URBAN.state, Strategy::Card);
+    let sched = Arc::new(Scheduler::new(cfg, DENSE_URBAN.state, Strategy::Card));
     let reference = sched.run_parallel(4);
 
     let out = DesEngine::new(
-        &sched,
+        sched.clone(),
         DesConfig {
             policy: Policy::Sync,
             capacity: 4,
@@ -62,11 +64,11 @@ fn sync_bit_compat_holds_under_server_contention() {
     // queueing delays the timeline but must never perturb a record
     let mut cfg = DENSE_URBAN.config(9, 21).unwrap();
     cfg.workload.rounds = 2;
-    let sched = Scheduler::new(cfg, DENSE_URBAN.state, Strategy::Card);
+    let sched = Arc::new(Scheduler::new(cfg, DENSE_URBAN.state, Strategy::Card));
     let reference = sched.run_parallel(2);
     for (capacity, batch) in [(1, 1), (2, 3), (64, 1)] {
         let out = DesEngine::new(
-            &sched,
+            sched.clone(),
             DesConfig {
                 policy: Policy::Sync,
                 capacity,

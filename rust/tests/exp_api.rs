@@ -1,0 +1,258 @@
+//! Acceptance tests for the unified experiment API (DESIGN.md §14):
+//! builder validation, engine/sink behavior, DES-sync parity through
+//! the trait, and the shared report envelope.
+
+use edgesplit::config::scenario;
+use edgesplit::coordinator::Strategy;
+use edgesplit::des::{DesConfig, Policy};
+use edgesplit::exp::{
+    verify, BuildError, CollectSink, DesSink, ExecMode, ExperimentBuilder, NullSink,
+};
+use edgesplit::sim::Summary;
+
+// ---------------------------------------------------------------------------
+// builder validation
+// ---------------------------------------------------------------------------
+
+#[test]
+fn rejects_unknown_preset_with_known_names() {
+    let err = ExperimentBuilder::preset("nope").devices(4).build().unwrap_err();
+    assert!(matches!(&err, BuildError::UnknownPreset(name) if name == "nope"));
+    // the message lists the registry so the fix is one copy-paste away
+    let msg = err.to_string();
+    assert!(msg.contains("dense-urban") && msg.contains("mobile-vehicular"), "{msg}");
+}
+
+#[test]
+fn rejects_zero_rounds_and_zero_devices() {
+    assert!(matches!(
+        ExperimentBuilder::preset("dense-urban").devices(4).rounds(0).build(),
+        Err(BuildError::ZeroRounds)
+    ));
+    assert!(matches!(
+        ExperimentBuilder::preset("dense-urban").devices(0).build(),
+        Err(BuildError::ZeroDevices)
+    ));
+    assert!(matches!(
+        ExperimentBuilder::paper().rounds(0).build(),
+        Err(BuildError::ZeroRounds)
+    ));
+}
+
+#[test]
+fn preset_requires_fleet_size_and_config_rejects_one() {
+    assert!(matches!(
+        ExperimentBuilder::preset("dense-urban").build(),
+        Err(BuildError::MissingFleetSize(_))
+    ));
+    assert!(matches!(
+        ExperimentBuilder::paper().devices(8).build(),
+        Err(BuildError::FleetSizeWithoutPreset)
+    ));
+}
+
+#[test]
+fn rejects_conflicting_engine_mode_combos() {
+    // the Uncached/Ref oracles exist only on the round engine
+    let des = DesConfig {
+        policy: Policy::Sync,
+        capacity: 2,
+        batch: 1,
+    };
+    for mode in [ExecMode::Uncached, ExecMode::Ref] {
+        let err = ExperimentBuilder::preset("dense-urban")
+            .devices(4)
+            .des(des)
+            .mode(mode)
+            .build()
+            .unwrap_err();
+        assert!(
+            matches!(err, BuildError::OracleOnEventEngine(_)),
+            "{mode:?}: {err}"
+        );
+    }
+    // cached mode + DES builds fine
+    assert!(ExperimentBuilder::preset("dense-urban").devices(4).des(des).build().is_ok());
+}
+
+#[test]
+fn rejects_degenerate_des_knobs() {
+    let build = |capacity, batch, policy| {
+        ExperimentBuilder::preset("dense-urban")
+            .devices(4)
+            .des(DesConfig {
+                policy,
+                capacity,
+                batch,
+            })
+            .build()
+    };
+    let semi = |deadline_factor: f64| Policy::SemiSync { deadline_factor };
+    assert!(matches!(build(0, 1, Policy::Sync), Err(BuildError::InvalidDes(_))));
+    assert!(matches!(build(1, 0, Policy::Sync), Err(BuildError::InvalidDes(_))));
+    assert!(matches!(build(1, 1, semi(0.0)), Err(BuildError::InvalidDes(_))));
+    assert!(matches!(build(1, 1, semi(f64::NAN)), Err(BuildError::InvalidDes(_))));
+}
+
+#[test]
+fn bad_config_surfaces_as_typed_config_error() {
+    let mut cfg = edgesplit::config::ExpConfig::paper();
+    cfg.card.w = 3.0; // out of [0, 1]
+    assert!(matches!(
+        ExperimentBuilder::from_config(cfg).build(),
+        Err(BuildError::Config(_))
+    ));
+}
+
+// ---------------------------------------------------------------------------
+// engine + sink behavior
+// ---------------------------------------------------------------------------
+
+#[test]
+fn summary_sink_matches_offline_aggregation() {
+    let build = || {
+        ExperimentBuilder::preset("heterogeneous-fleet")
+            .devices(9)
+            .rounds(3)
+            .seed(11)
+            .build()
+            .unwrap()
+    };
+    let records = build().run_collect().unwrap();
+    let (online, outcome) = build().run_summary().unwrap();
+    let offline = Summary::from_records(&records);
+    assert_eq!(outcome.cells, records.len());
+    assert_eq!(online.delay.mean().to_bits(), offline.delay.mean().to_bits());
+    assert_eq!(online.energy.mean().to_bits(), offline.energy.mean().to_bits());
+    assert_eq!(online.cuts, offline.cuts);
+    assert_eq!(
+        online.delay_percentiles().p95.to_bits(),
+        offline.delay_percentiles().p95.to_bits()
+    );
+}
+
+#[test]
+fn round_engine_reports_preset_and_scheduler_views() {
+    let exp = ExperimentBuilder::preset("dense-urban")
+        .devices(6)
+        .rounds(2)
+        .strategy(Strategy::Card)
+        .build()
+        .unwrap();
+    assert_eq!(exp.preset(), Some("dense-urban"));
+    assert!(!exp.is_event_engine());
+    assert_eq!(exp.mode(), ExecMode::Cached);
+    let mut sink = NullSink;
+    let outcome = exp.run_into(&mut sink).unwrap();
+    assert_eq!(outcome.cells, 12);
+    assert!(outcome.des.is_none());
+    // the scheduler view exposes cache stats after the run
+    let (hits, misses) = exp.scheduler().cache_stats();
+    assert!(hits + misses > 0);
+}
+
+#[test]
+fn event_engine_streams_des_observables() {
+    let exp = ExperimentBuilder::preset("dense-urban")
+        .devices(6)
+        .rounds(2)
+        .seed(5)
+        .des(DesConfig {
+            policy: Policy::Async,
+            capacity: 2,
+            batch: 1,
+        })
+        .build()
+        .unwrap();
+    assert!(exp.is_event_engine());
+    let mut sink = DesSink::default();
+    let outcome = exp.run_into(&mut sink).unwrap();
+    let des = outcome.des.expect("event engine must report DES stats");
+    assert_eq!(outcome.cells, 12);
+    assert_eq!(sink.latencies.len(), 12);
+    assert!(sink.latencies.iter().all(|l| *l > 0.0 && l.is_finite()));
+    assert!(sink.energy_merged_j > 0.0);
+    assert!(des.makespan_s > 0.0);
+    assert!(des.server.utilization > 0.0);
+    assert!(des.aggregator_consistent);
+    // a plain sink sees the embedded analytic records via the default
+    // on_des_record forwarding
+    let mut collect = CollectSink::default();
+    exp.run_into(&mut collect).unwrap();
+    assert_eq!(collect.records.len(), 12);
+}
+
+#[test]
+fn run_trained_refuses_event_engine_and_oracle_modes() {
+    use edgesplit::coordinator::{BackendStats, TrainBackend};
+    struct Fake;
+    impl TrainBackend for Fake {
+        fn train_round(&mut self, _: usize, _: usize, _: usize) -> anyhow::Result<BackendStats> {
+            Ok(BackendStats {
+                mean_loss: 0.0,
+                wallclock_s: 0.0,
+            })
+        }
+    }
+    let des_exp = ExperimentBuilder::preset("dense-urban")
+        .devices(3)
+        .rounds(1)
+        .des(DesConfig {
+            policy: Policy::Sync,
+            capacity: 1,
+            batch: 1,
+        })
+        .build()
+        .unwrap();
+    assert!(des_exp.run_trained(&mut Fake).is_err());
+    let oracle_exp = ExperimentBuilder::preset("dense-urban")
+        .devices(3)
+        .rounds(1)
+        .mode(ExecMode::Ref)
+        .build()
+        .unwrap();
+    assert!(oracle_exp.run_trained(&mut Fake).is_err());
+    let ok_exp = ExperimentBuilder::preset("dense-urban")
+        .devices(3)
+        .rounds(1)
+        .build()
+        .unwrap();
+    let recs = ok_exp.run_trained(&mut Fake).unwrap();
+    assert_eq!(recs.len(), 3);
+    assert!(recs.iter().all(|r| r.loss == Some(0.0)));
+}
+
+// ---------------------------------------------------------------------------
+// shared determinism gates
+// ---------------------------------------------------------------------------
+
+#[test]
+fn round_determinism_gate_passes_on_every_preset() {
+    for sc in scenario::ALL {
+        let exp = ExperimentBuilder::preset(sc.name)
+            .devices(8)
+            .rounds(2)
+            .seed(3)
+            .threads(4)
+            .build()
+            .unwrap();
+        if let Err(e) = verify::verify_round_determinism(&exp) {
+            panic!("{}: {e:#}", sc.name);
+        }
+    }
+}
+
+#[test]
+fn des_sync_gate_passes_even_on_churny_presets() {
+    // heterogeneous-fleet ships a [churn] table; the gate runs the
+    // churn-free contract on a copy
+    let mut cfg = scenario::HETEROGENEOUS_FLEET.config(8, 7).unwrap();
+    cfg.workload.rounds = 2;
+    verify::verify_des_sync_matches_round_engine(
+        &cfg,
+        scenario::HETEROGENEOUS_FLEET.state,
+        2,
+        1,
+    )
+    .unwrap();
+}

@@ -6,8 +6,8 @@
 
 use edgesplit::config::scenario::{Scenario, ALL, DENSE_URBAN};
 use edgesplit::coordinator::{RoundRecord, Scheduler, Strategy};
+use edgesplit::exp::verify::verify_bit_identical;
 use edgesplit::prop_assert;
-use edgesplit::sim::fleet::verify_bit_identical;
 use edgesplit::util::pool;
 use edgesplit::util::proptest::{forall, PropConfig};
 

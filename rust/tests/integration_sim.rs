@@ -3,8 +3,9 @@
 
 use edgesplit::cli::{Args, FlagSpec};
 use edgesplit::config::{ChannelState, ExpConfig};
-use edgesplit::coordinator::{Scheduler, Strategy};
-use edgesplit::sim::{ablate, fig3, fig4, reduction_pct, Summary};
+use edgesplit::coordinator::Strategy;
+use edgesplit::exp::ExperimentBuilder;
+use edgesplit::sim::{ablate, fig3, fig4, reduction_pct};
 
 fn quick() -> ExpConfig {
     let mut cfg = ExpConfig::paper();
@@ -129,7 +130,7 @@ fn ablate_bandwidth_helps_but_saturates_toward_compute_floor() {
 // ---------------------------------------------------------------------------
 
 #[test]
-fn all_strategies_run_through_scheduler() {
+fn all_strategies_run_through_experiment_api() {
     for strat in [
         Strategy::Card,
         Strategy::ServerOnly,
@@ -137,10 +138,13 @@ fn all_strategies_run_through_scheduler() {
         Strategy::StaticCut(16),
         Strategy::RandomCut,
     ] {
-        let s = Scheduler::new(quick(), ChannelState::Normal, strat);
-        let recs = s.run_analytic().unwrap();
-        assert_eq!(recs.len(), 40, "{}", strat.name());
-        let summary = Summary::from_records(&recs);
+        let experiment = ExperimentBuilder::from_config(quick())
+            .channel_state(ChannelState::Normal)
+            .strategy(strat)
+            .build()
+            .unwrap();
+        let (summary, outcome) = experiment.run_summary().unwrap();
+        assert_eq!(outcome.cells, 40, "{}", strat.name());
         assert!(summary.delay.mean() > 0.0);
     }
 }
@@ -148,9 +152,12 @@ fn all_strategies_run_through_scheduler() {
 #[test]
 fn card_cost_dominates_all_baselines_in_simulation() {
     let mk = |s| {
-        let sched = Scheduler::new(quick(), ChannelState::Normal, s);
-        let recs = sched.run_analytic().unwrap();
-        Summary::from_records(&recs).cost.mean()
+        let experiment = ExperimentBuilder::from_config(quick())
+            .channel_state(ChannelState::Normal)
+            .strategy(s)
+            .build()
+            .unwrap();
+        experiment.run_summary().unwrap().0.cost.mean()
     };
     let card = mk(Strategy::Card);
     for s in [
@@ -188,8 +195,11 @@ fn config_file_roundtrip_drives_simulation() {
     "#;
     let cfg = ExpConfig::from_toml_str(toml).unwrap();
     cfg.validate().unwrap();
-    let s = Scheduler::new(cfg, ChannelState::Good, Strategy::Card);
-    let recs = s.run_analytic().unwrap();
+    let experiment = ExperimentBuilder::from_config(cfg)
+        .channel_state(ChannelState::Good)
+        .build()
+        .unwrap();
+    let recs = experiment.run_collect().unwrap();
     assert_eq!(recs.len(), 3);
     // w = 0.9 → delay-hungry → near-max frequency
     assert!(recs.iter().all(|r| r.freq_hz > 2.0e9));

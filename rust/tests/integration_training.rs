@@ -1,10 +1,12 @@
-//! Integration: the full stack — Scheduler (CARD decisions) driving the
-//! SplitExecutor (real PJRT compute) — plus failure-injection tests on
-//! the artifact plumbing.  Requires `artifacts/tiny` (self-skips).
+//! Integration: the full stack — the experiment API (CARD decisions)
+//! driving the SplitExecutor (real PJRT compute) — plus
+//! failure-injection tests on the artifact plumbing.  Requires
+//! `artifacts/tiny` (self-skips).
 
 use edgesplit::config::{ChannelState, ExpConfig};
-use edgesplit::coordinator::{Scheduler, Strategy};
+use edgesplit::coordinator::Strategy;
 use edgesplit::data::{Batcher, Corpus};
+use edgesplit::exp::ExperimentBuilder;
 use edgesplit::runtime::{artifact_dir, ArtifactStore, SplitExecutor};
 use edgesplit::util::rng::Rng;
 
@@ -43,8 +45,12 @@ fn scheduler_drives_real_training_with_card() {
     cfg.workload.rounds = 2;
     cfg.workload.local_epochs = 2;
     let mut ex = executor(3, cfg.devices.len());
-    let sched = Scheduler::new(cfg, ChannelState::Normal, Strategy::Card);
-    let recs = sched.run(Some(&mut ex)).unwrap();
+    let experiment = ExperimentBuilder::from_config(cfg)
+        .channel_state(ChannelState::Normal)
+        .strategy(Strategy::Card)
+        .build()
+        .unwrap();
+    let recs = experiment.run_trained(&mut ex).unwrap();
     assert_eq!(recs.len(), 10); // 5 devices × 2 rounds
     assert!(recs.iter().all(|r| r.loss.is_some()));
     assert_eq!(ex.loss_log.len(), 20); // ×2 epochs
@@ -69,8 +75,12 @@ fn every_strategy_trains_identically_in_loss_space() {
         cfg.workload.rounds = 1;
         cfg.workload.local_epochs = 2;
         let mut ex = executor(9, cfg.devices.len());
-        let sched = Scheduler::new(cfg, ChannelState::Normal, strategy);
-        sched.run(Some(&mut ex)).unwrap();
+        let experiment = ExperimentBuilder::from_config(cfg)
+            .channel_state(ChannelState::Normal)
+            .strategy(strategy)
+            .build()
+            .unwrap();
+        experiment.run_trained(&mut ex).unwrap();
         ex.loss_log.iter().map(|x| x.1).collect::<Vec<_>>()
     };
     let a = run(Strategy::Card);
