@@ -8,6 +8,7 @@ pub mod toml;
 
 pub use scenario::Scenario;
 pub use schema::{
-    CardSpec, ChannelSpec, ChannelState, ChurnSpec, ConfigError, DeviceSpec, ExpConfig,
-    FadingModel, FadingProcessSpec, MobilityModel, MobilitySpec, ServerSpec, WorkloadSpec,
+    CardSpec, CellLayout, CellsSpec, ChannelSpec, ChannelState, ChurnSpec, ConfigError,
+    DeviceSpec, ExpConfig, FadingModel, FadingProcessSpec, MobilityModel, MobilitySpec,
+    ServerSpec, WorkloadSpec,
 };

@@ -362,6 +362,77 @@ impl ChurnSpec {
     }
 }
 
+/// Geometric arrangement of the edge-server cell sites for the
+/// `[cells]` table (DESIGN.md §15).  Cell 0 always sits at the origin —
+/// the legacy single-AP position — so `count = 1` reproduces today's
+/// topology exactly under every layout.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CellLayout {
+    /// Cells on the positive x-axis at `spacing_m` intervals.
+    Line,
+    /// Cell 0 at the origin, the rest on a circle of radius `spacing_m`.
+    Ring,
+    /// Row-major square grid with `spacing_m` pitch.
+    Grid,
+}
+
+impl CellLayout {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "line" => Some(CellLayout::Line),
+            "ring" => Some(CellLayout::Ring),
+            "grid" => Some(CellLayout::Grid),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CellLayout::Line => "line",
+            CellLayout::Ring => "ring",
+            CellLayout::Grid => "grid",
+        }
+    }
+
+    pub const ALL: [CellLayout; 3] = [CellLayout::Line, CellLayout::Ring, CellLayout::Grid];
+}
+
+/// `[cells]` — the multi-cell edge tier (DESIGN.md §15): how many
+/// edge servers exist, where they sit, and how sticky the device→cell
+/// association is.  `count = 1` (the default) is the single-server
+/// topology of the paper and is bit-identical to the pre-cell engines.
+#[derive(Clone, Debug)]
+pub struct CellsSpec {
+    /// number of edge-server cell sites
+    pub count: usize,
+    /// geometric arrangement of the sites
+    pub layout: CellLayout,
+    /// inter-site distance [m] (layout pitch / ring radius)
+    pub spacing_m: f64,
+    /// handover hysteresis margin [dB]: a device switches serving
+    /// cells only when the candidate's pathloss is at least this much
+    /// lower than the serving cell's
+    pub hysteresis_db: f64,
+}
+
+impl Default for CellsSpec {
+    fn default() -> Self {
+        Self {
+            count: 1,
+            layout: CellLayout::Line,
+            spacing_m: 60.0,
+            hysteresis_db: 3.0,
+        }
+    }
+}
+
+impl CellsSpec {
+    /// Whether the multi-cell tier is active (more than one site).
+    pub fn enabled(&self) -> bool {
+        self.count > 1
+    }
+}
+
 /// Top-level experiment configuration.
 #[derive(Clone, Debug, Default)]
 pub struct ExpConfig {
@@ -372,6 +443,7 @@ pub struct ExpConfig {
     pub card: CardSpec,
     pub churn: ChurnSpec,
     pub mobility: MobilitySpec,
+    pub cells: CellsSpec,
     pub seed: u64,
 }
 
@@ -386,6 +458,7 @@ impl ExpConfig {
             card: CardSpec::default(),
             churn: ChurnSpec::default(),
             mobility: MobilitySpec::default(),
+            cells: CellsSpec::default(),
             seed: 7,
         }
     }
@@ -467,6 +540,22 @@ impl ExpConfig {
                 return inval(format!("{name} must be finite and > 0, got {v}"));
             }
         }
+        let cells = &self.cells;
+        if cells.count == 0 || cells.count > 4096 {
+            return inval(format!("cells.count must be in [1, 4096], got {}", cells.count));
+        }
+        if !cells.spacing_m.is_finite() || cells.spacing_m <= 0.0 {
+            return inval(format!(
+                "cells.spacing_m must be finite and > 0, got {}",
+                cells.spacing_m
+            ));
+        }
+        if !cells.hysteresis_db.is_finite() || cells.hysteresis_db < 0.0 {
+            return inval(format!(
+                "cells.hysteresis_db must be finite and >= 0, got {}",
+                cells.hysteresis_db
+            ));
+        }
         for d in &self.devices {
             if d.server_freq_floor(&self.server) > self.server.max_freq_hz {
                 return inval(format!(
@@ -534,6 +623,7 @@ fn apply_tree(cfg: &mut ExpConfig, tree: &Json) -> Result<(), ConfigError> {
             "card" => apply_card(&mut cfg.card, val)?,
             "churn" => apply_churn(&mut cfg.churn, val)?,
             "mobility" => apply_mobility(&mut cfg.mobility, val)?,
+            "cells" => apply_cells(&mut cfg.cells, val)?,
             "sim" => {
                 for (k, v) in val.as_obj().into_iter().flatten() {
                     match k.as_str() {
@@ -678,6 +768,24 @@ fn apply_card(c: &mut CardSpec, val: &Json) -> Result<(), ConfigError> {
         match k.as_str() {
             "w" => c.w = num(v, "card.w")?,
             _ => return Err(ConfigError::UnknownKey(format!("card.{k}"))),
+        }
+    }
+    Ok(())
+}
+
+fn apply_cells(c: &mut CellsSpec, val: &Json) -> Result<(), ConfigError> {
+    for (k, v) in val.as_obj().into_iter().flatten() {
+        match k.as_str() {
+            "count" => c.count = num(v, "cells.count")? as usize,
+            "layout" => {
+                let s = string(v, "cells.layout")?;
+                c.layout = CellLayout::parse(&s).ok_or_else(|| {
+                    ConfigError::Invalid(format!("cells.layout must be line|ring|grid, got '{s}'"))
+                })?;
+            }
+            "spacing_m" => c.spacing_m = num(v, "cells.spacing_m")?,
+            "hysteresis_db" => c.hysteresis_db = num(v, "cells.hysteresis_db")?,
+            _ => return Err(ConfigError::UnknownKey(format!("cells.{k}"))),
         }
     }
     Ok(())
@@ -830,6 +938,52 @@ mod tests {
             Err(ConfigError::UnknownKey(_))
         ));
         assert!(ExpConfig::from_toml_str("[channel.process]\nmodel = \"rician\"\n").is_err());
+    }
+
+    #[test]
+    fn cells_default_single_and_overrides_parse() {
+        let c = ExpConfig::paper();
+        assert_eq!(c.cells.count, 1);
+        assert!(!c.cells.enabled());
+        assert_eq!(c.cells.layout, CellLayout::Line);
+        let c = ExpConfig::from_toml_str(
+            "[cells]\ncount = 4\nlayout = \"grid\"\nspacing_m = 80\nhysteresis_db = 2\n",
+        )
+        .unwrap();
+        assert_eq!(c.cells.count, 4);
+        assert!(c.cells.enabled());
+        assert_eq!(c.cells.layout, CellLayout::Grid);
+        assert_eq!(c.cells.spacing_m, 80.0);
+        assert_eq!(c.cells.hysteresis_db, 2.0);
+        c.validate().unwrap();
+        for l in CellLayout::ALL {
+            assert_eq!(CellLayout::parse(l.name()), Some(l));
+        }
+        assert_eq!(CellLayout::parse("hex"), None);
+        assert!(matches!(
+            ExpConfig::from_toml_str("[cells]\nsites = 3\n"),
+            Err(ConfigError::UnknownKey(_))
+        ));
+        assert!(ExpConfig::from_toml_str("[cells]\nlayout = \"hex\"\n").is_err());
+    }
+
+    #[test]
+    fn cells_validation_bounds() {
+        let mut c = ExpConfig::paper();
+        c.cells.count = 0;
+        assert!(c.validate().is_err());
+        c = ExpConfig::paper();
+        c.cells.count = 5000;
+        assert!(c.validate().is_err());
+        c = ExpConfig::paper();
+        c.cells.spacing_m = 0.0;
+        assert!(c.validate().is_err());
+        c = ExpConfig::paper();
+        c.cells.hysteresis_db = -1.0;
+        assert!(c.validate().is_err());
+        c = ExpConfig::paper();
+        c.cells.hysteresis_db = f64::INFINITY;
+        assert!(c.validate().is_err());
     }
 
     #[test]

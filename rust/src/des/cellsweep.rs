@@ -1,0 +1,541 @@
+//! `cell-sweep`: scenario × device-count × cell-count grid on the
+//! multi-cell discrete-event engine (DESIGN.md §15), emitting global
+//! *and* per-cell utilization/energy/handover figures into
+//! `BENCH_cells.json` for CI trajectory tracking (EXPERIMENTS.md).
+//!
+//! The aggregation policy is pinned to `Sync` — the sweep studies how
+//! the *cell tier* (association, hysteresis handover, per-cell
+//! queueing, star-to-cloud aggregation) reshapes contention and
+//! energy, so the timeline policy is held fixed.  Every grid point is
+//! an independent [`crate::exp::ExperimentBuilder`]-built experiment,
+//! fanned out on the worker pool: thread count changes wall-clock
+//! only, never a reported metric.
+//!
+//! Two invariants are enforced on every run:
+//!
+//! * per scenario, the single-cell anchor gate
+//!   ([`crate::exp::verify::verify_single_cell_bit_identity`]): with
+//!   `[cells]` forced back to one cell, the sync DES timeline must
+//!   reproduce the serial round engine bit for bit;
+//! * per point, the per-cell energy accumulators must sum *exactly*
+//!   (bitwise) to the global `energy_spent_j` figure.
+
+use crate::config::scenario::Scenario;
+use crate::config::{CellLayout, CellsSpec};
+use crate::exp::{self, DesSink, ExperimentBuilder, Report, ReportMeta};
+use crate::util::benchkit::Bencher;
+use crate::util::json::{self, Json};
+use crate::util::pool;
+use crate::util::table::{fmt_joules, fmt_secs, Table};
+
+use super::engine::{CellStats, DesConfig, Policy};
+
+/// One (scenario, fleet size, cell count) measurement: the global
+/// figures plus the per-cell breakdown.
+#[derive(Clone, Debug)]
+pub struct CellPoint {
+    pub scenario: String,
+    pub n_devices: usize,
+    pub n_cells: usize,
+    pub layout: String,
+    pub spacing_m: f64,
+    pub hysteresis_db: f64,
+    pub rounds: usize,
+    pub capacity: usize,
+    pub batch: usize,
+    pub wall_s: f64,
+    pub makespan_s: f64,
+    /// completed device-round merges
+    pub completed: usize,
+    pub dropped: u64,
+    /// total device→cell re-associations over the run
+    pub handovers: u64,
+    /// across-cell fleet figures (see `des::engine::DesOutcome::server`)
+    pub mean_wait_s: f64,
+    pub server_utilization: f64,
+    pub peak_queue_depth: usize,
+    /// Eq.-11 dispatch-time energy, summed over cells [J]
+    pub energy_j: f64,
+    /// energy of merged rounds only (excludes wasted work) [J]
+    pub energy_merged_j: f64,
+    /// per-cell queue/energy/handover observables, indexed by cell
+    pub per_cell: Vec<CellStats>,
+}
+
+/// Full cell-sweep result.
+#[derive(Clone, Debug)]
+pub struct CellSweep {
+    pub points: Vec<CellPoint>,
+    pub threads: usize,
+    pub seed: u64,
+}
+
+/// Run the grid.  `rounds` overrides each preset's round count;
+/// `layout`/`spacing_m`/`hysteresis_db` parameterize the cell tier for
+/// every multi-cell point; `capacity`/`batch` size each cell's queue.
+#[allow(clippy::too_many_arguments)]
+pub fn sweep(
+    scenarios: &[Scenario],
+    counts: &[usize],
+    cell_counts: &[usize],
+    layout: CellLayout,
+    spacing_m: f64,
+    hysteresis_db: f64,
+    rounds: Option<usize>,
+    capacity: usize,
+    batch: usize,
+    threads: usize,
+    seed: u64,
+    bench: &mut Bencher,
+) -> anyhow::Result<CellSweep> {
+    anyhow::ensure!(!scenarios.is_empty(), "no scenarios selected");
+    anyhow::ensure!(!counts.is_empty(), "no device counts selected");
+    anyhow::ensure!(!cell_counts.is_empty(), "no cell counts selected");
+    anyhow::ensure!(capacity >= 1, "server capacity must be >= 1");
+    anyhow::ensure!(batch >= 1, "server batch must be >= 1");
+    anyhow::ensure!(
+        spacing_m.is_finite() && spacing_m > 0.0,
+        "cell spacing must be finite and > 0, got {spacing_m}"
+    );
+    anyhow::ensure!(
+        hysteresis_db.is_finite() && hysteresis_db >= 0.0,
+        "hysteresis margin must be finite and >= 0, got {hysteresis_db}"
+    );
+    for &n in counts {
+        anyhow::ensure!(n > 0, "device count must be >= 1");
+    }
+    for &c in cell_counts {
+        anyhow::ensure!(c >= 1, "cell count must be >= 1");
+    }
+
+    let mut grid: Vec<(Scenario, usize, usize)> = Vec::new();
+    for sc in scenarios {
+        for &n in counts {
+            for &cells in cell_counts {
+                grid.push((*sc, n, cells));
+            }
+        }
+    }
+
+    let results: Vec<anyhow::Result<CellPoint>> =
+        pool::par_map_indexed(threads, &grid, |_, &(sc, n, cells)| {
+            run_point(
+                sc,
+                n,
+                cells,
+                layout,
+                spacing_m,
+                hysteresis_db,
+                rounds,
+                capacity,
+                batch,
+                seed,
+            )
+        });
+    let mut points = Vec::with_capacity(results.len());
+    for r in results {
+        points.push(r?);
+    }
+    for p in &points {
+        let rate = p.completed as f64 / p.wall_s.max(1e-9);
+        bench.record_once(
+            &format!("{}_c{}_n{}", p.scenario, p.n_cells, p.n_devices),
+            p.wall_s,
+            Some((rate, "device-round")),
+        );
+    }
+
+    // the single-cell anchor (DESIGN.md §15): per scenario, at the
+    // largest fleet, a cells=1 sync DES run must reproduce the serial
+    // round engine bit for bit — pinning every multi-cell code path to
+    // the pre-cell engines
+    let gate_n = *counts.iter().max().unwrap();
+    for sc in scenarios {
+        let mut cfg = sc.config(gate_n, seed)?;
+        if let Some(r) = rounds {
+            cfg.workload.rounds = r;
+        }
+        exp::verify::verify_single_cell_bit_identity(&cfg, sc.state, capacity, batch)?;
+    }
+
+    Ok(CellSweep {
+        points,
+        threads,
+        seed,
+    })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_point(
+    sc: Scenario,
+    n: usize,
+    cells: usize,
+    layout: CellLayout,
+    spacing_m: f64,
+    hysteresis_db: f64,
+    rounds: Option<usize>,
+    capacity: usize,
+    batch: usize,
+    seed: u64,
+) -> anyhow::Result<CellPoint> {
+    let mut builder = ExperimentBuilder::preset(sc.name)
+        .devices(n)
+        .seed(seed)
+        .cells_spec(CellsSpec {
+            count: cells,
+            layout,
+            spacing_m,
+            hysteresis_db,
+        })
+        .des(DesConfig {
+            policy: Policy::Sync,
+            capacity,
+            batch,
+        });
+    if let Some(r) = rounds {
+        builder = builder.rounds(r);
+    }
+    let experiment = builder.build()?;
+    let n_rounds = experiment.config().workload.rounds;
+
+    let mut sink = DesSink::default();
+    let t0 = std::time::Instant::now();
+    let outcome = experiment.run_into(&mut sink)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let des = outcome
+        .des
+        .ok_or_else(|| anyhow::anyhow!("event engine must report DES stats"))?;
+
+    anyhow::ensure!(
+        des.per_cell.len() == cells,
+        "expected {} per-cell entries, got {}",
+        cells,
+        des.per_cell.len()
+    );
+    // the energy-conservation invariant: global figure == exact sum of
+    // the per-cell accumulators (same order, same additions)
+    let cell_sum: f64 = des.per_cell.iter().map(|c| c.energy_spent_j).sum();
+    anyhow::ensure!(
+        cell_sum.to_bits() == des.energy_spent_j.to_bits(),
+        "per-cell energy {cell_sum} J does not reproduce the global {} J",
+        des.energy_spent_j
+    );
+
+    Ok(CellPoint {
+        scenario: sc.name.to_string(),
+        n_devices: n,
+        n_cells: cells,
+        layout: layout.name().to_string(),
+        spacing_m,
+        hysteresis_db,
+        rounds: n_rounds,
+        capacity,
+        batch,
+        wall_s: wall,
+        makespan_s: des.makespan_s,
+        completed: outcome.cells,
+        dropped: des.dropped,
+        handovers: des.handovers,
+        mean_wait_s: des.server.mean_wait_s,
+        server_utilization: des.server.utilization,
+        peak_queue_depth: des.server.peak_depth,
+        energy_j: des.energy_spent_j,
+        energy_merged_j: sink.energy_merged_j,
+        per_cell: des.per_cell,
+    })
+}
+
+impl CellSweep {
+    /// ASCII summary: one row per grid point, indented per-cell rows
+    /// under every multi-cell point.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            &format!(
+                "cell-sweep — multi-cell DES engine ({} workers, seed {})",
+                self.threads, self.seed
+            ),
+            &[
+                "scenario",
+                "devices",
+                "cells",
+                "layout",
+                "merged",
+                "handovers",
+                "makespan",
+                "util",
+                "peak q",
+                "energy",
+            ],
+        );
+        for p in &self.points {
+            t.row(vec![
+                p.scenario.clone(),
+                p.n_devices.to_string(),
+                p.n_cells.to_string(),
+                p.layout.clone(),
+                p.completed.to_string(),
+                p.handovers.to_string(),
+                fmt_secs(p.makespan_s),
+                format!("{:.0}%", 100.0 * p.server_utilization),
+                p.peak_queue_depth.to_string(),
+                fmt_joules(p.energy_j),
+            ]);
+            if p.n_cells > 1 {
+                for (i, c) in p.per_cell.iter().enumerate() {
+                    t.row(vec![
+                        format!("  cell {i}"),
+                        String::new(),
+                        String::new(),
+                        format!("({:.0},{:.0})m", c.position_m.0, c.position_m.1),
+                        c.server.served_jobs.to_string(),
+                        c.handovers_in.to_string(),
+                        String::new(),
+                        format!("{:.0}%", 100.0 * c.server.utilization),
+                        c.server.peak_depth.to_string(),
+                        fmt_joules(c.energy_spent_j),
+                    ]);
+                }
+            }
+        }
+        t.render()
+    }
+
+    /// Emitter payload (the `data` member of the report envelope).
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("schema", Json::Str("edgesplit/cell-sweep/v1".into())),
+            // string, not number: u64 seeds above 2^53 would lose
+            // precision through the f64-backed Json::Num
+            ("seed", Json::Str(self.seed.to_string())),
+            ("threads", Json::Num(self.threads as f64)),
+            (
+                "points",
+                Json::Arr(self.points.iter().map(point_json).collect()),
+            ),
+        ])
+    }
+
+    /// The enveloped report (`BENCH_cells.json`): shared
+    /// `schema_version`/`meta` wrapper around [`CellSweep::to_json`].
+    pub fn report(&self, scenario_sel: &str, rounds: Option<usize>) -> Report {
+        Report::new(
+            ReportMeta {
+                kind: "cell-sweep",
+                preset: scenario_sel.to_string(),
+                seed: self.seed,
+                threads: self.threads,
+                rounds,
+            },
+            self.to_json(),
+            self.render(),
+        )
+    }
+}
+
+fn point_json(p: &CellPoint) -> Json {
+    json::obj(vec![
+        ("scenario", Json::Str(p.scenario.clone())),
+        ("n_devices", Json::Num(p.n_devices as f64)),
+        ("n_cells", Json::Num(p.n_cells as f64)),
+        ("layout", Json::Str(p.layout.clone())),
+        ("spacing_m", Json::Num(p.spacing_m)),
+        ("hysteresis_db", Json::Num(p.hysteresis_db)),
+        ("rounds", Json::Num(p.rounds as f64)),
+        ("capacity", Json::Num(p.capacity as f64)),
+        ("batch", Json::Num(p.batch as f64)),
+        ("wall_s", Json::Num(p.wall_s)),
+        ("makespan_s", Json::Num(p.makespan_s)),
+        ("completed", Json::Num(p.completed as f64)),
+        ("dropped", Json::Num(p.dropped as f64)),
+        ("handovers", Json::Num(p.handovers as f64)),
+        ("mean_wait_s", Json::Num(p.mean_wait_s)),
+        ("server_utilization", Json::Num(p.server_utilization)),
+        ("peak_queue_depth", Json::Num(p.peak_queue_depth as f64)),
+        ("energy_j", Json::Num(p.energy_j)),
+        ("energy_merged_j", Json::Num(p.energy_merged_j)),
+        (
+            "per_cell",
+            Json::Arr(
+                p.per_cell
+                    .iter()
+                    .enumerate()
+                    .map(|(i, c)| cell_json(i, c))
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn cell_json(i: usize, c: &CellStats) -> Json {
+    json::obj(vec![
+        ("cell", Json::Num(i as f64)),
+        ("x_m", Json::Num(c.position_m.0)),
+        ("y_m", Json::Num(c.position_m.1)),
+        ("served_jobs", Json::Num(c.server.served_jobs as f64)),
+        ("abandoned_jobs", Json::Num(c.server.abandoned_jobs as f64)),
+        ("utilization", Json::Num(c.server.utilization)),
+        ("mean_wait_s", Json::Num(c.server.mean_wait_s)),
+        ("peak_queue_depth", Json::Num(c.server.peak_depth as f64)),
+        ("energy_j", Json::Num(c.energy_spent_j)),
+        ("handovers_in", Json::Num(c.handovers_in as f64)),
+        ("aggregator_consistent", Json::Bool(c.aggregator_consistent)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::scenario;
+
+    #[test]
+    fn small_grid_produces_points_and_json() {
+        let mut bench = Bencher::new("cell-sweep-test");
+        let sweep = sweep(
+            &[scenario::DENSE_URBAN],
+            &[6],
+            &[1, 3],
+            CellLayout::Line,
+            40.0,
+            3.0,
+            Some(2),
+            2,
+            1,
+            4,
+            7,
+            &mut bench,
+        )
+        .unwrap();
+        assert_eq!(sweep.points.len(), 2);
+        assert_eq!(bench.results().len(), 2);
+        for p in &sweep.points {
+            assert!(p.makespan_s > 0.0 && p.makespan_s.is_finite());
+            assert_eq!(p.per_cell.len(), p.n_cells);
+            assert!(p.completed > 0);
+            let cell_sum: f64 = p.per_cell.iter().map(|c| c.energy_spent_j).sum();
+            assert_eq!(cell_sum.to_bits(), p.energy_j.to_bits());
+        }
+        let js = sweep.to_json().to_string();
+        assert!(js.contains("cell-sweep/v1"));
+        assert!(js.contains("per_cell"));
+        assert!(js.contains("handovers_in"));
+        assert!(Json::parse(&js).is_ok());
+    }
+
+    #[test]
+    fn single_cell_points_match_the_des_sweep_globals() {
+        // the cells=1 point must carry exactly the legacy figures the
+        // des-sweep reports for the same (scenario, fleet, knobs)
+        let mut bench = Bencher::new("cell-anchor");
+        let cells = sweep(
+            &[scenario::DENSE_URBAN],
+            &[5],
+            &[1],
+            CellLayout::Line,
+            60.0,
+            3.0,
+            Some(2),
+            2,
+            1,
+            2,
+            9,
+            &mut bench,
+        )
+        .unwrap();
+        let mut bench2 = Bencher::new("des-anchor");
+        let des = super::super::sweep::sweep(
+            &[scenario::DENSE_URBAN],
+            &[5],
+            &[Policy::Sync],
+            Some(2),
+            2,
+            1,
+            2,
+            9,
+            &mut bench2,
+        )
+        .unwrap();
+        let (c, d) = (&cells.points[0], &des.points[0]);
+        assert_eq!(c.makespan_s.to_bits(), d.makespan_s.to_bits());
+        assert_eq!(c.energy_j.to_bits(), d.energy_j.to_bits());
+        assert_eq!(c.server_utilization.to_bits(), d.server_utilization.to_bits());
+        assert_eq!(c.completed, d.completed);
+        assert_eq!(c.handovers, 0);
+    }
+
+    #[test]
+    fn sweep_is_deterministic_across_thread_counts() {
+        let run = |threads: usize| {
+            let mut bench = Bencher::new("det");
+            sweep(
+                &[scenario::MOBILE_VEHICULAR],
+                &[8],
+                &[1, 4],
+                CellLayout::Line,
+                60.0,
+                3.0,
+                Some(3),
+                2,
+                1,
+                threads,
+                11,
+                &mut bench,
+            )
+            .unwrap()
+        };
+        let a = run(1);
+        let b = run(8);
+        assert_eq!(a.points.len(), b.points.len());
+        for (x, y) in a.points.iter().zip(&b.points) {
+            assert_eq!(x.n_cells, y.n_cells);
+            assert_eq!(x.makespan_s.to_bits(), y.makespan_s.to_bits());
+            assert_eq!(x.completed, y.completed);
+            assert_eq!(x.handovers, y.handovers);
+            assert_eq!(x.energy_j.to_bits(), y.energy_j.to_bits());
+            for (cx, cy) in x.per_cell.iter().zip(&y.per_cell) {
+                assert_eq!(cx.energy_spent_j.to_bits(), cy.energy_spent_j.to_bits());
+                assert_eq!(cx.handovers_in, cy.handovers_in);
+                assert_eq!(cx.server.served_jobs, cy.server.served_jobs);
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_degenerate_input() {
+        let mut bench = Bencher::new("bad");
+        let sc = [scenario::DENSE_URBAN];
+        let l = CellLayout::Line;
+        assert!(sweep(&[], &[4], &[1], l, 60.0, 3.0, None, 1, 1, 1, 0, &mut bench).is_err());
+        assert!(sweep(&sc, &[], &[1], l, 60.0, 3.0, None, 1, 1, 1, 0, &mut bench).is_err());
+        assert!(sweep(&sc, &[4], &[], l, 60.0, 3.0, None, 1, 1, 1, 0, &mut bench).is_err());
+        assert!(sweep(&sc, &[0], &[1], l, 60.0, 3.0, None, 1, 1, 1, 0, &mut bench).is_err());
+        assert!(sweep(&sc, &[4], &[0], l, 60.0, 3.0, None, 1, 1, 1, 0, &mut bench).is_err());
+        assert!(sweep(&sc, &[4], &[1], l, 0.0, 3.0, None, 1, 1, 1, 0, &mut bench).is_err());
+        assert!(sweep(&sc, &[4], &[1], l, 60.0, -1.0, None, 1, 1, 1, 0, &mut bench).is_err());
+        assert!(sweep(&sc, &[4], &[1], l, 60.0, 3.0, None, 0, 1, 1, 0, &mut bench).is_err());
+    }
+
+    #[test]
+    fn render_lists_points_and_per_cell_rows() {
+        let mut bench = Bencher::new("render");
+        let sweep = sweep(
+            &[scenario::SPARSE_RURAL],
+            &[4],
+            &[2],
+            CellLayout::Ring,
+            50.0,
+            2.0,
+            Some(1),
+            2,
+            1,
+            2,
+            1,
+            &mut bench,
+        )
+        .unwrap();
+        let out = sweep.render();
+        assert!(out.contains("sparse-rural"));
+        assert!(out.contains("handovers"));
+        assert!(out.contains("cell 0"));
+        assert!(out.contains("cell 1"));
+    }
+}

@@ -33,11 +33,26 @@
 //! bit-identity with the barrier engine and keeps every cell a pure
 //! function of `(config, seed, round, device)` regardless of event
 //! interleaving.
+//!
+//! ## The multi-cell tier (DESIGN.md §15)
+//!
+//! With `[cells] count > 1` the single server queue becomes one
+//! [`ServerQueue`] **per cell site**: a device-round's server job
+//! routes to the serving cell of that `(device, round)` from the
+//! precomputed [`CellGrid`] association traces, so contention, batch
+//! fusion, and dispatched energy are tracked per cell.  Merges apply
+//! to the cell's own [`Aggregator`] *and* to the cloud aggregator — a
+//! star-to-cloud topology where the cloud sees exactly the legacy
+//! unordered merge stream.  With `count = 1` every job routes to queue
+//! 0 and the event timeline is bit-identical to the pre-cell engine
+//! (the correctness anchor, property-tested across every preset by
+//! `exp::verify::verify_single_cell_bit_identity`).
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use crate::coordinator::{Aggregator, RoundRecord, Scheduler};
+use crate::net::CellGrid;
 use crate::util::stats;
 
 use super::churn::ChurnTrace;
@@ -114,13 +129,39 @@ impl DesRecord {
     }
 }
 
+/// Per-cell observables of one DES run (DESIGN.md §15).  With
+/// `[cells] count = 1` the single entry carries exactly the legacy
+/// global figures.
+#[derive(Clone, Debug)]
+pub struct CellStats {
+    /// site position [m]
+    pub position_m: (f64, f64),
+    /// this cell's queue/occupancy statistics
+    pub server: ServerStats,
+    /// Eq.-11 energy dispatched on this cell's queue [J]; summing over
+    /// cells reproduces the global `energy_spent_j` exactly
+    pub energy_spent_j: f64,
+    /// handovers that landed on this cell (inbound re-associations)
+    pub handovers_in: u64,
+    /// whether this cell's own aggregation level converged
+    pub aggregator_consistent: bool,
+}
+
 /// Everything a DES run produces.
 #[derive(Clone, Debug)]
 pub struct DesOutcome {
     /// completed cells, sorted round-major like the synchronous engine
     pub records: Vec<DesRecord>,
     pub makespan_s: f64,
+    /// fleet-level queue statistics: the single cell's own stats when
+    /// `count = 1` (bit-identical to the pre-cell engine), otherwise
+    /// the across-cell merge (sums for counts/slot-seconds, served-
+    /// weighted mean wait, max peak depth, mean utilization)
     pub server: ServerStats,
+    /// per-cell queue/energy/handover breakdown (length = `[cells] count`)
+    pub per_cell: Vec<CellStats>,
+    /// total device→cell re-associations over the run's round horizon
+    pub handovers: u64,
     /// cells abandoned to churn or the straggler deadline
     pub dropped: u64,
     /// cells launched (== records + dropped)
@@ -130,9 +171,35 @@ pub struct DesOutcome {
     /// max `Aggregator::staleness` observed across merges
     pub peak_staleness: usize,
     /// Eq.-11 server energy booked at job dispatch [J] — counts work
-    /// later wasted on cancelled stragglers, which merged records omit
+    /// later wasted on cancelled stragglers, which merged records omit.
+    /// Always the exact sum of the per-cell accumulators.
     pub energy_spent_j: f64,
+    /// the cloud (inter-server) aggregation level — sees every merge
     pub aggregator: Aggregator,
+}
+
+/// Fleet-level [`ServerStats`] across per-cell queues.  The
+/// single-queue case returns the entry untouched so `count = 1`
+/// stays bit-identical to the pre-cell engine.
+fn merged_server_stats(per: &[ServerStats]) -> ServerStats {
+    if per.len() == 1 {
+        return per[0];
+    }
+    let served: u64 = per.iter().map(|s| s.served_jobs).sum();
+    let wait_sum: f64 = per.iter().map(|s| s.mean_wait_s * s.served_jobs as f64).sum();
+    ServerStats {
+        served_jobs: served,
+        abandoned_jobs: per.iter().map(|s| s.abandoned_jobs).sum(),
+        busy_slot_s: per.iter().map(|s| s.busy_slot_s).sum(),
+        mean_wait_s: if served == 0 { 0.0 } else { wait_sum / served as f64 },
+        peak_depth: per.iter().map(|s| s.peak_depth).max().unwrap_or(0),
+        // time-averages sum across queues: the fleet's mean total
+        // backlog is the sum of per-cell mean depths
+        mean_depth: per.iter().map(|s| s.mean_depth).sum(),
+        // equal per-cell capacity, so the fleet utilization is the
+        // plain mean of the per-cell ratios
+        utilization: per.iter().map(|s| s.utilization).sum::<f64>() / per.len() as f64,
+    }
 }
 
 /// Discrete-event engine over a [`Scheduler`]'s config and cost model.
@@ -193,14 +260,20 @@ struct Sim<'a> {
     sched: &'a Scheduler,
     des: DesConfig,
     q: EventQueue,
-    server: ServerQueue,
+    /// cell sites + precomputed device→cell association (read-only)
+    cells: CellGrid,
+    /// one compute queue per cell site (index = cell)
+    servers: Vec<ServerQueue>,
     devices: Vec<DeviceState>,
     /// round coordinate of each device's in-flight cell, if any — the
     /// single source of truth for cell liveness (also read by the
     /// server queue's cancellation filter without any per-event copy)
     actives: Vec<Option<usize>>,
     inflight: BTreeMap<(usize, usize), Inflight>,
+    /// the cloud aggregation level — receives every merge
     agg: Aggregator,
+    /// per-cell aggregation levels of the star-to-cloud topology
+    cell_aggs: Vec<Aggregator>,
     /// global merge version (counts applied merges)
     version: usize,
     records: Vec<DesRecord>,
@@ -219,9 +292,10 @@ struct Sim<'a> {
     arrivals: u64,
     peak_staleness: usize,
     makespan_s: f64,
-    /// Eq.-11 server energy booked when jobs dispatch — includes work
-    /// later wasted on cancelled stragglers, unlike the merged records
-    energy_spent_j: f64,
+    /// Eq.-11 server energy booked when jobs dispatch, per cell —
+    /// includes work later wasted on cancelled stragglers, unlike the
+    /// merged records.  The global figure is the exact sum.
+    energy_by_cell: Vec<f64>,
 }
 
 impl<'a> Sim<'a> {
@@ -236,15 +310,35 @@ impl<'a> Sim<'a> {
                 churn: ChurnTrace::new(churn_root, i, &sched.cfg.churn),
             })
             .collect();
+        // Association traces precompute over the configured round
+        // horizon; async personal rounds past it keep the horizon's
+        // last assignment (CellGrid::cell_of clamps).
+        let cells = CellGrid::new(
+            &sched.cfg.cells,
+            &sched.cfg.server,
+            sched.link.mobility(),
+            n,
+            rounds,
+            sched.link.channel.state.pathloss_exp(),
+        );
+        let servers = (0..cells.count())
+            .map(|_| ServerQueue::new(des.capacity, des.batch))
+            .collect();
+        let cell_aggs = (0..cells.count())
+            .map(|_| Aggregator::new(sched.cost_model.n_layers()))
+            .collect();
+        let energy_by_cell = vec![0.0; cells.count()];
         Sim {
             sched,
             des,
             q: EventQueue::new(),
-            server: ServerQueue::new(des.capacity, des.batch),
+            cells,
+            servers,
             devices,
             actives: vec![None; n],
             inflight: BTreeMap::new(),
             agg: Aggregator::new(sched.cost_model.n_layers()),
+            cell_aggs,
             version: 0,
             records: Vec::new(),
             rounds,
@@ -259,7 +353,7 @@ impl<'a> Sim<'a> {
             arrivals: 0,
             peak_staleness: 0,
             makespan_s: 0.0,
-            energy_spent_j: 0.0,
+            energy_by_cell,
         }
     }
 
@@ -292,7 +386,9 @@ impl<'a> Sim<'a> {
                 EventKind::Arrive { device } => self.on_arrive(device),
                 EventKind::Depart { device } => self.on_depart(device),
                 EventKind::UplinkDone { device, round } => self.on_uplink_done(device, round),
-                EventKind::ServerBatchDone { jobs } => self.on_server_batch_done(jobs),
+                EventKind::ServerBatchDone { cell, jobs } => {
+                    self.on_server_batch_done(cell, jobs)
+                }
                 EventKind::MergeReady { device, round } => self.on_merge_ready(device, round),
                 EventKind::Deadline { round } => self.on_deadline(round),
             }
@@ -310,23 +406,40 @@ impl<'a> Sim<'a> {
         // stats describe real waiters, not dead entries
         let now = self.q.now();
         let actives = &self.actives;
-        self.server
-            .flush_cancelled(now, |d, k| actives[d] == Some(k));
+        for server in &mut self.servers {
+            server.flush_cancelled(now, |d, k| actives[d] == Some(k));
+        }
 
         // round-major record stream, like the synchronous engine's
         self.records
             .sort_by_key(|r| (r.record.round, r.record.device_idx));
-        let server = self.server.stats(self.makespan_s);
+        let per_cell: Vec<CellStats> = (0..self.cells.count())
+            .map(|c| CellStats {
+                position_m: self.cells.position(c),
+                server: self.servers[c].stats(self.makespan_s),
+                energy_spent_j: self.energy_by_cell[c],
+                handovers_in: self.cells.handovers_into(c),
+                aggregator_consistent: self.cell_aggs[c].is_consistent(),
+            })
+            .collect();
+        let server = merged_server_stats(
+            &per_cell.iter().map(|c| c.server).collect::<Vec<_>>(),
+        );
         DesOutcome {
             records: self.records,
             makespan_s: self.makespan_s,
             server,
+            handovers: self.cells.total_handovers(),
+            per_cell,
             dropped: self.dropped,
             launched: self.launched,
             departures: self.departures,
             arrivals: self.arrivals,
             peak_staleness: self.peak_staleness,
-            energy_spent_j: self.energy_spent_j,
+            // the global figure is defined as the per-cell sum, so the
+            // two can never drift apart (and the single-cell sum is the
+            // lone accumulator, bit-identical to the pre-cell engine)
+            energy_spent_j: self.energy_by_cell.iter().sum(),
             aggregator: self.agg,
         }
     }
@@ -357,20 +470,21 @@ impl<'a> Sim<'a> {
         self.actives[device] == Some(round)
     }
 
-    fn schedule_batches(&mut self, batches: Vec<Batch>) {
+    fn schedule_batches(&mut self, cell: usize, batches: Vec<Batch>) {
         let now = self.q.now();
         for b in batches {
             for j in &b.jobs {
                 if let Some(inf) = self.inflight.get_mut(&(j.device, j.round)) {
                     inf.wait_s = now.secs() - j.enqueued_at.secs();
                     // Eq.-11 energy is committed once the job runs,
-                    // whether or not its merge survives
-                    self.energy_spent_j += inf.record.energy_j;
+                    // whether or not its merge survives — booked on the
+                    // cell whose queue dispatched it
+                    self.energy_by_cell[cell] += inf.record.energy_j;
                 }
             }
             let ids: Vec<(usize, usize)> = b.jobs.iter().map(|j| (j.device, j.round)).collect();
             self.q
-                .push_after(b.service_s, EventKind::ServerBatchDone { jobs: ids });
+                .push_after(b.service_s, EventKind::ServerBatchDone { cell, jobs: ids });
         }
     }
 
@@ -431,9 +545,16 @@ impl<'a> Sim<'a> {
         }
         if let Policy::SemiSync { deadline_factor } = self.des.policy {
             // deadline = factor × (median analytic round delay + the
-            // serialization the queue adds when P jobs share C slots)
+            // serialization the *most loaded cell's* queue adds when
+            // its participants share C slots).  With one cell the max
+            // load is the whole barrier — the legacy formula exactly.
+            let mut per_cell_load = vec![0usize; self.cells.count()];
+            for &i in &present {
+                per_cell_load[self.cells.cell_of(i, round)] += 1;
+            }
+            let max_load = per_cell_load.iter().copied().max().unwrap_or(0);
             let drain_batches =
-                (present.len() as f64 / self.server.capacity() as f64).ceil() - 1.0;
+                (max_load as f64 / self.servers[0].capacity() as f64).ceil() - 1.0;
             let deadline = deadline_factor
                 * (stats::median(&delays) + drain_batches.max(0.0) * stats::median(&services));
             self.q.push_after(deadline, EventKind::Deadline { round });
@@ -531,13 +652,16 @@ impl<'a> Sim<'a> {
             service_s: rec.server_compute_s,
             enqueued_at: self.q.now(),
         };
+        // route to the serving cell's queue — the precomputed
+        // association of this (device, round)
+        let cell = self.cells.cell_of(device, round);
         let now = self.q.now();
         let actives = &self.actives;
-        let batches = self.server.enqueue(job, now, |d, k| actives[d] == Some(k));
-        self.schedule_batches(batches);
+        let batches = self.servers[cell].enqueue(job, now, |d, k| actives[d] == Some(k));
+        self.schedule_batches(cell, batches);
     }
 
-    fn on_server_batch_done(&mut self, jobs: Vec<(usize, usize)>) {
+    fn on_server_batch_done(&mut self, cell: usize, jobs: Vec<(usize, usize)>) {
         let now = self.q.now();
         for (device, round) in jobs {
             if !self.is_active(device, round) {
@@ -548,8 +672,8 @@ impl<'a> Sim<'a> {
                 .push_after(inf.down_s + inf.bp_s, EventKind::MergeReady { device, round });
         }
         let actives = &self.actives;
-        let refills = self.server.on_batch_done(now, |d, k| actives[d] == Some(k));
-        self.schedule_batches(refills);
+        let refills = self.servers[cell].on_batch_done(now, |d, k| actives[d] == Some(k));
+        self.schedule_batches(cell, refills);
     }
 
     fn on_merge_ready(&mut self, device: usize, round: usize) {
@@ -568,6 +692,14 @@ impl<'a> Sim<'a> {
         let based = inf.base_version + 1;
         let cut = inf.record.cut;
         let bytes = inf.record.adapter_bytes;
+        // star-to-cloud: the serving cell's aggregation level absorbs
+        // the merge, then forwards it to the cloud level — both through
+        // the unordered (monotone) paths, so event order cannot matter
+        let cell = self.cells.cell_of(device, round);
+        let ca = &mut self.cell_aggs[cell];
+        ca.bytes_distributed += bytes;
+        ca.server_update_unordered(cut, based);
+        ca.merge_unordered(device, cut, based, bytes);
         self.agg.bytes_distributed += bytes;
         self.agg.server_update_unordered(cut, based);
         self.agg.merge_unordered(device, cut, based, bytes);
@@ -780,6 +912,89 @@ mod tests {
             assert_eq!(out.records.len(), again.records.len());
             assert_eq!(out.departures, again.departures);
             assert_eq!(out.makespan_s.to_bits(), again.makespan_s.to_bits());
+        }
+    }
+
+    #[test]
+    fn single_cell_per_cell_stats_mirror_the_globals() {
+        let out = engine_outcome(quick_cfg(3), Policy::Sync, 4);
+        assert_eq!(out.per_cell.len(), 1);
+        assert_eq!(out.handovers, 0);
+        let c = &out.per_cell[0];
+        assert_eq!(c.position_m, (0.0, 0.0));
+        assert_eq!(c.handovers_in, 0);
+        assert!(c.aggregator_consistent);
+        // one cell: the per-cell entry IS the global figure, bitwise
+        assert_eq!(c.energy_spent_j.to_bits(), out.energy_spent_j.to_bits());
+        assert_eq!(c.server.utilization.to_bits(), out.server.utilization.to_bits());
+        assert_eq!(c.server.served_jobs, out.server.served_jobs);
+        assert_eq!(c.server.mean_wait_s.to_bits(), out.server.mean_wait_s.to_bits());
+    }
+
+    #[test]
+    fn multi_cell_partitions_queues_and_conserves_totals() {
+        // paper fleet at 10–30 m + line cells at 0 and 40 m: the 20 m
+        // midline splits the static fleet 3/2, no handovers possible
+        let mut cfg = quick_cfg(3);
+        cfg.cells.count = 2;
+        cfg.cells.spacing_m = 40.0;
+        let out = engine_outcome(cfg.clone(), Policy::Sync, 4);
+        assert_eq!(out.per_cell.len(), 2);
+        for c in &out.per_cell {
+            assert!(c.server.served_jobs > 0, "both cells must see work");
+            assert!(c.aggregator_consistent);
+        }
+        assert_eq!(out.handovers, 0, "static fleet cannot hand over");
+        // per-cell totals reproduce the global figures exactly
+        let e: f64 = out.per_cell.iter().map(|c| c.energy_spent_j).sum();
+        assert_eq!(e.to_bits(), out.energy_spent_j.to_bits());
+        let served: u64 = out.per_cell.iter().map(|c| c.server.served_jobs).sum();
+        assert_eq!(served, out.server.served_jobs);
+        assert_eq!(served as usize, out.records.len());
+        assert!(out.aggregator.is_consistent());
+        // the radio plane is cell-independent: the record stream (cut
+        // decisions, delays, energies) matches the single-cell run bit
+        // for bit — only queueing is routed differently
+        let mut single = cfg;
+        single.cells.count = 1;
+        let base = engine_outcome(single, Policy::Sync, 4);
+        assert_eq!(base.records.len(), out.records.len());
+        for (a, b) in base.records.iter().zip(&out.records) {
+            assert_eq!(a.record.delay_s.to_bits(), b.record.delay_s.to_bits());
+            assert_eq!(a.record.energy_j.to_bits(), b.record.energy_j.to_bits());
+            assert_eq!(a.record.cut, b.record.cut);
+        }
+    }
+
+    #[test]
+    fn multi_cell_runs_are_deterministic_across_policies() {
+        let mut cfg = quick_cfg(3);
+        cfg.cells.count = 3;
+        cfg.cells.spacing_m = 15.0;
+        cfg.mobility.model = crate::config::MobilityModel::Waypoint;
+        cfg.mobility.speed_mps = 8.0;
+        cfg.mobility.round_s = 5.0;
+        cfg.mobility.range_m = 30.0;
+        for policy in [
+            Policy::Sync,
+            Policy::SemiSync { deadline_factor: 1.2 },
+            Policy::Async,
+        ] {
+            let a = engine_outcome(cfg.clone(), policy, 2);
+            let b = engine_outcome(cfg.clone(), policy, 2);
+            assert_eq!(a.handovers, b.handovers, "{}", policy.name());
+            assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits(), "{}", policy.name());
+            for (x, y) in a.per_cell.iter().zip(&b.per_cell) {
+                assert_eq!(x.energy_spent_j.to_bits(), y.energy_spent_j.to_bits());
+                assert_eq!(x.server.served_jobs, y.server.served_jobs);
+                assert_eq!(x.handovers_in, y.handovers_in);
+            }
+            // handover bookkeeping is internally consistent
+            let inbound: u64 = a.per_cell.iter().map(|c| c.handovers_in).sum();
+            assert_eq!(inbound, a.handovers, "{}", policy.name());
+            // and the energy ledger still sums exactly
+            let e: f64 = a.per_cell.iter().map(|c| c.energy_spent_j).sum();
+            assert_eq!(e.to_bits(), a.energy_spent_j.to_bits(), "{}", policy.name());
         }
     }
 

@@ -67,9 +67,9 @@ pub enum EventKind {
     /// Device-side FP + smashed/adapter uplink finished — the job is
     /// ready for the server compute queue.
     UplinkDone { device: usize, round: usize },
-    /// One server slot finished a fused batch of jobs; each job's
-    /// gradient downlink starts now.
-    ServerBatchDone { jobs: Vec<(usize, usize)> },
+    /// One server slot of `cell`'s queue finished a fused batch of
+    /// jobs; each job's gradient downlink starts now.
+    ServerBatchDone { cell: usize, jobs: Vec<(usize, usize)> },
     /// Gradient/adapter downlink + device BP finished — merge happens.
     MergeReady { device: usize, round: usize },
     /// Semi-sync: the straggler deadline for a global round.

@@ -1,17 +1,21 @@
-//! Discrete-event fleet engine (DESIGN.md §11): virtual clock,
-//! deterministic event queue, server compute queue, Poisson device
-//! churn, and sync / semi-sync / async aggregation policies — the
-//! subsystem that replaces the implicit round barrier with explicit
-//! timed events and makes the shared edge server a contended resource.
+//! Discrete-event fleet engine (DESIGN.md §11 and §15): virtual clock,
+//! deterministic event queue, per-cell server compute queues, Poisson
+//! device churn, and sync / semi-sync / async aggregation policies —
+//! the subsystem that replaces the implicit round barrier with
+//! explicit timed events and makes the edge servers contended
+//! resources.  With `[cells] count > 1` jobs route to the serving
+//! cell's queue and merges climb a star-to-cloud aggregation topology.
 
+pub mod cellsweep;
 pub mod churn;
 pub mod engine;
 pub mod event;
 pub mod server;
 pub mod sweep;
 
+pub use cellsweep::{CellPoint, CellSweep};
 pub use churn::ChurnTrace;
-pub use engine::{DesConfig, DesEngine, DesOutcome, DesRecord, Policy};
+pub use engine::{CellStats, DesConfig, DesEngine, DesOutcome, DesRecord, Policy};
 pub use event::{EventKind, EventQueue, SimTime};
 pub use server::{ServerQueue, ServerStats};
 pub use sweep::{sweep, DesPoint, DesSweep};

@@ -1,13 +1,22 @@
 //! [`ExperimentBuilder`]: the one way experiments are constructed —
-//! scenario preset or explicit config, strategy, channel/mobility
+//! scenario preset or explicit config, strategy, channel/mobility/cell
 //! overrides, seed, threads, rounds, engine choice — with typed
 //! [`BuildError`] validation instead of ad-hoc flag plumbing.
+//!
+//! Every sweep, figure, and CLI subcommand funnels through this module:
+//! parse knobs, call [`ExperimentBuilder::build`], stream the resulting
+//! [`Experiment`] into a [`MetricsSink`].  The builder owns *all*
+//! cross-knob validation (engine/mode compatibility, DES parameter
+//! sanity, the multi-cell tier requiring the event engine), so a
+//! successfully built `Experiment` can always run.
 
 use std::fmt;
 use std::sync::Arc;
 
 use crate::config::scenario::{self, Scenario};
-use crate::config::{ChannelState, ConfigError, ExpConfig, FadingModel, MobilitySpec};
+use crate::config::{
+    CellLayout, CellsSpec, ChannelState, ConfigError, ExpConfig, FadingModel, MobilitySpec,
+};
 use crate::coordinator::{RoundRecord, Scheduler, Strategy, TrainBackend};
 use crate::des::{DesConfig, DesEngine, Policy};
 use crate::sim::metrics::Summary;
@@ -44,6 +53,11 @@ pub enum BuildError {
     OracleOnEventEngine(&'static str),
     /// Degenerate DES knobs (capacity/batch/deadline factor).
     InvalidDes(String),
+    /// `[cells] count > 1` needs per-cell server queues, which only the
+    /// discrete-event engine models — the round engine's closed-form
+    /// timeline has no queueing tier to partition.  Carries the
+    /// offending cell count.
+    CellsOnRoundEngine(usize),
     /// Config-level validation failed (`ExpConfig::validate` et al.).
     Config(ConfigError),
 }
@@ -69,6 +83,11 @@ impl fmt::Display for BuildError {
                 "ExecMode::{mode} is a round-engine oracle — the event engine only runs ExecMode::Cached"
             ),
             BuildError::InvalidDes(msg) => write!(f, "invalid DES config: {msg}"),
+            BuildError::CellsOnRoundEngine(count) => write!(
+                f,
+                "a multi-cell tier ({count} cells) needs per-cell server queues — \
+                 run the event engine (.des(...)), the round engine is single-cell"
+            ),
             BuildError::Config(e) => write!(f, "{e}"),
         }
     }
@@ -89,17 +108,42 @@ enum Base {
 
 /// Builder for a validated, runnable [`Experiment`].
 ///
-/// ```no_run
+/// The doctest below actually runs (a 6-device, 2-round fleet is
+/// cheap): build from a preset, execute, read the outcome.
+///
+/// ```
 /// # fn main() -> anyhow::Result<()> {
 /// use edgesplit::exp::ExperimentBuilder;
 ///
 /// let exp = ExperimentBuilder::preset("dense-urban")
-///     .devices(100)
-///     .rounds(5)
+///     .devices(6)
+///     .rounds(2)
 ///     .seed(7)
 ///     .build()?;
 /// let (summary, outcome) = exp.run_summary()?;
-/// println!("{} cells, mean delay {:.2}s", outcome.cells, summary.delay.mean());
+/// assert_eq!(outcome.cells, 6 * 2);
+/// assert!(summary.delay.mean() > 0.0);
+/// # Ok(())
+/// # }
+/// ```
+///
+/// A multi-cell experiment needs the event engine (see
+/// [`BuildError::CellsOnRoundEngine`]):
+///
+/// ```
+/// # fn main() -> anyhow::Result<()> {
+/// use edgesplit::des::{DesConfig, Policy};
+/// use edgesplit::exp::ExperimentBuilder;
+///
+/// let exp = ExperimentBuilder::preset("dense-urban")
+///     .devices(6)
+///     .rounds(2)
+///     .cells(3)
+///     .des(DesConfig { policy: Policy::Sync, capacity: 2, batch: 1 })
+///     .build()?;
+/// let (_, outcome) = exp.run_summary()?;
+/// let des = outcome.des.expect("event engine ran");
+/// assert_eq!(des.per_cell.len(), 3);
 /// # Ok(())
 /// # }
 /// ```
@@ -115,6 +159,9 @@ pub struct ExperimentBuilder {
     engine: EngineChoice,
     channel_model: Option<FadingModel>,
     mobility: Option<MobilitySpec>,
+    cells_spec: Option<CellsSpec>,
+    cells_count: Option<usize>,
+    cells_layout: Option<CellLayout>,
 }
 
 impl ExperimentBuilder {
@@ -148,6 +195,9 @@ impl ExperimentBuilder {
             engine: EngineChoice::Round,
             channel_model: None,
             mobility: None,
+            cells_spec: None,
+            cells_count: None,
+            cells_layout: None,
         }
     }
 
@@ -224,6 +274,27 @@ impl ExperimentBuilder {
         self
     }
 
+    /// Full cell-tier override (`[cells]`): count, layout, spacing,
+    /// hysteresis.  `.cells(n)` / `.cell_layout(l)` applied afterwards
+    /// refine this spec.
+    pub fn cells_spec(mut self, spec: CellsSpec) -> Self {
+        self.cells_spec = Some(spec);
+        self
+    }
+
+    /// Number of edge-server cells.  Counts above 1 require the event
+    /// engine ([`BuildError::CellsOnRoundEngine`]).
+    pub fn cells(mut self, count: usize) -> Self {
+        self.cells_count = Some(count);
+        self
+    }
+
+    /// Cell placement layout (`line` / `ring` / `grid`).
+    pub fn cell_layout(mut self, layout: CellLayout) -> Self {
+        self.cells_layout = Some(layout);
+        self
+    }
+
     /// Validate and assemble the experiment.
     pub fn build(self) -> Result<Experiment, BuildError> {
         let (mut cfg, preset_state, preset_name) = match &self.base {
@@ -258,8 +329,20 @@ impl ExperimentBuilder {
         if let Some(mb) = self.mobility {
             cfg.mobility = mb;
         }
+        if let Some(spec) = self.cells_spec {
+            cfg.cells = spec;
+        }
+        if let Some(count) = self.cells_count {
+            cfg.cells.count = count;
+        }
+        if let Some(layout) = self.cells_layout {
+            cfg.cells.layout = layout;
+        }
         if cfg.workload.rounds == 0 {
             return Err(BuildError::ZeroRounds);
+        }
+        if cfg.cells.enabled() && matches!(self.engine, EngineChoice::Round) {
+            return Err(BuildError::CellsOnRoundEngine(cfg.cells.count));
         }
         if let EngineChoice::Des(des) = &self.engine {
             if self.mode != ExecMode::Cached {

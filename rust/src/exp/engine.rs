@@ -18,7 +18,7 @@
 use std::sync::Arc;
 
 use crate::coordinator::Scheduler;
-use crate::des::{DesEngine, ServerStats};
+use crate::des::{CellStats, DesEngine, ServerStats};
 
 use super::sink::MetricsSink;
 
@@ -61,9 +61,17 @@ pub struct DesRunStats {
     pub arrivals: u64,
     pub peak_staleness: usize,
     /// Eq.-11 server energy booked at job dispatch [J] — counts work
-    /// later wasted on cancelled stragglers, which merged records omit
+    /// later wasted on cancelled stragglers, which merged records omit.
+    /// Always the exact sum of the `per_cell` energy accumulators.
     pub energy_spent_j: f64,
+    /// consistency of the cloud-level aggregator (DESIGN.md §15)
     pub aggregator_consistent: bool,
+    /// per-cell queue/energy/handover observables — length
+    /// `cfg.cells.count` (a single entry for the default single cell)
+    pub per_cell: Vec<CellStats>,
+    /// total device→cell re-associations over the run (0 when
+    /// `cells.count == 1` or the fleet is static)
+    pub handovers: u64,
 }
 
 /// What a completed engine run reports back, beyond the record stream.
@@ -168,6 +176,8 @@ impl Engine for EventEngine {
                 peak_staleness: out.peak_staleness,
                 energy_spent_j: out.energy_spent_j,
                 aggregator_consistent: out.aggregator.is_consistent(),
+                per_cell: out.per_cell.clone(),
+                handovers: out.handovers,
             }),
         })
     }

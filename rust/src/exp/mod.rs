@@ -28,10 +28,14 @@
 //! * [`MetricsSink`] streams records as the engine produces them, so
 //!   sweeps aggregate [`crate::sim::Summary`]/percentiles online
 //!   instead of materializing every `RoundRecord` per grid point.
-//! * [`Report`] gives all five `BENCH_*.json` emitters one versioned
+//! * [`Report`] gives every `BENCH_*.json` emitter one versioned
 //!   envelope (`schema_version` + `meta`).
 //! * [`verify`] hosts the shared serial-vs-parallel (and DES-sync-vs-
-//!   round-engine) determinism gates both sweeps run.
+//!   round-engine) determinism gates all sweeps run, including the
+//!   single-cell bit-identity anchor the multi-cell tier is pinned to.
+//!
+//! Not sure which engine a new experiment should use?  See the
+//! decision table in `rust/src/exp/README.md`.
 
 pub mod builder;
 pub mod engine;

@@ -24,7 +24,8 @@ pub const SCHEMA_VERSION: u64 = 1;
 /// Envelope metadata common to every emitter.
 #[derive(Clone, Debug)]
 pub struct ReportMeta {
-    /// emitter kind: `fleet-sweep` | `des-sweep` | `card-bench`
+    /// emitter kind: `fleet-sweep` | `des-sweep` | `cell-sweep` |
+    /// `card-bench`
     pub kind: &'static str,
     /// scenario selector the run used (`all`, or a registry name)
     pub preset: String,

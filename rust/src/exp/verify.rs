@@ -108,3 +108,22 @@ pub fn verify_des_sync_matches_round_engine(
     let serial = sched.run_analytic()?;
     verify_bit_identical(&serial, &des_records)
 }
+
+/// The cell-tier anchor (DESIGN.md §15): a single-cell copy of `cfg`
+/// (churn zeroed, `[cells]` forced back to its one-cell default) run
+/// through the sync-policy discrete-event engine must reproduce the
+/// serial round engine bit for bit.  This is the gate `cell-sweep`
+/// runs per scenario, pinning the multi-cell machinery to the
+/// pre-cell engines: with one cell there is one queue, one aggregator
+/// level, and one energy accumulator, so every multi-cell code path
+/// must collapse to the original arithmetic.
+pub fn verify_single_cell_bit_identity(
+    cfg: &ExpConfig,
+    state: ChannelState,
+    capacity: usize,
+    batch: usize,
+) -> anyhow::Result<()> {
+    let mut cfg = cfg.clone();
+    cfg.cells = Default::default();
+    verify_des_sync_matches_round_engine(&cfg, state, capacity, batch)
+}

@@ -7,6 +7,7 @@
 //! edgesplit ablate --sweep w     # A1/A2 sweeps
 //! edgesplit fleet-sweep          # scenario × device-count grid (parallel)
 //! edgesplit des-sweep            # discrete-event engine: policy × scenario grid
+//! edgesplit cell-sweep           # multi-cell tier: cells × scenario grid + handover
 //! edgesplit card-bench           # decision kernel: legacy vs table vs cached
 //! edgesplit decide --state poor  # one-shot CARD decision per device
 //! edgesplit train --arch tiny    # REAL split fine-tuning (PJRT)
@@ -17,7 +18,7 @@ use anyhow::{anyhow, bail, Result};
 
 use edgesplit::cli::{render_help, Args, FlagSpec};
 use edgesplit::config::scenario::{self, Scenario};
-use edgesplit::config::{ChannelState, ExpConfig};
+use edgesplit::config::{CellLayout, ChannelState, ExpConfig};
 use edgesplit::coordinator::Strategy;
 use edgesplit::data::{Batcher, Corpus};
 use edgesplit::des::{self, Policy};
@@ -43,7 +44,7 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec { name: "scenario", value: Some("name|all"), help: "sweep scenario preset (see `show scenarios`)", default: Some("all") },
         FlagSpec { name: "counts", value: Some("N,N,..."), help: "sweep device counts", default: Some("10,100,1000,10000") },
         FlagSpec { name: "threads", value: Some("N"), help: "parallel participants per job (default: all cores; the persistent pool caps extra threads at core count — results are identical at any value)", default: None },
-        FlagSpec { name: "out", value: Some("file.json"), help: "sweep JSON output path (default: BENCH_fleet.json / BENCH_des.json)", default: None },
+        FlagSpec { name: "out", value: Some("file.json"), help: "sweep JSON output path (default: BENCH_fleet.json / BENCH_des.json / BENCH_cells.json)", default: None },
         FlagSpec { name: "gate-all", value: None, help: "fleet-sweep: run the serial determinism gate at every grid point (default: largest only)", default: None },
         FlagSpec { name: "devices", value: Some("N"), help: "card-bench fleet size", default: Some("10000") },
         FlagSpec { name: "check", value: Some("file.json"), help: "card-bench: fail if decision speedups drop >30% vs this committed baseline", default: None },
@@ -51,6 +52,10 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec { name: "capacity", value: Some("N"), help: "des-sweep server queue slots", default: Some("4") },
         FlagSpec { name: "batch", value: Some("N"), help: "des-sweep max jobs fused per server dispatch", default: Some("1") },
         FlagSpec { name: "deadline-factor", value: Some("f"), help: "des-sweep semi-sync straggler deadline factor", default: Some("1.5") },
+        FlagSpec { name: "cells", value: Some("N,N,..."), help: "cell-sweep edge-server cell counts", default: Some("1,4") },
+        FlagSpec { name: "cell-layout", value: Some("line|ring|grid"), help: "cell-sweep site placement layout", default: Some("line") },
+        FlagSpec { name: "spacing", value: Some("m"), help: "cell-sweep inter-site spacing [m]", default: Some("60") },
+        FlagSpec { name: "hysteresis", value: Some("dB"), help: "cell-sweep handover hysteresis margin [dB]", default: Some("3") },
         FlagSpec { name: "arch", value: Some("tiny|small"), help: "artifact config for real training", default: Some("tiny") },
         FlagSpec { name: "steps", value: Some("N"), help: "real-training steps (train)", default: Some("30") },
         FlagSpec { name: "lr", value: Some("f"), help: "LoRA learning rate (train)", default: Some("0.5") },
@@ -59,12 +64,13 @@ fn flag_specs() -> Vec<FlagSpec> {
     ]
 }
 
-const SUBCOMMANDS: [(&str, &str); 10] = [
+const SUBCOMMANDS: [(&str, &str); 11] = [
     ("fig3", "reproduce Fig. 3: cut layer + frequency decisions over rounds"),
     ("fig4", "reproduce Fig. 4: delay/energy vs baselines across channel states"),
     ("ablate", "A1/A2 sweeps: w, phi, bandwidth"),
     ("fleet-sweep", "scenario × device-count grid on the parallel round engine"),
     ("des-sweep", "discrete-event engine: policy × scenario × device-count grid"),
+    ("cell-sweep", "multi-cell tier: cell-count × scenario grid with handover + per-cell energy"),
     ("card-bench", "decision-kernel microbench: legacy vs cut-table vs cached (+pool)"),
     ("decide", "one-shot CARD decision for each device"),
     ("train", "REAL split fine-tuning over PJRT artifacts"),
@@ -123,7 +129,7 @@ fn run(argv: &[String]) -> Result<()> {
         // the sweep subcommands rebuild their configs from scenario
         // presets, which define their own [channel.process] — reject
         // the override there instead of silently ignoring it
-        if matches!(cmd, "fleet-sweep" | "des-sweep" | "card-bench") {
+        if matches!(cmd, "fleet-sweep" | "des-sweep" | "cell-sweep" | "card-bench") {
             bail!(
                 "--channel-model does not apply to {cmd}: its presets define the \
                  channel process — pick a preset instead (e.g. --scenario \
@@ -154,6 +160,7 @@ fn run(argv: &[String]) -> Result<()> {
             args.str_of("out").unwrap_or("BENCH_fleet.json"),
         ),
         "des-sweep" => cmd_des_sweep(&args, cfg.seed, rounds_flag),
+        "cell-sweep" => cmd_cell_sweep(&args, cfg.seed, rounds_flag),
         "card-bench" => cmd_card_bench(&args, cfg.seed, rounds_flag),
         "decide" => cmd_decide(&cfg, state),
         "train" => cmd_train(
@@ -307,6 +314,57 @@ fn cmd_des_sweep(args: &Args, seed: u64, rounds: Option<usize>) -> Result<()> {
     println!(
         "determinism gate: churn-free sync DES == serial round engine (bit-identical) at \
          n = {} for every scenario\n",
+        counts.iter().max().unwrap()
+    );
+    bench.report();
+
+    report.write(out)?;
+    println!("\nwrote {out} ({} sweep points)", sweep.points.len());
+    Ok(())
+}
+
+fn cmd_cell_sweep(args: &Args, seed: u64, rounds: Option<usize>) -> Result<()> {
+    let scenario_sel = args.str_of("scenario").unwrap_or("all");
+    let scenarios = parse_scenarios(scenario_sel)?;
+    let counts = parse_counts(args.str_of("counts").unwrap_or("10,100,1000,10000"))?;
+    let cell_counts = parse_counts(args.str_of("cells").unwrap_or("1,4"))
+        .map_err(|e| anyhow!("{e} (--cells takes a comma-separated cell-count list)"))?;
+    let layout_s = args.str_of("cell-layout").unwrap_or("line");
+    let layout = CellLayout::parse(layout_s)
+        .ok_or_else(|| anyhow!("bad --cell-layout '{layout_s}' (line|ring|grid)"))?;
+    let spacing_m = args.f64_of("spacing")?.unwrap_or(60.0);
+    let hysteresis_db = args.f64_of("hysteresis")?.unwrap_or(3.0);
+    let threads = args
+        .usize_of("threads")?
+        .unwrap_or_else(pool::default_parallelism);
+    let capacity = args.usize_of("capacity")?.unwrap_or(4);
+    let batch = args.usize_of("batch")?.unwrap_or(1);
+    let out = args.str_of("out").unwrap_or("BENCH_cells.json");
+
+    let mut bench = Bencher::new("cell-sweep");
+    let sweep = des::cellsweep::sweep(
+        &scenarios,
+        &counts,
+        &cell_counts,
+        layout,
+        spacing_m,
+        hysteresis_db,
+        rounds,
+        capacity,
+        batch,
+        threads,
+        seed,
+        &mut bench,
+    )?;
+    let report = sweep.report(scenario_sel, rounds);
+    println!("{}\n", report.render());
+    println!(
+        "cell tier: {layout_s} layout, {spacing_m} m spacing, {hysteresis_db} dB hysteresis; \
+         {capacity} queue slot(s) per cell, batch {batch}; aggregation policy: sync"
+    );
+    println!(
+        "determinism gate: single-cell sync DES == serial round engine (bit-identical) at \
+         n = {} for every scenario; per-cell energy sums reproduce the global figure exactly\n",
         counts.iter().max().unwrap()
     );
     bench.report();

@@ -1,0 +1,405 @@
+//! Multi-cell edge tier: a [`CellGrid`] of edge-server sites with
+//! per-round device→cell association and hysteresis-guarded handover
+//! (DESIGN.md §15).
+//!
+//! The paper assumes a single edge server at the origin.  `CellGrid`
+//! generalizes that to N sites laid out by a [`CellLayout`], with cell
+//! 0 always at the origin so `count = 1` reproduces the legacy
+//! topology exactly.  Association is by **strongest pathloss**: under
+//! the shared log-distance model (uniform exponent α across sites) the
+//! strongest site is simply the nearest one, and a device switches its
+//! serving cell only when the candidate's pathloss beats the serving
+//! cell's by at least `hysteresis_db` — the standard A3-style margin
+//! that keeps a device from ping-ponging while it straddles a
+//! boundary.
+//!
+//! Every assignment is **precomputed at construction** from the
+//! closed-form [`Mobility::position_at`] trajectories.  The serving
+//! cell of any `(device, round)` is therefore a pure function of
+//! `(config, seed)`, read-only during the run — the DES engine can
+//! route jobs to per-cell queues in any event order without
+//! re-deriving association state, preserving bit-level determinism.
+//!
+//! The radio plane is deliberately **not** moved to the serving cell:
+//! SNRs, rates, and per-record energy stay the scheduler's pure
+//! function of the origin-AP link, so a `count = 1` grid (and the
+//! record streams of any count) remain bit-identical to the pre-cell
+//! engines.  The cell tier governs *where server-side work queues*,
+//! not what the channel looks like; see DESIGN.md §15 for the shared
+//! radio-plane assumption.
+
+use crate::config::{CellLayout, CellsSpec, ServerSpec};
+
+use super::mobility::Mobility;
+
+/// Distance clamp for the pathloss comparison so a trajectory passing
+/// exactly through a site never produces log10(0) = -inf.
+const D_CLAMP_M: f64 = 1e-3;
+
+/// N edge-server sites + the precomputed per-round serving-cell
+/// assignment of every device.
+#[derive(Clone, Debug)]
+pub struct CellGrid {
+    positions: Vec<(f64, f64)>,
+    /// Per-cell compute spec.  Today every site clones the experiment's
+    /// single `ServerSpec`; the per-cell vector is the seam for
+    /// heterogeneous sites.
+    servers: Vec<ServerSpec>,
+    /// `assignments[device][round]` — serving cell index.
+    assignments: Vec<Vec<usize>>,
+    handovers_in: Vec<u64>,
+    total_handovers: u64,
+}
+
+impl CellGrid {
+    /// Build the grid and precompute every device's serving-cell trace
+    /// over `rounds` rounds.  `alpha` is the pathloss exponent shared
+    /// by all sites (from the experiment's channel state).
+    pub fn new(
+        spec: &CellsSpec,
+        server: &ServerSpec,
+        mobility: &Mobility,
+        devices: usize,
+        rounds: usize,
+        alpha: f64,
+    ) -> Self {
+        let positions = layout_positions(spec);
+        let n_cells = positions.len();
+        let rounds = rounds.max(1);
+        let mut handovers_in = vec![0u64; n_cells];
+        let mut total_handovers = 0u64;
+        let assignments = (0..devices)
+            .map(|dev| {
+                let mut trace = Vec::with_capacity(rounds);
+                let mut serving = nearest_cell(&positions, mobility.position_at(dev, 0));
+                trace.push(serving);
+                for round in 1..rounds {
+                    let pos = mobility.position_at(dev, round);
+                    let candidate = nearest_cell(&positions, pos);
+                    if candidate != serving {
+                        // A3-style margin: switch only when the
+                        // candidate's pathloss undercuts the serving
+                        // cell's by more than the hysteresis, i.e.
+                        // 10·α·log10(d_serving/d_candidate) > h
+                        let d_s = distance(positions[serving], pos).max(D_CLAMP_M);
+                        let d_c = distance(positions[candidate], pos).max(D_CLAMP_M);
+                        if 10.0 * alpha * (d_s / d_c).log10() > spec.hysteresis_db {
+                            serving = candidate;
+                            handovers_in[candidate] += 1;
+                            total_handovers += 1;
+                        }
+                    }
+                    trace.push(serving);
+                }
+                trace
+            })
+            .collect();
+        CellGrid {
+            positions,
+            servers: vec![server.clone(); n_cells],
+            assignments,
+            handovers_in,
+            total_handovers,
+        }
+    }
+
+    /// Number of cell sites.
+    pub fn count(&self) -> usize {
+        self.positions.len()
+    }
+
+    /// Site position [m] of `cell`.
+    pub fn position(&self, cell: usize) -> (f64, f64) {
+        self.positions[cell]
+    }
+
+    /// Compute spec of `cell`'s edge server.
+    pub fn server(&self, cell: usize) -> &ServerSpec {
+        &self.servers[cell]
+    }
+
+    /// Serving cell of `device` at `round` (rounds past the precomputed
+    /// horizon keep the last assignment).
+    pub fn cell_of(&self, device: usize, round: usize) -> usize {
+        let trace = &self.assignments[device];
+        trace[round.min(trace.len() - 1)]
+    }
+
+    /// Handovers that landed on `cell` (inbound re-associations).
+    pub fn handovers_into(&self, cell: usize) -> u64 {
+        self.handovers_in[cell]
+    }
+
+    /// Total handovers across the fleet and horizon.
+    pub fn total_handovers(&self) -> u64 {
+        self.total_handovers
+    }
+}
+
+/// Site coordinates for a layout — cell 0 is always at the origin.
+fn layout_positions(spec: &CellsSpec) -> Vec<(f64, f64)> {
+    let n = spec.count.max(1);
+    let s = spec.spacing_m;
+    match spec.layout {
+        CellLayout::Line => (0..n).map(|i| (i as f64 * s, 0.0)).collect(),
+        CellLayout::Ring => (0..n)
+            .map(|i| {
+                if i == 0 {
+                    (0.0, 0.0)
+                } else {
+                    let theta =
+                        2.0 * std::f64::consts::PI * (i - 1) as f64 / (n - 1) as f64;
+                    (s * theta.cos(), s * theta.sin())
+                }
+            })
+            .collect(),
+        CellLayout::Grid => {
+            let side = (n as f64).sqrt().ceil() as usize;
+            (0..n)
+                .map(|i| ((i % side) as f64 * s, (i / side) as f64 * s))
+                .collect()
+        }
+    }
+}
+
+fn distance(site: (f64, f64), pos: (f64, f64)) -> f64 {
+    let (dx, dy) = (pos.0 - site.0, pos.1 - site.1);
+    (dx * dx + dy * dy).sqrt()
+}
+
+/// Nearest site to `pos` (ties break to the lowest index).  With a
+/// uniform pathloss exponent, nearest == strongest pathloss.
+fn nearest_cell(positions: &[(f64, f64)], pos: (f64, f64)) -> usize {
+    let mut best = 0;
+    let mut best_d = f64::INFINITY;
+    for (i, &site) in positions.iter().enumerate() {
+        let d = distance(site, pos);
+        if d < best_d {
+            best_d = d;
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DeviceSpec, MobilityModel, MobilitySpec};
+
+    fn devices(dists: &[f64]) -> Vec<DeviceSpec> {
+        dists
+            .iter()
+            .enumerate()
+            .map(|(i, &d)| DeviceSpec {
+                name: format!("d{i}"),
+                platform: "p".into(),
+                freq_hz: 1e9,
+                cores: 1024.0,
+                flops_per_cycle: 2.0,
+                distance_m: d,
+            })
+            .collect()
+    }
+
+    fn mobility(model: MobilityModel, devs: &[DeviceSpec], root: u64) -> Mobility {
+        let spec = MobilitySpec {
+            model,
+            speed_mps: 3.0,
+            round_s: 10.0,
+            range_m: 80.0,
+            min_distance_m: 1.0,
+        };
+        Mobility::new(&spec, devs, root)
+    }
+
+    fn cells(count: usize, layout: CellLayout, hysteresis_db: f64) -> CellsSpec {
+        CellsSpec {
+            count,
+            layout,
+            spacing_m: 60.0,
+            hysteresis_db,
+        }
+    }
+
+    #[test]
+    fn single_cell_grid_is_trivial() {
+        let devs = devices(&[10.0, 45.0, 90.0]);
+        let m = mobility(MobilityModel::Waypoint, &devs, 5);
+        for layout in CellLayout::ALL {
+            let g = CellGrid::new(&cells(1, layout, 3.0), &ServerSpec::default(), &m, 3, 40, 4.0);
+            assert_eq!(g.count(), 1);
+            assert_eq!(g.position(0), (0.0, 0.0));
+            assert_eq!(g.total_handovers(), 0);
+            assert_eq!(g.handovers_into(0), 0);
+            for dev in 0..3 {
+                for round in 0..40 {
+                    assert_eq!(g.cell_of(dev, round), 0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn layouts_put_cell_zero_at_the_origin() {
+        let devs = devices(&[10.0]);
+        let m = mobility(MobilityModel::Static, &devs, 1);
+        let srv = ServerSpec::default();
+        // line: sites on the x-axis at the spacing pitch
+        let g = CellGrid::new(&cells(3, CellLayout::Line, 3.0), &srv, &m, 1, 1, 4.0);
+        assert_eq!(g.position(0), (0.0, 0.0));
+        assert_eq!(g.position(1), (60.0, 0.0));
+        assert_eq!(g.position(2), (120.0, 0.0));
+        // ring: cell 0 at the origin, the rest on the spacing radius
+        let g = CellGrid::new(&cells(5, CellLayout::Ring, 3.0), &srv, &m, 1, 1, 4.0);
+        assert_eq!(g.position(0), (0.0, 0.0));
+        for c in 1..5 {
+            let (x, y) = g.position(c);
+            assert!(((x * x + y * y).sqrt() - 60.0).abs() < 1e-9, "cell {c}");
+        }
+        // grid: row-major square lattice
+        let g = CellGrid::new(&cells(4, CellLayout::Grid, 3.0), &srv, &m, 1, 1, 4.0);
+        assert_eq!(g.position(0), (0.0, 0.0));
+        assert_eq!(g.position(1), (60.0, 0.0));
+        assert_eq!(g.position(2), (0.0, 60.0));
+        assert_eq!(g.position(3), (60.0, 60.0));
+        // every cell carries a server spec
+        assert_eq!(g.server(3).cores, srv.cores);
+    }
+
+    #[test]
+    fn static_fleet_associates_nearest_and_never_hands_over() {
+        // devices at 10, 50, 100 m on the x-axis; line cells at 0, 60, 120
+        let devs = devices(&[10.0, 50.0, 100.0]);
+        let m = mobility(MobilityModel::Static, &devs, 2);
+        let g = CellGrid::new(&cells(3, CellLayout::Line, 3.0), &ServerSpec::default(), &m, 3, 20, 4.0);
+        let expect = [0usize, 1, 2];
+        for (dev, &cell) in expect.iter().enumerate() {
+            for round in 0..20 {
+                assert_eq!(g.cell_of(dev, round), cell, "device {dev}");
+            }
+        }
+        assert_eq!(g.total_handovers(), 0);
+    }
+
+    #[test]
+    fn huge_hysteresis_pins_the_initial_cell() {
+        let devs = devices(&(0..16).map(|i| 15.0 + 7.0 * i as f64).collect::<Vec<_>>());
+        let m = mobility(MobilityModel::Waypoint, &devs, 9);
+        let g =
+            CellGrid::new(&cells(4, CellLayout::Line, 1e6), &ServerSpec::default(), &m, 16, 60, 4.0);
+        assert_eq!(g.total_handovers(), 0);
+        for dev in 0..16 {
+            let first = g.cell_of(dev, 0);
+            for round in 0..60 {
+                assert_eq!(g.cell_of(dev, round), first);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_hysteresis_tracks_the_nearest_cell_every_round() {
+        let devs = devices(&(0..12).map(|i| 10.0 + 11.0 * i as f64).collect::<Vec<_>>());
+        let m = mobility(MobilityModel::Linear, &devs, 13);
+        let spec = cells(4, CellLayout::Line, 0.0);
+        let g = CellGrid::new(&spec, &ServerSpec::default(), &m, 12, 50, 4.0);
+        let positions = layout_positions(&spec);
+        for dev in 0..12 {
+            for round in 0..50 {
+                let want = nearest_cell(&positions, m.position_at(dev, round));
+                // zero margin: any strictly-nearer candidate wins, so the
+                // serving cell is exactly the per-round nearest cell
+                assert_eq!(g.cell_of(dev, round), want, "device {dev} round {round}");
+            }
+        }
+    }
+
+    #[test]
+    fn handover_counts_match_the_trace_transitions() {
+        let devs = devices(&(0..20).map(|i| 12.0 + 9.0 * i as f64).collect::<Vec<_>>());
+        let m = mobility(MobilityModel::Waypoint, &devs, 21);
+        let g = CellGrid::new(&cells(3, CellLayout::Line, 2.0), &ServerSpec::default(), &m, 20, 80, 4.0);
+        let mut transitions = 0u64;
+        let mut inbound = vec![0u64; 3];
+        for dev in 0..20 {
+            for round in 1..80 {
+                let (prev, cur) = (g.cell_of(dev, round - 1), g.cell_of(dev, round));
+                if prev != cur {
+                    transitions += 1;
+                    inbound[cur] += 1;
+                }
+            }
+        }
+        assert_eq!(g.total_handovers(), transitions);
+        for c in 0..3 {
+            assert_eq!(g.handovers_into(c), inbound[c], "cell {c}");
+        }
+        let per_cell_sum: u64 = (0..3).map(|c| g.handovers_into(c)).sum();
+        assert_eq!(per_cell_sum, transitions);
+    }
+
+    #[test]
+    fn assignment_traces_are_pure() {
+        let devs = devices(&[20.0, 65.0, 110.0]);
+        let m = mobility(MobilityModel::Waypoint, &devs, 3);
+        let spec = cells(3, CellLayout::Line, 3.0);
+        let a = CellGrid::new(&spec, &ServerSpec::default(), &m, 3, 30, 4.0);
+        let b = CellGrid::new(&spec, &ServerSpec::default(), &m, 3, 30, 4.0);
+        for dev in 0..3 {
+            for round in 0..30 {
+                assert_eq!(a.cell_of(dev, round), b.cell_of(dev, round));
+            }
+        }
+        assert_eq!(a.total_handovers(), b.total_handovers());
+    }
+
+    #[test]
+    fn waypoint_boundary_crossing_reassociates_exactly_once() {
+        // Devices start just inside cell 0's hysteresis band (x₀ ≈ 29 m
+        // between line cells at 0 and 60 m, h = 3 dB, α = 4: switching
+        // back to cell 0 would need d₁ > d₀·10^{3/40} ≈ 1.19·d₀, which
+        // no point of an A→B ping-pong leg anchored at x₀ ≥ 28 can
+        // satisfy).  So a waypoint loop that ever clears the margin
+        // toward cell 1 hands over there exactly once and then *stays*
+        // with cell 1 even as the loop carries it back across the
+        // midline — the anti-ping-pong guarantee.  The seeded scan is
+        // pure, so the trajectories it finds are stable.
+        let spec = cells(2, CellLayout::Line, 3.0);
+        let positions = layout_positions(&spec);
+        let alpha = 4.0;
+        let rounds = 10;
+        let mut checked = 0;
+        for root in 0..64u64 {
+            let devs = devices(&[28.5, 29.0, 29.5, 30.0]);
+            let m = mobility(MobilityModel::Waypoint, &devs, root);
+            for dev in 0..devs.len() {
+                // margin signal: positive once cell 1's pathloss beats
+                // cell 0's by more than the hysteresis
+                let margin = |round: usize| {
+                    let pos = m.position_at(dev, round);
+                    let d0 = distance(positions[0], pos).max(D_CLAMP_M);
+                    let d1 = distance(positions[1], pos).max(D_CLAMP_M);
+                    10.0 * alpha * (d0 / d1).log10() - spec.hysteresis_db
+                };
+                if (1..rounds).any(|n| margin(n) > 0.0) {
+                    let g = CellGrid::new(
+                        &spec,
+                        &ServerSpec::default(),
+                        &m,
+                        devs.len(),
+                        rounds,
+                        alpha,
+                    );
+                    assert_eq!(g.cell_of(dev, 0), 0, "root {root} device {dev}");
+                    assert_eq!(g.cell_of(dev, rounds - 1), 1, "root {root} device {dev}");
+                    let transitions = (1..rounds)
+                        .filter(|&n| g.cell_of(dev, n) != g.cell_of(dev, n - 1))
+                        .count();
+                    assert_eq!(transitions, 1, "root {root} device {dev}");
+                    checked += 1;
+                }
+            }
+        }
+        assert!(checked >= 1, "scan found no boundary-crossing trajectory");
+    }
+}

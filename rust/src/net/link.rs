@@ -94,6 +94,12 @@ impl LinkProcess {
         self.mobility.distance_at(device, round)
     }
 
+    /// The fleet's mobility plan — the multi-cell tier ranks candidate
+    /// sites against its closed-form positions (DESIGN.md §15).
+    pub fn mobility(&self) -> &Mobility {
+        &self.mobility
+    }
+
     /// Mean (no-fading) SNRs for a cell, recomputed from the trajectory.
     fn means_at(&self, device: usize, round: usize) -> (f64, f64) {
         Self::means_of(&self.channel, self.mobility.distance_at(device, round))

@@ -111,6 +111,28 @@ impl Mobility {
         self.paths.iter().all(|t| matches!(t, Trajectory::Static { .. }))
     }
 
+    /// Cartesian position [m] of `device` at round `round` — the same
+    /// closed-form trajectory [`Mobility::distance_at`] takes the norm
+    /// of, exposed for the multi-cell tier's per-site pathloss ranking
+    /// (DESIGN.md §15).  Unlike `distance_at`, positions carry no
+    /// `min_distance_m` floor: the floor guards the *radio link* from
+    /// a singular pathloss at the serving AP, while association only
+    /// compares distances between candidate sites.
+    pub fn position_at(&self, device: usize, round: usize) -> (f64, f64) {
+        match self.paths[device] {
+            Trajectory::Static { d0 } => (d0, 0.0),
+            Trajectory::Linear { x0, vx, vy } => {
+                let t = round as f64;
+                (x0 + vx * t, vy * t)
+            }
+            Trajectory::Waypoint { ax, ay, bx, by, step } => {
+                let u = (step * round as f64).rem_euclid(2.0);
+                let frac = if u <= 1.0 { u } else { 2.0 - u };
+                (ax + frac * (bx - ax), ay + frac * (by - ay))
+            }
+        }
+    }
+
     /// Distance to the AP [m] of `device` at round `round` — a pure
     /// closed-form function of the plan and the round index.
     pub fn distance_at(&self, device: usize, round: usize) -> f64 {
@@ -253,6 +275,24 @@ mod tests {
             }
         }
         assert!(diverged, "seed must steer the waypoint draw");
+    }
+
+    #[test]
+    fn position_norm_matches_distance_up_to_the_floor() {
+        for model in [MobilityModel::Static, MobilityModel::Linear, MobilityModel::Waypoint] {
+            let devs = devices(&[12.0, 33.0]);
+            let m = Mobility::new(&spec(model), &devs, 4);
+            for i in 0..devs.len() {
+                for n in 0..60 {
+                    let (x, y) = m.position_at(i, n);
+                    let norm = (x * x + y * y).sqrt();
+                    let d = m.distance_at(i, n);
+                    // distance_at floors at min_distance_m; the raw
+                    // position does not
+                    assert!((d - norm.max(1.0)).abs() < 1e-9, "{model:?} dev {i} round {n}");
+                }
+            }
+        }
     }
 
     #[test]

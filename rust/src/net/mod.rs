@@ -2,8 +2,10 @@
 //! fading processes (i.i.d. Rayleigh / Gauss–Markov / Jakes) over
 //! static or mobile placements, AWGN, and the 3GPP TS 38.214 CQI ->
 //! spectral-efficiency mapping the paper cites for its rate model
-//! (§III-A2).  See DESIGN.md §6 and §13.
+//! (§III-A2), plus the multi-cell edge tier (device→cell association
+//! with hysteresis handover).  See DESIGN.md §6, §13, and §15.
 
+pub mod cells;
 pub mod channel;
 pub mod cqi;
 pub mod fading;
@@ -11,6 +13,7 @@ pub mod link;
 pub mod mobility;
 pub mod pathloss;
 
+pub use cells::CellGrid;
 pub use channel::{Channel, LinkRealization};
 pub use cqi::{cqi_for_snr, spectral_efficiency, CQI_TABLE};
 pub use fading::FadingProcess;

@@ -1,8 +1,9 @@
 //! Acceptance tests for the unified experiment API (DESIGN.md §14):
 //! builder validation, engine/sink behavior, DES-sync parity through
-//! the trait, and the shared report envelope.
+//! the trait, the multi-cell tier (§15), and the shared report
+//! envelope.
 
-use edgesplit::config::scenario;
+use edgesplit::config::{scenario, CellLayout, CellsSpec};
 use edgesplit::coordinator::Strategy;
 use edgesplit::des::{DesConfig, Policy};
 use edgesplit::exp::{
@@ -255,4 +256,101 @@ fn des_sync_gate_passes_even_on_churny_presets() {
         1,
     )
     .unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// the multi-cell tier (DESIGN.md §15)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn rejects_multi_cell_on_the_round_engine() {
+    let err = ExperimentBuilder::preset("dense-urban")
+        .devices(4)
+        .cells(3)
+        .build()
+        .unwrap_err();
+    assert!(matches!(err, BuildError::CellsOnRoundEngine(3)), "{err}");
+    assert!(err.to_string().contains("event engine"), "{err}");
+    // a single cell is the round engine's own topology — allowed
+    assert!(ExperimentBuilder::preset("dense-urban").devices(4).cells(1).build().is_ok());
+}
+
+#[test]
+fn single_cell_bit_identity_holds_on_every_preset() {
+    // the cell-tier anchor, property-tested across the full registry:
+    // forcing [cells] back to one cell, the sync DES timeline must
+    // reproduce the serial round engine bit for bit — even on presets
+    // whose TOML carries its own [cells] table (mobile-vehicular)
+    for sc in scenario::ALL {
+        let mut cfg = sc.config(8, 3).unwrap();
+        cfg.workload.rounds = 2;
+        if let Err(e) = verify::verify_single_cell_bit_identity(&cfg, sc.state, 2, 1) {
+            panic!("{}: {e:#}", sc.name);
+        }
+    }
+}
+
+#[test]
+fn single_cell_per_cell_energy_is_the_global_total() {
+    let run = |cells: usize| {
+        let exp = ExperimentBuilder::preset("dense-urban")
+            .devices(6)
+            .rounds(2)
+            .seed(5)
+            .cells(cells)
+            .des(DesConfig {
+                policy: Policy::Sync,
+                capacity: 2,
+                batch: 1,
+            })
+            .build()
+            .unwrap();
+        let mut sink = NullSink;
+        exp.run_into(&mut sink).unwrap().des.unwrap()
+    };
+    let single = run(1);
+    assert_eq!(single.per_cell.len(), 1);
+    assert_eq!(single.handovers, 0);
+    assert_eq!(
+        single.per_cell[0].energy_spent_j.to_bits(),
+        single.energy_spent_j.to_bits()
+    );
+    // splitting the same fleet across cells conserves the total: every
+    // job is dispatched exactly once, on exactly one queue
+    let multi = run(3);
+    assert_eq!(multi.per_cell.len(), 3);
+    let sum: f64 = multi.per_cell.iter().map(|c| c.energy_spent_j).sum();
+    assert_eq!(sum.to_bits(), multi.energy_spent_j.to_bits());
+    let served: u64 = multi.per_cell.iter().map(|c| c.server.served_jobs).sum();
+    assert_eq!(served, multi.server.served_jobs);
+}
+
+#[test]
+fn mobile_vehicular_fleet_hands_over_across_line_cells() {
+    // the acceptance scenario: waypoint vehicles shuttling 60 m at
+    // 12 m/s across 4 line cells 60 m apart must re-associate at least
+    // once over 8 rounds with the default 3 dB hysteresis
+    let exp = ExperimentBuilder::preset("mobile-vehicular")
+        .devices(24)
+        .seed(7)
+        .cells_spec(CellsSpec {
+            count: 4,
+            layout: CellLayout::Line,
+            spacing_m: 60.0,
+            hysteresis_db: 3.0,
+        })
+        .des(DesConfig {
+            policy: Policy::Sync,
+            capacity: 4,
+            batch: 1,
+        })
+        .build()
+        .unwrap();
+    let mut sink = NullSink;
+    let des = exp.run_into(&mut sink).unwrap().des.unwrap();
+    assert!(des.handovers >= 1, "expected at least one handover, got 0");
+    let inbound: u64 = des.per_cell.iter().map(|c| c.handovers_in).sum();
+    assert_eq!(inbound, des.handovers);
+    let sum: f64 = des.per_cell.iter().map(|c| c.energy_spent_j).sum();
+    assert_eq!(sum.to_bits(), des.energy_spent_j.to_bits());
 }
