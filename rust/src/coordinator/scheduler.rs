@@ -38,6 +38,7 @@ use crate::config::{ChannelState, ExpConfig};
 use crate::model::{DataSizeModel, DelayModel, EnergyModel, FlopModel, LlmArch};
 use crate::net::channel::LinkRealization;
 use crate::net::{Channel, LinkProcess};
+use crate::obs;
 use crate::util::pool;
 use crate::util::rng::{Rng, SplitMix64};
 
@@ -193,6 +194,18 @@ impl Scheduler {
         self.cache.hit_rate()
     }
 
+    /// Registry slot for the per-strategy decision-cache counters
+    /// (order matches `obs::registry::STRATEGY_KEYS`).
+    fn obs_slot(&self) -> usize {
+        match self.strategy {
+            Strategy::Card => 0,
+            Strategy::ServerOnly => 1,
+            Strategy::DeviceOnly => 2,
+            Strategy::StaticCut(_) => 3,
+            Strategy::RandomCut => 4,
+        }
+    }
+
     /// The RNG stream for one `(round, device)` cell — a pure function
     /// of the scheduler's seed/state and the cell coordinates.
     fn cell_rng(&self, round: usize, device_idx: usize) -> Rng {
@@ -221,22 +234,32 @@ impl Scheduler {
     /// order or in parallel and produce identical records.
     pub fn device_round(&self, round: usize, device_idx: usize) -> RoundRecord {
         let mut rng = self.cell_rng(round, device_idx);
+        // phase timers are opt-in (obs::registry::set_timers_enabled);
+        // counters/timers observe only — no RNG stream is touched
+        let t_link = obs::registry::timer_start();
         let link = self.realize_link(round, device_idx, &mut rng);
+        obs::registry::timer_record(&obs::metrics().sched_realize_link_s, t_link);
         let table = &self.tables[device_idx];
 
         // Stage 1: decision — memoized per (device, CQI pair)
         if self.strategy.cacheable() {
             let key = DecisionCache::key(link.snr_up_db, link.snr_down_db);
             if let Some((cut, f_hz, cost)) = self.cache.lookup(device_idx, key) {
+                obs::metrics().cache_hit[self.obs_slot()].inc(device_idx);
                 // hit fast path: decision + record decomposition fused
                 let cell = table.realize_cell(cut, f_hz, cost, link.rates);
                 return self.record_from_cell(round, device_idx, &link, cell);
             }
+            obs::metrics().cache_miss[self.obs_slot()].inc(device_idx);
+            let t_dec = obs::registry::timer_start();
             let d = self.strategy.decide_on(table, link.rates, &mut rng);
+            obs::registry::timer_record(&obs::metrics().sched_decide_s, t_dec);
             self.cache.store(device_idx, key, d.cut, d.freq_hz, d.cost);
             self.cell_record(round, device_idx, &link, d)
         } else {
+            let t_dec = obs::registry::timer_start();
             let d = self.strategy.decide_on(table, link.rates, &mut rng);
+            obs::registry::timer_record(&obs::metrics().sched_decide_s, t_dec);
             self.cell_record(round, device_idx, &link, d)
         }
     }

@@ -53,6 +53,7 @@ use std::sync::Arc;
 
 use crate::coordinator::{Aggregator, RoundRecord, Scheduler};
 use crate::net::CellGrid;
+use crate::obs::{self, trace};
 use crate::util::stats;
 
 use super::churn::ChurnTrace;
@@ -382,6 +383,10 @@ impl<'a> Sim<'a> {
                 "DES event budget exceeded — runaway simulation"
             );
             self.makespan_s = t.secs();
+            // observation only (DESIGN.md §16): the pop already
+            // happened, the queue depth is whatever remains
+            obs::metrics().des_events.inc(processed as usize);
+            obs::metrics().des_queue_depth.observe(self.q.len() as u64);
             match ev {
                 EventKind::Arrive { device } => self.on_arrive(device),
                 EventKind::Depart { device } => self.on_depart(device),
@@ -414,12 +419,16 @@ impl<'a> Sim<'a> {
         self.records
             .sort_by_key(|r| (r.record.round, r.record.device_idx));
         let per_cell: Vec<CellStats> = (0..self.cells.count())
-            .map(|c| CellStats {
-                position_m: self.cells.position(c),
-                server: self.servers[c].stats(self.makespan_s),
-                energy_spent_j: self.energy_by_cell[c],
-                handovers_in: self.cells.handovers_into(c),
-                aggregator_consistent: self.cell_aggs[c].is_consistent(),
+            .map(|c| {
+                let server = self.servers[c].stats(self.makespan_s);
+                obs::metrics().des_server_utilization.observe(server.utilization);
+                CellStats {
+                    position_m: self.cells.position(c),
+                    server,
+                    energy_spent_j: self.energy_by_cell[c],
+                    handovers_in: self.cells.handovers_into(c),
+                    aggregator_consistent: self.cell_aggs[c].is_consistent(),
+                }
             })
             .collect();
         let server = merged_server_stats(
@@ -480,7 +489,28 @@ impl<'a> Sim<'a> {
                     // whether or not its merge survives — booked on the
                     // cell whose queue dispatched it
                     self.energy_by_cell[cell] += inf.record.energy_j;
+                    obs::metrics().des_queue_wait_s.observe(inf.wait_s);
+                    if trace::active() && inf.wait_s > 0.0 {
+                        trace::sim_span(
+                            "queue_wait",
+                            "des.server",
+                            cell,
+                            j.enqueued_at.secs(),
+                            now.secs(),
+                            vec![("device", j.device as f64), ("round", j.round as f64)],
+                        );
+                    }
                 }
+            }
+            if trace::active() {
+                trace::sim_span(
+                    "batch_service",
+                    "des.server",
+                    cell,
+                    now.secs(),
+                    now.secs() + b.service_s,
+                    vec![("jobs", b.jobs.len() as f64)],
+                );
             }
             let ids: Vec<(usize, usize)> = b.jobs.iter().map(|j| (j.device, j.round)).collect();
             self.q
@@ -492,6 +522,21 @@ impl<'a> Sim<'a> {
         let timing = self.timing(&rec);
         self.actives[device] = Some(round);
         self.launched += 1;
+        if self.cells.count() > 1 && round > 0 {
+            let serving = self.cells.cell_of(device, round);
+            if serving != self.cells.cell_of(device, round - 1) {
+                obs::metrics().des_handovers.inc(device);
+                if trace::active() {
+                    trace::sim_instant(
+                        "handover",
+                        "des.cells",
+                        serving,
+                        self.q.now().secs(),
+                        vec![("device", device as f64), ("round", round as f64)],
+                    );
+                }
+            }
+        }
         self.inflight.insert(
             (device, round),
             Inflight {
@@ -585,6 +630,16 @@ impl<'a> Sim<'a> {
         if let Some(round) = self.actives[device].take() {
             self.inflight.remove(&(device, round));
             self.dropped += 1;
+            obs::metrics().des_drops_churn.inc(device);
+            if trace::active() {
+                trace::sim_instant(
+                    "churn_cancel",
+                    "des.churn",
+                    self.cells.cell_of(device, round),
+                    self.q.now().secs(),
+                    vec![("device", device as f64), ("round", round as f64)],
+                );
+            }
             match self.des.policy {
                 Policy::Sync | Policy::SemiSync { .. } => self.resolve_barrier_slot(),
                 Policy::Async => {
@@ -713,7 +768,22 @@ impl<'a> Sim<'a> {
             .max(self.agg.staleness(v))
             .max(staleness);
 
+        obs::metrics().des_merges.inc(device);
         let now_s = self.q.now().secs();
+        if trace::active() {
+            trace::sim_span(
+                "device_round",
+                "des.round",
+                cell,
+                inf.start_s,
+                now_s,
+                vec![
+                    ("device", device as f64),
+                    ("round", round as f64),
+                    ("staleness", staleness as f64),
+                ],
+            );
+        }
         self.records.push(DesRecord {
             start_s: inf.start_s,
             finish_s: now_s,
@@ -740,6 +810,16 @@ impl<'a> Sim<'a> {
                 self.inflight.remove(&(device, round));
                 self.dropped += 1;
                 self.barrier_outstanding -= 1;
+                obs::metrics().des_drops_straggler.inc(device);
+                if trace::active() {
+                    trace::sim_instant(
+                        "straggler_drop",
+                        "des.deadline",
+                        self.cells.cell_of(device, round),
+                        self.q.now().secs(),
+                        vec![("device", device as f64), ("round", round as f64)],
+                    );
+                }
             }
         }
         debug_assert_eq!(self.barrier_outstanding, 0);

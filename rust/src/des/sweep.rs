@@ -268,6 +268,7 @@ impl DesSweep {
                 "p50 rtt",
                 "p95 rtt",
                 "p99 rtt",
+                "p99.9 rtt",
                 "util",
                 "peak q",
                 "energy",
@@ -284,6 +285,7 @@ impl DesSweep {
                 fmt_secs(p.round_latency.p50),
                 fmt_secs(p.round_latency.p95),
                 fmt_secs(p.round_latency.p99),
+                fmt_secs(p.round_latency.p999),
                 format!("{:.0}%", 100.0 * p.server_utilization),
                 p.peak_queue_depth.to_string(),
                 fmt_joules(p.energy_j),
@@ -341,6 +343,7 @@ fn point_json(p: &DesPoint) -> Json {
         ("p50_round_s", Json::Num(p.round_latency.p50)),
         ("p95_round_s", Json::Num(p.round_latency.p95)),
         ("p99_round_s", Json::Num(p.round_latency.p99)),
+        ("p999_round_s", Json::Num(p.round_latency.p999)),
         ("mean_wait_s", Json::Num(p.mean_wait_s)),
         ("server_utilization", Json::Num(p.server_utilization)),
         ("peak_queue_depth", Json::Num(p.peak_queue_depth as f64)),
@@ -390,6 +393,7 @@ mod tests {
         assert!(js.contains("des-sweep/v1"));
         assert!(js.contains("\"policy\":\"async\""));
         assert!(js.contains("server_utilization"));
+        assert!(js.contains("p999_round_s"));
         assert!(Json::parse(&js).is_ok());
     }
 
@@ -483,5 +487,6 @@ mod tests {
         assert!(out.contains("sparse-rural"));
         assert!(out.contains("async"));
         assert!(out.contains("p95 rtt"));
+        assert!(out.contains("p99.9 rtt"));
     }
 }

@@ -162,6 +162,7 @@ pub struct ExperimentBuilder {
     cells_spec: Option<CellsSpec>,
     cells_count: Option<usize>,
     cells_layout: Option<CellLayout>,
+    trace: Option<String>,
 }
 
 impl ExperimentBuilder {
@@ -198,6 +199,7 @@ impl ExperimentBuilder {
             cells_spec: None,
             cells_count: None,
             cells_layout: None,
+            trace: None,
         }
     }
 
@@ -295,6 +297,15 @@ impl ExperimentBuilder {
         self
     }
 
+    /// Record a Chrome `trace_event` timeline of the run and write it
+    /// to `path` when the run completes (the `--trace <path>` CLI flag;
+    /// DESIGN.md §16).  Zero-perturbation: records stay bitwise
+    /// identical with tracing on or off.
+    pub fn trace(mut self, path: &str) -> Self {
+        self.trace = Some(path.to_string());
+        self
+    }
+
     /// Validate and assemble the experiment.
     pub fn build(self) -> Result<Experiment, BuildError> {
         let (mut cfg, preset_state, preset_name) = match &self.base {
@@ -387,6 +398,7 @@ impl ExperimentBuilder {
             mode: self.mode,
             threads,
             preset: preset_name,
+            trace: self.trace,
         })
     }
 }
@@ -400,6 +412,8 @@ pub struct Experiment {
     mode: ExecMode,
     threads: usize,
     preset: Option<String>,
+    /// Chrome-trace output path, when timeline recording was requested.
+    trace: Option<String>,
 }
 
 impl fmt::Debug for Experiment {
@@ -442,9 +456,19 @@ impl Experiment {
         self.is_event
     }
 
-    /// Stream the run into `sink` — the generic entry point.
+    /// Stream the run into `sink` — the generic entry point.  When the
+    /// builder asked for a trace, recording starts here and the
+    /// timeline is written once the engine returns.
     pub fn run_into(&self, sink: &mut dyn MetricsSink) -> anyhow::Result<RunOutcome> {
-        self.engine.run(sink)
+        match &self.trace {
+            None => self.engine.run(sink),
+            Some(path) => {
+                crate::obs::trace::enable();
+                let out = self.engine.run(sink)?;
+                crate::obs::trace::write_to(path)?;
+                Ok(out)
+            }
+        }
     }
 
     /// Run and materialize every record (figures, bit-compat gates).

@@ -19,6 +19,7 @@ use std::sync::Arc;
 
 use crate::coordinator::Scheduler;
 use crate::des::{CellStats, DesEngine, ServerStats};
+use crate::obs::trace;
 
 use super::sink::MetricsSink;
 
@@ -113,7 +114,20 @@ impl Engine for RoundEngine {
         let rounds = self.sched.cfg.workload.rounds;
         let devices = self.sched.cfg.devices.len();
         let mut cells = 0usize;
+        // wall-time phase spans (DESIGN.md §16) — one relaxed load when
+        // tracing is off, never any effect on the record stream.  The
+        // trace tid is this thread's pool slot: sweeps fan experiments
+        // out on workers, and per-slot tracks keep concurrent spans
+        // properly nested (one engine at a time per worker).
+        let traced = trace::active();
+        let tid = crate::obs::registry::worker_slot() as u64;
+        if traced {
+            trace::wall_begin("round_engine.run", "engine", tid);
+        }
         for round in 0..rounds {
+            if traced {
+                trace::wall_begin("round", "engine", tid);
+            }
             match self.mode {
                 ExecMode::Cached if self.threads > 1 => {
                     // one round in flight at a time: bounded memory,
@@ -142,6 +156,12 @@ impl Engine for RoundEngine {
                     }
                 }
             }
+            if traced {
+                trace::wall_end("round", "engine", tid);
+            }
+        }
+        if traced {
+            trace::wall_end("round_engine.run", "engine", tid);
         }
         Ok(RunOutcome { cells, des: None })
     }
@@ -160,9 +180,21 @@ impl EventEngine {
 
 impl Engine for EventEngine {
     fn run(&self, sink: &mut dyn MetricsSink) -> anyhow::Result<RunOutcome> {
+        let traced = trace::active();
+        let tid = crate::obs::registry::worker_slot() as u64;
+        if traced {
+            trace::wall_begin("event_engine.run", "engine", tid);
+        }
         let out = self.des.run();
+        if traced {
+            trace::wall_end("event_engine.run", "engine", tid);
+            trace::wall_begin("event_engine.drain", "engine", tid);
+        }
         for rec in &out.records {
             sink.on_des_record(rec);
+        }
+        if traced {
+            trace::wall_end("event_engine.drain", "engine", tid);
         }
         Ok(RunOutcome {
             cells: out.records.len(),

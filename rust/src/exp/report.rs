@@ -59,7 +59,18 @@ impl Report {
 
     /// The versioned envelope around the emitter payload.  Consumes
     /// the report: the payload is moved into the envelope, not cloned.
+    ///
+    /// Every envelope carries the process-wide telemetry snapshot under
+    /// `data.telemetry` (DESIGN.md §16) — injected here, the single
+    /// choke point, so all emitters get it without knowing about it.
     pub fn to_json(self) -> Json {
+        let mut body = self.body;
+        if let Json::Obj(ref mut map) = body {
+            map.insert(
+                "telemetry".to_string(),
+                crate::obs::Snapshot::collect().to_json(),
+            );
+        }
         json::obj(vec![
             ("schema_version", Json::Num(SCHEMA_VERSION as f64)),
             ("kind", Json::Str(self.meta.kind.to_string())),
@@ -80,7 +91,7 @@ impl Report {
                     ),
                 ]),
             ),
-            ("data", self.body),
+            ("data", body),
         ])
     }
 
@@ -123,6 +134,17 @@ mod tests {
         );
         assert_eq!(j.at(&["meta", "rounds"]).and_then(Json::as_f64), Some(2.0));
         assert!(j.at(&["data", "points"]).is_some());
+    }
+
+    #[test]
+    fn envelope_injects_the_telemetry_snapshot() {
+        let j = report().to_json();
+        assert_eq!(
+            j.at(&["data", "telemetry", "schema"]).and_then(Json::as_str),
+            Some("edgesplit/telemetry/v1")
+        );
+        assert!(j.at(&["data", "telemetry", "counters"]).is_some());
+        assert!(j.at(&["data", "telemetry", "pool"]).is_some());
     }
 
     #[test]

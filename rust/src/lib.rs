@@ -21,6 +21,9 @@
 //! Experiments are constructed and reported through the unified
 //! [`exp`] API: `exp::ExperimentBuilder` → `exp::Engine` (round or
 //! discrete-event) → `exp::MetricsSink` → `exp::Report` (DESIGN.md §14).
+//! Every engine is instrumented through the [`obs`] telemetry layer
+//! (metrics registry + Chrome-trace emitter, DESIGN.md §16); reports
+//! carry an `obs::Snapshot` under `data.telemetry`.
 //!
 //! See `DESIGN.md` (repo root) for the architecture and
 //! `EXPERIMENTS.md` for the paper-vs-measured figures; `README.md`
@@ -35,6 +38,7 @@ pub mod devices;
 pub mod exp;
 pub mod model;
 pub mod net;
+pub mod obs;
 pub mod runtime;
 pub mod sim;
 pub mod util;

@@ -23,7 +23,9 @@ use edgesplit::coordinator::Strategy;
 use edgesplit::data::{Batcher, Corpus};
 use edgesplit::des::{self, Policy};
 use edgesplit::exp::ExperimentBuilder;
+use edgesplit::obs;
 use edgesplit::runtime::{artifact_dir, ArtifactStore, SplitExecutor};
+use edgesplit::util::json::Json;
 use edgesplit::sim::{ablate, cardbench, fig3, fig4, fleet};
 use edgesplit::util::benchkit::Bencher;
 use edgesplit::util::logging;
@@ -59,12 +61,14 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec { name: "arch", value: Some("tiny|small"), help: "artifact config for real training", default: Some("tiny") },
         FlagSpec { name: "steps", value: Some("N"), help: "real-training steps (train)", default: Some("30") },
         FlagSpec { name: "lr", value: Some("f"), help: "LoRA learning rate (train)", default: Some("0.5") },
+        FlagSpec { name: "trace", value: Some("file.json"), help: "record a Chrome trace_event timeline of the run (wall-time engine phases + simulated-time DES activity) and write it here; records stay bit-identical", default: None },
+        FlagSpec { name: "in", value: Some("file.json"), help: "obs-report: BENCH envelope whose data.telemetry block to render (default: a live run)", default: None },
         FlagSpec { name: "log-level", value: Some("error..trace"), help: "stderr verbosity", default: None },
         FlagSpec { name: "help", value: None, help: "print help", default: None },
     ]
 }
 
-const SUBCOMMANDS: [(&str, &str); 11] = [
+const SUBCOMMANDS: [(&str, &str); 12] = [
     ("fig3", "reproduce Fig. 3: cut layer + frequency decisions over rounds"),
     ("fig4", "reproduce Fig. 4: delay/energy vs baselines across channel states"),
     ("ablate", "A1/A2 sweeps: w, phi, bandwidth"),
@@ -72,6 +76,7 @@ const SUBCOMMANDS: [(&str, &str); 11] = [
     ("des-sweep", "discrete-event engine: policy × scenario × device-count grid"),
     ("cell-sweep", "multi-cell tier: cell-count × scenario grid with handover + per-cell energy"),
     ("card-bench", "decision-kernel microbench: legacy vs cut-table vs cached (+pool)"),
+    ("obs-report", "render the telemetry registry (live run or a BENCH envelope's data.telemetry)"),
     ("decide", "one-shot CARD decision for each device"),
     ("train", "REAL split fine-tuning over PJRT artifacts"),
     ("show", "print Table I (devices) / Table II (params) / arch / scenarios"),
@@ -146,7 +151,14 @@ fn run(argv: &[String]) -> Result<()> {
     let strategy = Strategy::parse(args.str_of("strategy").unwrap_or("card"))
         .ok_or_else(|| anyhow!("bad --strategy"))?;
 
-    match cmd {
+    // --trace works on every subcommand: recording spans both engines,
+    // and the timeline is written once the command finishes (DESIGN.md
+    // §16).  Enabling it never perturbs a record.
+    let trace_path = args.str_of("trace");
+    if trace_path.is_some() {
+        obs::trace::enable();
+    }
+    let result = match cmd {
         "fig3" => cmd_fig3(&cfg, state),
         "fig4" => cmd_fig4(&cfg),
         "ablate" => cmd_ablate(&cfg, args.str_of("sweep").unwrap_or("w")),
@@ -171,9 +183,17 @@ fn run(argv: &[String]) -> Result<()> {
             args.usize_of("steps")?.unwrap_or(30),
             args.f64_of("lr")?.unwrap_or(0.5) as f32,
         ),
+        "obs-report" => cmd_obs_report(&args, &cfg, state),
         "show" => cmd_show(&cfg, args.positional().get(1).map(|s| s.as_str())),
         other => bail!("unknown command '{other}' (try `edgesplit help`)"),
+    };
+    result?;
+    if let Some(path) = trace_path {
+        let events = obs::trace::len();
+        obs::trace::write_to(path)?;
+        println!("wrote trace {path} ({events} events)");
     }
+    Ok(())
 }
 
 fn cmd_fig3(cfg: &ExpConfig, state: ChannelState) -> Result<()> {
@@ -411,6 +431,90 @@ fn cmd_card_bench(args: &Args, seed: u64, rounds: Option<usize>) -> Result<()> {
         println!("regression guard: speedups within 30% of {baseline_path}");
     }
     Ok(())
+}
+
+fn cmd_obs_report(args: &Args, cfg: &ExpConfig, state: ChannelState) -> Result<()> {
+    if let Some(path) = args.str_of("in") {
+        // offline mode: render the telemetry block a BENCH envelope carries
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading {path}: {e}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("parsing {path}: {e}"))?;
+        let tel = j.at(&["data", "telemetry"]).ok_or_else(|| {
+            anyhow!("{path} carries no data.telemetry block — re-emit it on this build")
+        })?;
+        print!("{}", render_telemetry_json(tel));
+        return Ok(());
+    }
+    // live mode: run one experiment with the phase timers on, then dump
+    // the registry
+    obs::registry::set_timers_enabled(true);
+    let experiment = ExperimentBuilder::from_config(cfg.clone())
+        .channel_state(state)
+        .build()?;
+    let (_, outcome) = experiment.run_summary()?;
+    println!(
+        "live run: {} cells, {} thread(s), preset paper config\n",
+        outcome.cells,
+        experiment.threads()
+    );
+    print!("{}", obs::Snapshot::collect().render());
+    Ok(())
+}
+
+/// Render a `data.telemetry` JSON block (`edgesplit/telemetry/v1`) as
+/// the same tables [`obs::Snapshot::render`] prints for a live registry.
+fn render_telemetry_json(tel: &Json) -> String {
+    let mut out = String::new();
+    if let Some(m) = tel.get("counters").and_then(Json::as_obj) {
+        let mut t = Table::new("telemetry — counters", &["key", "value"]);
+        for (k, v) in m {
+            t.row(vec![k.clone(), format!("{}", v.as_f64().unwrap_or(0.0) as u64)]);
+        }
+        out.push_str(&t.render());
+        out.push('\n');
+    }
+    if let Some(m) = tel.get("gauges").and_then(Json::as_obj) {
+        let mut t = Table::new("telemetry — gauges", &["key", "last", "max"]);
+        for (k, v) in m {
+            let last = v.get("last").and_then(Json::as_f64).unwrap_or(0.0);
+            let max = v.get("max").and_then(Json::as_f64).unwrap_or(0.0);
+            t.row(vec![k.clone(), format!("{}", last as u64), format!("{}", max as u64)]);
+        }
+        out.push_str(&t.render());
+        out.push('\n');
+    }
+    if let Some(m) = tel.get("histograms").and_then(Json::as_obj) {
+        let mut t = Table::new("telemetry — histograms", &["key", "count", "sum", "mean"]);
+        for (k, v) in m {
+            let count = v.get("count").and_then(Json::as_f64).unwrap_or(0.0);
+            let sum = v.get("sum").and_then(Json::as_f64).unwrap_or(0.0);
+            let mean = if count > 0.0 { sum / count } else { 0.0 };
+            t.row(vec![
+                k.clone(),
+                format!("{}", count as u64),
+                format!("{sum:.6}"),
+                format!("{mean:.6}"),
+            ]);
+        }
+        out.push_str(&t.render());
+        out.push('\n');
+    }
+    if let Some(pool) = tel.get("pool") {
+        let mut t = Table::new("telemetry — worker pool", &["slot", "tasks claimed"]);
+        if let Some(per) = pool
+            .get("tasks_claimed_per_worker")
+            .and_then(Json::as_arr)
+        {
+            for (i, v) in per.iter().enumerate() {
+                let who = if i == 0 { "caller".to_string() } else { format!("worker {}", i - 1) };
+                t.row(vec![who, format!("{}", v.as_f64().unwrap_or(0.0) as u64)]);
+            }
+        }
+        let parks = pool.get("idle_parks").and_then(Json::as_f64).unwrap_or(0.0);
+        t.row(vec!["idle parks".into(), format!("{}", parks as u64)]);
+        out.push_str(&t.render());
+    }
+    out
 }
 
 fn cmd_decide(cfg: &ExpConfig, state: ChannelState) -> Result<()> {

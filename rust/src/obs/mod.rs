@@ -1,0 +1,28 @@
+//! Observability layer (DESIGN.md §16): a process-wide, lock-free
+//! **metrics registry**, a Chrome-`trace_event` **trace emitter**, and
+//! the **telemetry snapshot** every `BENCH_*.json` report envelope
+//! carries under `data.telemetry`.
+//!
+//! ```text
+//! instrumented sites                registry (always on)   snapshot
+//!  scheduler cache hit/miss   ──►   Counter  ─┐
+//!  pool claims / idle parks   ──►   PerWorker ├─► Snapshot::collect()
+//!  DES queue depth / waits    ──►   Gauge     │      └─► Report data.telemetry
+//!  phase timers (opt-in)      ──►   Histogram ┘          └─► `obs-report`
+//!
+//!  DES virtual-time activity  ──►   trace (opt-in, --trace <path>)
+//!  engine wall-time phases    ──►     └─► Chrome trace_event JSON
+//! ```
+//!
+//! **Zero-perturbation contract.**  No instrumentation site touches an
+//! RNG stream, reorders work, or feeds back into a decision — records
+//! are bitwise identical with telemetry/tracing on or off, which the
+//! `exp::verify` gates plus `rust/tests/obs_telemetry.rs` enforce
+//! across both engines, every preset, and serial vs. pooled threads.
+
+pub mod registry;
+pub mod snapshot;
+pub mod trace;
+
+pub use registry::{metrics, set_enabled, timer_record, timer_start, Counter, Gauge, Histogram};
+pub use snapshot::{HistogramSnapshot, Snapshot};

@@ -1,0 +1,464 @@
+//! Process-wide, lock-free metrics registry.
+//!
+//! Three primitive types, all wait-free on the hot path:
+//!
+//! * [`Counter`] — monotonic, sharded over cache-line-padded atomic
+//!   words exactly like the decision cache's hit/miss counters
+//!   (DESIGN.md §12): the caller passes a shard *hint* (device index,
+//!   worker index) so concurrent increments from the pool land on
+//!   different cache lines; [`Counter::value`] sums the shards.
+//! * [`Gauge`] — last-observed + running-max of a `u64` level (event
+//!   queue depth).
+//! * [`Histogram`] — fixed, static bucket bounds with `le` semantics
+//!   (bucket *i* counts `v <= bounds[i]`; one overflow bucket past the
+//!   end), plus a CAS-folded `f64` sum.  Bounds are compile-time
+//!   constants, so observation is a `partition_point` + one
+//!   `fetch_add`.
+//!
+//! Every metric the crate instruments lives in the one static
+//! [`Metrics`] struct behind [`metrics()`], registered under the
+//! static string keys [`Snapshot`](super::Snapshot) reports.
+//!
+//! **Zero-perturbation contract** (DESIGN.md §16): nothing in this
+//! module touches an RNG stream or reorders work — instrumentation is
+//! observation only, and the bit-compat gates run with it enabled.
+//! The master switch [`set_enabled`] exists for the property test that
+//! proves records are bitwise identical either way, not for
+//! performance: a disabled metric still costs one relaxed load.
+//! Wall-clock *phase timers* are the exception — they cost two
+//! `Instant::now()` calls per observation, so they default **off**
+//! ([`set_timers_enabled`]; `--trace` and `obs-report` turn them on).
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Shard count for [`Counter`] — matches the decision cache's
+/// `COUNTER_SHARDS` (enough to spread a pool's worth of writers).
+pub const COUNTER_SHARDS: usize = 8;
+
+/// Fixed per-worker slot count for [`PerWorker`]: slot 0 is the
+/// calling thread (it participates in pool jobs), slots `1..` are the
+/// pool workers.  Indexes past the end clamp into the last slot.
+pub const MAX_WORKER_SLOTS: usize = 65;
+
+/// Strategy key order for the per-strategy cache counters — the
+/// coordinator maps its `Strategy` enum onto these slots.
+pub const STRATEGY_KEYS: [&str; 5] = [
+    "card",
+    "server-only",
+    "device-only",
+    "static-cut",
+    "random-cut",
+];
+
+/// Wall/sim duration bucket bounds [s] (log-ish spacing, µs → 10 min).
+pub const TIME_BUCKETS_S: [f64; 12] = [
+    1e-6, 1e-5, 1e-4, 1e-3, 1e-2, 0.1, 0.5, 1.0, 5.0, 30.0, 120.0, 600.0,
+];
+
+/// Ratio bucket bounds (utilization ∈ [0, 1]).
+pub const RATIO_BUCKETS: [f64; 10] = [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9, 1.0];
+
+static ENABLED: AtomicBool = AtomicBool::new(true);
+static TIMERS_ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Is metric collection on?  (Default: yes.)
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Master switch — exists so the zero-perturbation property test can
+/// prove records are bitwise identical with telemetry on vs. off.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::SeqCst);
+}
+
+/// Are the wall-clock phase timers on?  (Default: no — two
+/// `Instant::now()` calls per device-round are not free.)
+#[inline]
+pub fn timers_enabled() -> bool {
+    TIMERS_ENABLED.load(Ordering::Relaxed)
+}
+
+/// Enable the scheduler phase timers (`--trace` / `obs-report` do).
+pub fn set_timers_enabled(on: bool) {
+    TIMERS_ENABLED.store(on, Ordering::SeqCst);
+}
+
+/// Start a phase timer — `None` (and no clock read) unless
+/// [`timers_enabled`].
+#[inline]
+pub fn timer_start() -> Option<Instant> {
+    if timers_enabled() {
+        Some(Instant::now())
+    } else {
+        None
+    }
+}
+
+/// Fold a started phase timer into `h` (no-op for `None`).
+#[inline]
+pub fn timer_record(h: &Histogram, t0: Option<Instant>) {
+    if let Some(t0) = t0 {
+        h.observe(t0.elapsed().as_secs_f64());
+    }
+}
+
+thread_local! {
+    /// Which [`PerWorker`] slot this thread charges: 0 for ordinary
+    /// (caller) threads, `w + 1` for pool worker `w`.
+    static WORKER_SLOT: Cell<usize> = const { Cell::new(0) };
+}
+
+/// Pin the current thread's per-worker slot (the pool does this once
+/// per worker at spawn).
+pub fn set_worker_slot(slot: usize) {
+    WORKER_SLOT.with(|s| s.set(slot));
+}
+
+/// The current thread's per-worker slot (0 unless pinned).
+pub fn worker_slot() -> usize {
+    WORKER_SLOT.with(|s| s.get())
+}
+
+/// One cache line per atomic word so sharded writers never false-share.
+#[repr(align(64))]
+struct Padded(AtomicU64);
+
+impl Padded {
+    fn new() -> Padded {
+        Padded(AtomicU64::new(0))
+    }
+}
+
+/// Monotonic counter, sharded like the decision cache's hit/miss
+/// counters: `hint` (device/worker index) picks the shard.
+pub struct Counter {
+    shards: [Padded; COUNTER_SHARDS],
+}
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter {
+            shards: std::array::from_fn(|_| Padded::new()),
+        }
+    }
+
+    #[inline]
+    pub fn inc(&self, hint: usize) {
+        self.add(hint, 1);
+    }
+
+    #[inline]
+    pub fn add(&self, hint: usize, n: u64) {
+        if !enabled() {
+            return;
+        }
+        self.shards[hint % COUNTER_SHARDS]
+            .0
+            .fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Sum across shards.
+    pub fn value(&self) -> u64 {
+        self.shards.iter().map(|s| s.0.load(Ordering::Relaxed)).sum()
+    }
+}
+
+impl Default for Counter {
+    fn default() -> Counter {
+        Counter::new()
+    }
+}
+
+/// Last-observed + running-max level.
+pub struct Gauge {
+    last: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge {
+            last: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn observe(&self, v: u64) {
+        if !enabled() {
+            return;
+        }
+        self.last.store(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn last(&self) -> u64 {
+        self.last.load(Ordering::Relaxed)
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for Gauge {
+    fn default() -> Gauge {
+        Gauge::new()
+    }
+}
+
+/// Fixed-bucket histogram: `counts[i]` tallies `v <= bounds[i]`
+/// (`counts[bounds.len()]` is the overflow bucket), plus an exact
+/// observation count and CAS-folded `f64` sum.
+pub struct Histogram {
+    bounds: &'static [f64],
+    counts: Vec<AtomicU64>,
+    sum_bits: AtomicU64,
+}
+
+impl Histogram {
+    /// `bounds` must be sorted ascending (static, checked once here).
+    pub fn new(bounds: &'static [f64]) -> Histogram {
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "histogram bounds must be strictly ascending"
+        );
+        Histogram {
+            bounds,
+            counts: (0..=bounds.len()).map(|_| AtomicU64::new(0)).collect(),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+        }
+    }
+
+    #[inline]
+    pub fn observe(&self, v: f64) {
+        if !enabled() {
+            return;
+        }
+        // first bound >= v, i.e. the `le` bucket; past-the-end ⇒ overflow
+        let i = self.bounds.partition_point(|&b| b < v);
+        self.counts[i].fetch_add(1, Ordering::Relaxed);
+        let mut cur = self.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self
+                .sum_bits
+                .compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn bounds(&self) -> &'static [f64] {
+        self.bounds
+    }
+
+    /// Per-bucket tallies (`bounds.len() + 1` entries, overflow last).
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+
+    pub fn count(&self) -> u64 {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+}
+
+/// Fixed per-slot counters for the worker pool: tasks claimed per
+/// worker (slot 0 = the participating caller thread).
+pub struct PerWorker {
+    slots: Vec<Padded>,
+}
+
+impl PerWorker {
+    pub fn new() -> PerWorker {
+        PerWorker {
+            slots: (0..MAX_WORKER_SLOTS).map(|_| Padded::new()).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn add(&self, slot: usize, n: u64) {
+        if !enabled() {
+            return;
+        }
+        self.slots[slot.min(MAX_WORKER_SLOTS - 1)]
+            .0
+            .fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// All slot values (fixed length [`MAX_WORKER_SLOTS`]).
+    pub fn values(&self) -> Vec<u64> {
+        self.slots.iter().map(|s| s.0.load(Ordering::Relaxed)).collect()
+    }
+}
+
+impl Default for PerWorker {
+    fn default() -> PerWorker {
+        PerWorker::new()
+    }
+}
+
+/// Every metric the crate instruments, as one process-wide struct —
+/// the "registry".  Field order is the report order.
+pub struct Metrics {
+    /// decision-cache hits, one counter per [`STRATEGY_KEYS`] slot
+    pub cache_hit: [Counter; 5],
+    /// decision-cache misses, same slots
+    pub cache_miss: [Counter; 5],
+    /// pool tasks claimed, per worker slot (0 = caller)
+    pub pool_claimed: PerWorker,
+    /// pool idle parks (worker found no work and blocked on the condvar)
+    pub pool_parks: Counter,
+    /// DES events popped off the virtual-time queue
+    pub des_events: Counter,
+    /// DES device-round merges (cell + cloud aggregation)
+    pub des_merges: Counter,
+    /// DES semi-sync straggler drops
+    pub des_drops_straggler: Counter,
+    /// DES churn cancellations
+    pub des_drops_churn: Counter,
+    /// DES cell re-associations observed at launch
+    pub des_handovers: Counter,
+    /// DES event-queue depth (level at each pop)
+    pub des_queue_depth: Gauge,
+    /// per-job server queue wait [sim s]
+    pub des_queue_wait_s: Histogram,
+    /// per-cell end-of-run server utilization
+    pub des_server_utilization: Histogram,
+    /// wall time of `Scheduler::realize_link` (timers only)
+    pub sched_realize_link_s: Histogram,
+    /// wall time of the decision scan / cache path (timers only)
+    pub sched_decide_s: Histogram,
+}
+
+impl Metrics {
+    fn new() -> Metrics {
+        Metrics {
+            cache_hit: std::array::from_fn(|_| Counter::new()),
+            cache_miss: std::array::from_fn(|_| Counter::new()),
+            pool_claimed: PerWorker::new(),
+            pool_parks: Counter::new(),
+            des_events: Counter::new(),
+            des_merges: Counter::new(),
+            des_drops_straggler: Counter::new(),
+            des_drops_churn: Counter::new(),
+            des_handovers: Counter::new(),
+            des_queue_depth: Gauge::new(),
+            des_queue_wait_s: Histogram::new(&TIME_BUCKETS_S),
+            des_server_utilization: Histogram::new(&RATIO_BUCKETS),
+            sched_realize_link_s: Histogram::new(&TIME_BUCKETS_S),
+            sched_decide_s: Histogram::new(&TIME_BUCKETS_S),
+        }
+    }
+}
+
+/// The process-wide registry (created on first touch).
+pub fn metrics() -> &'static Metrics {
+    static REGISTRY: OnceLock<Metrics> = OnceLock::new();
+    REGISTRY.get_or_init(Metrics::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_merges_across_shards() {
+        let c = Counter::new();
+        // hit every shard, including wraparound hints
+        for hint in 0..COUNTER_SHARDS * 3 {
+            c.inc(hint);
+        }
+        c.add(5, 10);
+        assert_eq!(c.value(), (COUNTER_SHARDS * 3) as u64 + 10);
+    }
+
+    #[test]
+    fn counter_shards_spread_by_hint() {
+        let c = Counter::new();
+        c.inc(0);
+        c.inc(1);
+        c.inc(COUNTER_SHARDS); // same shard as hint 0
+        let shard0 = c.shards[0].0.load(Ordering::Relaxed);
+        let shard1 = c.shards[1].0.load(Ordering::Relaxed);
+        assert_eq!(shard0, 2);
+        assert_eq!(shard1, 1);
+        assert_eq!(c.value(), 3);
+    }
+
+    #[test]
+    fn gauge_tracks_last_and_max() {
+        let g = Gauge::new();
+        g.observe(3);
+        g.observe(17);
+        g.observe(5);
+        assert_eq!(g.last(), 5);
+        assert_eq!(g.max(), 17);
+    }
+
+    #[test]
+    fn histogram_bucket_boundaries_are_le() {
+        static BOUNDS: [f64; 3] = [1.0, 2.0, 4.0];
+        let h = Histogram::new(&BOUNDS);
+        h.observe(0.5); // <= 1.0            -> bucket 0
+        h.observe(1.0); // == bound, le      -> bucket 0
+        h.observe(1.5); //                   -> bucket 1
+        h.observe(2.0); // == bound, le      -> bucket 1
+        h.observe(4.0); // == last bound     -> bucket 2
+        h.observe(9.0); // past the end      -> overflow
+        assert_eq!(h.bucket_counts(), vec![2, 2, 1, 1]);
+        assert_eq!(h.count(), 6);
+        assert!((h.sum() - 18.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "ascending")]
+    fn histogram_rejects_unsorted_bounds() {
+        static BAD: [f64; 2] = [2.0, 1.0];
+        let _ = Histogram::new(&BAD);
+    }
+
+    #[test]
+    fn per_worker_clamps_out_of_range_slots() {
+        let p = PerWorker::new();
+        p.add(0, 2);
+        p.add(3, 1);
+        p.add(MAX_WORKER_SLOTS + 100, 5); // clamps into the last slot
+        let v = p.values();
+        assert_eq!(v.len(), MAX_WORKER_SLOTS);
+        assert_eq!(v[0], 2);
+        assert_eq!(v[3], 1);
+        assert_eq!(v[MAX_WORKER_SLOTS - 1], 5);
+    }
+
+    #[test]
+    fn registry_is_process_wide() {
+        let a = metrics() as *const Metrics;
+        let b = metrics() as *const Metrics;
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn worker_slot_defaults_to_caller() {
+        assert_eq!(worker_slot(), 0);
+        std::thread::spawn(|| {
+            set_worker_slot(7);
+            assert_eq!(worker_slot(), 7);
+        })
+        .join()
+        .unwrap();
+        // pinning in the spawned thread must not leak here
+        assert_eq!(worker_slot(), 0);
+    }
+}

@@ -1,0 +1,264 @@
+//! [`Snapshot`]: a point-in-time copy of the metrics registry, plus
+//! its JSON form — the `data.telemetry` block every `BENCH_*.json`
+//! envelope carries and the `obs-report` subcommand renders.
+
+use crate::util::json::{self, Json};
+use crate::util::table::Table;
+
+use super::registry::{self, metrics, STRATEGY_KEYS};
+
+/// One histogram, frozen: `buckets[i]` counts observations
+/// `<= bounds[i]`, with one overflow bucket past the end.
+#[derive(Clone, Debug)]
+pub struct HistogramSnapshot {
+    pub bounds: &'static [f64],
+    pub buckets: Vec<u64>,
+    pub count: u64,
+    pub sum: f64,
+}
+
+/// Point-in-time copy of every registry metric, under the static
+/// string keys the registry assigns.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    pub enabled: bool,
+    pub counters: Vec<(&'static str, u64)>,
+    /// key → (last, max)
+    pub gauges: Vec<(&'static str, u64, u64)>,
+    pub histograms: Vec<(&'static str, HistogramSnapshot)>,
+    /// pool tasks claimed per worker slot (0 = caller), trailing zero
+    /// slots trimmed
+    pub pool_claimed: Vec<u64>,
+    pub pool_idle_parks: u64,
+}
+
+fn hist_snap(h: &registry::Histogram) -> HistogramSnapshot {
+    HistogramSnapshot {
+        bounds: h.bounds(),
+        buckets: h.bucket_counts(),
+        count: h.count(),
+        sum: h.sum(),
+    }
+}
+
+impl Snapshot {
+    /// Read the whole registry (relaxed loads — counters racing with
+    /// live workers are torn only across *different* metrics, never
+    /// within one word).
+    pub fn collect() -> Snapshot {
+        let m = metrics();
+        let mut counters: Vec<(&'static str, u64)> = Vec::new();
+        // per-strategy cache counters under static compound keys
+        const HIT_KEYS: [&str; 5] = [
+            "decision_cache.hit.card",
+            "decision_cache.hit.server-only",
+            "decision_cache.hit.device-only",
+            "decision_cache.hit.static-cut",
+            "decision_cache.hit.random-cut",
+        ];
+        const MISS_KEYS: [&str; 5] = [
+            "decision_cache.miss.card",
+            "decision_cache.miss.server-only",
+            "decision_cache.miss.device-only",
+            "decision_cache.miss.static-cut",
+            "decision_cache.miss.random-cut",
+        ];
+        for (i, _) in STRATEGY_KEYS.iter().enumerate() {
+            counters.push((HIT_KEYS[i], m.cache_hit[i].value()));
+            counters.push((MISS_KEYS[i], m.cache_miss[i].value()));
+        }
+        counters.push(("pool.idle_parks", m.pool_parks.value()));
+        counters.push(("des.events", m.des_events.value()));
+        counters.push(("des.merges", m.des_merges.value()));
+        counters.push(("des.drops.straggler", m.des_drops_straggler.value()));
+        counters.push(("des.drops.churn", m.des_drops_churn.value()));
+        counters.push(("des.handovers", m.des_handovers.value()));
+
+        let gauges = vec![(
+            "des.event_queue_depth",
+            m.des_queue_depth.last(),
+            m.des_queue_depth.max(),
+        )];
+
+        let histograms = vec![
+            ("des.queue_wait_s", hist_snap(&m.des_queue_wait_s)),
+            ("des.server_utilization", hist_snap(&m.des_server_utilization)),
+            ("sched.realize_link_s", hist_snap(&m.sched_realize_link_s)),
+            ("sched.decide_s", hist_snap(&m.sched_decide_s)),
+        ];
+
+        let mut pool_claimed = m.pool_claimed.values();
+        while pool_claimed.len() > 1 && *pool_claimed.last().unwrap() == 0 {
+            pool_claimed.pop();
+        }
+
+        Snapshot {
+            enabled: registry::enabled(),
+            counters,
+            gauges,
+            histograms,
+            pool_claimed,
+            pool_idle_parks: m.pool_parks.value(),
+        }
+    }
+
+    /// The `data.telemetry` JSON block (`edgesplit/telemetry/v1`).
+    pub fn to_json(&self) -> Json {
+        let counters = json::obj(
+            self.counters
+                .iter()
+                .map(|&(k, v)| (k, Json::Num(v as f64)))
+                .collect(),
+        );
+        let gauges = json::obj(
+            self.gauges
+                .iter()
+                .map(|&(k, last, max)| {
+                    (
+                        k,
+                        json::obj(vec![
+                            ("last", Json::Num(last as f64)),
+                            ("max", Json::Num(max as f64)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        let histograms = json::obj(
+            self.histograms
+                .iter()
+                .map(|(k, h)| {
+                    (
+                        *k,
+                        json::obj(vec![
+                            ("count", Json::Num(h.count as f64)),
+                            ("sum", Json::Num(h.sum)),
+                            (
+                                "buckets",
+                                Json::Arr(
+                                    h.buckets
+                                        .iter()
+                                        .enumerate()
+                                        .map(|(i, &c)| {
+                                            json::obj(vec![
+                                                (
+                                                    "le",
+                                                    h.bounds
+                                                        .get(i)
+                                                        .map(|&b| Json::Num(b))
+                                                        .unwrap_or_else(|| {
+                                                            Json::Str("inf".into())
+                                                        }),
+                                                ),
+                                                ("count", Json::Num(c as f64)),
+                                            ])
+                                        })
+                                        .collect(),
+                                ),
+                            ),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        json::obj(vec![
+            ("schema", Json::Str("edgesplit/telemetry/v1".into())),
+            ("enabled", Json::Bool(self.enabled)),
+            ("counters", counters),
+            ("gauges", gauges),
+            ("histograms", histograms),
+            (
+                "pool",
+                json::obj(vec![
+                    (
+                        "tasks_claimed_per_worker",
+                        Json::Arr(
+                            self.pool_claimed
+                                .iter()
+                                .map(|&v| Json::Num(v as f64))
+                                .collect(),
+                        ),
+                    ),
+                    ("idle_parks", Json::Num(self.pool_idle_parks as f64)),
+                ]),
+            ),
+        ])
+    }
+
+    /// ASCII rendering (the `obs-report` subcommand's output).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let mut t = Table::new("telemetry — counters", &["key", "value"]);
+        for &(k, v) in &self.counters {
+            t.row(vec![k.to_string(), v.to_string()]);
+        }
+        out.push_str(&t.render());
+        out.push('\n');
+
+        let mut t = Table::new("telemetry — gauges", &["key", "last", "max"]);
+        for &(k, last, max) in &self.gauges {
+            t.row(vec![k.to_string(), last.to_string(), max.to_string()]);
+        }
+        out.push_str(&t.render());
+        out.push('\n');
+
+        let mut t = Table::new("telemetry — histograms", &["key", "count", "sum", "mean"]);
+        for (k, h) in &self.histograms {
+            let mean = if h.count > 0 { h.sum / h.count as f64 } else { 0.0 };
+            t.row(vec![
+                k.to_string(),
+                h.count.to_string(),
+                format!("{:.6}", h.sum),
+                format!("{mean:.6}"),
+            ]);
+        }
+        out.push_str(&t.render());
+        out.push('\n');
+
+        let mut t = Table::new("telemetry — worker pool", &["slot", "tasks claimed"]);
+        for (i, &v) in self.pool_claimed.iter().enumerate() {
+            let who = if i == 0 { "caller".to_string() } else { format!("worker {}", i - 1) };
+            t.row(vec![who, v.to_string()]);
+        }
+        t.row(vec!["idle parks".into(), self.pool_idle_parks.to_string()]);
+        out.push_str(&t.render());
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_json_carries_every_section() {
+        let s = Snapshot::collect();
+        let j = s.to_json();
+        assert_eq!(
+            j.get("schema").and_then(Json::as_str),
+            Some("edgesplit/telemetry/v1")
+        );
+        for key in ["counters", "gauges", "histograms", "pool"] {
+            assert!(j.get(key).is_some(), "missing section {key}");
+        }
+        assert!(j
+            .at(&["counters", "decision_cache.hit.card"])
+            .and_then(Json::as_f64)
+            .is_some());
+        assert!(j
+            .at(&["histograms", "des.queue_wait_s", "count"])
+            .and_then(Json::as_f64)
+            .is_some());
+        assert!(j.at(&["pool", "idle_parks"]).is_some());
+        // round-trips through the parser
+        assert!(Json::parse(&j.to_string()).is_ok());
+    }
+
+    #[test]
+    fn render_mentions_every_section() {
+        let out = Snapshot::collect().render();
+        for needle in ["counters", "gauges", "histograms", "worker pool", "idle parks"] {
+            assert!(out.contains(needle), "render missing {needle}");
+        }
+    }
+}

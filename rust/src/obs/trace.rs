@@ -1,0 +1,241 @@
+//! Chrome `trace_event` emitter (load the output in `chrome://tracing`
+//! or Perfetto).
+//!
+//! Two clock domains on two pid tracks (DESIGN.md §16):
+//!
+//! * **pid [`PID_WALL`] — wall time.**  `B`/`E` duration pairs around
+//!   engine phases (whole run, per round), timestamped from one
+//!   process-wide `Instant` epoch so every track shares an origin.
+//! * **pid [`PID_SIM`] — simulated time.**  `X` complete events whose
+//!   `ts`/`dur` are the DES virtual clock in microseconds: queue wait,
+//!   batch service, whole device-rounds — one tid per cell — plus `i`
+//!   instants for handover, straggler-drop, and churn cancellation.
+//!
+//! Recording is off until [`enable`] (the `--trace <path>` CLI flag or
+//! [`crate::exp::ExperimentBuilder::trace`]); every record site guards
+//! on the one relaxed-atomic [`active`] check, so an untraced run pays
+//! a single load per site.  Events buffer in memory (capped at
+//! [`MAX_EVENTS`]) and [`write_to`] sorts them by `(pid, tid, ts)` —
+//! stable, so `B` keeps preceding its `E` at equal timestamps — then
+//! writes `{"traceEvents": [...]}`.
+//!
+//! Zero-perturbation: recording never touches an RNG stream, and the
+//! virtual-time spans are derived from quantities the simulation
+//! already computes.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::{self, Json};
+
+/// Track for wall-clock engine phases.
+pub const PID_WALL: u64 = 1;
+/// Track for simulated-time DES activity (tid = cell index).
+pub const PID_SIM: u64 = 2;
+
+/// In-memory event cap — past it, events are counted as dropped
+/// instead of recorded ([`write_to`] reports the loss).
+pub const MAX_EVENTS: usize = 1 << 22;
+
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+static EVENTS: Mutex<Vec<TraceEvent>> = Mutex::new(Vec::new());
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// One buffered `trace_event`.
+struct TraceEvent {
+    name: String,
+    cat: &'static str,
+    ph: char,
+    ts_us: f64,
+    /// only meaningful for `X` events
+    dur_us: f64,
+    pid: u64,
+    tid: u64,
+    args: Vec<(&'static str, f64)>,
+}
+
+/// Is the tracer recording?  One relaxed load — the guard every
+/// instrumentation site checks first.
+#[inline]
+pub fn active() -> bool {
+    ACTIVE.load(Ordering::Relaxed)
+}
+
+/// Start recording (idempotent).  Also pins the wall-clock epoch and
+/// turns the scheduler phase timers on.
+pub fn enable() {
+    let _ = epoch();
+    super::registry::set_timers_enabled(true);
+    ACTIVE.store(true, Ordering::SeqCst);
+}
+
+/// Stop recording (buffered events stay until [`write_to`] drains them).
+pub fn disable() {
+    ACTIVE.store(false, Ordering::SeqCst);
+}
+
+/// Microseconds since the process trace epoch.
+pub fn wall_ts_us() -> f64 {
+    epoch().elapsed().as_secs_f64() * 1e6
+}
+
+fn push(ev: TraceEvent) {
+    let mut buf = EVENTS.lock().unwrap();
+    if buf.len() >= MAX_EVENTS {
+        DROPPED.fetch_add(1, Ordering::Relaxed);
+        return;
+    }
+    buf.push(ev);
+}
+
+/// Wall-time span open (`B`) on the wall pid.
+pub fn wall_begin(name: &str, cat: &'static str, tid: u64) {
+    if !active() {
+        return;
+    }
+    push(TraceEvent {
+        name: name.to_string(),
+        cat,
+        ph: 'B',
+        ts_us: wall_ts_us(),
+        dur_us: 0.0,
+        pid: PID_WALL,
+        tid,
+        args: Vec::new(),
+    });
+}
+
+/// Wall-time span close (`E`), pairing the innermost open `B` on the
+/// same track.
+pub fn wall_end(name: &str, cat: &'static str, tid: u64) {
+    if !active() {
+        return;
+    }
+    push(TraceEvent {
+        name: name.to_string(),
+        cat,
+        ph: 'E',
+        ts_us: wall_ts_us(),
+        dur_us: 0.0,
+        pid: PID_WALL,
+        tid,
+        args: Vec::new(),
+    });
+}
+
+/// Simulated-time complete span (`X`) on cell track `cell`,
+/// `[start_s, end_s]` in virtual seconds.
+pub fn sim_span(
+    name: &str,
+    cat: &'static str,
+    cell: usize,
+    start_s: f64,
+    end_s: f64,
+    args: Vec<(&'static str, f64)>,
+) {
+    if !active() {
+        return;
+    }
+    push(TraceEvent {
+        name: name.to_string(),
+        cat,
+        ph: 'X',
+        ts_us: start_s * 1e6,
+        dur_us: (end_s - start_s).max(0.0) * 1e6,
+        pid: PID_SIM,
+        tid: cell as u64,
+        args,
+    });
+}
+
+/// Simulated-time instant (`i`, thread scope) on cell track `cell`.
+pub fn sim_instant(
+    name: &str,
+    cat: &'static str,
+    cell: usize,
+    at_s: f64,
+    args: Vec<(&'static str, f64)>,
+) {
+    if !active() {
+        return;
+    }
+    push(TraceEvent {
+        name: name.to_string(),
+        cat,
+        ph: 'i',
+        ts_us: at_s * 1e6,
+        dur_us: 0.0,
+        pid: PID_SIM,
+        tid: cell as u64,
+        args,
+    });
+}
+
+/// Buffered event count (tests/diagnostics).
+pub fn len() -> usize {
+    EVENTS.lock().unwrap().len()
+}
+
+/// Whether the buffer holds no events.
+pub fn is_empty() -> bool {
+    EVENTS.lock().unwrap().is_empty()
+}
+
+/// Drop everything buffered so far (tests).
+pub fn clear() {
+    EVENTS.lock().unwrap().clear();
+    DROPPED.store(0, Ordering::Relaxed);
+}
+
+fn event_json(ev: &TraceEvent) -> Json {
+    let mut fields: Vec<(&str, Json)> = vec![
+        ("name", Json::Str(ev.name.clone())),
+        ("cat", Json::Str(ev.cat.to_string())),
+        ("ph", Json::Str(ev.ph.to_string())),
+        ("ts", Json::Num(ev.ts_us)),
+        ("pid", Json::Num(ev.pid as f64)),
+        ("tid", Json::Num(ev.tid as f64)),
+    ];
+    if ev.ph == 'X' {
+        fields.push(("dur", Json::Num(ev.dur_us)));
+    }
+    if ev.ph == 'i' {
+        fields.push(("s", Json::Str("t".to_string())));
+    }
+    if !ev.args.is_empty() {
+        fields.push((
+            "args",
+            json::obj(ev.args.iter().map(|&(k, v)| (k, Json::Num(v))).collect()),
+        ));
+    }
+    json::obj(fields)
+}
+
+/// Drain the buffer, sort by `(pid, tid, ts)` (stable, so `B` stays
+/// ahead of its `E` at equal timestamps), and write the Chrome
+/// `{"traceEvents": [...]}` document to `path`.
+pub fn write_to(path: &str) -> anyhow::Result<()> {
+    let mut events = std::mem::take(&mut *EVENTS.lock().unwrap());
+    events.sort_by(|a, b| {
+        (a.pid, a.tid)
+            .cmp(&(b.pid, b.tid))
+            .then(a.ts_us.total_cmp(&b.ts_us))
+    });
+    let dropped = DROPPED.swap(0, Ordering::Relaxed);
+    let doc = json::obj(vec![
+        ("traceEvents", Json::Arr(events.iter().map(event_json).collect())),
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+    ]);
+    std::fs::write(path, doc.to_string() + "\n")
+        .map_err(|e| anyhow::anyhow!("writing trace {path}: {e}"))?;
+    if dropped > 0 {
+        crate::log_warn!("trace buffer overflowed: {dropped} events dropped (cap {MAX_EVENTS})");
+    }
+    Ok(())
+}

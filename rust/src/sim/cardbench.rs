@@ -31,6 +31,7 @@ use crate::config::FadingModel;
 use crate::coordinator::{Decision, DecisionCache, Strategy};
 use crate::exp::{self, ExperimentBuilder, NullSink, Report, ReportMeta};
 use crate::net::channel::LinkRealization;
+use crate::obs;
 use crate::util::benchkit::Bencher;
 use crate::util::json::{self, Json};
 use crate::util::pool;
@@ -69,6 +70,12 @@ pub struct CardBench {
     /// process (same preset/fleet/rounds) — correlated processes
     /// revisit CQI keys, so their hit rates should sit above `iid`'s
     pub process_hit_rates: Vec<ProcessHitRate>,
+    /// pool cells claimed per worker slot during the pooled window
+    /// (slot 0 = the participating caller; registry delta, DESIGN.md §16)
+    pub pool_tasks_per_worker: Vec<u64>,
+    /// pool idle parks during the pooled window (workers that found no
+    /// work and blocked on the condvar)
+    pub pool_idle_parks: u64,
 }
 
 /// Position-dependent digest over **every** `Decision` field: a
@@ -189,10 +196,26 @@ pub fn run(
     // warm the persistent pool so the timed window measures cells, not
     // the one-time worker spawn
     pool::global().workers();
+    // registry deltas across the pooled window: who claimed the cells,
+    // and how often workers went idle (observation only — the pooled
+    // records stay bit-identical to serial either way)
+    let claimed_before = obs::metrics().pool_claimed.values();
+    let parks_before = obs::metrics().pool_parks.value();
     let t0 = std::time::Instant::now();
     let pooled_records = pooled_exp.run_collect()?;
     let pooled_s = t0.elapsed().as_secs_f64();
     exp::verify::verify_bit_identical(&serial_records, &pooled_records)?;
+    let mut pool_tasks_per_worker: Vec<u64> = obs::metrics()
+        .pool_claimed
+        .values()
+        .iter()
+        .zip(&claimed_before)
+        .map(|(after, before)| after - before)
+        .collect();
+    while pool_tasks_per_worker.len() > 1 && *pool_tasks_per_worker.last().unwrap() == 0 {
+        pool_tasks_per_worker.pop();
+    }
+    let pool_idle_parks = obs::metrics().pool_parks.value() - parks_before;
 
     // --- decision-cache hit rate per fading process --------------------
     // same preset/fleet/rounds, one full engine run per process: the
@@ -237,6 +260,8 @@ pub fn run(
         cells_pooled_per_s: per_s(pooled_s),
         pool_speedup: serial_s / pooled_s.max(1e-12),
         process_hit_rates,
+        pool_tasks_per_worker,
+        pool_idle_parks,
     };
     let rows = [
         ("decide_legacy", legacy_s, result.legacy_decisions_per_s, "decision"),
@@ -271,12 +296,26 @@ impl CardBench {
             .map(|p| format!("{} {:.1}%", p.process, 100.0 * p.hit_rate))
             .collect::<Vec<_>>()
             .join("   ");
+        let by_worker = self
+            .pool_tasks_per_worker
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| {
+                if i == 0 {
+                    format!("caller {n}")
+                } else {
+                    format!("w{} {n}", i - 1)
+                }
+            })
+            .collect::<Vec<_>>()
+            .join("   ");
         format!(
             "card-bench — {} × {} devices × {} rounds (seed {})\n\
              decisions/sec   legacy {:>12.0}   kernel {:>12.0} ({:.1}×)   cached {:>12.0} ({:.1}×)\n\
              cache hit-rate  {:.1}%\n\
              hit-rate by fading process   {}\n\
-             cells/sec       serial {:>12.0}   pooled {:>12.0} ({:.1}× on {} threads)",
+             cells/sec       serial {:>12.0}   pooled {:>12.0} ({:.1}× on {} threads)\n\
+             pool claims     {}   (idle parks {})",
             self.scenario,
             self.n_devices,
             self.rounds,
@@ -292,6 +331,8 @@ impl CardBench {
             self.cells_pooled_per_s,
             self.pool_speedup,
             self.threads,
+            by_worker,
+            self.pool_idle_parks,
         )
     }
 
@@ -341,6 +382,16 @@ impl CardBench {
                         .collect(),
                 ),
             ),
+            (
+                "pool_tasks_per_worker",
+                Json::Arr(
+                    self.pool_tasks_per_worker
+                        .iter()
+                        .map(|&n| Json::Num(n as f64))
+                        .collect(),
+                ),
+            ),
+            ("pool_idle_parks", Json::Num(self.pool_idle_parks as f64)),
         ])
     }
 
@@ -434,6 +485,8 @@ mod tests {
         assert!(js.contains("cache_hit_rate"));
         assert!(js.contains("process_hit_rates"));
         assert!(js.contains("markov"));
+        assert!(js.contains("pool_tasks_per_worker"));
+        assert!(js.contains("pool_idle_parks"));
         let parsed = Json::parse(&js).unwrap();
         assert_eq!(parsed.get("n_devices").and_then(Json::as_usize), Some(r.n_devices));
         assert!(parsed
@@ -483,5 +536,7 @@ mod tests {
         assert!(s.contains("cached"));
         assert!(s.contains("cache hit-rate"));
         assert!(s.contains("pooled"));
+        assert!(s.contains("pool claims"));
+        assert!(s.contains("idle parks"));
     }
 }

@@ -37,6 +37,7 @@ pub struct FleetPoint {
     pub p50_delay_s: f64,
     pub p95_delay_s: f64,
     pub p99_delay_s: f64,
+    pub p999_delay_s: f64,
     pub mean_energy_j: f64,
     pub mean_cut: f64,
 }
@@ -124,6 +125,7 @@ pub fn sweep(
                 p50_delay_s: pct.p50,
                 p95_delay_s: pct.p95,
                 p99_delay_s: pct.p99,
+                p999_delay_s: pct.p999,
                 mean_energy_j: s.energy.mean(),
                 mean_cut: s.mean_cut(),
             });
@@ -154,6 +156,7 @@ impl FleetSweep {
                 "p50 delay",
                 "p95 delay",
                 "p99 delay",
+                "p99.9 delay",
                 "mean energy",
                 "mean cut",
             ],
@@ -169,6 +172,7 @@ impl FleetSweep {
                 fmt_secs(p.p50_delay_s),
                 fmt_secs(p.p95_delay_s),
                 fmt_secs(p.p99_delay_s),
+                fmt_secs(p.p999_delay_s),
                 fmt_joules(p.mean_energy_j),
                 format!("{:.1}", p.mean_cut),
             ]);
@@ -201,6 +205,7 @@ impl FleetSweep {
                                 ("p50_delay_s", Json::Num(p.p50_delay_s)),
                                 ("p95_delay_s", Json::Num(p.p95_delay_s)),
                                 ("p99_delay_s", Json::Num(p.p99_delay_s)),
+                                ("p999_delay_s", Json::Num(p.p999_delay_s)),
                                 ("mean_energy_j", Json::Num(p.mean_energy_j)),
                                 ("mean_cut", Json::Num(p.mean_cut)),
                             ])
@@ -246,6 +251,7 @@ mod tests {
             assert_eq!(p.rounds, 2);
             // percentile ordering of the delay tail
             assert!(p.p50_delay_s <= p.p95_delay_s && p.p95_delay_s <= p.p99_delay_s);
+            assert!(p.p99_delay_s <= p.p999_delay_s);
             assert!(p.p50_delay_s > 0.0);
         }
         let js = sweep.to_json().to_string();
@@ -253,6 +259,7 @@ mod tests {
         assert!(js.contains("dense-urban"));
         assert!(js.contains("fleet-sweep/v1"));
         assert!(js.contains("p95_delay_s"));
+        assert!(js.contains("p999_delay_s"));
         // and it round-trips through our own parser
         assert!(Json::parse(&js).is_ok());
     }

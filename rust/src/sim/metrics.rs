@@ -4,18 +4,21 @@
 use crate::coordinator::RoundRecord;
 use crate::util::stats::{self, Accum};
 
-/// p50/p95/p99 snapshot of a sample set — the tail view both
+/// p50/p95/p99/p99.9 snapshot of a sample set — the tail view both
 /// `fleet-sweep` and `des-sweep` report next to means.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct Percentiles {
     pub p50: f64,
     pub p95: f64,
     pub p99: f64,
+    /// extreme tail — at fleet scale (10k devices × rounds) p99 still
+    /// averages over hundreds of cells; p99.9 isolates the stragglers
+    pub p999: f64,
 }
 
 impl Percentiles {
     /// Linear-interpolated percentiles (NaN on empty input, like
-    /// `stats::percentile`).  Sorts the samples once for all three;
+    /// `stats::percentile`).  Sorts the samples once for all four;
     /// `total_cmp` keeps NaN samples (a poisoned upstream metric) from
     /// panicking the sort — they order to the extremes (above +∞, or
     /// below -∞ for sign-bit-set NaN), skewing the tail rather than
@@ -27,6 +30,7 @@ impl Percentiles {
             p50: stats::percentile_sorted(&v, 50.0),
             p95: stats::percentile_sorted(&v, 95.0),
             p99: stats::percentile_sorted(&v, 99.0),
+            p999: stats::percentile_sorted(&v, 99.9),
         }
     }
 }
@@ -158,7 +162,8 @@ mod tests {
         assert!((p.p50 - 50.5).abs() < 1e-9, "p50={}", p.p50);
         assert!((p.p95 - 95.05).abs() < 1e-9, "p95={}", p.p95);
         assert!((p.p99 - 99.01).abs() < 1e-9, "p99={}", p.p99);
-        assert!(p.p50 <= p.p95 && p.p95 <= p.p99);
+        assert!((p.p999 - 99.901).abs() < 1e-9, "p999={}", p.p999);
+        assert!(p.p50 <= p.p95 && p.p95 <= p.p99 && p.p99 <= p.p999);
         // empty summaries report NaN, not a panic
         assert!(Summary::default().delay_percentiles().p50.is_nan());
     }

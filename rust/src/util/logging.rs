@@ -3,7 +3,9 @@
 //! Controlled by `EDGESPLIT_LOG` (error|warn|info|debug|trace) or the
 //! `--log-level` CLI flag; defaults to `info`.
 
+use std::io::Write;
 use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Mutex;
 use std::time::Instant;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
@@ -70,12 +72,20 @@ pub fn enabled(l: Level) -> bool {
     l <= level()
 }
 
+/// Serializes whole log lines: pool workers logging concurrently used
+/// to interleave fragments through independent `eprintln!` handles.
+static WRITER: Mutex<()> = Mutex::new(());
+
 pub fn log(l: Level, module: &str, msg: &str) {
     if !enabled(l) {
         return;
     }
     let t = START.get_or_init(Instant::now).elapsed().as_secs_f64();
-    eprintln!("[{t:9.3}s {} {module}] {msg}", l.tag());
+    // format first, then hold the writer lock only for the single write
+    let line = format!("[{t:9.3}s {} {module}] {msg}\n", l.tag());
+    let guard = WRITER.lock().unwrap_or_else(|e| e.into_inner());
+    let _ = std::io::stderr().write_all(line.as_bytes());
+    drop(guard);
 }
 
 #[macro_export]
@@ -106,6 +116,13 @@ macro_rules! log_error {
     };
 }
 
+#[macro_export]
+macro_rules! log_trace {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Trace, module_path!(), &format!($($arg)*))
+    };
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -124,5 +141,13 @@ mod tests {
         assert!(enabled(Level::Warn));
         assert!(!enabled(Level::Info));
         set_level(Level::Info);
+    }
+
+    #[test]
+    fn trace_macro_rounds_out_the_level_set() {
+        // no test in this binary raises the level to Trace, so this is
+        // a gated no-op — the point is that the macro expands at all
+        crate::log_trace!("suppressed at level {:?}", level());
+        assert!(!enabled(Level::Trace));
     }
 }

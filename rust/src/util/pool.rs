@@ -119,6 +119,10 @@ where
             return;
         }
         let end = (start + ctx.chunk).min(len);
+        // per-worker claim attribution (slot 0 = the caller thread)
+        crate::obs::metrics()
+            .pool_claimed
+            .add(crate::obs::registry::worker_slot(), (end - start) as u64);
         for i in start..end {
             match catch_unwind(AssertUnwindSafe(|| (ctx.f)(i, &ctx.items[i]))) {
                 Ok(r) => ctx.results.add(i).write(MaybeUninit::new(r)),
@@ -138,7 +142,10 @@ where
     }
 }
 
-fn worker_loop(shared: Arc<Shared>) {
+fn worker_loop(shared: Arc<Shared>, worker_idx: usize) {
+    // pin this thread's telemetry slot: worker w charges slot w + 1
+    // (slot 0 is the participating caller)
+    crate::obs::registry::set_worker_slot(worker_idx + 1);
     let mut seen_gen = 0u64;
     loop {
         let job = {
@@ -159,6 +166,7 @@ fn worker_loop(shared: Arc<Shared>) {
                         // one out (generation marked seen)
                     }
                 }
+                crate::obs::metrics().pool_parks.inc(worker_idx);
                 s = shared.work_cv.wait(s).unwrap();
             }
         };
@@ -188,9 +196,9 @@ impl WorkerPool {
             done_cv: Condvar::new(),
         });
         let handles = (0..workers)
-            .map(|_| {
+            .map(|w| {
                 let shared = shared.clone();
-                std::thread::spawn(move || worker_loop(shared))
+                std::thread::spawn(move || worker_loop(shared, w))
             })
             .collect();
         WorkerPool { shared, handles }

@@ -1,0 +1,106 @@
+//! Zero-perturbation property test for the observability layer
+//! (DESIGN.md §16): metric collection and Chrome tracing observe the
+//! engines, they never steer them.  Records must stay **bitwise
+//! identical** with telemetry/tracing on vs. off, across every
+//! scenario preset, both engines, and serial vs. pooled execution.
+//!
+//! Everything lives in ONE `#[test]`: `obs::set_enabled` and
+//! `obs::trace::enable` are process-wide switches, and cargo runs a
+//! test binary's `#[test]`s concurrently — splitting this into several
+//! tests would race the toggles.  The other integration suites run
+//! with the defaults (telemetry on, tracing off) and are unaffected.
+
+use edgesplit::config::scenario;
+use edgesplit::exp::{verify, ExperimentBuilder};
+use edgesplit::obs::{self, registry, trace};
+use edgesplit::util::json::Json;
+
+const DEVICES: usize = 5;
+const ROUNDS: usize = 2;
+const SEED: u64 = 11;
+
+fn round_records(
+    preset: &str,
+    threads: usize,
+) -> anyhow::Result<Vec<edgesplit::coordinator::RoundRecord>> {
+    ExperimentBuilder::preset(preset)
+        .devices(DEVICES)
+        .rounds(ROUNDS)
+        .seed(SEED)
+        .threads(threads)
+        .build()?
+        .run_collect()
+}
+
+#[test]
+fn telemetry_and_tracing_never_perturb_records() -> anyhow::Result<()> {
+    for sc in &scenario::ALL {
+        // baseline: every observability switch off
+        obs::set_enabled(false);
+        registry::set_timers_enabled(false);
+        trace::disable();
+        let baseline = round_records(sc.name, 1)?;
+
+        // everything on: registry + phase timers + trace buffer
+        obs::set_enabled(true);
+        trace::enable();
+        let serial = round_records(sc.name, 1)?;
+        let pooled = round_records(sc.name, 4)?;
+        verify::verify_bit_identical(&baseline, &serial)?;
+        verify::verify_bit_identical(&baseline, &pooled)?;
+
+        // both DES gates (sync-vs-round-engine and the single-cell
+        // anchor) with tracing still live: they Err on any divergence
+        let mut cfg = sc.config(DEVICES, SEED)?;
+        cfg.workload.rounds = ROUNDS;
+        verify::verify_des_sync_matches_round_engine(&cfg, sc.state, 2, 1)?;
+        verify::verify_single_cell_bit_identity(&cfg, sc.state, 2, 1)?;
+    }
+
+    // the traced runs above must have recorded spans: engine wall
+    // phases at minimum, DES virtual-time activity from the gates
+    assert!(!trace::is_empty(), "traced runs recorded no events");
+    let n = trace::len();
+    assert!(n > 0);
+
+    // write_to drains the buffer into valid Chrome trace_event JSON
+    let path = std::env::temp_dir().join("obs_telemetry_trace.json");
+    let path = path.to_str().unwrap().to_string();
+    trace::write_to(&path)?;
+    assert!(trace::is_empty(), "write_to must drain the buffer");
+    let parsed = Json::parse(&std::fs::read_to_string(&path)?).expect("trace must be valid JSON");
+    let events = parsed
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("traceEvents array");
+    assert_eq!(events.len(), n);
+    for ev in events {
+        for key in ["name", "ph", "ts", "pid", "tid"] {
+            assert!(ev.get(key).is_some(), "event missing {key}");
+        }
+        if ev.get("ph").and_then(Json::as_str) == Some("X") {
+            let dur = ev.get("dur").and_then(Json::as_f64).expect("X needs dur");
+            assert!(dur >= 0.0, "negative span duration");
+        }
+    }
+    let _ = std::fs::remove_file(&path);
+
+    // the registry saw the traffic the runs generated
+    let snap = obs::Snapshot::collect().to_json();
+    assert_eq!(
+        snap.get("schema").and_then(Json::as_str),
+        Some("edgesplit/telemetry/v1")
+    );
+    let counters = snap.get("counters").and_then(Json::as_obj).unwrap();
+    assert!(
+        counters.keys().any(|k| k.starts_with("decision_cache.")),
+        "scheduler cache counters missing from snapshot"
+    );
+
+    // leave the process-wide defaults behind for any later suite
+    trace::disable();
+    trace::clear();
+    registry::set_timers_enabled(false);
+    obs::set_enabled(true);
+    Ok(())
+}
