@@ -9,6 +9,13 @@ pub enum CliError {
     MissingValue(String),
     BadValue(String, String, &'static str),
     UnexpectedPositional(String),
+    /// An output path a flag points at cannot be opened for writing —
+    /// caught before dispatch so a long run cannot fail only at exit.
+    UnwritablePath {
+        flag: String,
+        path: String,
+        source: String,
+    },
 }
 
 impl std::fmt::Display for CliError {
@@ -23,11 +30,36 @@ impl std::fmt::Display for CliError {
                 f,
                 "unexpected positional argument '{arg}' (options are flags: --name value; see --help)"
             ),
+            CliError::UnwritablePath { flag, path, source } => write!(
+                f,
+                "flag '--{flag}': cannot write to '{path}': {source} \
+                 (checked up front so the run cannot fail only at exit)"
+            ),
         }
     }
 }
 
 impl std::error::Error for CliError {}
+
+/// Probe an output path for writability *before* the command runs.
+/// Opens (creating if absent) for write; a file created only by the
+/// probe is removed again so a failing command leaves nothing behind.
+pub fn preflight_writable(flag: &str, path: &str) -> Result<(), CliError> {
+    let existed = std::path::Path::new(path).exists();
+    match std::fs::OpenOptions::new().write(true).create(true).open(path) {
+        Ok(_) => {
+            if !existed {
+                let _ = std::fs::remove_file(path);
+            }
+            Ok(())
+        }
+        Err(e) => Err(CliError::UnwritablePath {
+            flag: flag.to_string(),
+            path: path.to_string(),
+            source: e.to_string(),
+        }),
+    }
+}
 
 /// Flag specification for help + validation.
 #[derive(Clone, Debug)]
@@ -239,6 +271,27 @@ mod tests {
         // flag-only invocations always pass
         let b = Args::parse(&sv(&["fig4"]), &specs()).unwrap();
         assert!(b.expect_positionals(1).is_ok());
+    }
+
+    #[test]
+    fn preflight_rejects_unwritable_and_cleans_probe() {
+        let err = preflight_writable("trace", "/nonexistent-dir/trace.json").unwrap_err();
+        assert!(matches!(&err, CliError::UnwritablePath { flag, .. } if flag == "trace"));
+        assert!(err.to_string().contains("/nonexistent-dir/trace.json"));
+
+        let dir = std::env::temp_dir().join("edgesplit-preflight-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let fresh = dir.join("fresh.json");
+        let fresh_s = fresh.to_str().unwrap();
+        let _ = std::fs::remove_file(&fresh);
+        preflight_writable("trace", fresh_s).unwrap();
+        // the probe must not leave an empty file behind
+        assert!(!fresh.exists());
+        // an existing file passes and is left intact
+        std::fs::write(&fresh, "keep").unwrap();
+        preflight_writable("out", fresh_s).unwrap();
+        assert_eq!(std::fs::read_to_string(&fresh).unwrap(), "keep");
+        let _ = std::fs::remove_file(&fresh);
     }
 
     #[test]

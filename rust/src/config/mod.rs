@@ -9,6 +9,6 @@ pub mod toml;
 pub use scenario::Scenario;
 pub use schema::{
     CardSpec, CellLayout, CellsSpec, ChannelSpec, ChannelState, ChurnSpec, ConfigError,
-    DeviceSpec, ExpConfig, FadingModel, FadingProcessSpec, MobilityModel, MobilitySpec,
-    ServerSpec, WorkloadSpec,
+    DeviceSpec, ExpConfig, FadingModel, FadingProcessSpec, FaultsSpec, MobilityModel,
+    MobilitySpec, ServerSpec, WorkloadSpec,
 };

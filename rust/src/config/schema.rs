@@ -362,6 +362,63 @@ impl ChurnSpec {
     }
 }
 
+/// `[faults]` — the DES fault-injection model (DESIGN.md §17): per-link
+/// transient outages with bounded retry/backoff, server capacity-slot
+/// failures with exponential repair, and correlated regional dropout
+/// bursts keyed off device positions.  All injection rates default to 0
+/// — a config without a `[faults]` table (or with every rate at 0) is
+/// fault-free and bit-identical to the pre-fault engines.
+#[derive(Clone, Debug)]
+pub struct FaultsSpec {
+    /// transient link-outage rate while a transfer is in flight [1/s]
+    pub link_outage_rate_hz: f64,
+    /// retransmissions allowed per transfer before the cell is dropped
+    pub max_retries: usize,
+    /// exponential-backoff base wait before a retransmission [s]
+    pub backoff_base_s: f64,
+    /// multiplicative backoff jitter amplitude in [0, 1]
+    pub backoff_jitter: f64,
+    /// probability a server capacity slot fails per batch dispatch
+    pub slot_fail_prob: f64,
+    /// mean exponential repair time of a failed slot [s]
+    pub slot_repair_s: f64,
+    /// probability per round of a correlated regional dropout burst
+    pub burst_rate_per_round: f64,
+    /// radius of the burst region around its center device [m]
+    pub burst_radius_m: f64,
+    /// sync-policy round timeout as a multiple of the semi-sync
+    /// deadline estimate (0 disables the timeout; ignored unless an
+    /// injection rate is non-zero)
+    pub timeout_factor: f64,
+}
+
+impl Default for FaultsSpec {
+    fn default() -> Self {
+        Self {
+            link_outage_rate_hz: 0.0,
+            max_retries: 3,
+            backoff_base_s: 0.5,
+            backoff_jitter: 0.5,
+            slot_fail_prob: 0.0,
+            slot_repair_s: 5.0,
+            burst_rate_per_round: 0.0,
+            burst_radius_m: 25.0,
+            timeout_factor: 0.0,
+        }
+    }
+}
+
+impl FaultsSpec {
+    /// Whether any injection channel is live.  When false the DES
+    /// engine takes no fault branch and draws no fault stream — the
+    /// zero-perturbation anchor `exp::verify` enforces.
+    pub fn enabled(&self) -> bool {
+        self.link_outage_rate_hz > 0.0
+            || self.slot_fail_prob > 0.0
+            || self.burst_rate_per_round > 0.0
+    }
+}
+
 /// Geometric arrangement of the edge-server cell sites for the
 /// `[cells]` table (DESIGN.md §15).  Cell 0 always sits at the origin —
 /// the legacy single-AP position — so `count = 1` reproduces today's
@@ -442,6 +499,7 @@ pub struct ExpConfig {
     pub workload: WorkloadSpec,
     pub card: CardSpec,
     pub churn: ChurnSpec,
+    pub faults: FaultsSpec,
     pub mobility: MobilitySpec,
     pub cells: CellsSpec,
     pub seed: u64,
@@ -457,6 +515,7 @@ impl ExpConfig {
             workload: WorkloadSpec::default(),
             card: CardSpec::default(),
             churn: ChurnSpec::default(),
+            faults: FaultsSpec::default(),
             mobility: MobilitySpec::default(),
             cells: CellsSpec::default(),
             seed: 7,
@@ -500,6 +559,52 @@ impl ExpConfig {
             if !rate.is_finite() || rate < 0.0 {
                 return inval(format!("{name} must be finite and >= 0, got {rate}"));
             }
+        }
+        let fl = &self.faults;
+        if !fl.link_outage_rate_hz.is_finite() || fl.link_outage_rate_hz < 0.0 {
+            return inval(format!(
+                "faults.link_outage_rate_hz must be finite and >= 0, got {}",
+                fl.link_outage_rate_hz
+            ));
+        }
+        if fl.max_retries > 16 {
+            return inval(format!(
+                "faults.max_retries must be in [0, 16], got {}",
+                fl.max_retries
+            ));
+        }
+        for (name, v) in [
+            ("faults.backoff_base_s", fl.backoff_base_s),
+            ("faults.slot_repair_s", fl.slot_repair_s),
+            ("faults.burst_radius_m", fl.burst_radius_m),
+        ] {
+            if !v.is_finite() || v <= 0.0 {
+                return inval(format!("{name} must be finite and > 0, got {v}"));
+            }
+        }
+        if !fl.backoff_jitter.is_finite() || !(0.0..=1.0).contains(&fl.backoff_jitter) {
+            return inval(format!(
+                "faults.backoff_jitter must be in [0, 1], got {}",
+                fl.backoff_jitter
+            ));
+        }
+        if !fl.slot_fail_prob.is_finite() || !(0.0..1.0).contains(&fl.slot_fail_prob) {
+            return inval(format!(
+                "faults.slot_fail_prob must be in [0, 1), got {}",
+                fl.slot_fail_prob
+            ));
+        }
+        if !fl.burst_rate_per_round.is_finite() || !(0.0..=1.0).contains(&fl.burst_rate_per_round) {
+            return inval(format!(
+                "faults.burst_rate_per_round must be in [0, 1], got {}",
+                fl.burst_rate_per_round
+            ));
+        }
+        if !fl.timeout_factor.is_finite() || fl.timeout_factor < 0.0 {
+            return inval(format!(
+                "faults.timeout_factor must be finite and >= 0, got {}",
+                fl.timeout_factor
+            ));
         }
         let p = &self.channel.process;
         if !p.rho.is_finite() || !(0.0..1.0).contains(&p.rho) {
@@ -622,6 +727,7 @@ fn apply_tree(cfg: &mut ExpConfig, tree: &Json) -> Result<(), ConfigError> {
             "workload" => apply_workload(&mut cfg.workload, val)?,
             "card" => apply_card(&mut cfg.card, val)?,
             "churn" => apply_churn(&mut cfg.churn, val)?,
+            "faults" => apply_faults(&mut cfg.faults, val)?,
             "mobility" => apply_mobility(&mut cfg.mobility, val)?,
             "cells" => apply_cells(&mut cfg.cells, val)?,
             "sim" => {
@@ -802,6 +908,24 @@ fn apply_churn(c: &mut ChurnSpec, val: &Json) -> Result<(), ConfigError> {
     Ok(())
 }
 
+fn apply_faults(f: &mut FaultsSpec, val: &Json) -> Result<(), ConfigError> {
+    for (k, v) in val.as_obj().into_iter().flatten() {
+        match k.as_str() {
+            "link_outage_rate_hz" => f.link_outage_rate_hz = num(v, "faults.link_outage_rate_hz")?,
+            "max_retries" => f.max_retries = num(v, "faults.max_retries")? as usize,
+            "backoff_base_s" => f.backoff_base_s = num(v, "faults.backoff_base_s")?,
+            "backoff_jitter" => f.backoff_jitter = num(v, "faults.backoff_jitter")?,
+            "slot_fail_prob" => f.slot_fail_prob = num(v, "faults.slot_fail_prob")?,
+            "slot_repair_s" => f.slot_repair_s = num(v, "faults.slot_repair_s")?,
+            "burst_rate_per_round" => f.burst_rate_per_round = num(v, "faults.burst_rate_per_round")?,
+            "burst_radius_m" => f.burst_radius_m = num(v, "faults.burst_radius_m")?,
+            "timeout_factor" => f.timeout_factor = num(v, "faults.timeout_factor")?,
+            _ => return Err(ConfigError::UnknownKey(format!("faults.{k}"))),
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -869,6 +993,66 @@ mod tests {
             ExpConfig::from_toml_str("[churn]\nrate = 1\n"),
             Err(ConfigError::UnknownKey(_))
         ));
+    }
+
+    #[test]
+    fn faults_default_off_and_overrides_parse() {
+        let c = ExpConfig::paper();
+        assert!(!c.faults.enabled());
+        assert_eq!(c.faults.max_retries, 3);
+        c.validate().unwrap();
+        let c = ExpConfig::from_toml_str(
+            "[faults]\nlink_outage_rate_hz = 0.2\nmax_retries = 5\nbackoff_base_s = 0.1\n\
+             backoff_jitter = 0.3\nslot_fail_prob = 0.05\nslot_repair_s = 2\n\
+             burst_rate_per_round = 0.1\nburst_radius_m = 40\ntimeout_factor = 4\n",
+        )
+        .unwrap();
+        assert!(c.faults.enabled());
+        assert_eq!(c.faults.link_outage_rate_hz, 0.2);
+        assert_eq!(c.faults.max_retries, 5);
+        assert_eq!(c.faults.backoff_base_s, 0.1);
+        assert_eq!(c.faults.backoff_jitter, 0.3);
+        assert_eq!(c.faults.slot_fail_prob, 0.05);
+        assert_eq!(c.faults.slot_repair_s, 2.0);
+        assert_eq!(c.faults.burst_rate_per_round, 0.1);
+        assert_eq!(c.faults.burst_radius_m, 40.0);
+        assert_eq!(c.faults.timeout_factor, 4.0);
+        c.validate().unwrap();
+        assert!(matches!(
+            ExpConfig::from_toml_str("[faults]\noutage = 1\n"),
+            Err(ConfigError::UnknownKey(_))
+        ));
+    }
+
+    #[test]
+    fn faults_validation_bounds() {
+        let mut c = ExpConfig::paper();
+        c.faults.link_outage_rate_hz = -0.1;
+        assert!(c.validate().is_err());
+        c = ExpConfig::paper();
+        c.faults.max_retries = 17;
+        assert!(c.validate().is_err());
+        c = ExpConfig::paper();
+        c.faults.backoff_base_s = 0.0;
+        assert!(c.validate().is_err());
+        c = ExpConfig::paper();
+        c.faults.backoff_jitter = 1.5;
+        assert!(c.validate().is_err());
+        c = ExpConfig::paper();
+        c.faults.slot_fail_prob = 1.0; // a slot that always fails never drains
+        assert!(c.validate().is_err());
+        c = ExpConfig::paper();
+        c.faults.slot_repair_s = f64::NAN;
+        assert!(c.validate().is_err());
+        c = ExpConfig::paper();
+        c.faults.burst_rate_per_round = 1.1;
+        assert!(c.validate().is_err());
+        c = ExpConfig::paper();
+        c.faults.burst_radius_m = 0.0;
+        assert!(c.validate().is_err());
+        c = ExpConfig::paper();
+        c.faults.timeout_factor = f64::INFINITY;
+        assert!(c.validate().is_err());
     }
 
     #[test]

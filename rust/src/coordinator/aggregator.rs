@@ -138,6 +138,22 @@ impl Aggregator {
     pub fn merges(&self) -> u64 {
         self.merges
     }
+
+    /// Rebuild an aggregator from checkpointed state (`merges` is
+    /// private, so resume cannot construct this literally).
+    pub fn from_parts(
+        layers: Vec<LayerVersion>,
+        bytes_distributed: f64,
+        bytes_collected: f64,
+        merges: u64,
+    ) -> Self {
+        Self {
+            layers,
+            bytes_distributed,
+            bytes_collected,
+            merges,
+        }
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,471 @@
+//! `chaos-sweep`: scenario × fault-rate grid on the discrete-event
+//! fleet engine with the `[faults]` plane armed (DESIGN.md §17),
+//! emitting per-point retry/demotion/failover counts and the retry
+//! energy overhead into `BENCH_faults.json` for CI robustness-trend
+//! tracking (EXPERIMENTS.md).
+//!
+//! One knob drives all three injection planes: ladder value `r` sets
+//! the link-outage rate to `r` Hz, the slot-failure probability to
+//! `min(r, 0.95)`, and the burst rate to `r` per round, so a single
+//! `--rates` axis sweeps the whole fault surface.  Every scenario runs
+//! two variants per rate — `timeout-off` (stragglers ride the barrier)
+//! and `timeout-on` (sync demotion at [`TIMEOUT_FACTOR`]× the nominal
+//! round span) — and the `r = 0` point doubles as the fault-free
+//! baseline the CI validator compares energy against.
+//!
+//! Before any faulted point is trusted, the sweep runs both §17 gates
+//! per scenario: [`crate::exp::verify::verify_zero_fault_rate_is_noop`]
+//! (a dormant `[faults]` table is bitwise invisible) and
+//! [`crate::exp::verify::verify_checkpoint_resume_bit_identity`]
+//! (freeze mid-storm, round-trip the envelope, resume, compare bit for
+//! bit) — the latter doubling as the CI checkpoint/resume smoke.
+
+use crate::config::scenario::Scenario;
+use crate::config::FaultsSpec;
+use crate::coordinator::RoundRecord;
+use crate::exp::{self, DesSink, ExperimentBuilder, MetricsSink, Report, ReportMeta};
+use crate::util::benchkit::Bencher;
+use crate::util::json::{self, Json};
+use crate::util::pool;
+use crate::util::table::{fmt_joules, fmt_secs, Table};
+
+use super::engine::{DesConfig, DesRecord, Policy};
+
+/// Sync-demotion deadline factor used by the `timeout-on` variant.
+pub const TIMEOUT_FACTOR: f64 = 1.5;
+
+/// One (scenario, fault rate, timeout variant) chaos measurement.
+#[derive(Clone, Debug)]
+pub struct ChaosPoint {
+    pub scenario: String,
+    /// ladder value: link-outage rate [1/s]; the slot-failure
+    /// probability and burst rate derive from it (module docs)
+    pub rate_hz: f64,
+    pub slot_fail_prob: f64,
+    pub burst_rate_per_round: f64,
+    /// 0 = timeout-off variant, [`TIMEOUT_FACTOR`] = timeout-on
+    pub timeout_factor: f64,
+    pub n_devices: usize,
+    pub rounds: usize,
+    pub capacity: usize,
+    pub batch: usize,
+    pub wall_s: f64,
+    pub makespan_s: f64,
+    /// completed device-round merges
+    pub completed: usize,
+    pub dropped: u64,
+    /// merged cells that ran the degraded device-heavy cut
+    pub degraded: u64,
+    pub retries: u64,
+    pub timeout_demotions: u64,
+    pub failovers: u64,
+    pub slot_failures: u64,
+    pub slot_repairs: u64,
+    /// Eq.-11 server energy booked at dispatch [J]
+    pub energy_j: f64,
+    /// energy wasted in interrupted partial transfers [J] — the
+    /// robustness bill, on top of `energy_j`
+    pub retry_energy_j: f64,
+}
+
+/// Full chaos sweep result.
+#[derive(Clone, Debug)]
+pub struct ChaosSweep {
+    pub points: Vec<ChaosPoint>,
+    pub threads: usize,
+    pub seed: u64,
+}
+
+/// Ladder value → full `[faults]` table (module docs).
+fn spec_for(rate: f64, timeout_factor: f64) -> FaultsSpec {
+    FaultsSpec {
+        link_outage_rate_hz: rate,
+        slot_fail_prob: rate.min(0.95),
+        burst_rate_per_round: rate,
+        timeout_factor,
+        ..Default::default()
+    }
+}
+
+/// Run the grid.  `rates` is the fault-rate ladder (a `0` entry gives
+/// the fault-free baseline); `rounds` overrides each preset's round
+/// count; `capacity`/`batch` parameterize the server queues.
+#[allow(clippy::too_many_arguments)]
+pub fn chaos_sweep(
+    scenarios: &[Scenario],
+    rates: &[f64],
+    n_devices: usize,
+    rounds: Option<usize>,
+    capacity: usize,
+    batch: usize,
+    threads: usize,
+    seed: u64,
+    bench: &mut Bencher,
+) -> anyhow::Result<ChaosSweep> {
+    anyhow::ensure!(!scenarios.is_empty(), "no scenarios selected");
+    anyhow::ensure!(!rates.is_empty(), "no fault rates selected");
+    anyhow::ensure!(n_devices > 0, "device count must be >= 1");
+    anyhow::ensure!(capacity >= 1, "server capacity must be >= 1");
+    anyhow::ensure!(batch >= 1, "server batch must be >= 1");
+    for &r in rates {
+        anyhow::ensure!(
+            r.is_finite() && r >= 0.0,
+            "fault rate must be finite and >= 0, got {r}"
+        );
+    }
+
+    let mut grid: Vec<(Scenario, f64, f64)> = Vec::new();
+    for sc in scenarios {
+        for &rate in rates {
+            for tf in [0.0, TIMEOUT_FACTOR] {
+                grid.push((*sc, rate, tf));
+            }
+        }
+    }
+
+    let results: Vec<anyhow::Result<ChaosPoint>> =
+        pool::par_map_indexed(threads, &grid, |_, &(sc, rate, tf)| {
+            run_point(sc, rate, tf, n_devices, rounds, capacity, batch, seed)
+        });
+    let mut points = Vec::with_capacity(results.len());
+    for r in results {
+        points.push(r?);
+    }
+    for p in &points {
+        let rate = p.completed as f64 / p.wall_s.max(1e-9);
+        bench.record_once(
+            &format!(
+                "{}_r{}_t{}",
+                p.scenario,
+                p.rate_hz,
+                if p.timeout_factor > 0.0 { "on" } else { "off" }
+            ),
+            p.wall_s,
+            Some((rate, "device-round")),
+        );
+    }
+
+    // §17 gates, per scenario, at the ladder's harshest point: the
+    // dormant plane must be bitwise invisible, and a checkpoint taken
+    // mid-storm must resume to the uninterrupted run bit for bit
+    let max_rate = rates.iter().cloned().fold(0.0_f64, f64::max);
+    let des = DesConfig {
+        policy: Policy::Sync,
+        capacity,
+        batch,
+    };
+    for sc in scenarios {
+        let mut cfg = sc.config(n_devices, seed)?;
+        if let Some(r) = rounds {
+            cfg.workload.rounds = r;
+        }
+        cfg.faults = spec_for(max_rate, TIMEOUT_FACTOR);
+        exp::verify::verify_zero_fault_rate_is_noop(&cfg, sc.state, des)?;
+        // freeze halfway through this scenario's shortest observed
+        // makespan — deterministic, and guaranteed mid-run
+        let t_s = 0.5
+            * points
+                .iter()
+                .filter(|p| p.scenario == sc.name)
+                .map(|p| p.makespan_s)
+                .fold(f64::INFINITY, f64::min);
+        exp::verify::verify_checkpoint_resume_bit_identity(&cfg, sc.state, des, t_s)?;
+    }
+
+    Ok(ChaosSweep {
+        points,
+        threads,
+        seed,
+    })
+}
+
+/// [`DesSink`] plus a degraded-cut tally (not in the run-level stats).
+struct ChaosSink {
+    des: DesSink,
+    degraded: u64,
+}
+
+impl MetricsSink for ChaosSink {
+    fn on_record(&mut self, _rec: &RoundRecord) {}
+
+    fn on_des_record(&mut self, rec: &DesRecord) {
+        self.des.on_des_record(rec);
+        if rec.degraded {
+            self.degraded += 1;
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_point(
+    sc: Scenario,
+    rate: f64,
+    timeout_factor: f64,
+    n: usize,
+    rounds: Option<usize>,
+    capacity: usize,
+    batch: usize,
+    seed: u64,
+) -> anyhow::Result<ChaosPoint> {
+    let spec = spec_for(rate, timeout_factor);
+    let mut builder = ExperimentBuilder::preset(sc.name)
+        .devices(n)
+        .seed(seed)
+        .faults(spec)
+        .des(DesConfig {
+            policy: Policy::Sync,
+            capacity,
+            batch,
+        });
+    if let Some(r) = rounds {
+        builder = builder.rounds(r);
+    }
+    let experiment = builder.build()?;
+    let n_rounds = experiment.config().workload.rounds;
+    let spec = experiment.config().faults.clone();
+
+    let mut sink = ChaosSink {
+        des: DesSink::default(),
+        degraded: 0,
+    };
+    let t0 = std::time::Instant::now();
+    let outcome = experiment.run_into(&mut sink)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let des = outcome
+        .des
+        .ok_or_else(|| anyhow::anyhow!("event engine must report DES stats"))?;
+
+    Ok(ChaosPoint {
+        scenario: sc.name.to_string(),
+        rate_hz: rate,
+        slot_fail_prob: spec.slot_fail_prob,
+        burst_rate_per_round: spec.burst_rate_per_round,
+        timeout_factor,
+        n_devices: n,
+        rounds: n_rounds,
+        capacity,
+        batch,
+        wall_s: wall,
+        makespan_s: des.makespan_s,
+        completed: outcome.cells,
+        dropped: des.dropped,
+        degraded: sink.degraded,
+        retries: des.retries,
+        timeout_demotions: des.timeout_demotions,
+        failovers: des.failovers,
+        slot_failures: des.slot_failures,
+        slot_repairs: des.slot_repairs,
+        energy_j: des.energy_spent_j,
+        retry_energy_j: des.retry_energy_j,
+    })
+}
+
+impl ChaosSweep {
+    /// ASCII summary table (scenario × rate × timeout variant).
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            &format!(
+                "chaos-sweep — fault-injection grid ({} workers, seed {})",
+                self.threads, self.seed
+            ),
+            &[
+                "scenario",
+                "rate",
+                "timeout",
+                "merged",
+                "dropped",
+                "degraded",
+                "retries",
+                "demoted",
+                "failover",
+                "slotfail",
+                "makespan",
+                "energy",
+                "retry E",
+            ],
+        );
+        for p in &self.points {
+            t.row(vec![
+                p.scenario.clone(),
+                format!("{}", p.rate_hz),
+                if p.timeout_factor > 0.0 { "on" } else { "off" }.to_string(),
+                p.completed.to_string(),
+                p.dropped.to_string(),
+                p.degraded.to_string(),
+                p.retries.to_string(),
+                p.timeout_demotions.to_string(),
+                p.failovers.to_string(),
+                p.slot_failures.to_string(),
+                fmt_secs(p.makespan_s),
+                fmt_joules(p.energy_j),
+                fmt_joules(p.retry_energy_j),
+            ]);
+        }
+        t.render()
+    }
+
+    /// Emitter payload (the `data` member of the report envelope).
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("schema", Json::Str("edgesplit/chaos-sweep/v1".into())),
+            // string, not number: u64 seeds above 2^53 would lose
+            // precision through the f64-backed Json::Num
+            ("seed", Json::Str(self.seed.to_string())),
+            ("threads", Json::Num(self.threads as f64)),
+            (
+                "points",
+                Json::Arr(self.points.iter().map(point_json).collect()),
+            ),
+        ])
+    }
+
+    /// The enveloped report (`BENCH_faults.json`): shared
+    /// `schema_version`/`meta` wrapper around [`ChaosSweep::to_json`].
+    pub fn report(&self, scenario_sel: &str, rounds: Option<usize>) -> Report {
+        Report::new(
+            ReportMeta {
+                kind: "chaos-sweep",
+                preset: scenario_sel.to_string(),
+                seed: self.seed,
+                threads: self.threads,
+                rounds,
+            },
+            self.to_json(),
+            self.render(),
+        )
+    }
+}
+
+fn point_json(p: &ChaosPoint) -> Json {
+    json::obj(vec![
+        ("scenario", Json::Str(p.scenario.clone())),
+        ("rate_hz", Json::Num(p.rate_hz)),
+        ("slot_fail_prob", Json::Num(p.slot_fail_prob)),
+        ("burst_rate_per_round", Json::Num(p.burst_rate_per_round)),
+        ("timeout_factor", Json::Num(p.timeout_factor)),
+        ("n_devices", Json::Num(p.n_devices as f64)),
+        ("rounds", Json::Num(p.rounds as f64)),
+        ("capacity", Json::Num(p.capacity as f64)),
+        ("batch", Json::Num(p.batch as f64)),
+        ("wall_s", Json::Num(p.wall_s)),
+        ("makespan_s", Json::Num(p.makespan_s)),
+        ("completed", Json::Num(p.completed as f64)),
+        ("dropped", Json::Num(p.dropped as f64)),
+        ("degraded", Json::Num(p.degraded as f64)),
+        ("retries", Json::Num(p.retries as f64)),
+        ("timeout_demotions", Json::Num(p.timeout_demotions as f64)),
+        ("failovers", Json::Num(p.failovers as f64)),
+        ("slot_failures", Json::Num(p.slot_failures as f64)),
+        ("slot_repairs", Json::Num(p.slot_repairs as f64)),
+        ("energy_j", Json::Num(p.energy_j)),
+        ("retry_energy_j", Json::Num(p.retry_energy_j)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::scenario;
+
+    #[test]
+    fn ladder_produces_points_gates_pass_and_json_parses() {
+        let mut bench = Bencher::new("chaos-sweep-test");
+        let sweep = chaos_sweep(
+            &[scenario::DENSE_URBAN],
+            &[0.0, 0.5],
+            6,
+            Some(2),
+            2,
+            1,
+            4,
+            7,
+            &mut bench,
+        )
+        .unwrap();
+        // 2 rates × 2 timeout variants
+        assert_eq!(sweep.points.len(), 4);
+        assert_eq!(bench.results().len(), 4);
+        let baseline = sweep
+            .points
+            .iter()
+            .find(|p| p.rate_hz == 0.0 && p.timeout_factor == 0.0)
+            .unwrap();
+        assert_eq!(baseline.retries, 0);
+        assert_eq!(baseline.retry_energy_j, 0.0);
+        let storm = sweep
+            .points
+            .iter()
+            .find(|p| p.rate_hz == 0.5 && p.timeout_factor == 0.0)
+            .unwrap();
+        assert!(storm.retries > 0, "rate 0.5 must trigger retransmissions");
+        assert!(storm.retry_energy_j > 0.0);
+        let js = sweep.to_json().to_string();
+        assert!(js.contains("chaos-sweep/v1"));
+        assert!(js.contains("retry_energy_j"));
+        assert!(js.contains("timeout_demotions"));
+        assert!(Json::parse(&js).is_ok());
+    }
+
+    #[test]
+    fn sweep_is_deterministic_across_thread_counts() {
+        let run = |threads: usize| {
+            let mut bench = Bencher::new("chaos-det");
+            chaos_sweep(
+                &[scenario::MOBILE_VEHICULAR],
+                &[0.0, 0.1],
+                6,
+                Some(2),
+                2,
+                1,
+                threads,
+                11,
+                &mut bench,
+            )
+            .unwrap()
+        };
+        let a = run(1);
+        let b = run(8);
+        assert_eq!(a.points.len(), b.points.len());
+        for (x, y) in a.points.iter().zip(&b.points) {
+            assert_eq!(x.rate_hz.to_bits(), y.rate_hz.to_bits());
+            assert_eq!(x.makespan_s.to_bits(), y.makespan_s.to_bits());
+            assert_eq!(x.retries, y.retries);
+            assert_eq!(x.timeout_demotions, y.timeout_demotions);
+            assert_eq!(x.retry_energy_j.to_bits(), y.retry_energy_j.to_bits());
+            assert_eq!(x.energy_j.to_bits(), y.energy_j.to_bits());
+        }
+    }
+
+    #[test]
+    fn report_wraps_payload_in_versioned_envelope() {
+        let mut bench = Bencher::new("chaos-envelope");
+        let sweep = chaos_sweep(
+            &[scenario::DENSE_URBAN],
+            &[0.1],
+            4,
+            Some(1),
+            2,
+            1,
+            2,
+            3,
+            &mut bench,
+        )
+        .unwrap();
+        let j = sweep.report("dense-urban", Some(1)).to_json();
+        assert_eq!(j.get("schema_version").and_then(Json::as_usize), Some(1));
+        assert_eq!(j.get("kind").and_then(Json::as_str), Some("chaos-sweep"));
+        assert!(j.at(&["data", "points"]).is_some());
+    }
+
+    #[test]
+    fn rejects_degenerate_input() {
+        let mut bench = Bencher::new("chaos-bad");
+        let sc = [scenario::DENSE_URBAN];
+        assert!(chaos_sweep(&[], &[0.1], 4, None, 1, 1, 1, 0, &mut bench).is_err());
+        assert!(chaos_sweep(&sc, &[], 4, None, 1, 1, 1, 0, &mut bench).is_err());
+        assert!(chaos_sweep(&sc, &[0.1], 0, None, 1, 1, 1, 0, &mut bench).is_err());
+        assert!(chaos_sweep(&sc, &[-0.1], 4, None, 1, 1, 1, 0, &mut bench).is_err());
+        assert!(chaos_sweep(&sc, &[f64::NAN], 4, None, 1, 1, 1, 0, &mut bench).is_err());
+        assert!(chaos_sweep(&sc, &[0.1], 4, None, 0, 1, 1, 0, &mut bench).is_err());
+    }
+}

@@ -57,6 +57,18 @@ impl ChurnTrace {
             None
         }
     }
+
+    /// Generator state for checkpoint serialization (rates come back
+    /// from the resuming run's config).
+    pub fn rng_state(&self) -> ([u64; 4], Option<f64>) {
+        self.rng.state()
+    }
+
+    /// Replace the generator state — the checkpoint/resume inverse of
+    /// [`ChurnTrace::rng_state`]; the trace continues bit-identically.
+    pub fn restore_rng(&mut self, s: [u64; 4], gauss_spare: Option<f64>) {
+        self.rng = Rng::from_state(s, gauss_spare);
+    }
 }
 
 #[cfg(test)]

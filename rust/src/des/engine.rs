@@ -47,18 +47,54 @@
 //! 0 and the event timeline is bit-identical to the pre-cell engine
 //! (the correctness anchor, property-tested across every preset by
 //! `exp::verify::verify_single_cell_bit_identity`).
+//!
+//! ## Faults & recovery (DESIGN.md §17)
+//!
+//! With `[faults]` enabled a [`FaultProcess`] injects link outages,
+//! server slot failures, and correlated regional bursts, all from
+//! counter-based streams pure in their `(device, round, attempt)` /
+//! `(cell, seq)` / `(round)` coordinates.  Recovery runs on the event
+//! loop: interrupted transfers retry with exponential backoff + jitter
+//! (the wasted partial's energy lands in `retry_energy_j`), exhausted
+//! retry budgets drop the cell, sync rounds optionally demote
+//! stragglers at `timeout_factor ×` the semi-sync deadline formula,
+//! and burst-struck launches fail over to the hysteresis runner-up
+//! cell — or degrade to the device-heavy cut when no alternate site
+//! exists.  When `[faults]` is absent or all rates are zero the fault
+//! plane is never constructed and the event stream is bit-identical
+//! to a build without this module (the zero-perturbation anchor,
+//! property-tested by `exp::verify::verify_zero_fault_rate_is_noop`).
+//!
+//! ## Checkpoint / resume (DESIGN.md §17)
+//!
+//! [`DesEngine::run_until`] stops at the first event past a virtual
+//! instant and returns a [`SimSnapshot`] — the full mutable simulation
+//! state (event queue, per-cell queues and aggregators, churn RNG
+//! cursors, fault counters) in a serializable form.  Analytic
+//! [`RoundRecord`]s are *not* stored: they are recomputed on resume
+//! through the same pure `Scheduler::device_round`, which is what
+//! keeps the envelope small and `resume(checkpoint(t))` bitwise
+//! identical to the uninterrupted run (the gate in
+//! `exp::verify::verify_checkpoint_resume_bit_identity`).
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
-use crate::coordinator::{Aggregator, RoundRecord, Scheduler};
+use crate::coordinator::aggregator::{LayerVersion, Owner};
+use crate::coordinator::{Aggregator, RoundRecord, Scheduler, Strategy};
 use crate::net::CellGrid;
 use crate::obs::{self, trace};
 use crate::util::stats;
 
 use super::churn::ChurnTrace;
-use super::event::{EventKind, EventQueue};
-use super::server::{Batch, Job, ServerQueue, ServerStats};
+use super::event::{EventKind, EventQueue, SimTime};
+use super::faults::{Dir, FaultProcess, Outage};
+use super::server::{Batch, Job, ServerQueue, ServerQueueState, ServerStats};
+
+/// dBm → watts, for pricing wasted partial retransmissions.
+fn dbm_to_w(dbm: f64) -> f64 {
+    10f64.powf((dbm - 30.0) / 10.0)
+}
 
 /// Aggregation policy for the fleet timeline.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -121,6 +157,9 @@ pub struct DesRecord {
     pub staleness: usize,
     /// staleness weight applied at merge (1 under sync/semi-sync)
     pub weight: f64,
+    /// the cell ran the degraded device-heavy cut (burst failover with
+    /// no alternate cell site, DESIGN.md §17)
+    pub degraded: bool,
 }
 
 impl DesRecord {
@@ -177,6 +216,22 @@ pub struct DesOutcome {
     pub energy_spent_j: f64,
     /// the cloud (inter-server) aggregation level — sees every merge
     pub aggregator: Aggregator,
+    /// link retransmission attempts scheduled (uplink + downlink)
+    pub retries: u64,
+    /// sync-policy stragglers demoted by the fault timeout
+    pub timeout_demotions: u64,
+    /// burst-struck launches rerouted to the runner-up cell or
+    /// degraded to the device-heavy cut
+    pub failovers: u64,
+    /// capacity-slot failures hit at batch dispatch
+    pub slot_failures: u64,
+    /// slot repairs completed (== failures today; kept separate so the
+    /// telemetry schema survives a future partial-repair model)
+    pub slot_repairs: u64,
+    /// energy wasted in interrupted partial transfers [J] — *extra* on
+    /// top of the analytic records' one full transmission each, kept
+    /// out of `energy_spent_j` (which is Eq.-11 server compute)
+    pub retry_energy_j: f64,
 }
 
 /// Fleet-level [`ServerStats`] across per-cell queues.  The
@@ -203,6 +258,160 @@ fn merged_server_stats(per: &[ServerStats]) -> ServerStats {
     }
 }
 
+/// Checkpointed state of one device (presence + churn RNG cursor).
+#[derive(Clone, Debug)]
+pub struct DeviceSnap {
+    pub present: bool,
+    pub next_round: usize,
+    pub rng: [u64; 4],
+    pub gauss_spare: Option<f64>,
+}
+
+/// Checkpointed in-flight cell.  The analytic record and its phase
+/// timing are recomputed on resume from the pure scheduler.
+#[derive(Clone, Debug)]
+pub struct InflightSnap {
+    pub device: usize,
+    pub round: usize,
+    pub degraded: bool,
+    pub cell: usize,
+    pub start_s: f64,
+    pub wait_s: f64,
+    pub base_version: usize,
+}
+
+/// Checkpointed completed record — only the DES observables; the
+/// analytic [`RoundRecord`] is recomputed on resume.
+#[derive(Clone, Debug)]
+pub struct RecordSnap {
+    pub device: usize,
+    pub round: usize,
+    pub degraded: bool,
+    pub start_s: f64,
+    pub finish_s: f64,
+    pub wait_s: f64,
+    pub staleness: usize,
+    pub weight: f64,
+}
+
+/// Checkpointed [`Aggregator`] state.  Layer owners encode as `u64`
+/// with `Owner::Server` = `u64::MAX` (a device index cannot reach it).
+#[derive(Clone, Debug)]
+pub struct AggSnap {
+    /// per-layer `(owner, round, updates)`
+    pub layers: Vec<(u64, usize, u64)>,
+    pub bytes_distributed: f64,
+    pub bytes_collected: f64,
+    pub merges: u64,
+}
+
+fn agg_snapshot(a: &Aggregator) -> AggSnap {
+    AggSnap {
+        layers: a
+            .layers
+            .iter()
+            .map(|l| {
+                let owner = match l.owner {
+                    Owner::Server => u64::MAX,
+                    Owner::Device(d) => d as u64,
+                };
+                (owner, l.round, l.updates)
+            })
+            .collect(),
+        bytes_distributed: a.bytes_distributed,
+        bytes_collected: a.bytes_collected,
+        merges: a.merges(),
+    }
+}
+
+fn agg_restore(s: &AggSnap) -> Aggregator {
+    Aggregator::from_parts(
+        s.layers
+            .iter()
+            .map(|&(owner, round, updates)| LayerVersion {
+                owner: if owner == u64::MAX {
+                    Owner::Server
+                } else {
+                    Owner::Device(owner as usize)
+                },
+                round,
+                updates,
+            })
+            .collect(),
+        s.bytes_distributed,
+        s.bytes_collected,
+        s.merges,
+    )
+}
+
+/// The full mutable state of a paused simulation (DESIGN.md §17) — in
+/// concert with `(config, seed)` it determines the rest of the run
+/// exactly.  Everything derivable from the config (cell grid,
+/// association traces, analytic records, phase timings) is recomputed
+/// on resume rather than stored.  `exp::checkpoint` serializes this to
+/// the versioned text envelope.
+#[derive(Clone, Debug)]
+pub struct SimSnapshot {
+    /// fingerprint of `(config, strategy, DES knobs)` — resume refuses
+    /// a snapshot taken under a different experiment
+    pub fingerprint: u64,
+    pub now_s: f64,
+    /// next event-queue insertion sequence number
+    pub seq: u64,
+    /// pending events as `(t, seq, kind)`, sorted by `(t, seq)`
+    pub events: Vec<(f64, u64, EventKind)>,
+    /// events processed so far (runaway-budget continuity)
+    pub processed: u64,
+    pub servers: Vec<ServerQueueState>,
+    pub devices: Vec<DeviceSnap>,
+    pub actives: Vec<Option<usize>>,
+    pub inflight: Vec<InflightSnap>,
+    pub agg: AggSnap,
+    pub cell_aggs: Vec<AggSnap>,
+    pub version: usize,
+    pub records: Vec<RecordSnap>,
+    pub barrier_round: usize,
+    pub barrier_outstanding: usize,
+    pub barrier_open: bool,
+    pub remaining_budget: usize,
+    pub launched: u64,
+    pub dropped: u64,
+    pub departures: u64,
+    pub arrivals: u64,
+    pub peak_staleness: usize,
+    pub makespan_s: f64,
+    pub energy_by_cell: Vec<f64>,
+    pub dispatch_seqs: Vec<u64>,
+    pub retries: u64,
+    pub timeout_demotions: u64,
+    pub failovers: u64,
+    pub slot_failures: u64,
+    pub slot_repairs: u64,
+    pub retry_energy_j: f64,
+}
+
+/// Result of [`DesEngine::run_until`] / [`DesEngine::resume_until`].
+pub enum RunState {
+    /// the requested instant was reached with events still pending
+    Checkpoint(Box<SimSnapshot>),
+    /// the timeline drained before the requested instant
+    Done(Box<DesOutcome>),
+}
+
+/// Fingerprint of everything that determines the event stream, so
+/// resume can refuse a checkpoint from a different experiment.
+/// FNV-1a over the `Debug` rendering — cheap, collision-safe enough
+/// for a sanity gate, and stable for a given build.
+fn config_fingerprint(sched: &Scheduler, des: DesConfig) -> u64 {
+    let repr = format!("{:?}|{:?}|{:?}", sched.cfg, sched.strategy, des);
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in repr.as_bytes() {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0100_0000_01b3);
+    }
+    h
+}
+
 /// Discrete-event engine over a [`Scheduler`]'s config and cost model.
 /// Owns the scheduler through an `Arc` (shared with the caller and the
 /// `exp::Engine` wrapper) — no borrowed lifetime, so the engine can
@@ -225,7 +434,32 @@ impl DesEngine {
     /// Run the simulation to completion.  Strictly serial and
     /// deterministic; see the module docs for why.
     pub fn run(&self) -> DesOutcome {
-        Sim::new(&self.sched, self.des).run()
+        let mut sim = Sim::new(&self.sched, self.des);
+        sim.prologue();
+        while sim.step() {}
+        sim.finish()
+    }
+
+    /// Run until the first pending event *past* virtual time `t_s` and
+    /// checkpoint there, or to completion if the timeline drains first.
+    pub fn run_until(&self, t_s: f64) -> RunState {
+        let mut sim = Sim::new(&self.sched, self.des);
+        sim.prologue();
+        sim.advance(t_s)
+    }
+
+    /// Continue a checkpointed run to completion.  Bit-identical to
+    /// the uninterrupted run — the checkpoint/resume anchor.
+    pub fn resume(&self, snap: &SimSnapshot) -> DesOutcome {
+        let mut sim = Sim::restore(&self.sched, self.des, snap);
+        while sim.step() {}
+        sim.finish()
+    }
+
+    /// Continue a checkpointed run until `t_s`, re-checkpointing there
+    /// (checkpoints compose: pausing twice equals pausing once).
+    pub fn resume_until(&self, snap: &SimSnapshot, t_s: f64) -> RunState {
+        Sim::restore(&self.sched, self.des, snap).advance(t_s)
     }
 }
 
@@ -246,8 +480,14 @@ struct Inflight {
     wait_s: f64,
     /// global merge version when the cell started (async staleness base)
     base_version: usize,
+    up_s: f64,
     down_s: f64,
     bp_s: f64,
+    /// the cell queue this job routes to — the serving cell, unless a
+    /// burst failover rerouted the launch (DESIGN.md §17)
+    cell: usize,
+    /// running the degraded device-heavy cut (single-cell burst)
+    degraded: bool,
 }
 
 struct DeviceState {
@@ -297,6 +537,24 @@ struct Sim<'a> {
     /// includes work later wasted on cancelled stragglers, unlike the
     /// merged records.  The global figure is the exact sum.
     energy_by_cell: Vec<f64>,
+    /// events processed (runaway budget + obs shard hint); checkpoint
+    /// carries it so the budget is continuous across resume
+    processed: u64,
+    /// fault sampler — `None` whenever `[faults]` is absent or every
+    /// injection rate is zero, in which case no fault branch below can
+    /// perturb the timeline (the zero-perturbation contract)
+    faults: Option<FaultProcess>,
+    /// per-cell batch dispatch counter — the slot-failure stream's
+    /// `seq` coordinate (only advanced when the fault plane is live)
+    dispatch_seqs: Vec<u64>,
+    /// lazily built `Strategy::DeviceOnly` scheduler for degraded cuts
+    degraded_sched: Option<Scheduler>,
+    retries: u64,
+    timeout_demotions: u64,
+    failovers: u64,
+    slot_failures: u64,
+    slot_repairs: u64,
+    retry_energy_j: f64,
 }
 
 impl<'a> Sim<'a> {
@@ -329,6 +587,12 @@ impl<'a> Sim<'a> {
             .map(|_| Aggregator::new(sched.cost_model.n_layers()))
             .collect();
         let energy_by_cell = vec![0.0; cells.count()];
+        let faults = if sched.cfg.faults.enabled() {
+            Some(FaultProcess::new(sched.cfg.seed, &sched.cfg.faults, n))
+        } else {
+            None
+        };
+        let dispatch_seqs = vec![0u64; cells.count()];
         Sim {
             sched,
             des,
@@ -355,10 +619,189 @@ impl<'a> Sim<'a> {
             peak_staleness: 0,
             makespan_s: 0.0,
             energy_by_cell,
+            processed: 0,
+            faults,
+            dispatch_seqs,
+            degraded_sched: None,
+            retries: 0,
+            timeout_demotions: 0,
+            failovers: 0,
+            slot_failures: 0,
+            slot_repairs: 0,
+            retry_energy_j: 0.0,
         }
     }
 
-    fn run(mut self) -> DesOutcome {
+    /// Rebuild a paused simulation from a checkpoint.  Everything
+    /// config-derived comes back through [`Sim::new`]; the snapshot
+    /// overwrites the mutable state, and in-flight/completed analytic
+    /// records are recomputed through the pure scheduler.
+    fn restore(sched: &'a Scheduler, des: DesConfig, snap: &SimSnapshot) -> Sim<'a> {
+        assert_eq!(
+            snap.fingerprint,
+            config_fingerprint(sched, des),
+            "checkpoint was taken under a different experiment config"
+        );
+        let mut sim = Sim::new(sched, des);
+        sim.q = EventQueue::restore(
+            SimTime::new(snap.now_s),
+            snap.seq,
+            snap.events
+                .iter()
+                .map(|(t, s, k)| (SimTime::new(*t), *s, k.clone()))
+                .collect(),
+        );
+        sim.processed = snap.processed;
+        sim.servers = snap
+            .servers
+            .iter()
+            .map(|st| ServerQueue::restore(des.capacity, des.batch, st.clone()))
+            .collect();
+        for (d, ds) in sim.devices.iter_mut().zip(&snap.devices) {
+            d.present = ds.present;
+            d.next_round = ds.next_round;
+            d.churn.restore_rng(ds.rng, ds.gauss_spare);
+        }
+        sim.actives = snap.actives.clone();
+        sim.agg = agg_restore(&snap.agg);
+        sim.cell_aggs = snap.cell_aggs.iter().map(agg_restore).collect();
+        sim.version = snap.version;
+        sim.barrier_round = snap.barrier_round;
+        sim.barrier_outstanding = snap.barrier_outstanding;
+        sim.barrier_open = snap.barrier_open;
+        sim.remaining_budget = snap.remaining_budget;
+        sim.launched = snap.launched;
+        sim.dropped = snap.dropped;
+        sim.departures = snap.departures;
+        sim.arrivals = snap.arrivals;
+        sim.peak_staleness = snap.peak_staleness;
+        sim.makespan_s = snap.makespan_s;
+        sim.energy_by_cell = snap.energy_by_cell.clone();
+        sim.dispatch_seqs = snap.dispatch_seqs.clone();
+        sim.retries = snap.retries;
+        sim.timeout_demotions = snap.timeout_demotions;
+        sim.failovers = snap.failovers;
+        sim.slot_failures = snap.slot_failures;
+        sim.slot_repairs = snap.slot_repairs;
+        sim.retry_energy_j = snap.retry_energy_j;
+        for s in &snap.inflight {
+            let rec = if s.degraded {
+                sim.degraded_record(s.round, s.device)
+            } else {
+                sim.sched.device_round(s.round, s.device)
+            };
+            let timing = sim.timing(&rec);
+            sim.inflight.insert(
+                (s.device, s.round),
+                Inflight {
+                    record: rec,
+                    start_s: s.start_s,
+                    wait_s: s.wait_s,
+                    base_version: s.base_version,
+                    up_s: timing.up_s,
+                    down_s: timing.down_s,
+                    bp_s: timing.bp_s,
+                    cell: s.cell,
+                    degraded: s.degraded,
+                },
+            );
+        }
+        for s in &snap.records {
+            let rec = if s.degraded {
+                sim.degraded_record(s.round, s.device)
+            } else {
+                sim.sched.device_round(s.round, s.device)
+            };
+            sim.records.push(DesRecord {
+                record: rec,
+                start_s: s.start_s,
+                finish_s: s.finish_s,
+                wait_s: s.wait_s,
+                staleness: s.staleness,
+                weight: s.weight,
+                degraded: s.degraded,
+            });
+        }
+        sim
+    }
+
+    /// Freeze the full mutable state (see [`SimSnapshot`]).
+    fn snapshot(&self) -> SimSnapshot {
+        let (now, seq, events) = self.q.snapshot();
+        SimSnapshot {
+            fingerprint: config_fingerprint(self.sched, self.des),
+            now_s: now.secs(),
+            seq,
+            events: events.into_iter().map(|(t, s, k)| (t.secs(), s, k)).collect(),
+            processed: self.processed,
+            servers: self.servers.iter().map(|s| s.snapshot()).collect(),
+            devices: self
+                .devices
+                .iter()
+                .map(|d| {
+                    let (rng, gauss_spare) = d.churn.rng_state();
+                    DeviceSnap {
+                        present: d.present,
+                        next_round: d.next_round,
+                        rng,
+                        gauss_spare,
+                    }
+                })
+                .collect(),
+            actives: self.actives.clone(),
+            inflight: self
+                .inflight
+                .iter()
+                .map(|(&(device, round), inf)| InflightSnap {
+                    device,
+                    round,
+                    degraded: inf.degraded,
+                    cell: inf.cell,
+                    start_s: inf.start_s,
+                    wait_s: inf.wait_s,
+                    base_version: inf.base_version,
+                })
+                .collect(),
+            agg: agg_snapshot(&self.agg),
+            cell_aggs: self.cell_aggs.iter().map(agg_snapshot).collect(),
+            version: self.version,
+            records: self
+                .records
+                .iter()
+                .map(|r| RecordSnap {
+                    device: r.record.device_idx,
+                    round: r.record.round,
+                    degraded: r.degraded,
+                    start_s: r.start_s,
+                    finish_s: r.finish_s,
+                    wait_s: r.wait_s,
+                    staleness: r.staleness,
+                    weight: r.weight,
+                })
+                .collect(),
+            barrier_round: self.barrier_round,
+            barrier_outstanding: self.barrier_outstanding,
+            barrier_open: self.barrier_open,
+            remaining_budget: self.remaining_budget,
+            launched: self.launched,
+            dropped: self.dropped,
+            departures: self.departures,
+            arrivals: self.arrivals,
+            peak_staleness: self.peak_staleness,
+            makespan_s: self.makespan_s,
+            energy_by_cell: self.energy_by_cell.clone(),
+            dispatch_seqs: self.dispatch_seqs.clone(),
+            retries: self.retries,
+            timeout_demotions: self.timeout_demotions,
+            failovers: self.failovers,
+            slot_failures: self.slot_failures,
+            slot_repairs: self.slot_repairs,
+            retry_energy_j: self.retry_energy_j,
+        }
+    }
+
+    /// Seed the timeline: churn departures + the first round/launches.
+    fn prologue(&mut self) {
         // seed churn: every device starts present; its first departure
         // (if it churns at all) comes from its private stream
         for i in 0..self.devices.len() {
@@ -374,39 +817,70 @@ impl<'a> Sim<'a> {
                 }
             }
         }
+    }
 
-        let mut processed: u64 = 0;
-        while let Some((t, ev)) = self.q.pop() {
-            processed += 1;
-            assert!(
-                processed < 50_000_000,
-                "DES event budget exceeded — runaway simulation"
-            );
-            self.makespan_s = t.secs();
-            // observation only (DESIGN.md §16): the pop already
-            // happened, the queue depth is whatever remains
-            obs::metrics().des_events.inc(processed as usize);
-            obs::metrics().des_queue_depth.observe(self.q.len() as u64);
-            match ev {
-                EventKind::Arrive { device } => self.on_arrive(device),
-                EventKind::Depart { device } => self.on_depart(device),
-                EventKind::UplinkDone { device, round } => self.on_uplink_done(device, round),
-                EventKind::ServerBatchDone { cell, jobs } => {
-                    self.on_server_batch_done(cell, jobs)
-                }
-                EventKind::MergeReady { device, round } => self.on_merge_ready(device, round),
-                EventKind::Deadline { round } => self.on_deadline(round),
-            }
-            if let Policy::Async = self.des.policy {
-                if self.remaining_budget == 0 && self.inflight.is_empty() {
-                    self.done = true;
-                }
-            }
-            if self.done {
-                break;
+    /// Pop and process one event.  Returns `false` once the timeline
+    /// is exhausted or the run completed.
+    fn step(&mut self) -> bool {
+        let Some((t, ev)) = self.q.pop() else {
+            return false;
+        };
+        self.processed += 1;
+        assert!(
+            self.processed < 50_000_000,
+            "DES event budget exceeded — runaway simulation"
+        );
+        self.makespan_s = t.secs();
+        // observation only (DESIGN.md §16): the pop already
+        // happened, the queue depth is whatever remains
+        obs::metrics().des_events.inc(self.processed as usize);
+        obs::metrics().des_queue_depth.observe(self.q.len() as u64);
+        match ev {
+            EventKind::Arrive { device } => self.on_arrive(device),
+            EventKind::Depart { device } => self.on_depart(device),
+            EventKind::UplinkDone { device, round } => self.on_uplink_done(device, round),
+            EventKind::ServerBatchDone { cell, jobs } => self.on_server_batch_done(cell, jobs),
+            EventKind::MergeReady { device, round } => self.on_merge_ready(device, round),
+            EventKind::Deadline { round } => self.on_deadline(round),
+            EventKind::RetryUplink {
+                device,
+                round,
+                attempt,
+            } => self.on_retry(Dir::Up, device, round, attempt),
+            EventKind::RetryDownlink {
+                device,
+                round,
+                attempt,
+            } => self.on_retry(Dir::Down, device, round, attempt),
+        }
+        if let Policy::Async = self.des.policy {
+            if self.remaining_budget == 0 && self.inflight.is_empty() {
+                self.done = true;
             }
         }
+        !self.done
+    }
 
+    /// Step until the first pending event strictly past `t_s`, then
+    /// checkpoint; finish if the timeline drains first.
+    fn advance(mut self, t_s: f64) -> RunState {
+        loop {
+            match self.q.peek_time() {
+                Some(t) if t.secs() > t_s => {
+                    return RunState::Checkpoint(Box::new(self.snapshot()))
+                }
+                Some(_) => {
+                    if !self.step() {
+                        break;
+                    }
+                }
+                None => break,
+            }
+        }
+        RunState::Done(Box::new(self.finish()))
+    }
+
+    fn finish(mut self) -> DesOutcome {
         // purge cancelled jobs still queued so the depth/abandonment
         // stats describe real waiters, not dead entries
         let now = self.q.now();
@@ -450,6 +924,12 @@ impl<'a> Sim<'a> {
             // lone accumulator, bit-identical to the pre-cell engine)
             energy_spent_j: self.energy_by_cell.iter().sum(),
             aggregator: self.agg,
+            retries: self.retries,
+            timeout_demotions: self.timeout_demotions,
+            failovers: self.failovers,
+            slot_failures: self.slot_failures,
+            slot_repairs: self.slot_repairs,
+            retry_energy_j: self.retry_energy_j,
         }
     }
 
@@ -482,6 +962,35 @@ impl<'a> Sim<'a> {
     fn schedule_batches(&mut self, cell: usize, batches: Vec<Batch>) {
         let now = self.q.now();
         for b in batches {
+            // a failed capacity slot delays the whole fused dispatch by
+            // its exponential repair time, occupying the slot meanwhile
+            let repair_s = if self.faults.is_some() {
+                let seq = self.dispatch_seqs[cell];
+                self.dispatch_seqs[cell] += 1;
+                self.faults
+                    .as_ref()
+                    .and_then(|f| f.slot_failure(cell, seq))
+                    .unwrap_or(0.0)
+            } else {
+                0.0
+            };
+            if repair_s > 0.0 {
+                self.slot_failures += 1;
+                self.slot_repairs += 1;
+                self.servers[cell].add_busy_s(repair_s);
+                obs::metrics().des_fault_slot_failures.inc(cell);
+                obs::metrics().des_fault_slot_repairs.inc(cell);
+                if trace::active() {
+                    trace::sim_span(
+                        "slot_repair",
+                        "des.faults",
+                        cell,
+                        now.secs(),
+                        now.secs() + repair_s,
+                        vec![("jobs", b.jobs.len() as f64)],
+                    );
+                }
+            }
             for j in &b.jobs {
                 if let Some(inf) = self.inflight.get_mut(&(j.device, j.round)) {
                     inf.wait_s = now.secs() - j.enqueued_at.secs();
@@ -507,18 +1016,71 @@ impl<'a> Sim<'a> {
                     "batch_service",
                     "des.server",
                     cell,
-                    now.secs(),
-                    now.secs() + b.service_s,
+                    now.secs() + repair_s,
+                    now.secs() + repair_s + b.service_s,
                     vec![("jobs", b.jobs.len() as f64)],
                 );
             }
             let ids: Vec<(usize, usize)> = b.jobs.iter().map(|j| (j.device, j.round)).collect();
             self.q
-                .push_after(b.service_s, EventKind::ServerBatchDone { cell, jobs: ids });
+                .push_after(repair_s + b.service_s, EventKind::ServerBatchDone { cell, jobs: ids });
         }
     }
 
     fn launch_cell(&mut self, device: usize, round: usize, rec: RoundRecord) {
+        let mut rec = rec;
+        let mut cell = self.cells.cell_of(device, round);
+        let mut degraded = false;
+        // correlated regional burst: launches inside the dropout disk
+        // cannot use the serving cell's link this round
+        let burst = match &self.faults {
+            Some(f) => match f.burst_center(round) {
+                Some(center) => {
+                    let mob = self.sched.link.mobility();
+                    f.in_burst(mob.position_at(device, round), mob.position_at(center, round))
+                }
+                None => false,
+            },
+            None => false,
+        };
+        if burst {
+            self.failovers += 1;
+            obs::metrics().des_fault_failovers.inc(device);
+            let second = self.cells.second_cell_of(device, round);
+            if second != cell {
+                // graceful degradation, multi-cell: ride the hysteresis
+                // runner-up site while the burst blankets the serving cell
+                cell = second;
+                if trace::active() {
+                    trace::sim_instant(
+                        "burst_failover",
+                        "des.faults",
+                        cell,
+                        self.q.now().secs(),
+                        vec![("device", device as f64), ("round", round as f64)],
+                    );
+                }
+            } else {
+                // single site: no alternate cell — fall back to the
+                // device-heavy cut so the burst region's link carries
+                // as little of the round as possible
+                rec = self.degraded_record(round, device);
+                degraded = true;
+                if trace::active() {
+                    trace::sim_instant(
+                        "degraded_cut",
+                        "des.faults",
+                        cell,
+                        self.q.now().secs(),
+                        vec![
+                            ("device", device as f64),
+                            ("round", round as f64),
+                            ("cut", rec.cut as f64),
+                        ],
+                    );
+                }
+            }
+        }
         let timing = self.timing(&rec);
         self.actives[device] = Some(round);
         self.launched += 1;
@@ -544,12 +1106,179 @@ impl<'a> Sim<'a> {
                 start_s: self.q.now().secs(),
                 wait_s: 0.0,
                 base_version: self.version,
+                up_s: timing.up_s,
                 down_s: timing.down_s,
                 bp_s: timing.bp_s,
+                cell,
+                degraded,
             },
         );
-        self.q
-            .push_after(timing.fp_s + timing.up_s, EventKind::UplinkDone { device, round });
+        self.start_uplink(device, round, 0, timing.fp_s);
+    }
+
+    /// The degraded device-heavy record for a burst-struck launch with
+    /// no alternate cell.  The `DeviceOnly` scheduler shares the exact
+    /// config and channel state, so its records are the same pure
+    /// function of `(round, device)` — resume recomputes them.
+    fn degraded_record(&mut self, round: usize, device: usize) -> RoundRecord {
+        if self.degraded_sched.is_none() {
+            self.degraded_sched = Some(Scheduler::new(
+                self.sched.cfg.clone(),
+                self.sched.link.channel.state,
+                Strategy::DeviceOnly,
+            ));
+        }
+        self.degraded_sched.as_ref().unwrap().device_round(round, device)
+    }
+
+    /// Begin uplink attempt `attempt` of `(device, round)`.  `lead_s`
+    /// is the device FP time preceding the transfer (attempt 0 only).
+    fn start_uplink(&mut self, device: usize, round: usize, attempt: usize, lead_s: f64) {
+        let (up_s, cell) = {
+            let inf = &self.inflight[&(device, round)];
+            (inf.up_s, inf.cell)
+        };
+        match self
+            .faults
+            .as_ref()
+            .and_then(|f| f.link_outage(Dir::Up, device, round, attempt, up_s))
+        {
+            None => self
+                .q
+                .push_after(lead_s + up_s, EventKind::UplinkDone { device, round }),
+            Some(o) => {
+                let wasted_s = o.frac * up_s;
+                // the interrupted partial is pure waste on top of the
+                // analytic record's one full transmission
+                self.retry_energy_j +=
+                    dbm_to_w(self.sched.cfg.channel.tx_power_device_dbm) * wasted_s;
+                self.after_outage(
+                    Dir::Up,
+                    device,
+                    round,
+                    attempt,
+                    cell,
+                    lead_s + wasted_s,
+                    &o,
+                );
+            }
+        }
+    }
+
+    /// Begin downlink attempt `attempt`; device BP follows on success.
+    fn start_downlink(&mut self, device: usize, round: usize, attempt: usize) {
+        let (down_s, bp_s, cell) = {
+            let inf = &self.inflight[&(device, round)];
+            (inf.down_s, inf.bp_s, inf.cell)
+        };
+        match self
+            .faults
+            .as_ref()
+            .and_then(|f| f.link_outage(Dir::Down, device, round, attempt, down_s))
+        {
+            None => self
+                .q
+                .push_after(down_s + bp_s, EventKind::MergeReady { device, round }),
+            Some(o) => {
+                let wasted_s = o.frac * down_s;
+                self.retry_energy_j +=
+                    dbm_to_w(self.sched.cfg.channel.tx_power_ap_dbm) * wasted_s;
+                self.after_outage(Dir::Down, device, round, attempt, cell, wasted_s, &o);
+            }
+        }
+    }
+
+    /// Common recovery path after an outage cut attempt `attempt`
+    /// short: schedule the backed-off retransmission, or — when the
+    /// retry budget is spent — the give-up event at the instant the
+    /// final partial dies (`fail_dt` from now).
+    fn after_outage(
+        &mut self,
+        dir: Dir,
+        device: usize,
+        round: usize,
+        attempt: usize,
+        cell: usize,
+        fail_dt: f64,
+        o: &Outage,
+    ) {
+        if trace::active() {
+            trace::sim_instant(
+                "link_outage",
+                "des.faults",
+                cell,
+                self.q.now().secs() + fail_dt,
+                vec![
+                    ("device", device as f64),
+                    ("round", round as f64),
+                    ("attempt", attempt as f64),
+                    ("dir", if dir == Dir::Up { 0.0 } else { 1.0 }),
+                    ("frac", o.frac),
+                ],
+            );
+        }
+        let max = self.faults.as_ref().map(|f| f.max_retries()).unwrap_or(0);
+        let next = match dir {
+            Dir::Up => EventKind::RetryUplink {
+                device,
+                round,
+                attempt: attempt + 1,
+            },
+            Dir::Down => EventKind::RetryDownlink {
+                device,
+                round,
+                attempt: attempt + 1,
+            },
+        };
+        if attempt < max {
+            self.retries += 1;
+            obs::metrics().des_fault_retries.inc(device);
+            obs::metrics().des_fault_backoff_s.observe(o.backoff_s);
+            self.q.push_after(fail_dt + o.backoff_s, next);
+        } else {
+            // the handler sees attempt > max_retries and drops the cell
+            self.q.push_after(fail_dt, next);
+        }
+    }
+
+    /// A retry event fired: retransmit, or give up if the budget is out.
+    fn on_retry(&mut self, dir: Dir, device: usize, round: usize, attempt: usize) {
+        if !self.is_active(device, round) {
+            return; // cancelled (churn/timeout) while backing off
+        }
+        let max = self.faults.as_ref().map(|f| f.max_retries()).unwrap_or(0);
+        if attempt > max {
+            self.drop_exhausted(device, round);
+            return;
+        }
+        match dir {
+            Dir::Up => self.start_uplink(device, round, attempt, 0.0),
+            Dir::Down => self.start_downlink(device, round, attempt),
+        }
+    }
+
+    /// The retry budget ran out mid-transfer: abandon the cell.  Async
+    /// budget is *not* refunded — the round was consumed and produced
+    /// no merge, exactly like a semi-sync straggler drop.
+    fn drop_exhausted(&mut self, device: usize, round: usize) {
+        let Some(inf) = self.inflight.remove(&(device, round)) else {
+            return;
+        };
+        self.actives[device] = None;
+        self.dropped += 1;
+        if trace::active() {
+            trace::sim_instant(
+                "retry_exhausted",
+                "des.faults",
+                inf.cell,
+                self.q.now().secs(),
+                vec![("device", device as f64), ("round", round as f64)],
+            );
+        }
+        match self.des.policy {
+            Policy::Sync | Policy::SemiSync { .. } => self.resolve_barrier_slot(),
+            Policy::Async => self.launch_async(device),
+        }
     }
 
     /// Async: start the device's next personal round, if budget remains.
@@ -588,7 +1317,18 @@ impl<'a> Sim<'a> {
             services.push(rec.server_compute_s);
             self.launch_cell(i, round, rec);
         }
-        if let Policy::SemiSync { deadline_factor } = self.des.policy {
+        let factor = match self.des.policy {
+            Policy::SemiSync { deadline_factor } => Some(deadline_factor),
+            // sync + faults: `timeout_factor` demotes the round's
+            // stragglers through the same dropout path (DESIGN.md §17)
+            Policy::Sync => self
+                .faults
+                .as_ref()
+                .map(|f| f.spec().timeout_factor)
+                .filter(|&t| t > 0.0),
+            Policy::Async => None,
+        };
+        if let Some(factor) = factor {
             // deadline = factor × (median analytic round delay + the
             // serialization the *most loaded cell's* queue adds when
             // its participants share C slots).  With one cell the max
@@ -600,7 +1340,7 @@ impl<'a> Sim<'a> {
             let max_load = per_cell_load.iter().copied().max().unwrap_or(0);
             let drain_batches =
                 (max_load as f64 / self.servers[0].capacity() as f64).ceil() - 1.0;
-            let deadline = deadline_factor
+            let deadline = factor
                 * (stats::median(&delays) + drain_batches.max(0.0) * stats::median(&services));
             self.q.push_after(deadline, EventKind::Deadline { round });
         }
@@ -628,14 +1368,18 @@ impl<'a> Sim<'a> {
     /// Abandon the device's in-flight cell (churn departure).
     fn cancel_active(&mut self, device: usize) {
         if let Some(round) = self.actives[device].take() {
-            self.inflight.remove(&(device, round));
+            let cell = self
+                .inflight
+                .remove(&(device, round))
+                .map(|i| i.cell)
+                .unwrap_or(0);
             self.dropped += 1;
             obs::metrics().des_drops_churn.inc(device);
             if trace::active() {
                 trace::sim_instant(
                     "churn_cancel",
                     "des.churn",
-                    self.cells.cell_of(device, round),
+                    cell,
                     self.q.now().secs(),
                     vec![("device", device as f64), ("round", round as f64)],
                 );
@@ -700,16 +1444,16 @@ impl<'a> Sim<'a> {
         if !self.is_active(device, round) {
             return;
         }
-        let rec = &self.inflight[&(device, round)].record;
+        let inf = &self.inflight[&(device, round)];
         let job = Job {
             device,
             round,
-            service_s: rec.server_compute_s,
+            service_s: inf.record.server_compute_s,
             enqueued_at: self.q.now(),
         };
-        // route to the serving cell's queue — the precomputed
-        // association of this (device, round)
-        let cell = self.cells.cell_of(device, round);
+        // route to the cell chosen at launch — the precomputed serving
+        // cell of this (device, round), unless a burst failover rerouted
+        let cell = inf.cell;
         let now = self.q.now();
         let actives = &self.actives;
         let batches = self.servers[cell].enqueue(job, now, |d, k| actives[d] == Some(k));
@@ -722,9 +1466,7 @@ impl<'a> Sim<'a> {
             if !self.is_active(device, round) {
                 continue; // cancelled while in service — wasted work
             }
-            let inf = &self.inflight[&(device, round)];
-            self.q
-                .push_after(inf.down_s + inf.bp_s, EventKind::MergeReady { device, round });
+            self.start_downlink(device, round, 0);
         }
         let actives = &self.actives;
         let refills = self.servers[cell].on_batch_done(now, |d, k| actives[d] == Some(k));
@@ -747,10 +1489,10 @@ impl<'a> Sim<'a> {
         let based = inf.base_version + 1;
         let cut = inf.record.cut;
         let bytes = inf.record.adapter_bytes;
-        // star-to-cloud: the serving cell's aggregation level absorbs
+        // star-to-cloud: the routed cell's aggregation level absorbs
         // the merge, then forwards it to the cloud level — both through
         // the unordered (monotone) paths, so event order cannot matter
-        let cell = self.cells.cell_of(device, round);
+        let cell = inf.cell;
         let ca = &mut self.cell_aggs[cell];
         ca.bytes_distributed += bytes;
         ca.server_update_unordered(cut, based);
@@ -790,6 +1532,7 @@ impl<'a> Sim<'a> {
             wait_s: inf.wait_s,
             staleness,
             weight,
+            degraded: inf.degraded,
             record: inf.record,
         });
 
@@ -799,23 +1542,35 @@ impl<'a> Sim<'a> {
         }
     }
 
-    /// Semi-sync: the straggler deadline fired for `round`.
+    /// The round deadline fired: the semi-sync straggler cutoff, or —
+    /// under `sync` with faults — the timeout that demotes stragglers
+    /// to the same dropout path (DESIGN.md §17).
     fn on_deadline(&mut self, round: usize) {
         if !self.barrier_open || self.barrier_round != round {
             return; // stale — the round already closed
         }
+        let fault_timeout = matches!(self.des.policy, Policy::Sync);
         for device in 0..self.devices.len() {
             if self.actives[device] == Some(round) {
                 self.actives[device] = None;
-                self.inflight.remove(&(device, round));
+                let cell = self
+                    .inflight
+                    .remove(&(device, round))
+                    .map(|i| i.cell)
+                    .unwrap_or(0);
                 self.dropped += 1;
                 self.barrier_outstanding -= 1;
-                obs::metrics().des_drops_straggler.inc(device);
+                if fault_timeout {
+                    self.timeout_demotions += 1;
+                    obs::metrics().des_fault_timeouts.inc(device);
+                } else {
+                    obs::metrics().des_drops_straggler.inc(device);
+                }
                 if trace::active() {
                     trace::sim_instant(
-                        "straggler_drop",
+                        if fault_timeout { "timeout_demotion" } else { "straggler_drop" },
                         "des.deadline",
-                        self.cells.cell_of(device, round),
+                        cell,
                         self.q.now().secs(),
                         vec![("device", device as f64), ("round", round as f64)],
                     );
@@ -841,16 +1596,7 @@ mod tests {
     }
 
     fn engine_outcome(cfg: ExpConfig, policy: Policy, capacity: usize) -> DesOutcome {
-        let sched = Arc::new(Scheduler::new(cfg, ChannelState::Normal, Strategy::Card));
-        DesEngine::new(
-            sched,
-            DesConfig {
-                policy,
-                capacity,
-                batch: 1,
-            },
-        )
-        .run()
+        des_engine(cfg, policy, capacity).run()
     }
 
     #[test]
@@ -1076,6 +1822,230 @@ mod tests {
             let e: f64 = a.per_cell.iter().map(|c| c.energy_spent_j).sum();
             assert_eq!(e.to_bits(), a.energy_spent_j.to_bits(), "{}", policy.name());
         }
+    }
+
+    fn des_engine(cfg: ExpConfig, policy: Policy, capacity: usize) -> DesEngine {
+        let sched = Arc::new(Scheduler::new(cfg, ChannelState::Normal, Strategy::Card));
+        DesEngine::new(
+            sched,
+            DesConfig {
+                policy,
+                capacity,
+                batch: 1,
+            },
+        )
+    }
+
+    /// Field-by-field bitwise comparison of two outcomes — the
+    /// currency of both the zero-perturbation and the checkpoint/resume
+    /// anchors.
+    fn assert_outcome_bits(a: &DesOutcome, b: &DesOutcome) {
+        assert_eq!(a.records.len(), b.records.len());
+        for (x, y) in a.records.iter().zip(&b.records) {
+            assert_eq!(x.record.device_idx, y.record.device_idx);
+            assert_eq!(x.record.round, y.record.round);
+            assert_eq!(x.record.cut, y.record.cut);
+            assert_eq!(x.record.delay_s.to_bits(), y.record.delay_s.to_bits());
+            assert_eq!(x.record.energy_j.to_bits(), y.record.energy_j.to_bits());
+            assert_eq!(x.start_s.to_bits(), y.start_s.to_bits());
+            assert_eq!(x.finish_s.to_bits(), y.finish_s.to_bits());
+            assert_eq!(x.wait_s.to_bits(), y.wait_s.to_bits());
+            assert_eq!(x.staleness, y.staleness);
+            assert_eq!(x.weight.to_bits(), y.weight.to_bits());
+            assert_eq!(x.degraded, y.degraded);
+        }
+        assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits());
+        assert_eq!(a.energy_spent_j.to_bits(), b.energy_spent_j.to_bits());
+        assert_eq!(a.retry_energy_j.to_bits(), b.retry_energy_j.to_bits());
+        assert_eq!(a.server.served_jobs, b.server.served_jobs);
+        assert_eq!(a.server.busy_slot_s.to_bits(), b.server.busy_slot_s.to_bits());
+        assert_eq!(a.server.mean_wait_s.to_bits(), b.server.mean_wait_s.to_bits());
+        assert_eq!(a.server.utilization.to_bits(), b.server.utilization.to_bits());
+        assert_eq!(
+            (a.launched, a.dropped, a.departures, a.arrivals, a.handovers),
+            (b.launched, b.dropped, b.departures, b.arrivals, b.handovers)
+        );
+        assert_eq!(
+            (a.retries, a.timeout_demotions, a.failovers, a.slot_failures, a.slot_repairs),
+            (b.retries, b.timeout_demotions, b.failovers, b.slot_failures, b.slot_repairs)
+        );
+        assert_eq!(a.peak_staleness, b.peak_staleness);
+        assert_eq!(a.per_cell.len(), b.per_cell.len());
+        for (x, y) in a.per_cell.iter().zip(&b.per_cell) {
+            assert_eq!(x.energy_spent_j.to_bits(), y.energy_spent_j.to_bits());
+            assert_eq!(x.server.served_jobs, y.server.served_jobs);
+            assert_eq!(x.server.busy_slot_s.to_bits(), y.server.busy_slot_s.to_bits());
+        }
+    }
+
+    #[test]
+    fn dormant_fault_plane_is_bitwise_invisible() {
+        // timeout_factor alone arms nothing: with every injection rate
+        // zero the fault plane must not exist, and the timeline must be
+        // bit-identical to a config without the [faults] table at all
+        let mut cfg = quick_cfg(3);
+        cfg.faults.timeout_factor = 2.0;
+        for policy in [
+            Policy::Sync,
+            Policy::SemiSync { deadline_factor: 1.2 },
+            Policy::Async,
+        ] {
+            let base = engine_outcome(quick_cfg(3), policy, 2);
+            let out = engine_outcome(cfg.clone(), policy, 2);
+            assert_outcome_bits(&base, &out);
+            assert_eq!(
+                out.retries + out.timeout_demotions + out.failovers + out.slot_failures,
+                0,
+                "{}",
+                policy.name()
+            );
+            assert_eq!(out.retry_energy_j.to_bits(), 0f64.to_bits());
+        }
+    }
+
+    #[test]
+    fn link_outages_retry_with_backoff_and_account_energy() {
+        let mut cfg = quick_cfg(3);
+        cfg.faults.link_outage_rate_hz = 10.0;
+        let out = engine_outcome(cfg.clone(), Policy::Sync, 4);
+        assert!(out.retries > 0, "a 10 Hz outage rate must interrupt something");
+        assert!(out.retry_energy_j > 0.0, "interrupted partials must book waste");
+        // every launched cell still either merges or drops — no leaks
+        assert_eq!(out.launched, out.records.len() as u64 + out.dropped);
+        // the fault timeline is as deterministic as the clean one
+        let again = engine_outcome(cfg, Policy::Sync, 4);
+        assert_eq!(out.retries, again.retries);
+        assert_eq!(out.dropped, again.dropped);
+        assert_eq!(out.retry_energy_j.to_bits(), again.retry_energy_j.to_bits());
+        assert_eq!(out.makespan_s.to_bits(), again.makespan_s.to_bits());
+    }
+
+    #[test]
+    fn sync_timeout_factor_demotes_stragglers() {
+        let mut cfg = quick_cfg(3);
+        // arm the plane with a rate that effectively never strikes, so
+        // the only fault-path effect left is the timeout demotion
+        cfg.faults.link_outage_rate_hz = 1e-12;
+        cfg.faults.timeout_factor = 0.25;
+        let out = engine_outcome(cfg, Policy::Sync, 2);
+        assert!(out.timeout_demotions > 0, "a 0.25× deadline must demote the tail");
+        assert_eq!(out.dropped, out.timeout_demotions);
+        assert_eq!(out.launched, out.records.len() as u64 + out.dropped);
+        assert_eq!(out.retries, 0);
+    }
+
+    #[test]
+    fn slot_failures_delay_batches_and_tally() {
+        let base = engine_outcome(quick_cfg(3), Policy::Sync, 2);
+        let mut cfg = quick_cfg(3);
+        cfg.faults.slot_fail_prob = 0.6;
+        let out = engine_outcome(cfg, Policy::Sync, 2);
+        assert!(out.slot_failures > 0, "p=0.6 over 15 dispatches must strike");
+        assert_eq!(out.slot_failures, out.slot_repairs);
+        assert_eq!(out.retries, 0);
+        // repairs delay batches but never drop them
+        assert_eq!(out.records.len(), base.records.len());
+        assert!(out.makespan_s >= base.makespan_s);
+        assert!(
+            out.server.busy_slot_s > base.server.busy_slot_s,
+            "repair time must occupy slots: {} vs {}",
+            out.server.busy_slot_s,
+            base.server.busy_slot_s
+        );
+    }
+
+    #[test]
+    fn burst_failover_reroutes_to_the_runner_up_cell() {
+        let mut cfg = quick_cfg(3);
+        cfg.cells.count = 2;
+        cfg.cells.spacing_m = 40.0;
+        cfg.faults.burst_rate_per_round = 1.0;
+        let out = engine_outcome(cfg, Policy::Sync, 4);
+        // the burst center device is at distance 0 from itself, so an
+        // always-on burst strikes at least one launch per round
+        assert!(out.failovers > 0);
+        assert!(
+            out.records.iter().all(|r| !r.degraded),
+            "with two sites the failover reroutes, never degrades"
+        );
+        assert_eq!(out.dropped, 0);
+        assert!(out.aggregator.is_consistent());
+    }
+
+    #[test]
+    fn single_cell_burst_degrades_to_the_device_heavy_cut() {
+        let mut cfg = quick_cfg(3);
+        cfg.faults.burst_rate_per_round = 1.0;
+        let out = engine_outcome(cfg, Policy::Sync, 4);
+        assert!(out.failovers > 0);
+        assert!(
+            out.records.iter().any(|r| r.degraded),
+            "no alternate site: burst-struck launches must degrade"
+        );
+        // degradation completes the round anyway — nothing drops
+        assert_eq!(out.records.len(), 3 * 5);
+        assert_eq!(out.dropped, 0);
+    }
+
+    #[test]
+    fn checkpoint_resume_is_bit_identical_mid_fault_storm() {
+        let mut cfg = quick_cfg(3);
+        cfg.faults.link_outage_rate_hz = 0.3;
+        cfg.faults.slot_fail_prob = 0.2;
+        cfg.faults.burst_rate_per_round = 0.5;
+        for policy in [Policy::Sync, Policy::Async] {
+            let eng = des_engine(cfg.clone(), policy, 2);
+            let full = eng.run();
+            for frac in [0.25, 0.5, 0.9] {
+                match eng.run_until(full.makespan_s * frac) {
+                    RunState::Checkpoint(snap) => {
+                        assert!(snap.now_s <= full.makespan_s * frac);
+                        assert_outcome_bits(&full, &eng.resume(&snap));
+                    }
+                    RunState::Done(out) => assert_outcome_bits(&full, &out),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn checkpoint_resume_without_faults_covers_churn_state() {
+        let mut cfg = quick_cfg(3);
+        cfg.churn.depart_rate_hz = 0.002;
+        cfg.churn.arrive_rate_hz = 0.02;
+        let eng = des_engine(cfg, Policy::Async, 2);
+        let full = eng.run();
+        match eng.run_until(full.makespan_s * 0.5) {
+            RunState::Checkpoint(snap) => assert_outcome_bits(&full, &eng.resume(&snap)),
+            RunState::Done(out) => assert_outcome_bits(&full, &out),
+        }
+    }
+
+    #[test]
+    fn checkpoints_compose() {
+        let mut cfg = quick_cfg(3);
+        cfg.faults.link_outage_rate_hz = 0.4;
+        let eng = des_engine(cfg, Policy::SemiSync { deadline_factor: 1.2 }, 2);
+        let full = eng.run();
+        let RunState::Checkpoint(first) = eng.run_until(full.makespan_s * 0.3) else {
+            panic!("run drained before 30% of its own makespan");
+        };
+        // pausing twice must equal pausing once
+        match eng.resume_until(&first, full.makespan_s * 0.7) {
+            RunState::Checkpoint(second) => assert_outcome_bits(&full, &eng.resume(&second)),
+            RunState::Done(out) => assert_outcome_bits(&full, &out),
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "different experiment config")]
+    fn resume_refuses_a_foreign_checkpoint() {
+        let eng = des_engine(quick_cfg(3), Policy::Sync, 2);
+        let RunState::Checkpoint(snap) = eng.run_until(1e-9) else {
+            unreachable!("a 3-round run cannot drain by t=1e-9");
+        };
+        let other = des_engine(quick_cfg(4), Policy::Sync, 2);
+        other.resume(&snap);
     }
 
     #[test]

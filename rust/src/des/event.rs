@@ -72,8 +72,15 @@ pub enum EventKind {
     ServerBatchDone { cell: usize, jobs: Vec<(usize, usize)> },
     /// Gradient/adapter downlink + device BP finished — merge happens.
     MergeReady { device: usize, round: usize },
-    /// Semi-sync: the straggler deadline for a global round.
+    /// Semi-sync: the straggler deadline for a global round.  Doubles
+    /// as the fault-timeout demotion deadline for the sync policy when
+    /// `[faults]` sets `timeout_factor > 0` (DESIGN.md §17).
     Deadline { round: usize },
+    /// Faults: the backoff wait after an interrupted uplink expired —
+    /// retransmit attempt `attempt` of the activation upload.
+    RetryUplink { device: usize, round: usize, attempt: usize },
+    /// Faults: retransmit attempt `attempt` of the gradient downlink.
+    RetryDownlink { device: usize, round: usize, attempt: usize },
 }
 
 struct Entry {
@@ -162,6 +169,42 @@ impl EventQueue {
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }
+
+    /// Timestamp of the earliest pending event without popping it —
+    /// how `run_until` decides a checkpoint instant has been reached.
+    pub fn peek_time(&self) -> Option<SimTime> {
+        self.heap.peek().map(|e| e.t)
+    }
+
+    /// Checkpoint view: `(now, next seq, pending events)` with the
+    /// pending set sorted by `(t, seq)` so the serialized envelope is
+    /// canonical (heap iteration order is arbitrary).
+    pub fn snapshot(&self) -> (SimTime, u64, Vec<(SimTime, u64, EventKind)>) {
+        let mut entries: Vec<_> = self
+            .heap
+            .iter()
+            .map(|e| (e.t, e.seq, e.kind.clone()))
+            .collect();
+        entries.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+        (self.now, self.seq, entries)
+    }
+
+    /// Inverse of [`EventQueue::snapshot`]: rebuild the queue with the
+    /// original insertion sequence numbers, so time ties keep breaking
+    /// exactly as they would have in the uninterrupted run.
+    pub fn restore(now: SimTime, seq: u64, entries: Vec<(SimTime, u64, EventKind)>) -> EventQueue {
+        let mut heap = BinaryHeap::with_capacity(entries.len());
+        for (t, entry_seq, kind) in entries {
+            assert!(t >= now, "checkpointed event predates the clock");
+            assert!(entry_seq < seq, "checkpointed event seq beyond the counter");
+            heap.push(Entry {
+                t,
+                seq: entry_seq,
+                kind,
+            });
+        }
+        EventQueue { heap, seq, now }
+    }
 }
 
 #[cfg(test)]
@@ -210,6 +253,42 @@ mod tests {
         assert_eq!(t.secs(), 3.5);
         assert!(q.is_empty());
         assert_eq!(q.len(), 0);
+    }
+
+    #[test]
+    fn snapshot_restore_preserves_order_and_ties() {
+        let mut q = EventQueue::new();
+        q.push_at(SimTime::new(1.0), EventKind::Arrive { device: 0 });
+        for device in 0..5 {
+            q.push_at(SimTime::new(5.0), EventKind::Depart { device });
+        }
+        q.pop(); // advance the clock past the first event
+        let (now, seq, entries) = q.snapshot();
+        assert_eq!(now.secs(), 1.0);
+        assert_eq!(entries.len(), 5);
+        // entries are sorted canonically by (t, seq)
+        assert!(entries.windows(2).all(|w| (w[0].0, w[0].1) < (w[1].0, w[1].1)));
+        let mut r = EventQueue::restore(now, seq, entries);
+        assert_eq!(r.now(), q.now());
+        assert_eq!(r.len(), q.len());
+        // the restored queue drains identically, ties still FIFO
+        while let Some(a) = q.pop() {
+            let b = r.pop().unwrap();
+            assert_eq!(a.0, b.0);
+            assert_eq!(a.1, b.1);
+        }
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn peek_time_matches_next_pop() {
+        let mut q = EventQueue::new();
+        assert!(q.peek_time().is_none());
+        q.push_at(SimTime::new(4.0), EventKind::Arrive { device: 0 });
+        q.push_at(SimTime::new(2.0), EventKind::Arrive { device: 1 });
+        assert_eq!(q.peek_time(), Some(SimTime::new(2.0)));
+        let (t, _) = q.pop().unwrap();
+        assert_eq!(t, SimTime::new(2.0));
     }
 
     #[test]

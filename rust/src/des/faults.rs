@@ -1,0 +1,270 @@
+//! Deterministic fault injection for the DES engine (DESIGN.md §17).
+//!
+//! Three failure channels, all driven by **counter-based SplitMix64
+//! streams** under the same purity discipline as churn and fading —
+//! every draw is a pure function of `(fault root, tags)`, never of
+//! event-processing order:
+//!
+//! * **Link outages** — while an activation upload or gradient
+//!   download is in flight, a transient outage interrupts it after a
+//!   uniformly drawn fraction of the transfer.  The per-attempt stream
+//!   is tagged `(LINK_TAG, dir, device, round, attempt)`; the outage
+//!   indicator compares *the same uniform draw* against
+//!   `p = 1 − exp(−rate · duration)`, so raising the injected rate only
+//!   ever grows the outage set — retry counts and retransmission energy
+//!   are pointwise monotone in the rate, which the `chaos-sweep` CI
+//!   validator asserts.
+//! * **Slot failures** — at each batch dispatch a server capacity slot
+//!   fails with `slot_fail_prob` and repairs after an exponential
+//!   `slot_repair_s` mean; the batch completes late by the repair time.
+//!   Tagged `(SLOT_TAG, cell, dispatch_seq)`.
+//! * **Regional bursts** — per round, with `burst_rate_per_round`, a
+//!   correlated dropout region opens around a uniformly drawn center
+//!   device's mobility position.  Devices launching inside the radius
+//!   fail over to their second-nearest cell (or degrade to a
+//!   device-heavy cut when there is no alternate cell).  Tagged
+//!   `(BURST_TAG, round)`.
+//!
+//! Recovery semantics (bounded retry with exponential backoff + jitter,
+//! timeout demotion, graceful degradation) live in `des::engine`; this
+//! module only answers "does fault X strike, and with what parameters".
+
+use crate::config::FaultsSpec;
+use crate::util::rng::{Rng, SplitMix64};
+
+/// Stream-tag domains (disjoint from `CHURN_TAG = 0xC4_52_4E`).
+pub const LINK_TAG: u64 = 0xFA_17_71;
+pub const SLOT_TAG: u64 = 0xFA_17_5C;
+pub const BURST_TAG: u64 = 0xFA_17_B5;
+
+/// Salt folding the experiment seed into the fault root, so fault
+/// streams never collide with the churn root (`seed ^ 0xDE5C_4`).
+const FAULT_SALT: u64 = 0xFA_017_0u64;
+
+/// Transfer direction of a link-outage stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dir {
+    /// device → server activation upload
+    Up,
+    /// server → device gradient download
+    Down,
+}
+
+impl Dir {
+    fn tag(self) -> u64 {
+        match self {
+            Dir::Up => 0,
+            Dir::Down => 1,
+        }
+    }
+}
+
+/// A link outage that struck one transfer attempt.
+#[derive(Clone, Copy, Debug)]
+pub struct Outage {
+    /// fraction of the transfer completed (and wasted) before the cut
+    pub frac: f64,
+    /// exponential backoff + jitter wait before the retransmission [s]
+    pub backoff_s: f64,
+}
+
+/// Pure fault sampler over the experiment's fault knobs.
+#[derive(Clone, Debug)]
+pub struct FaultProcess {
+    root: u64,
+    spec: FaultsSpec,
+    n_devices: usize,
+}
+
+impl FaultProcess {
+    pub fn new(seed: u64, spec: &FaultsSpec, n_devices: usize) -> Self {
+        Self {
+            root: seed ^ FAULT_SALT,
+            spec: spec.clone(),
+            n_devices,
+        }
+    }
+
+    pub fn spec(&self) -> &FaultsSpec {
+        &self.spec
+    }
+
+    /// Retransmissions allowed per transfer before the cell is dropped.
+    pub fn max_retries(&self) -> usize {
+        self.spec.max_retries
+    }
+
+    /// Does `attempt` of the `(device, round)` transfer in direction
+    /// `dir`, lasting `duration_s`, suffer a transient outage?
+    ///
+    /// The first draw of the attempt stream is the outage indicator;
+    /// `frac` and the backoff jitter follow in fixed order, so the
+    /// struck attempt replays identically whatever rate crossed its
+    /// threshold.
+    pub fn link_outage(
+        &self,
+        dir: Dir,
+        device: usize,
+        round: usize,
+        attempt: usize,
+        duration_s: f64,
+    ) -> Option<Outage> {
+        let rate = self.spec.link_outage_rate_hz;
+        if rate <= 0.0 || duration_s <= 0.0 {
+            return None;
+        }
+        let mut rng = Rng::new(SplitMix64::stream_seed(
+            self.root,
+            &[LINK_TAG, dir.tag(), device as u64, round as u64, attempt as u64],
+        ));
+        let u = rng.f64();
+        let p = 1.0 - (-rate * duration_s).exp();
+        if u >= p {
+            return None;
+        }
+        let frac = rng.f64();
+        let jitter = 1.0 + self.spec.backoff_jitter * rng.f64();
+        let backoff_s = self.spec.backoff_base_s * (1u64 << attempt.min(16)) as f64 * jitter;
+        Some(Outage { frac, backoff_s })
+    }
+
+    /// Force an outage on a burst-struck single-cell uplink attempt:
+    /// same stream as [`FaultProcess::link_outage`] but unconditional,
+    /// so the retry parameters stay pure in the attempt coordinates.
+    pub fn forced_outage(&self, dir: Dir, device: usize, round: usize, attempt: usize) -> Outage {
+        let mut rng = Rng::new(SplitMix64::stream_seed(
+            self.root,
+            &[LINK_TAG, dir.tag(), device as u64, round as u64, attempt as u64],
+        ));
+        let _u = rng.f64();
+        let frac = rng.f64();
+        let jitter = 1.0 + self.spec.backoff_jitter * rng.f64();
+        let backoff_s = self.spec.backoff_base_s * (1u64 << attempt.min(16)) as f64 * jitter;
+        Outage { frac, backoff_s }
+    }
+
+    /// Does the `seq`-th batch dispatch on `cell` hit a failed capacity
+    /// slot?  Returns the exponential repair time that delays the batch.
+    pub fn slot_failure(&self, cell: usize, seq: u64) -> Option<f64> {
+        let p = self.spec.slot_fail_prob;
+        if p <= 0.0 {
+            return None;
+        }
+        let mut rng = Rng::new(SplitMix64::stream_seed(
+            self.root,
+            &[SLOT_TAG, cell as u64, seq],
+        ));
+        if rng.f64() >= p {
+            return None;
+        }
+        Some(rng.exp(1.0 / self.spec.slot_repair_s))
+    }
+
+    /// Is a correlated dropout burst open during `round`, and which
+    /// device anchors its region?  Pure in `(seed, round)` — async
+    /// devices on personal round clocks sample the same burst calendar.
+    pub fn burst_center(&self, round: usize) -> Option<usize> {
+        let p = self.spec.burst_rate_per_round;
+        if p <= 0.0 || self.n_devices == 0 {
+            return None;
+        }
+        let mut rng = Rng::new(SplitMix64::stream_seed(self.root, &[BURST_TAG, round as u64]));
+        if rng.f64() >= p {
+            return None;
+        }
+        Some(rng.below(self.n_devices as u64) as usize)
+    }
+
+    /// Is `pos` inside the burst region centered at `center`?
+    pub fn in_burst(&self, pos: (f64, f64), center: (f64, f64)) -> bool {
+        let (dx, dy) = (pos.0 - center.0, pos.1 - center.1);
+        (dx * dx + dy * dy).sqrt() <= self.spec.burst_radius_m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(rate: f64) -> FaultsSpec {
+        FaultsSpec {
+            link_outage_rate_hz: rate,
+            slot_fail_prob: 0.3,
+            burst_rate_per_round: 0.5,
+            ..FaultsSpec::default()
+        }
+    }
+
+    #[test]
+    fn draws_are_pure_in_their_coordinates() {
+        let f = FaultProcess::new(7, &spec(2.0), 8);
+        let g = FaultProcess::new(7, &spec(2.0), 8);
+        for attempt in 0..4 {
+            let a = f.link_outage(Dir::Up, 3, 5, attempt, 0.8);
+            let b = g.link_outage(Dir::Up, 3, 5, attempt, 0.8);
+            assert_eq!(a.is_some(), b.is_some());
+            if let (Some(a), Some(b)) = (a, b) {
+                assert_eq!(a.frac.to_bits(), b.frac.to_bits());
+                assert_eq!(a.backoff_s.to_bits(), b.backoff_s.to_bits());
+            }
+        }
+        assert_eq!(f.burst_center(4), g.burst_center(4));
+        assert_eq!(f.slot_failure(1, 9), g.slot_failure(1, 9));
+    }
+
+    #[test]
+    fn outage_set_grows_monotonically_with_rate() {
+        // the same uniform draw against a larger threshold: any attempt
+        // struck at rate r is struck at every r' > r
+        let lo = FaultProcess::new(11, &spec(0.05), 16);
+        let hi = FaultProcess::new(11, &spec(1.5), 16);
+        let mut struck_lo = 0;
+        let mut struck_hi = 0;
+        for dev in 0..16 {
+            for round in 0..8 {
+                let a = lo.link_outage(Dir::Up, dev, round, 0, 1.0);
+                let b = hi.link_outage(Dir::Up, dev, round, 0, 1.0);
+                if a.is_some() {
+                    struck_lo += 1;
+                    assert!(b.is_some(), "outage at low rate vanished at high rate");
+                }
+                struck_hi += usize::from(b.is_some());
+            }
+        }
+        assert!(struck_hi > struck_lo, "{struck_hi} vs {struck_lo}");
+    }
+
+    #[test]
+    fn zero_rates_never_strike() {
+        let f = FaultProcess::new(3, &FaultsSpec::default(), 8);
+        assert!(f.link_outage(Dir::Up, 0, 0, 0, 10.0).is_none());
+        assert!(f.link_outage(Dir::Down, 1, 2, 3, 10.0).is_none());
+        assert!(f.slot_failure(0, 0).is_none());
+        assert!(f.burst_center(0).is_none());
+    }
+
+    #[test]
+    fn backoff_grows_exponentially_with_attempt() {
+        let s = FaultsSpec {
+            link_outage_rate_hz: 1.0,
+            backoff_jitter: 0.0,
+            ..FaultsSpec::default()
+        };
+        let f = FaultProcess::new(5, &s, 4);
+        let b0 = f.forced_outage(Dir::Up, 2, 1, 0).backoff_s;
+        let b1 = f.forced_outage(Dir::Up, 2, 1, 1).backoff_s;
+        let b2 = f.forced_outage(Dir::Up, 2, 1, 2).backoff_s;
+        assert_eq!(b0, s.backoff_base_s);
+        assert_eq!(b1, 2.0 * s.backoff_base_s);
+        assert_eq!(b2, 4.0 * s.backoff_base_s);
+    }
+
+    #[test]
+    fn burst_region_is_a_disk() {
+        let f = FaultProcess::new(9, &spec(0.0), 4);
+        // default radius 25 m
+        assert!(f.in_burst((10.0, 0.0), (0.0, 0.0)));
+        assert!(f.in_burst((0.0, 25.0), (0.0, 0.0)));
+        assert!(!f.in_burst((30.0, 0.0), (0.0, 0.0)));
+    }
+}

@@ -5,17 +5,26 @@
 //! explicit timed events and makes the edge servers contended
 //! resources.  With `[cells] count > 1` jobs route to the serving
 //! cell's queue and merges climb a star-to-cloud aggregation topology.
+//! The `[faults]` plane (DESIGN.md §17) injects link outages, server
+//! slot failures, and correlated bursts on the same timeline, with
+//! bounded-retry recovery and checkpoint/resume.
 
 pub mod cellsweep;
+pub mod chaossweep;
 pub mod churn;
 pub mod engine;
 pub mod event;
+pub mod faults;
 pub mod server;
 pub mod sweep;
 
 pub use cellsweep::{CellPoint, CellSweep};
+pub use chaossweep::{chaos_sweep, ChaosPoint, ChaosSweep};
 pub use churn::ChurnTrace;
-pub use engine::{CellStats, DesConfig, DesEngine, DesOutcome, DesRecord, Policy};
+pub use engine::{
+    CellStats, DesConfig, DesEngine, DesOutcome, DesRecord, Policy, RunState, SimSnapshot,
+};
 pub use event::{EventKind, EventQueue, SimTime};
+pub use faults::{Dir, FaultProcess, Outage};
 pub use server::{ServerQueue, ServerStats};
 pub use sweep::{sweep, DesPoint, DesSweep};

@@ -55,6 +55,22 @@ pub struct ServerStats {
     pub utilization: f64,
 }
 
+/// Serializable mutable state of a [`ServerQueue`] (checkpoint
+/// envelope, DESIGN.md §17).  The `wait` accumulator travels as its
+/// raw `(n, mean, m2, min, max)` Welford state.
+#[derive(Clone, Debug)]
+pub struct ServerQueueState {
+    pub busy_slots: usize,
+    pub waiting: Vec<Job>,
+    pub busy_slot_s: f64,
+    pub wait: (u64, f64, f64, f64, f64),
+    pub served: u64,
+    pub abandoned: u64,
+    pub peak_depth: usize,
+    pub depth_area: f64,
+    pub depth_since_s: f64,
+}
+
 pub struct ServerQueue {
     capacity: usize,
     batch: usize,
@@ -161,6 +177,49 @@ impl ServerQueue {
         let before = self.waiting.len();
         self.waiting.retain(|j| alive(j.device, j.round));
         self.abandoned += (before - self.waiting.len()) as u64;
+    }
+
+    /// Book extra slot-busy seconds outside normal service — the
+    /// repair downtime of a failed capacity slot (DESIGN.md §17), which
+    /// occupies the slot exactly like service does.
+    pub fn add_busy_s(&mut self, dt: f64) {
+        debug_assert!(dt.is_finite() && dt >= 0.0);
+        self.busy_slot_s += dt;
+    }
+
+    /// Checkpoint view of the full mutable state.  `capacity`/`batch`
+    /// are config-derived and not included; [`ServerQueue::restore`]
+    /// takes them from the resuming run's `DesConfig`.
+    pub fn snapshot(&self) -> ServerQueueState {
+        ServerQueueState {
+            busy_slots: self.busy_slots,
+            waiting: self.waiting.iter().cloned().collect(),
+            busy_slot_s: self.busy_slot_s,
+            wait: self.wait.state(),
+            served: self.served,
+            abandoned: self.abandoned,
+            peak_depth: self.peak_depth,
+            depth_area: self.depth_area,
+            depth_since_s: self.depth_since_s,
+        }
+    }
+
+    /// Inverse of [`ServerQueue::snapshot`].
+    pub fn restore(capacity: usize, batch: usize, st: ServerQueueState) -> ServerQueue {
+        let (n, mean, m2, min, max) = st.wait;
+        ServerQueue {
+            capacity: capacity.max(1),
+            batch: batch.max(1),
+            busy_slots: st.busy_slots,
+            waiting: st.waiting.into(),
+            busy_slot_s: st.busy_slot_s,
+            wait: Accum::from_state(n, mean, m2, min, max),
+            served: st.served,
+            abandoned: st.abandoned,
+            peak_depth: st.peak_depth,
+            depth_area: st.depth_area,
+            depth_since_s: st.depth_since_s,
+        }
     }
 
     /// Snapshot the run statistics given the realized makespan.
@@ -270,6 +329,36 @@ mod tests {
         assert_eq!(s.abandoned_jobs, 2);
         // no phantom waiters charged past the flush point
         assert!((s.mean_depth - 2.0).abs() < 1e-12, "{}", s.mean_depth);
+    }
+
+    #[test]
+    fn snapshot_restore_round_trips_mid_service() {
+        let mut q = ServerQueue::new(1, 1);
+        q.enqueue(job(0, 2.0, 0.0), SimTime::ZERO, ALIVE);
+        q.enqueue(job(1, 2.0, 0.0), SimTime::ZERO, ALIVE);
+        // one job in service, one waiting — checkpoint here
+        let mut r = ServerQueue::restore(1, 1, q.snapshot());
+        let a = q.on_batch_done(SimTime::new(2.0), ALIVE);
+        let b = r.on_batch_done(SimTime::new(2.0), ALIVE);
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a[0].jobs[0].device, b[0].jobs[0].device);
+        q.on_batch_done(SimTime::new(4.0), ALIVE);
+        r.on_batch_done(SimTime::new(4.0), ALIVE);
+        let (sa, sb) = (q.stats(4.0), r.stats(4.0));
+        assert_eq!(sa.served_jobs, sb.served_jobs);
+        assert_eq!(sa.busy_slot_s.to_bits(), sb.busy_slot_s.to_bits());
+        assert_eq!(sa.mean_wait_s.to_bits(), sb.mean_wait_s.to_bits());
+        assert_eq!(sa.mean_depth.to_bits(), sb.mean_depth.to_bits());
+    }
+
+    #[test]
+    fn repair_downtime_counts_as_busy() {
+        let mut q = ServerQueue::new(1, 1);
+        q.enqueue(job(0, 1.0, 0.0), SimTime::ZERO, ALIVE);
+        q.add_busy_s(1.0);
+        q.on_batch_done(SimTime::new(2.0), ALIVE);
+        let s = q.stats(2.0);
+        assert!((s.utilization - 1.0).abs() < 1e-12, "{}", s.utilization);
     }
 
     #[test]

@@ -15,7 +15,8 @@ use std::sync::Arc;
 
 use crate::config::scenario::{self, Scenario};
 use crate::config::{
-    CellLayout, CellsSpec, ChannelState, ConfigError, ExpConfig, FadingModel, MobilitySpec,
+    CellLayout, CellsSpec, ChannelState, ConfigError, ExpConfig, FadingModel, FaultsSpec,
+    MobilitySpec,
 };
 use crate::coordinator::{RoundRecord, Scheduler, Strategy, TrainBackend};
 use crate::des::{DesConfig, DesEngine, Policy};
@@ -162,6 +163,7 @@ pub struct ExperimentBuilder {
     cells_spec: Option<CellsSpec>,
     cells_count: Option<usize>,
     cells_layout: Option<CellLayout>,
+    faults: Option<FaultsSpec>,
     trace: Option<String>,
 }
 
@@ -199,6 +201,7 @@ impl ExperimentBuilder {
             cells_spec: None,
             cells_count: None,
             cells_layout: None,
+            faults: None,
             trace: None,
         }
     }
@@ -297,6 +300,16 @@ impl ExperimentBuilder {
         self
     }
 
+    /// Fault-injection override (`[faults]`, DESIGN.md §17): link
+    /// outages, server slot failures, correlated bursts, retry budget,
+    /// sync timeout demotion.  Only the event engine injects; with
+    /// every rate zero the plane stays off (the zero-perturbation
+    /// anchor).
+    pub fn faults(mut self, spec: FaultsSpec) -> Self {
+        self.faults = Some(spec);
+        self
+    }
+
     /// Record a Chrome `trace_event` timeline of the run and write it
     /// to `path` when the run completes (the `--trace <path>` CLI flag;
     /// DESIGN.md §16).  Zero-perturbation: records stay bitwise
@@ -349,6 +362,9 @@ impl ExperimentBuilder {
         if let Some(layout) = self.cells_layout {
             cfg.cells.layout = layout;
         }
+        if let Some(faults) = self.faults {
+            cfg.faults = faults;
+        }
         if cfg.workload.rounds == 0 {
             return Err(BuildError::ZeroRounds);
         }
@@ -368,7 +384,8 @@ impl ExperimentBuilder {
             if let Policy::SemiSync { deadline_factor } = des.policy {
                 if !deadline_factor.is_finite() || deadline_factor <= 0.0 {
                     return Err(BuildError::InvalidDes(format!(
-                        "semi-sync deadline factor must be finite and > 0, got {deadline_factor}"
+                        "semi-sync deadline factor must lie in the open range (0, +inf) \
+                         — finite and strictly positive — got {deadline_factor}"
                     )));
                 }
             }
@@ -483,6 +500,27 @@ impl Experiment {
         let mut sink = SummarySink::default();
         let outcome = self.run_into(&mut sink)?;
         Ok((sink.summary, outcome))
+    }
+
+    /// Run the event engine until the first event past virtual time
+    /// `t_s` and freeze there (DESIGN.md §17).  Returns the paused
+    /// state — serialize it with [`crate::exp::checkpoint::encode`] —
+    /// or the finished outcome when the timeline drained first.
+    /// Errors on the round engine, which has no virtual clock.
+    pub fn checkpoint_at(&self, t_s: f64) -> anyhow::Result<crate::des::RunState> {
+        self.engine.checkpoint_at(t_s)
+    }
+
+    /// Continue a checkpointed run to completion, streaming the full
+    /// record stream into `sink`.  `resume_into(checkpoint_at(t))` is
+    /// bitwise identical to `run_into` for any `t` — the property
+    /// `exp::verify::verify_checkpoint_resume_bit_identity` gates.
+    pub fn resume_into(
+        &self,
+        snap: &crate::des::SimSnapshot,
+        sink: &mut dyn MetricsSink,
+    ) -> anyhow::Result<RunOutcome> {
+        self.engine.resume_from(snap, sink)
     }
 
     /// Run with a real-training backend riding along (the PJRT split

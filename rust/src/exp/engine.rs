@@ -18,7 +18,7 @@
 use std::sync::Arc;
 
 use crate::coordinator::Scheduler;
-use crate::des::{CellStats, DesEngine, ServerStats};
+use crate::des::{CellStats, DesEngine, DesOutcome, RunState, ServerStats, SimSnapshot};
 use crate::obs::trace;
 
 use super::sink::MetricsSink;
@@ -73,6 +73,20 @@ pub struct DesRunStats {
     /// total device→cell re-associations over the run (0 when
     /// `cells.count == 1` or the fleet is static)
     pub handovers: u64,
+    /// link retransmission attempts scheduled by the fault plane
+    /// (DESIGN.md §17; 0 when `[faults]` is dormant)
+    pub retries: u64,
+    /// sync-policy stragglers demoted by the fault timeout
+    pub timeout_demotions: u64,
+    /// burst-struck launches rerouted or degraded
+    pub failovers: u64,
+    /// server capacity-slot failures hit at batch dispatch
+    pub slot_failures: u64,
+    /// slot repairs completed
+    pub slot_repairs: u64,
+    /// energy wasted in interrupted partial transfers [J] — extra on
+    /// top of `energy_spent_j` (which is Eq.-11 server compute)
+    pub retry_energy_j: f64,
 }
 
 /// What a completed engine run reports back, beyond the record stream.
@@ -90,6 +104,26 @@ pub struct RunOutcome {
 /// interleavings may change wall-clock, never a record.
 pub trait Engine {
     fn run(&self, sink: &mut dyn MetricsSink) -> anyhow::Result<RunOutcome>;
+
+    /// Run until the first event past virtual time `t_s` and freeze the
+    /// simulation there (DESIGN.md §17).  Only engines with a virtual
+    /// clock can pause; the round engine bails.
+    fn checkpoint_at(&self, t_s: f64) -> anyhow::Result<RunState> {
+        let _ = t_s;
+        anyhow::bail!("this engine has no virtual clock to checkpoint — use the event engine")
+    }
+
+    /// Continue a checkpointed run to completion, streaming the *full*
+    /// record stream (pre- and post-checkpoint cells) into `sink`.
+    /// Bit-identical to an uninterrupted `run`.
+    fn resume_from(
+        &self,
+        snap: &SimSnapshot,
+        sink: &mut dyn MetricsSink,
+    ) -> anyhow::Result<RunOutcome> {
+        let _ = (snap, sink);
+        anyhow::bail!("this engine cannot resume a checkpoint — use the event engine")
+    }
 }
 
 /// The per-round parallel fleet engine over a shared [`Scheduler`].
@@ -178,6 +212,36 @@ impl EventEngine {
     }
 }
 
+/// Drain a finished DES outcome into `sink` and fold it into the
+/// unified [`RunOutcome`] shape — shared by `run` and `resume_from`.
+fn drain_des_outcome(out: DesOutcome, sink: &mut dyn MetricsSink) -> RunOutcome {
+    for rec in &out.records {
+        sink.on_des_record(rec);
+    }
+    RunOutcome {
+        cells: out.records.len(),
+        des: Some(DesRunStats {
+            makespan_s: out.makespan_s,
+            server: out.server,
+            dropped: out.dropped,
+            launched: out.launched,
+            departures: out.departures,
+            arrivals: out.arrivals,
+            peak_staleness: out.peak_staleness,
+            energy_spent_j: out.energy_spent_j,
+            aggregator_consistent: out.aggregator.is_consistent(),
+            per_cell: out.per_cell.clone(),
+            handovers: out.handovers,
+            retries: out.retries,
+            timeout_demotions: out.timeout_demotions,
+            failovers: out.failovers,
+            slot_failures: out.slot_failures,
+            slot_repairs: out.slot_repairs,
+            retry_energy_j: out.retry_energy_j,
+        }),
+    }
+}
+
 impl Engine for EventEngine {
     fn run(&self, sink: &mut dyn MetricsSink) -> anyhow::Result<RunOutcome> {
         let traced = trace::active();
@@ -190,27 +254,35 @@ impl Engine for EventEngine {
             trace::wall_end("event_engine.run", "engine", tid);
             trace::wall_begin("event_engine.drain", "engine", tid);
         }
-        for rec in &out.records {
-            sink.on_des_record(rec);
-        }
+        let outcome = drain_des_outcome(out, sink);
         if traced {
             trace::wall_end("event_engine.drain", "engine", tid);
         }
-        Ok(RunOutcome {
-            cells: out.records.len(),
-            des: Some(DesRunStats {
-                makespan_s: out.makespan_s,
-                server: out.server,
-                dropped: out.dropped,
-                launched: out.launched,
-                departures: out.departures,
-                arrivals: out.arrivals,
-                peak_staleness: out.peak_staleness,
-                energy_spent_j: out.energy_spent_j,
-                aggregator_consistent: out.aggregator.is_consistent(),
-                per_cell: out.per_cell.clone(),
-                handovers: out.handovers,
-            }),
-        })
+        Ok(outcome)
+    }
+
+    fn checkpoint_at(&self, t_s: f64) -> anyhow::Result<RunState> {
+        anyhow::ensure!(
+            t_s.is_finite() && t_s >= 0.0,
+            "checkpoint instant must be finite and >= 0, got {t_s}"
+        );
+        Ok(self.des.run_until(t_s))
+    }
+
+    fn resume_from(
+        &self,
+        snap: &SimSnapshot,
+        sink: &mut dyn MetricsSink,
+    ) -> anyhow::Result<RunOutcome> {
+        let traced = trace::active();
+        let tid = crate::obs::registry::worker_slot() as u64;
+        if traced {
+            trace::wall_begin("event_engine.resume", "engine", tid);
+        }
+        let out = self.des.resume(snap);
+        if traced {
+            trace::wall_end("event_engine.resume", "engine", tid);
+        }
+        Ok(drain_des_outcome(out, sink))
     }
 }

@@ -32,12 +32,17 @@
 //!   envelope (`schema_version` + `meta`).
 //! * [`verify`] hosts the shared serial-vs-parallel (and DES-sync-vs-
 //!   round-engine) determinism gates all sweeps run, including the
-//!   single-cell bit-identity anchor the multi-cell tier is pinned to.
+//!   single-cell bit-identity anchor the multi-cell tier is pinned to,
+//!   plus the fault-plane gates (zero-rate no-op, checkpoint/resume
+//!   bit-identity) the chaos sweep runs per scenario (DESIGN.md §17).
+//! * [`checkpoint`] serializes a paused event-engine run to the
+//!   versioned `edgesplit/checkpoint/v1` text envelope and back.
 //!
 //! Not sure which engine a new experiment should use?  See the
 //! decision table in `rust/src/exp/README.md`.
 
 pub mod builder;
+pub mod checkpoint;
 pub mod engine;
 pub mod report;
 pub mod sink;

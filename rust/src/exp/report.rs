@@ -25,7 +25,7 @@ pub const SCHEMA_VERSION: u64 = 1;
 #[derive(Clone, Debug)]
 pub struct ReportMeta {
     /// emitter kind: `fleet-sweep` | `des-sweep` | `cell-sweep` |
-    /// `card-bench`
+    /// `chaos-sweep` | `card-bench`
     pub kind: &'static str,
     /// scenario selector the run used (`all`, or a registry name)
     pub preset: String,

@@ -6,7 +6,7 @@ use std::sync::Arc;
 
 use crate::config::{ChannelState, ExpConfig};
 use crate::coordinator::{RoundRecord, Scheduler, Strategy};
-use crate::des::{DesConfig, DesEngine, Policy};
+use crate::des::{DesConfig, DesEngine, DesOutcome, Policy, RunState, ServerStats};
 
 use super::builder::Experiment;
 
@@ -126,4 +126,171 @@ pub fn verify_single_cell_bit_identity(
     let mut cfg = cfg.clone();
     cfg.cells = Default::default();
     verify_des_sync_matches_round_engine(&cfg, state, capacity, batch)
+}
+
+fn ensure_server_stats_bits(a: &ServerStats, b: &ServerStats, what: &str) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        a.served_jobs == b.served_jobs
+            && a.abandoned_jobs == b.abandoned_jobs
+            && a.busy_slot_s.to_bits() == b.busy_slot_s.to_bits()
+            && a.mean_wait_s.to_bits() == b.mean_wait_s.to_bits()
+            && a.peak_depth == b.peak_depth
+            && a.mean_depth.to_bits() == b.mean_depth.to_bits()
+            && a.utilization.to_bits() == b.utilization.to_bits(),
+        "{what}: server queue statistics diverge"
+    );
+    Ok(())
+}
+
+/// Require two full DES outcomes to agree bit for bit — analytic
+/// records, DES observables, queue statistics, aggregator state, and
+/// every fault counter.  The comparator behind both fault-plane gates.
+pub fn verify_des_outcome_bit_identical(a: &DesOutcome, b: &DesOutcome) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        a.records.len() == b.records.len(),
+        "record count mismatch: {} vs {}",
+        a.records.len(),
+        b.records.len()
+    );
+    for (x, y) in a.records.iter().zip(&b.records) {
+        verify_bit_identical(std::slice::from_ref(&x.record), std::slice::from_ref(&y.record))?;
+        anyhow::ensure!(
+            x.start_s.to_bits() == y.start_s.to_bits()
+                && x.finish_s.to_bits() == y.finish_s.to_bits()
+                && x.wait_s.to_bits() == y.wait_s.to_bits()
+                && x.staleness == y.staleness
+                && x.weight.to_bits() == y.weight.to_bits()
+                && x.degraded == y.degraded,
+            "DES observables diverge at round {} device {}",
+            x.record.round,
+            x.record.device_idx
+        );
+    }
+    anyhow::ensure!(
+        a.makespan_s.to_bits() == b.makespan_s.to_bits(),
+        "makespan diverges: {} vs {}",
+        a.makespan_s,
+        b.makespan_s
+    );
+    ensure_server_stats_bits(&a.server, &b.server, "fleet")?;
+    anyhow::ensure!(
+        a.per_cell.len() == b.per_cell.len(),
+        "per-cell breakdown length mismatch"
+    );
+    for (i, (x, y)) in a.per_cell.iter().zip(&b.per_cell).enumerate() {
+        ensure_server_stats_bits(&x.server, &y.server, "cell")?;
+        anyhow::ensure!(
+            x.position_m.0.to_bits() == y.position_m.0.to_bits()
+                && x.position_m.1.to_bits() == y.position_m.1.to_bits()
+                && x.energy_spent_j.to_bits() == y.energy_spent_j.to_bits()
+                && x.handovers_in == y.handovers_in
+                && x.aggregator_consistent == y.aggregator_consistent,
+            "cell {i} observables diverge"
+        );
+    }
+    anyhow::ensure!(
+        a.handovers == b.handovers
+            && a.dropped == b.dropped
+            && a.launched == b.launched
+            && a.departures == b.departures
+            && a.arrivals == b.arrivals
+            && a.peak_staleness == b.peak_staleness
+            && a.energy_spent_j.to_bits() == b.energy_spent_j.to_bits(),
+        "run-level counters diverge"
+    );
+    anyhow::ensure!(
+        a.aggregator.merges() == b.aggregator.merges()
+            && a.aggregator.bytes_distributed.to_bits() == b.aggregator.bytes_distributed.to_bits()
+            && a.aggregator.bytes_collected.to_bits() == b.aggregator.bytes_collected.to_bits()
+            && a.aggregator.layers.len() == b.aggregator.layers.len()
+            && a
+                .aggregator
+                .layers
+                .iter()
+                .zip(&b.aggregator.layers)
+                .all(|(x, y)| x.owner == y.owner && x.round == y.round && x.updates == y.updates),
+        "aggregator state diverges"
+    );
+    anyhow::ensure!(
+        a.retries == b.retries
+            && a.timeout_demotions == b.timeout_demotions
+            && a.failovers == b.failovers
+            && a.slot_failures == b.slot_failures
+            && a.slot_repairs == b.slot_repairs
+            && a.retry_energy_j.to_bits() == b.retry_energy_j.to_bits(),
+        "fault counters diverge: retries {} vs {}, demotions {} vs {}, \
+         failovers {} vs {}, slot failures {} vs {}, repairs {} vs {}, \
+         retry energy {} vs {} J",
+        a.retries,
+        b.retries,
+        a.timeout_demotions,
+        b.timeout_demotions,
+        a.failovers,
+        b.failovers,
+        a.slot_failures,
+        b.slot_failures,
+        a.slot_repairs,
+        b.slot_repairs,
+        a.retry_energy_j,
+        b.retry_energy_j
+    );
+    Ok(())
+}
+
+/// The zero-perturbation anchor (DESIGN.md §17): a `[faults]` table
+/// whose injection rates are all zero must be **bitwise invisible** —
+/// the run must equal one with the fault plane entirely absent, on
+/// every record, queue statistic, and counter.  The chaos sweep runs
+/// this gate per scenario before any faulted point is trusted.
+pub fn verify_zero_fault_rate_is_noop(
+    cfg: &ExpConfig,
+    state: ChannelState,
+    des: DesConfig,
+) -> anyhow::Result<()> {
+    // keep the recovery knobs (retries, backoff, timeout factor) from
+    // the caller's table: only the *rates* are zeroed, so this proves
+    // the dormant plane never touches the timeline
+    let mut dormant = cfg.clone();
+    dormant.faults.link_outage_rate_hz = 0.0;
+    dormant.faults.slot_fail_prob = 0.0;
+    dormant.faults.burst_rate_per_round = 0.0;
+    let mut absent = cfg.clone();
+    absent.faults = Default::default();
+    let run = |c: &ExpConfig| {
+        DesEngine::new(
+            Arc::new(Scheduler::new(c.clone(), state, Strategy::Card)),
+            des,
+        )
+        .run()
+    };
+    verify_des_outcome_bit_identical(&run(&dormant), &run(&absent))
+}
+
+/// The checkpoint/resume gate (DESIGN.md §17): freezing the event
+/// engine at virtual time `t_s`, round-tripping the snapshot through
+/// the `edgesplit/checkpoint/v1` text envelope, and resuming must
+/// reproduce the uninterrupted run bit for bit — including mid-burst
+/// and mid-retry checkpoints, since `t_s` may land inside either.
+/// The chaos sweep runs this gate per scenario, which doubles as the
+/// CI round-trip smoke for the envelope codec.
+pub fn verify_checkpoint_resume_bit_identity(
+    cfg: &ExpConfig,
+    state: ChannelState,
+    des: DesConfig,
+    t_s: f64,
+) -> anyhow::Result<()> {
+    let engine = DesEngine::new(
+        Arc::new(Scheduler::new(cfg.clone(), state, Strategy::Card)),
+        des,
+    );
+    let full = engine.run();
+    let resumed = match engine.run_until(t_s) {
+        RunState::Checkpoint(snap) => {
+            let decoded = super::checkpoint::decode(&super::checkpoint::encode(&snap))?;
+            engine.resume(&decoded)
+        }
+        // the horizon drained before t_s — the "resume" is the run itself
+        RunState::Done(out) => *out,
+    };
+    verify_des_outcome_bit_identical(&full, &resumed)
 }

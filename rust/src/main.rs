@@ -8,6 +8,7 @@
 //! edgesplit fleet-sweep          # scenario × device-count grid (parallel)
 //! edgesplit des-sweep            # discrete-event engine: policy × scenario grid
 //! edgesplit cell-sweep           # multi-cell tier: cells × scenario grid + handover
+//! edgesplit chaos-sweep          # fault-injection grid: scenario × fault-rate ladder
 //! edgesplit card-bench           # decision kernel: legacy vs table vs cached
 //! edgesplit decide --state poor  # one-shot CARD decision per device
 //! edgesplit train --arch tiny    # REAL split fine-tuning (PJRT)
@@ -16,7 +17,7 @@
 
 use anyhow::{anyhow, bail, Result};
 
-use edgesplit::cli::{render_help, Args, FlagSpec};
+use edgesplit::cli::{preflight_writable, render_help, Args, FlagSpec};
 use edgesplit::config::scenario::{self, Scenario};
 use edgesplit::config::{CellLayout, ChannelState, ExpConfig};
 use edgesplit::coordinator::Strategy;
@@ -46,14 +47,15 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec { name: "scenario", value: Some("name|all"), help: "sweep scenario preset (see `show scenarios`)", default: Some("all") },
         FlagSpec { name: "counts", value: Some("N,N,..."), help: "sweep device counts", default: Some("10,100,1000,10000") },
         FlagSpec { name: "threads", value: Some("N"), help: "parallel participants per job (default: all cores; the persistent pool caps extra threads at core count — results are identical at any value)", default: None },
-        FlagSpec { name: "out", value: Some("file.json"), help: "sweep JSON output path (default: BENCH_fleet.json / BENCH_des.json / BENCH_cells.json)", default: None },
+        FlagSpec { name: "out", value: Some("file.json"), help: "sweep JSON output path (default: BENCH_fleet.json / BENCH_des.json / BENCH_cells.json / BENCH_faults.json)", default: None },
         FlagSpec { name: "gate-all", value: None, help: "fleet-sweep: run the serial determinism gate at every grid point (default: largest only)", default: None },
-        FlagSpec { name: "devices", value: Some("N"), help: "card-bench fleet size", default: Some("10000") },
+        FlagSpec { name: "devices", value: Some("N"), help: "card-bench / chaos-sweep fleet size (default: 10000 / 24)", default: None },
         FlagSpec { name: "check", value: Some("file.json"), help: "card-bench: fail if decision speedups drop >30% vs this committed baseline", default: None },
         FlagSpec { name: "policy", value: Some("sync|semi-sync|async|all"), help: "des-sweep aggregation policy", default: Some("all") },
         FlagSpec { name: "capacity", value: Some("N"), help: "des-sweep server queue slots", default: Some("4") },
         FlagSpec { name: "batch", value: Some("N"), help: "des-sweep max jobs fused per server dispatch", default: Some("1") },
         FlagSpec { name: "deadline-factor", value: Some("f"), help: "des-sweep semi-sync straggler deadline factor", default: Some("1.5") },
+        FlagSpec { name: "rates", value: Some("f,f,..."), help: "chaos-sweep fault-rate ladder; one knob drives link outages [Hz], slot failures, and bursts (0 = fault-free baseline)", default: Some("0,0.02,0.1,0.5") },
         FlagSpec { name: "cells", value: Some("N,N,..."), help: "cell-sweep edge-server cell counts", default: Some("1,4") },
         FlagSpec { name: "cell-layout", value: Some("line|ring|grid"), help: "cell-sweep site placement layout", default: Some("line") },
         FlagSpec { name: "spacing", value: Some("m"), help: "cell-sweep inter-site spacing [m]", default: Some("60") },
@@ -68,13 +70,14 @@ fn flag_specs() -> Vec<FlagSpec> {
     ]
 }
 
-const SUBCOMMANDS: [(&str, &str); 12] = [
+const SUBCOMMANDS: [(&str, &str); 13] = [
     ("fig3", "reproduce Fig. 3: cut layer + frequency decisions over rounds"),
     ("fig4", "reproduce Fig. 4: delay/energy vs baselines across channel states"),
     ("ablate", "A1/A2 sweeps: w, phi, bandwidth"),
     ("fleet-sweep", "scenario × device-count grid on the parallel round engine"),
     ("des-sweep", "discrete-event engine: policy × scenario × device-count grid"),
     ("cell-sweep", "multi-cell tier: cell-count × scenario grid with handover + per-cell energy"),
+    ("chaos-sweep", "fault-injection grid: scenario × fault-rate ladder with retry/demotion accounting"),
     ("card-bench", "decision-kernel microbench: legacy vs cut-table vs cached (+pool)"),
     ("obs-report", "render the telemetry registry (live run or a BENCH envelope's data.telemetry)"),
     ("decide", "one-shot CARD decision for each device"),
@@ -134,7 +137,10 @@ fn run(argv: &[String]) -> Result<()> {
         // the sweep subcommands rebuild their configs from scenario
         // presets, which define their own [channel.process] — reject
         // the override there instead of silently ignoring it
-        if matches!(cmd, "fleet-sweep" | "des-sweep" | "cell-sweep" | "card-bench") {
+        if matches!(
+            cmd,
+            "fleet-sweep" | "des-sweep" | "cell-sweep" | "chaos-sweep" | "card-bench"
+        ) {
             bail!(
                 "--channel-model does not apply to {cmd}: its presets define the \
                  channel process — pick a preset instead (e.g. --scenario \
@@ -155,7 +161,11 @@ fn run(argv: &[String]) -> Result<()> {
     // and the timeline is written once the command finishes (DESIGN.md
     // §16).  Enabling it never perturbs a record.
     let trace_path = args.str_of("trace");
-    if trace_path.is_some() {
+    if let Some(path) = trace_path {
+        // the timeline is written only at process exit — an unwritable
+        // path used to fail a long run at the very end, so probe it
+        // before dispatch (typed CliError)
+        preflight_writable("trace", path)?;
         obs::trace::enable();
     }
     let result = match cmd {
@@ -173,6 +183,7 @@ fn run(argv: &[String]) -> Result<()> {
         ),
         "des-sweep" => cmd_des_sweep(&args, cfg.seed, rounds_flag),
         "cell-sweep" => cmd_cell_sweep(&args, cfg.seed, rounds_flag),
+        "chaos-sweep" => cmd_chaos_sweep(&args, cfg.seed, rounds_flag),
         "card-bench" => cmd_card_bench(&args, cfg.seed, rounds_flag),
         "decide" => cmd_decide(&cfg, state),
         "train" => cmd_train(
@@ -386,6 +397,60 @@ fn cmd_cell_sweep(args: &Args, seed: u64, rounds: Option<usize>) -> Result<()> {
         "determinism gate: single-cell sync DES == serial round engine (bit-identical) at \
          n = {} for every scenario; per-cell energy sums reproduce the global figure exactly\n",
         counts.iter().max().unwrap()
+    );
+    bench.report();
+
+    report.write(out)?;
+    println!("\nwrote {out} ({} sweep points)", sweep.points.len());
+    Ok(())
+}
+
+fn parse_rates(rates_s: &str) -> Result<Vec<f64>> {
+    rates_s
+        .split(',')
+        .map(|s| {
+            s.trim()
+                .parse::<f64>()
+                .map_err(|_| anyhow!("bad fault rate '{}' in --rates", s.trim()))
+        })
+        .collect()
+}
+
+fn cmd_chaos_sweep(args: &Args, seed: u64, rounds: Option<usize>) -> Result<()> {
+    let scenario_sel = args.str_of("scenario").unwrap_or("all");
+    let scenarios = parse_scenarios(scenario_sel)?;
+    let rates = parse_rates(args.str_of("rates").unwrap_or("0,0.02,0.1,0.5"))?;
+    let n_devices = args.usize_of("devices")?.unwrap_or(24);
+    let threads = args
+        .usize_of("threads")?
+        .unwrap_or_else(pool::default_parallelism);
+    let capacity = args.usize_of("capacity")?.unwrap_or(4);
+    let batch = args.usize_of("batch")?.unwrap_or(1);
+    let out = args.str_of("out").unwrap_or("BENCH_faults.json");
+
+    let mut bench = Bencher::new("chaos-sweep");
+    let sweep = des::chaos_sweep(
+        &scenarios,
+        &rates,
+        n_devices,
+        rounds,
+        capacity,
+        batch,
+        threads,
+        seed,
+        &mut bench,
+    )?;
+    let report = sweep.report(scenario_sel, rounds);
+    println!("{}\n", report.render());
+    println!(
+        "fault plane: the ladder value drives link outages [Hz], slot failures, and \
+         correlated bursts together (sync policy, {capacity} queue slot(s), batch {batch}, \
+         n = {n_devices}); a 0 entry is the fault-free baseline"
+    );
+    println!(
+        "robustness gates: a dormant [faults] table is bitwise invisible, and \
+         checkpoint → envelope round-trip → resume reproduces the uninterrupted run \
+         bit for bit, for every scenario\n"
     );
     bench.report();
 

@@ -47,6 +47,11 @@ pub struct CellGrid {
     servers: Vec<ServerSpec>,
     /// `assignments[device][round]` — serving cell index.
     assignments: Vec<Vec<usize>>,
+    /// `alt_assignments[device][round]` — nearest site *excluding* the
+    /// serving cell: the failover target when the serving cell's link
+    /// is inside a fault burst (DESIGN.md §17).  On a single-cell grid
+    /// this degenerates to cell 0.
+    alt_assignments: Vec<Vec<usize>>,
     handovers_in: Vec<u64>,
     total_handovers: u64,
 }
@@ -68,36 +73,41 @@ impl CellGrid {
         let rounds = rounds.max(1);
         let mut handovers_in = vec![0u64; n_cells];
         let mut total_handovers = 0u64;
-        let assignments = (0..devices)
-            .map(|dev| {
-                let mut trace = Vec::with_capacity(rounds);
-                let mut serving = nearest_cell(&positions, mobility.position_at(dev, 0));
-                trace.push(serving);
-                for round in 1..rounds {
-                    let pos = mobility.position_at(dev, round);
-                    let candidate = nearest_cell(&positions, pos);
-                    if candidate != serving {
-                        // A3-style margin: switch only when the
-                        // candidate's pathloss undercuts the serving
-                        // cell's by more than the hysteresis, i.e.
-                        // 10·α·log10(d_serving/d_candidate) > h
-                        let d_s = distance(positions[serving], pos).max(D_CLAMP_M);
-                        let d_c = distance(positions[candidate], pos).max(D_CLAMP_M);
-                        if 10.0 * alpha * (d_s / d_c).log10() > spec.hysteresis_db {
-                            serving = candidate;
-                            handovers_in[candidate] += 1;
-                            total_handovers += 1;
-                        }
+        let mut assignments = Vec::with_capacity(devices);
+        let mut alt_assignments = Vec::with_capacity(devices);
+        for dev in 0..devices {
+            let mut trace = Vec::with_capacity(rounds);
+            let mut alt = Vec::with_capacity(rounds);
+            let mut serving = nearest_cell(&positions, mobility.position_at(dev, 0));
+            trace.push(serving);
+            alt.push(nearest_cell_excluding(&positions, mobility.position_at(dev, 0), serving));
+            for round in 1..rounds {
+                let pos = mobility.position_at(dev, round);
+                let candidate = nearest_cell(&positions, pos);
+                if candidate != serving {
+                    // A3-style margin: switch only when the
+                    // candidate's pathloss undercuts the serving
+                    // cell's by more than the hysteresis, i.e.
+                    // 10·α·log10(d_serving/d_candidate) > h
+                    let d_s = distance(positions[serving], pos).max(D_CLAMP_M);
+                    let d_c = distance(positions[candidate], pos).max(D_CLAMP_M);
+                    if 10.0 * alpha * (d_s / d_c).log10() > spec.hysteresis_db {
+                        serving = candidate;
+                        handovers_in[candidate] += 1;
+                        total_handovers += 1;
                     }
-                    trace.push(serving);
                 }
-                trace
-            })
-            .collect();
+                trace.push(serving);
+                alt.push(nearest_cell_excluding(&positions, pos, serving));
+            }
+            assignments.push(trace);
+            alt_assignments.push(alt);
+        }
         CellGrid {
             positions,
             servers: vec![server.clone(); n_cells],
             assignments,
+            alt_assignments,
             handovers_in,
             total_handovers,
         }
@@ -122,6 +132,15 @@ impl CellGrid {
     /// horizon keep the last assignment).
     pub fn cell_of(&self, device: usize, round: usize) -> usize {
         let trace = &self.assignments[device];
+        trace[round.min(trace.len() - 1)]
+    }
+
+    /// Failover target of `device` at `round` (DESIGN.md §17): the
+    /// nearest site *other than the serving cell* — the cell the
+    /// hysteresis comparison ranks second.  Equals the serving cell on
+    /// a single-cell grid (no alternate exists).
+    pub fn second_cell_of(&self, device: usize, round: usize) -> usize {
+        let trace = &self.alt_assignments[device];
         trace[round.min(trace.len() - 1)]
     }
 
@@ -173,6 +192,24 @@ fn nearest_cell(positions: &[(f64, f64)], pos: (f64, f64)) -> usize {
     let mut best = 0;
     let mut best_d = f64::INFINITY;
     for (i, &site) in positions.iter().enumerate() {
+        let d = distance(site, pos);
+        if d < best_d {
+            best_d = d;
+            best = i;
+        }
+    }
+    best
+}
+
+/// Nearest site to `pos` other than `exclude` — the failover target.
+/// Falls back to `exclude` itself when it is the only site.
+fn nearest_cell_excluding(positions: &[(f64, f64)], pos: (f64, f64), exclude: usize) -> usize {
+    let mut best = exclude;
+    let mut best_d = f64::INFINITY;
+    for (i, &site) in positions.iter().enumerate() {
+        if i == exclude {
+            continue;
+        }
         let d = distance(site, pos);
         if d < best_d {
             best_d = d;
@@ -351,6 +388,31 @@ mod tests {
             }
         }
         assert_eq!(a.total_handovers(), b.total_handovers());
+    }
+
+    #[test]
+    fn second_cell_is_the_nearest_non_serving_site() {
+        // static devices at 10, 50, 100 m; line cells at 0, 60, 120 m
+        let devs = devices(&[10.0, 50.0, 100.0]);
+        let m = mobility(MobilityModel::Static, &devs, 2);
+        let spec = cells(3, CellLayout::Line, 3.0);
+        let positions = layout_positions(&spec);
+        let g = CellGrid::new(&spec, &ServerSpec::default(), &m, 3, 20, 4.0);
+        for dev in 0..3 {
+            for round in 0..20 {
+                let serving = g.cell_of(dev, round);
+                let second = g.second_cell_of(dev, round);
+                assert_ne!(second, serving, "device {dev} round {round}");
+                let want =
+                    nearest_cell_excluding(&positions, m.position_at(dev, round), serving);
+                assert_eq!(second, want, "device {dev} round {round}");
+            }
+        }
+        // single-cell grid: no alternate exists, degenerate to serving
+        let g1 = CellGrid::new(&cells(1, CellLayout::Line, 3.0), &ServerSpec::default(), &m, 3, 20, 4.0);
+        for dev in 0..3 {
+            assert_eq!(g1.second_cell_of(dev, 5), g1.cell_of(dev, 5));
+        }
     }
 
     #[test]

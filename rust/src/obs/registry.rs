@@ -330,10 +330,22 @@ pub struct Metrics {
     pub des_drops_churn: Counter,
     /// DES cell re-associations observed at launch
     pub des_handovers: Counter,
+    /// DES fault retransmissions scheduled (link outage + backoff)
+    pub des_fault_retries: Counter,
+    /// DES sync-policy timeout demotions to the straggler path
+    pub des_fault_timeouts: Counter,
+    /// DES burst-failovers (second-cell reroutes + degraded cuts)
+    pub des_fault_failovers: Counter,
+    /// DES server capacity-slot failures at batch dispatch
+    pub des_fault_slot_failures: Counter,
+    /// DES slot repairs completed (pairs 1:1 with the failures)
+    pub des_fault_slot_repairs: Counter,
     /// DES event-queue depth (level at each pop)
     pub des_queue_depth: Gauge,
     /// per-job server queue wait [sim s]
     pub des_queue_wait_s: Histogram,
+    /// per-retry backoff wait [sim s]
+    pub des_fault_backoff_s: Histogram,
     /// per-cell end-of-run server utilization
     pub des_server_utilization: Histogram,
     /// wall time of `Scheduler::realize_link` (timers only)
@@ -354,8 +366,14 @@ impl Metrics {
             des_drops_straggler: Counter::new(),
             des_drops_churn: Counter::new(),
             des_handovers: Counter::new(),
+            des_fault_retries: Counter::new(),
+            des_fault_timeouts: Counter::new(),
+            des_fault_failovers: Counter::new(),
+            des_fault_slot_failures: Counter::new(),
+            des_fault_slot_repairs: Counter::new(),
             des_queue_depth: Gauge::new(),
             des_queue_wait_s: Histogram::new(&TIME_BUCKETS_S),
+            des_fault_backoff_s: Histogram::new(&TIME_BUCKETS_S),
             des_server_utilization: Histogram::new(&RATIO_BUCKETS),
             sched_realize_link_s: Histogram::new(&TIME_BUCKETS_S),
             sched_decide_s: Histogram::new(&TIME_BUCKETS_S),

@@ -73,6 +73,11 @@ impl Snapshot {
         counters.push(("des.drops.straggler", m.des_drops_straggler.value()));
         counters.push(("des.drops.churn", m.des_drops_churn.value()));
         counters.push(("des.handovers", m.des_handovers.value()));
+        counters.push(("des.faults.retries", m.des_fault_retries.value()));
+        counters.push(("des.faults.timeouts", m.des_fault_timeouts.value()));
+        counters.push(("des.faults.failovers", m.des_fault_failovers.value()));
+        counters.push(("des.faults.slot_failures", m.des_fault_slot_failures.value()));
+        counters.push(("des.faults.slot_repairs", m.des_fault_slot_repairs.value()));
 
         let gauges = vec![(
             "des.event_queue_depth",
@@ -82,6 +87,7 @@ impl Snapshot {
 
         let histograms = vec![
             ("des.queue_wait_s", hist_snap(&m.des_queue_wait_s)),
+            ("des.faults.backoff_s", hist_snap(&m.des_fault_backoff_s)),
             ("des.server_utilization", hist_snap(&m.des_server_utilization)),
             ("sched.realize_link_s", hist_snap(&m.sched_realize_link_s)),
             ("sched.decide_s", hist_snap(&m.sched_decide_s)),

@@ -71,6 +71,18 @@ impl Accum {
     pub fn max(&self) -> f64 {
         self.max
     }
+
+    /// Full internal state `(n, mean, m2, min, max)` for checkpoint
+    /// serialization; `min`/`max` may be the ±∞ sentinels of an empty
+    /// accumulator, so serialize them as raw bit patterns.
+    pub fn state(&self) -> (u64, f64, f64, f64, f64) {
+        (self.n, self.mean, self.m2, self.min, self.max)
+    }
+
+    /// Inverse of [`Accum::state`].
+    pub fn from_state(n: u64, mean: f64, m2: f64, min: f64, max: f64) -> Self {
+        Self { n, mean, m2, min, max }
+    }
 }
 
 pub fn mean(xs: &[f64]) -> f64 {
@@ -159,6 +171,23 @@ mod tests {
         assert_eq!(a.min(), 1.0);
         assert_eq!(a.max(), 5.0);
         assert_eq!(a.count(), 5);
+    }
+
+    #[test]
+    fn accum_state_round_trip() {
+        let mut a = Accum::new();
+        a.push(2.0);
+        a.push(5.0);
+        let (n, mean, m2, min, max) = a.state();
+        let b = Accum::from_state(n, mean, m2, min, max);
+        assert_eq!(a.count(), b.count());
+        assert_eq!(a.mean().to_bits(), b.mean().to_bits());
+        assert_eq!(a.var().to_bits(), b.var().to_bits());
+        // the empty sentinels survive a round trip too
+        let (n, mean, m2, min, max) = Accum::new().state();
+        let e = Accum::from_state(n, mean, m2, min, max);
+        assert_eq!(e.min(), f64::INFINITY);
+        assert_eq!(e.max(), f64::NEG_INFINITY);
     }
 
     #[test]

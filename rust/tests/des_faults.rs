@@ -1,0 +1,225 @@
+//! Acceptance tests for the fault-injection subsystem (DESIGN.md §17)
+//! through the public experiment API: retry accounting, timeout
+//! demotion, graceful degradation, and checkpoint/resume bit-identity
+//! through the versioned text envelope.
+
+use edgesplit::config::FaultsSpec;
+use edgesplit::des::{DesConfig, Policy, RunState};
+use edgesplit::exp::{checkpoint, CollectSink, Experiment, ExperimentBuilder, NullSink};
+
+fn faulty(
+    spec: FaultsSpec,
+    policy: Policy,
+    capacity: usize,
+    devices: usize,
+    rounds: usize,
+    seed: u64,
+) -> Experiment {
+    ExperimentBuilder::preset("dense-urban")
+        .devices(devices)
+        .rounds(rounds)
+        .seed(seed)
+        .faults(spec)
+        .des(DesConfig {
+            policy,
+            capacity,
+            batch: 1,
+        })
+        .build()
+        .unwrap()
+}
+
+#[test]
+fn link_outages_book_retries_and_waste_energy() {
+    let spec = FaultsSpec {
+        link_outage_rate_hz: 10.0,
+        ..Default::default()
+    };
+    let exp = faulty(spec, Policy::Sync, 4, 6, 3, 7);
+    let mut sink = NullSink;
+    let des = exp.run_into(&mut sink).unwrap().des.unwrap();
+    assert!(des.retries > 0, "rate 10 Hz must interrupt some transfer");
+    assert!(
+        des.retry_energy_j > 0.0,
+        "interrupted partial transfers must be billed"
+    );
+    // the retry bill is separate from Eq.-11 server energy
+    assert!(des.energy_spent_j > 0.0);
+    // deterministic: same seed, same storm
+    let mut sink2 = NullSink;
+    let again = exp.run_into(&mut sink2).unwrap().des.unwrap();
+    assert_eq!(des.retries, again.retries);
+    assert_eq!(des.retry_energy_j.to_bits(), again.retry_energy_j.to_bits());
+}
+
+#[test]
+fn retry_exhaustion_drops_the_cell_not_the_run() {
+    // zero retries allowed: the first outage on a transfer kills the
+    // cell, but the run must still drain and balance its books
+    let spec = FaultsSpec {
+        link_outage_rate_hz: 10.0,
+        max_retries: 0,
+        ..Default::default()
+    };
+    let exp = faulty(spec, Policy::Sync, 4, 6, 3, 7);
+    let mut sink = CollectSink::default();
+    let outcome = exp.run_into(&mut sink).unwrap();
+    let des = outcome.des.unwrap();
+    assert!(des.dropped > 0, "rate 10 Hz with 0 retries must drop cells");
+    assert_eq!(des.launched, outcome.cells as u64 + des.dropped);
+    assert_eq!(des.retries, 0, "no retransmissions were allowed");
+    assert!(des.makespan_s.is_finite() && des.makespan_s > 0.0);
+}
+
+#[test]
+fn sync_timeout_factor_demotes_stragglers() {
+    // a vanishing outage rate arms the plane without ever striking;
+    // the tight timeout then demotes whoever outlives the deadline
+    let spec = FaultsSpec {
+        link_outage_rate_hz: 1e-12,
+        timeout_factor: 0.25,
+        ..Default::default()
+    };
+    let exp = faulty(spec.clone(), Policy::Sync, 1, 8, 2, 7);
+    let mut sink = NullSink;
+    let des = exp.run_into(&mut sink).unwrap().des.unwrap();
+    assert!(
+        des.timeout_demotions > 0,
+        "capacity 1 with a 0.25x deadline must demote someone"
+    );
+    assert_eq!(des.dropped, des.timeout_demotions);
+    // without the timeout, the same storm-free run drops nothing
+    let lax = FaultsSpec {
+        timeout_factor: 0.0,
+        ..spec
+    };
+    let exp = faulty(lax, Policy::Sync, 1, 8, 2, 7);
+    let mut sink = NullSink;
+    let des = exp.run_into(&mut sink).unwrap().des.unwrap();
+    assert_eq!(des.timeout_demotions, 0);
+    assert_eq!(des.dropped, 0);
+}
+
+fn storm_spec() -> FaultsSpec {
+    FaultsSpec {
+        link_outage_rate_hz: 0.3,
+        slot_fail_prob: 0.2,
+        burst_rate_per_round: 1.0,
+        ..Default::default()
+    }
+}
+
+fn assert_runs_match(
+    a: (&CollectSink, &edgesplit::exp::RunOutcome),
+    b: (&CollectSink, &edgesplit::exp::RunOutcome),
+) {
+    let (sink_a, out_a) = a;
+    let (sink_b, out_b) = b;
+    assert_eq!(out_a.cells, out_b.cells);
+    assert_eq!(sink_a.records.len(), sink_b.records.len());
+    for (x, y) in sink_a.records.iter().zip(&sink_b.records) {
+        assert_eq!(x.round, y.round);
+        assert_eq!(x.device_idx, y.device_idx);
+        assert_eq!(x.cut, y.cut);
+        assert_eq!(x.cost.to_bits(), y.cost.to_bits());
+        assert_eq!(x.delay_s.to_bits(), y.delay_s.to_bits());
+        assert_eq!(x.energy_j.to_bits(), y.energy_j.to_bits());
+    }
+    let (da, db) = (out_a.des.as_ref().unwrap(), out_b.des.as_ref().unwrap());
+    assert_eq!(da.makespan_s.to_bits(), db.makespan_s.to_bits());
+    assert_eq!(da.energy_spent_j.to_bits(), db.energy_spent_j.to_bits());
+    assert_eq!(da.retry_energy_j.to_bits(), db.retry_energy_j.to_bits());
+    assert_eq!(da.retries, db.retries);
+    assert_eq!(da.timeout_demotions, db.timeout_demotions);
+    assert_eq!(da.failovers, db.failovers);
+    assert_eq!(da.slot_failures, db.slot_failures);
+    assert_eq!(da.slot_repairs, db.slot_repairs);
+    assert_eq!(da.dropped, db.dropped);
+    assert_eq!(da.launched, db.launched);
+    assert_eq!(da.server.served_jobs, db.server.served_jobs);
+    assert_eq!(da.server.busy_slot_s.to_bits(), db.server.busy_slot_s.to_bits());
+}
+
+#[test]
+fn checkpoint_resume_mid_storm_is_bit_identical_through_the_api() {
+    // all three injection planes armed; freeze mid-run, round-trip the
+    // envelope through a file, resume, and require the full record
+    // stream and every counter bit for bit
+    let exp = faulty(storm_spec(), Policy::Sync, 2, 6, 3, 11);
+    let mut full_sink = CollectSink::default();
+    let full = exp.run_into(&mut full_sink).unwrap();
+
+    let snap = match exp.checkpoint_at(0.5).unwrap() {
+        RunState::Checkpoint(snap) => snap,
+        RunState::Done(_) => panic!("a 3-round storm run cannot drain by t = 0.5 s"),
+    };
+    // the engine freezes on the last event at or before the instant,
+    // with the first strictly-later event still pending
+    assert!(snap.now_s <= 0.5, "clock ran past the checkpoint instant");
+    assert!(snap.events.iter().any(|(t, _, _)| *t > 0.5));
+
+    let dir = std::env::temp_dir().join("edgesplit-des-faults-test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("storm.ckpt");
+    let path = path.to_str().unwrap();
+    checkpoint::write_to(path, &snap).unwrap();
+    let loaded = checkpoint::read_from(path).unwrap();
+    let _ = std::fs::remove_file(path);
+
+    let mut resumed_sink = CollectSink::default();
+    let resumed = exp.resume_into(&loaded, &mut resumed_sink).unwrap();
+    assert_runs_match((&full_sink, &full), (&resumed_sink, &resumed));
+}
+
+#[test]
+fn checkpoint_after_the_horizon_reports_done() {
+    let exp = faulty(storm_spec(), Policy::Async, 2, 4, 2, 3);
+    match exp.checkpoint_at(1e9).unwrap() {
+        RunState::Done(out) => {
+            assert!(out.makespan_s < 1e9);
+            assert!(!out.records.is_empty());
+        }
+        RunState::Checkpoint(_) => panic!("nothing can still be pending at t = 1e9 s"),
+    }
+    // the round engine has no virtual clock to pause
+    let round = ExperimentBuilder::preset("dense-urban")
+        .devices(4)
+        .rounds(1)
+        .build()
+        .unwrap();
+    let err = round.checkpoint_at(1.0).unwrap_err();
+    assert!(err.to_string().contains("event engine"), "{err}");
+}
+
+#[test]
+fn resume_refuses_a_checkpoint_from_a_different_experiment() {
+    let exp = faulty(storm_spec(), Policy::Sync, 2, 6, 3, 11);
+    let snap = match exp.checkpoint_at(0.5).unwrap() {
+        RunState::Checkpoint(snap) => snap,
+        RunState::Done(_) => panic!("run drained early"),
+    };
+    // same preset, different seed → different fingerprint
+    let other = faulty(storm_spec(), Policy::Sync, 2, 6, 3, 12);
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let mut sink = NullSink;
+        let _ = other.resume_into(&snap, &mut sink);
+    }));
+    assert!(result.is_err(), "foreign checkpoint must be refused");
+}
+
+#[test]
+fn single_cell_bursts_degrade_to_the_device_heavy_cut() {
+    // with one cell there is no runner-up site: a struck launch must
+    // fall back to the degraded device-heavy cut instead of dying
+    let spec = FaultsSpec {
+        burst_rate_per_round: 1.0,
+        ..Default::default()
+    };
+    let exp = faulty(spec, Policy::Sync, 4, 6, 3, 7);
+    let mut sink = CollectSink::default();
+    let outcome = exp.run_into(&mut sink).unwrap();
+    let des = outcome.des.unwrap();
+    assert!(des.failovers > 0, "a per-round burst must strike someone");
+    assert_eq!(des.dropped, 0, "degradation must not cost any cell");
+    assert_eq!(outcome.cells, 18);
+}

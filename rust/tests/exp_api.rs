@@ -96,6 +96,91 @@ fn rejects_degenerate_des_knobs() {
 }
 
 #[test]
+fn deadline_factor_error_names_the_valid_range_and_value() {
+    // a 0 / negative / NaN deadline factor must fail with a message
+    // that states the valid range and echoes the rejected value, not
+    // just a generic "invalid" — the flag is user-facing
+    for bad in [0.0, -1.5, f64::NAN, f64::INFINITY] {
+        let err = ExperimentBuilder::preset("dense-urban")
+            .devices(4)
+            .des(DesConfig {
+                policy: Policy::SemiSync {
+                    deadline_factor: bad,
+                },
+                capacity: 1,
+                batch: 1,
+            })
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, BuildError::InvalidDes(_)), "{bad}: {err}");
+        let msg = err.to_string();
+        assert!(msg.contains("(0, +inf)"), "{bad}: {msg}");
+        assert!(msg.contains(&format!("{bad}")), "{bad}: {msg}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the fault plane (DESIGN.md §17)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn zero_rate_faults_are_bitwise_invisible_on_every_preset() {
+    // the zero-perturbation anchor: a [faults] table whose injection
+    // rates are all zero — recovery knobs set or not — must leave
+    // every record, queue statistic, and counter bitwise identical to
+    // a run with the plane entirely absent
+    for sc in scenario::ALL {
+        let mut cfg = sc.config(8, 3).unwrap();
+        cfg.workload.rounds = 2;
+        // non-default recovery knobs: the gate zeroes only the rates
+        cfg.faults.max_retries = 7;
+        cfg.faults.backoff_base_s = 0.1;
+        cfg.faults.timeout_factor = 2.0;
+        for policy in [
+            Policy::Sync,
+            Policy::SemiSync {
+                deadline_factor: 1.5,
+            },
+            Policy::Async,
+        ] {
+            let des = DesConfig {
+                policy,
+                capacity: 2,
+                batch: 1,
+            };
+            if let Err(e) = verify::verify_zero_fault_rate_is_noop(&cfg, sc.state, des) {
+                panic!("{} / {:?}: {e:#}", sc.name, policy);
+            }
+        }
+    }
+}
+
+#[test]
+fn checkpoint_resume_gate_passes_on_every_preset() {
+    // freeze each preset mid-run (with all three injection planes
+    // armed), round-trip the envelope, resume, and require the full
+    // outcome bit for bit
+    for sc in scenario::ALL {
+        let mut cfg = sc.config(6, 9).unwrap();
+        cfg.workload.rounds = 2;
+        cfg.faults.link_outage_rate_hz = 0.3;
+        cfg.faults.slot_fail_prob = 0.2;
+        cfg.faults.burst_rate_per_round = 0.5;
+        let des = DesConfig {
+            policy: Policy::Sync,
+            capacity: 2,
+            batch: 1,
+        };
+        for t_s in [0.05, 1.0, 1e6] {
+            if let Err(e) = verify::verify_checkpoint_resume_bit_identity(&cfg, sc.state, des, t_s)
+            {
+                panic!("{} @ t={t_s}: {e:#}", sc.name);
+            }
+        }
+    }
+}
+
+#[test]
 fn bad_config_surfaces_as_typed_config_error() {
     let mut cfg = edgesplit::config::ExpConfig::paper();
     cfg.card.w = 3.0; // out of [0, 1]

@@ -10,7 +10,11 @@
 //! tests would race the toggles.  The other integration suites run
 //! with the defaults (telemetry on, tracing off) and are unaffected.
 
+use std::sync::Arc;
+
 use edgesplit::config::scenario;
+use edgesplit::coordinator::{Scheduler, Strategy};
+use edgesplit::des::{DesConfig, DesEngine, Policy};
 use edgesplit::exp::{verify, ExperimentBuilder};
 use edgesplit::obs::{self, registry, trace};
 use edgesplit::util::json::Json;
@@ -55,7 +59,50 @@ fn telemetry_and_tracing_never_perturb_records() -> anyhow::Result<()> {
         cfg.workload.rounds = ROUNDS;
         verify::verify_des_sync_matches_round_engine(&cfg, sc.state, 2, 1)?;
         verify::verify_single_cell_bit_identity(&cfg, sc.state, 2, 1)?;
+
+        // the §17 anchor with tracing still live: a dormant [faults]
+        // table is bitwise invisible even while being observed
+        let des = DesConfig {
+            policy: Policy::Sync,
+            capacity: 2,
+            batch: 1,
+        };
+        verify::verify_zero_fault_rate_is_noop(&cfg, sc.state, des)?;
     }
+
+    // the armed fault plane is itself zero-perturbation to observe: a
+    // storm run with every switch off must match the same storm with
+    // the registry + tracer live, bit for bit on every counter
+    let mut cfg = scenario::DENSE_URBAN.config(DEVICES, SEED)?;
+    cfg.workload.rounds = ROUNDS;
+    cfg.faults.link_outage_rate_hz = 5.0;
+    cfg.faults.slot_fail_prob = 0.3;
+    cfg.faults.burst_rate_per_round = 1.0;
+    cfg.faults.timeout_factor = 1.5;
+    let des = DesConfig {
+        policy: Policy::Sync,
+        capacity: 2,
+        batch: 1,
+    };
+    let storm = || {
+        DesEngine::new(
+            Arc::new(Scheduler::new(
+                cfg.clone(),
+                scenario::DENSE_URBAN.state,
+                Strategy::Card,
+            )),
+            des,
+        )
+        .run()
+    };
+    obs::set_enabled(false);
+    trace::disable();
+    let dark = storm();
+    obs::set_enabled(true);
+    trace::enable();
+    let lit = storm();
+    verify::verify_des_outcome_bit_identical(&dark, &lit)?;
+    assert!(lit.retries > 0, "a 5 Hz storm must interrupt some transfer");
 
     // the traced runs above must have recorded spans: engine wall
     // phases at minimum, DES virtual-time activity from the gates
@@ -95,6 +142,27 @@ fn telemetry_and_tracing_never_perturb_records() -> anyhow::Result<()> {
     assert!(
         counters.keys().any(|k| k.starts_with("decision_cache.")),
         "scheduler cache counters missing from snapshot"
+    );
+    // the storm run above was observed: its fault counters landed
+    for key in [
+        "des.faults.retries",
+        "des.faults.timeouts",
+        "des.faults.failovers",
+        "des.faults.slot_failures",
+        "des.faults.slot_repairs",
+    ] {
+        assert!(counters.contains_key(key), "{key} missing from snapshot");
+    }
+    let retries = counters
+        .get("des.faults.retries")
+        .and_then(Json::as_f64)
+        .unwrap();
+    assert!(retries >= lit.retries as f64, "observed storm recorded no retries");
+    let hists = snap.get("histograms").and_then(Json::as_obj).unwrap();
+    let backoff = hists.get("des.faults.backoff_s").expect("backoff histogram");
+    assert!(
+        backoff.get("count").and_then(Json::as_f64).unwrap() > 0.0,
+        "retries must observe their backoff waits"
     );
 
     // leave the process-wide defaults behind for any later suite
