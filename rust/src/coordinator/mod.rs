@@ -8,10 +8,14 @@ pub mod card;
 pub mod cost;
 pub mod kernel;
 pub mod scheduler;
+pub mod soa;
 
 pub use aggregator::Aggregator;
 pub use baselines::Strategy;
 pub use card::{Card, Decision};
 pub use cost::{Bounds, CostModel};
 pub use kernel::{CellEval, CutTable, DecisionCache, ModelTerms};
-pub use scheduler::{build_cost_model, BackendStats, RoundRecord, Scheduler, TrainBackend};
+pub use scheduler::{
+    build_cost_model, BackendStats, CellValues, RoundRecord, Scheduler, TrainBackend,
+};
+pub use soa::{RoundBatch, SOA_CHUNK, SOA_WINDOW};

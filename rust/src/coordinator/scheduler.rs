@@ -107,6 +107,32 @@ pub struct RoundRecord {
     pub backend_wallclock_s: Option<f64>,
 }
 
+/// The numeric payload of one `(round, device)` cell — every
+/// [`RoundRecord`] field except the interned names and the optional
+/// backend results.  This is what the SoA batch path
+/// (`coordinator::soa`) writes into columns; [`Scheduler::device_round`]
+/// is exactly these values plus the name wrapping, so the two paths
+/// share their arithmetic by construction.
+#[derive(Clone, Copy, Debug)]
+pub struct CellValues {
+    pub round: usize,
+    pub device_idx: usize,
+    pub cut: usize,
+    pub freq_hz: f64,
+    pub cost: f64,
+    pub snr_up_db: f64,
+    pub snr_down_db: f64,
+    pub rate_up_bps: f64,
+    pub rate_down_bps: f64,
+    pub delay_s: f64,
+    pub device_compute_s: f64,
+    pub server_compute_s: f64,
+    pub transmission_s: f64,
+    pub energy_j: f64,
+    pub adapter_bytes: f64,
+    pub smashed_bytes_round: f64,
+}
+
 /// Builds the model stack (FLOPs/sizes/delay/energy/cost) for a config.
 pub fn build_cost_model(cfg: &ExpConfig) -> CostModel {
     let arch = LlmArch::by_name(&cfg.workload.arch)
@@ -143,8 +169,9 @@ pub struct Scheduler {
     tables: Vec<CutTable>,
     /// CQI-keyed decision memo (bypassed by non-cacheable strategies).
     cache: DecisionCache,
-    /// Interned device names (one `Arc` clone per record, no `String`).
-    names: Vec<Arc<str>>,
+    /// Interned device names (one `Arc` clone per record, no `String`);
+    /// shared as a slab so `RoundBatch` can resolve names lazily.
+    names: Arc<[Arc<str>]>,
     strategy_name: Arc<str>,
 }
 
@@ -164,7 +191,8 @@ impl Scheduler {
             0
         };
         let cache = DecisionCache::new(cache_devices);
-        let names = cfg.devices.iter().map(|d| Arc::from(d.name.as_str())).collect();
+        let names: Arc<[Arc<str>]> =
+            cfg.devices.iter().map(|d| Arc::from(d.name.as_str())).collect();
         let strategy_name: Arc<str> = Arc::from(strategy.name().as_str());
         Self {
             cfg,
@@ -233,6 +261,16 @@ impl Scheduler {
     /// the scan would compute (DESIGN.md §12), so cells can run in any
     /// order or in parallel and produce identical records.
     pub fn device_round(&self, round: usize, device_idx: usize) -> RoundRecord {
+        self.record_from_values(self.cell_values(round, device_idx))
+    }
+
+    /// The numeric core of [`Scheduler::device_round`]: Stages 1–5 for
+    /// one cell, without touching the interned names.  The SoA batch
+    /// path (`coordinator::soa::RoundBatch`) writes these values
+    /// straight into columns; `device_round` wraps the same values into
+    /// a [`RoundRecord`], so both paths are bitwise identical by
+    /// construction.
+    pub fn cell_values(&self, round: usize, device_idx: usize) -> CellValues {
         let mut rng = self.cell_rng(round, device_idx);
         // phase timers are opt-in (obs::registry::set_timers_enabled);
         // counters/timers observe only — no RNG stream is touched
@@ -248,19 +286,19 @@ impl Scheduler {
                 obs::metrics().cache_hit[self.obs_slot()].inc(device_idx);
                 // hit fast path: decision + record decomposition fused
                 let cell = table.realize_cell(cut, f_hz, cost, link.rates);
-                return self.record_from_cell(round, device_idx, &link, cell);
+                return self.values_from_cell(round, device_idx, &link, cell);
             }
             obs::metrics().cache_miss[self.obs_slot()].inc(device_idx);
             let t_dec = obs::registry::timer_start();
             let d = self.strategy.decide_on(table, link.rates, &mut rng);
             obs::registry::timer_record(&obs::metrics().sched_decide_s, t_dec);
             self.cache.store(device_idx, key, d.cut, d.freq_hz, d.cost);
-            self.cell_record(round, device_idx, &link, d)
+            self.cell_values_from_decision(round, device_idx, &link, d)
         } else {
             let t_dec = obs::registry::timer_start();
             let d = self.strategy.decide_on(table, link.rates, &mut rng);
             obs::registry::timer_record(&obs::metrics().sched_decide_s, t_dec);
-            self.cell_record(round, device_idx, &link, d)
+            self.cell_values_from_decision(round, device_idx, &link, d)
         }
     }
 
@@ -272,7 +310,7 @@ impl Scheduler {
         let decision = self
             .strategy
             .decide_on(&self.tables[device_idx], link.rates, &mut rng);
-        self.cell_record(round, device_idx, &link, decision)
+        self.record_from_values(self.cell_values_from_decision(round, device_idx, &link, decision))
     }
 
     /// The pre-kernel cell path — full model re-evaluation per cost
@@ -315,23 +353,22 @@ impl Scheduler {
         }
     }
 
-    /// Build the round record from a fused [`CellEval`] (cache-hit fast
-    /// path) — bit-identical to [`Scheduler::cell_record`].
-    fn record_from_cell(
+    /// Build the numeric cell values from a fused [`CellEval`]
+    /// (cache-hit fast path) — bit-identical to
+    /// [`Scheduler::cell_values_from_decision`].
+    fn values_from_cell(
         &self,
         round: usize,
         device_idx: usize,
         link: &LinkRealization,
         cell: CellEval,
-    ) -> RoundRecord {
+    ) -> CellValues {
         let table = &self.tables[device_idx];
         let t = self.cfg.workload.local_epochs as f64;
         let d = cell.decision;
-        RoundRecord {
+        CellValues {
             round,
             device_idx,
-            device_name: self.names[device_idx].clone(),
-            strategy: self.strategy_name.clone(),
             cut: d.cut,
             freq_hz: d.freq_hz,
             cost: d.cost,
@@ -346,28 +383,24 @@ impl Scheduler {
             energy_j: d.energy_j,
             adapter_bytes: table.terms.adapter_bytes[d.cut],
             smashed_bytes_round: t * table.terms.wire_bytes_epoch[d.cut],
-            loss: None,
-            backend_wallclock_s: None,
         }
     }
 
     /// Stages 2–5: analytic accounting (Eqs. 7–11) from kernel terms.
-    fn cell_record(
+    fn cell_values_from_decision(
         &self,
         round: usize,
         device_idx: usize,
         link: &LinkRealization,
         decision: Decision,
-    ) -> RoundRecord {
+    ) -> CellValues {
         let table = &self.tables[device_idx];
         let ft = table.freq_terms(decision.freq_hz);
         let t = self.cfg.workload.local_epochs as f64;
         let cut = decision.cut;
-        RoundRecord {
+        CellValues {
             round,
             device_idx,
-            device_name: self.names[device_idx].clone(),
-            strategy: self.strategy_name.clone(),
             cut,
             freq_hz: decision.freq_hz,
             cost: decision.cost,
@@ -382,9 +415,45 @@ impl Scheduler {
             energy_j: decision.energy_j,
             adapter_bytes: table.terms.adapter_bytes[cut],
             smashed_bytes_round: t * table.terms.wire_bytes_epoch[cut],
+        }
+    }
+
+    /// Wrap numeric cell values into a full [`RoundRecord`] — the only
+    /// place the AoS paths touch the interned names.
+    fn record_from_values(&self, v: CellValues) -> RoundRecord {
+        RoundRecord {
+            round: v.round,
+            device_idx: v.device_idx,
+            device_name: self.names[v.device_idx].clone(),
+            strategy: self.strategy_name.clone(),
+            cut: v.cut,
+            freq_hz: v.freq_hz,
+            cost: v.cost,
+            snr_up_db: v.snr_up_db,
+            snr_down_db: v.snr_down_db,
+            rate_up_bps: v.rate_up_bps,
+            rate_down_bps: v.rate_down_bps,
+            delay_s: v.delay_s,
+            device_compute_s: v.device_compute_s,
+            server_compute_s: v.server_compute_s,
+            transmission_s: v.transmission_s,
+            energy_j: v.energy_j,
+            adapter_bytes: v.adapter_bytes,
+            smashed_bytes_round: v.smashed_bytes_round,
             loss: None,
             backend_wallclock_s: None,
         }
+    }
+
+    /// The interned device-name slab (shared with `RoundBatch` for lazy
+    /// name resolution).
+    pub(crate) fn names(&self) -> &Arc<[Arc<str>]> {
+        &self.names
+    }
+
+    /// The interned strategy name.
+    pub(crate) fn strategy_name(&self) -> &Arc<str> {
+        &self.strategy_name
     }
 
     /// Run one training round serially: every participating device

@@ -1,0 +1,362 @@
+//! Struct-of-arrays hot path for fleet-scale rounds (DESIGN.md §18).
+//!
+//! [`RoundBatch`] holds one bounded window of `(round, device)` cells
+//! as parallel columns — one `Vec` per numeric [`RoundRecord`] field —
+//! instead of a `Vec<RoundRecord>`.  The interned device/strategy
+//! names are **not** stored per cell: the batch carries the
+//! scheduler's shared name slab and materializes a full `RoundRecord`
+//! only when a collecting sink asks ([`RoundBatch::record`]).
+//!
+//! Filling is a chunked scan over [`Scheduler::cell_values`] — link
+//! realization, decision-cache probe, and the Eq. 8/10/11 kernel
+//! evaluation fused per cell — with each [`SOA_CHUNK`]-cell chunk
+//! claimed by one worker-pool participant that writes straight into
+//! disjoint column slices.  Because every cell is a pure function of
+//! `(config, seed, round, device)` (counter-based RNG streams), the
+//! chunking and thread count can never change a bit of the output:
+//! the columns are exactly the fields `device_round` would have
+//! produced, in device order.
+//!
+//! The window is bounded ([`SOA_WINDOW`] cells) and the engine reuses
+//! one batch across windows and rounds, so the streaming path holds
+//! O(window) memory however large the fleet is — the memory ceiling
+//! behind the mega-sweep tier.
+
+use std::sync::Arc;
+
+use crate::obs;
+use crate::util::pool;
+
+use super::scheduler::{CellValues, RoundRecord, Scheduler};
+
+/// Cells per engine window: large enough to amortize fan-out, small
+/// enough that 14 f64 columns stay ~1.8 MB however big the fleet is.
+pub const SOA_WINDOW: usize = 16_384;
+
+/// Cells per worker-pool claim inside a window fill.
+pub const SOA_CHUNK: usize = 1_024;
+
+/// One window of round cells, stored column-wise.  Columns are plain
+/// `Vec`s resized (never reallocated down) by [`RoundBatch::fill`];
+/// index `i` within every column belongs to device
+/// `start_device + i` of round `round`.
+#[derive(Clone, Debug)]
+pub struct RoundBatch {
+    pub round: usize,
+    pub start_device: usize,
+    pub cut: Vec<usize>,
+    pub freq_hz: Vec<f64>,
+    pub cost: Vec<f64>,
+    pub snr_up_db: Vec<f64>,
+    pub snr_down_db: Vec<f64>,
+    pub rate_up_bps: Vec<f64>,
+    pub rate_down_bps: Vec<f64>,
+    pub delay_s: Vec<f64>,
+    pub device_compute_s: Vec<f64>,
+    pub server_compute_s: Vec<f64>,
+    pub transmission_s: Vec<f64>,
+    pub energy_j: Vec<f64>,
+    pub adapter_bytes: Vec<f64>,
+    pub smashed_bytes_round: Vec<f64>,
+    /// the scheduler's interned name slab — touched only by `record`
+    names: Arc<[Arc<str>]>,
+    strategy: Arc<str>,
+}
+
+impl Default for RoundBatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Raw column base pointers so pool participants can write disjoint
+/// index ranges of a batch without aliasing a `&mut` borrow.
+struct ColumnPtrs {
+    cut: *mut usize,
+    freq_hz: *mut f64,
+    cost: *mut f64,
+    snr_up_db: *mut f64,
+    snr_down_db: *mut f64,
+    rate_up_bps: *mut f64,
+    rate_down_bps: *mut f64,
+    delay_s: *mut f64,
+    device_compute_s: *mut f64,
+    server_compute_s: *mut f64,
+    transmission_s: *mut f64,
+    energy_j: *mut f64,
+    adapter_bytes: *mut f64,
+    smashed_bytes_round: *mut f64,
+}
+
+// SAFETY: the pointers stay valid for the whole fill (the batch
+// outlives the pool job), and the chunk protocol hands each index to
+// exactly one participant, so no slot is ever written twice or read
+// during the fill.
+unsafe impl Sync for ColumnPtrs {}
+
+impl ColumnPtrs {
+    /// SAFETY: caller must guarantee `i` is in bounds for every column
+    /// and written by only one thread.
+    #[inline]
+    unsafe fn write(&self, i: usize, v: &CellValues) {
+        *self.cut.add(i) = v.cut;
+        *self.freq_hz.add(i) = v.freq_hz;
+        *self.cost.add(i) = v.cost;
+        *self.snr_up_db.add(i) = v.snr_up_db;
+        *self.snr_down_db.add(i) = v.snr_down_db;
+        *self.rate_up_bps.add(i) = v.rate_up_bps;
+        *self.rate_down_bps.add(i) = v.rate_down_bps;
+        *self.delay_s.add(i) = v.delay_s;
+        *self.device_compute_s.add(i) = v.device_compute_s;
+        *self.server_compute_s.add(i) = v.server_compute_s;
+        *self.transmission_s.add(i) = v.transmission_s;
+        *self.energy_j.add(i) = v.energy_j;
+        *self.adapter_bytes.add(i) = v.adapter_bytes;
+        *self.smashed_bytes_round.add(i) = v.smashed_bytes_round;
+    }
+}
+
+impl RoundBatch {
+    pub fn new() -> Self {
+        RoundBatch {
+            round: 0,
+            start_device: 0,
+            cut: Vec::new(),
+            freq_hz: Vec::new(),
+            cost: Vec::new(),
+            snr_up_db: Vec::new(),
+            snr_down_db: Vec::new(),
+            rate_up_bps: Vec::new(),
+            rate_down_bps: Vec::new(),
+            delay_s: Vec::new(),
+            device_compute_s: Vec::new(),
+            server_compute_s: Vec::new(),
+            transmission_s: Vec::new(),
+            energy_j: Vec::new(),
+            adapter_bytes: Vec::new(),
+            smashed_bytes_round: Vec::new(),
+            names: Arc::from(Vec::new()),
+            strategy: Arc::from(""),
+        }
+    }
+
+    /// Cells in the current window.
+    pub fn len(&self) -> usize {
+        self.cut.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cut.is_empty()
+    }
+
+    /// Fleet index of cell `i`.
+    pub fn device_idx(&self, i: usize) -> usize {
+        self.start_device + i
+    }
+
+    /// Materialize cell `i` as a full [`RoundRecord`] — the only place
+    /// the batch touches the interned names (lazy, for collect sinks).
+    pub fn record(&self, i: usize) -> RoundRecord {
+        let device_idx = self.start_device + i;
+        RoundRecord {
+            round: self.round,
+            device_idx,
+            device_name: self.names[device_idx].clone(),
+            strategy: self.strategy.clone(),
+            cut: self.cut[i],
+            freq_hz: self.freq_hz[i],
+            cost: self.cost[i],
+            snr_up_db: self.snr_up_db[i],
+            snr_down_db: self.snr_down_db[i],
+            rate_up_bps: self.rate_up_bps[i],
+            rate_down_bps: self.rate_down_bps[i],
+            delay_s: self.delay_s[i],
+            device_compute_s: self.device_compute_s[i],
+            server_compute_s: self.server_compute_s[i],
+            transmission_s: self.transmission_s[i],
+            energy_j: self.energy_j[i],
+            adapter_bytes: self.adapter_bytes[i],
+            smashed_bytes_round: self.smashed_bytes_round[i],
+            loss: None,
+            backend_wallclock_s: None,
+        }
+    }
+
+    fn resize_columns(&mut self, len: usize) {
+        self.cut.resize(len, 0);
+        for col in [
+            &mut self.freq_hz,
+            &mut self.cost,
+            &mut self.snr_up_db,
+            &mut self.snr_down_db,
+            &mut self.rate_up_bps,
+            &mut self.rate_down_bps,
+            &mut self.delay_s,
+            &mut self.device_compute_s,
+            &mut self.server_compute_s,
+            &mut self.transmission_s,
+            &mut self.energy_j,
+            &mut self.adapter_bytes,
+            &mut self.smashed_bytes_round,
+        ] {
+            col.resize(len, 0.0);
+        }
+    }
+
+    /// Fill this batch with the window
+    /// `devices[start_device .. start_device + len]` of `round`,
+    /// fanning [`SOA_CHUNK`]-cell chunks across up to `threads` pool
+    /// participants.  Reuses the column allocations across calls.
+    /// Bit-identical at any thread count: every cell is pure
+    /// (counter-based RNG streams) and each column slot is written by
+    /// exactly one participant.
+    pub fn fill(
+        &mut self,
+        sched: &Scheduler,
+        round: usize,
+        start_device: usize,
+        len: usize,
+        threads: usize,
+    ) {
+        self.round = round;
+        self.start_device = start_device;
+        self.names = sched.names().clone();
+        self.strategy = sched.strategy_name().clone();
+        self.resize_columns(len);
+        let cols = ColumnPtrs {
+            cut: self.cut.as_mut_ptr(),
+            freq_hz: self.freq_hz.as_mut_ptr(),
+            cost: self.cost.as_mut_ptr(),
+            snr_up_db: self.snr_up_db.as_mut_ptr(),
+            snr_down_db: self.snr_down_db.as_mut_ptr(),
+            rate_up_bps: self.rate_up_bps.as_mut_ptr(),
+            rate_down_bps: self.rate_down_bps.as_mut_ptr(),
+            delay_s: self.delay_s.as_mut_ptr(),
+            device_compute_s: self.device_compute_s.as_mut_ptr(),
+            server_compute_s: self.server_compute_s.as_mut_ptr(),
+            transmission_s: self.transmission_s.as_mut_ptr(),
+            energy_j: self.energy_j.as_mut_ptr(),
+            adapter_bytes: self.adapter_bytes.as_mut_ptr(),
+            smashed_bytes_round: self.smashed_bytes_round.as_mut_ptr(),
+        };
+        let fill_chunk = |off: usize| {
+            let end = (off + SOA_CHUNK).min(len);
+            let t0 = obs::registry::timer_start();
+            for i in off..end {
+                let v = sched.cell_values(round, start_device + i);
+                // SAFETY: i < len (columns were just resized to len)
+                // and chunks partition [0, len) disjointly
+                unsafe { cols.write(i, &v) };
+            }
+            obs::metrics().soa_chunks.inc(obs::registry::worker_slot());
+            obs::registry::timer_record(&obs::metrics().soa_fill_s, t0);
+        };
+        if threads > 1 && len > SOA_CHUNK {
+            let offsets: Vec<usize> = (0..len).step_by(SOA_CHUNK).collect();
+            pool::par_map_indexed(threads, &offsets, |_, &off| fill_chunk(off));
+        } else if len > 0 {
+            for off in (0..len).step_by(SOA_CHUNK) {
+                fill_chunk(off);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::scenario;
+    use crate::coordinator::Strategy;
+
+    fn sched(devices: usize, rounds: usize) -> Scheduler {
+        let sc = scenario::DENSE_URBAN;
+        let mut cfg = sc.config(devices, 7).unwrap();
+        cfg.workload.rounds = rounds;
+        Scheduler::new(cfg, sc.state, Strategy::Card)
+    }
+
+    fn assert_batch_matches_records(b: &RoundBatch, s: &Scheduler, round: usize) {
+        for i in 0..b.len() {
+            let want = s.device_round(round, b.device_idx(i));
+            let got = b.record(i);
+            assert_eq!(got.round, want.round);
+            assert_eq!(got.device_idx, want.device_idx);
+            assert_eq!(got.device_name, want.device_name);
+            assert_eq!(got.strategy, want.strategy);
+            assert_eq!(got.cut, want.cut);
+            for (a, c) in [
+                (got.freq_hz, want.freq_hz),
+                (got.cost, want.cost),
+                (got.snr_up_db, want.snr_up_db),
+                (got.snr_down_db, want.snr_down_db),
+                (got.rate_up_bps, want.rate_up_bps),
+                (got.rate_down_bps, want.rate_down_bps),
+                (got.delay_s, want.delay_s),
+                (got.device_compute_s, want.device_compute_s),
+                (got.server_compute_s, want.server_compute_s),
+                (got.transmission_s, want.transmission_s),
+                (got.energy_j, want.energy_j),
+                (got.adapter_bytes, want.adapter_bytes),
+                (got.smashed_bytes_round, want.smashed_bytes_round),
+            ] {
+                assert_eq!(a.to_bits(), c.to_bits(), "cell {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn fill_matches_device_round_bitwise() {
+        let s = sched(7, 2);
+        let mut b = RoundBatch::new();
+        for round in 0..2 {
+            b.fill(&s, round, 0, 7, 1);
+            assert_eq!(b.len(), 7);
+            assert_batch_matches_records(&b, &s, round);
+        }
+    }
+
+    #[test]
+    fn threaded_fill_is_bit_identical_to_serial() {
+        let s = sched(9, 1);
+        let mut serial = RoundBatch::new();
+        serial.fill(&s, 0, 0, 9, 1);
+        for threads in [2, 4, 8] {
+            let mut par = RoundBatch::new();
+            par.fill(&s, 0, 0, 9, threads);
+            assert_eq!(serial.cut, par.cut);
+            for (a, b) in serial.delay_s.iter().zip(&par.delay_s) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            for (a, b) in serial.energy_j.iter().zip(&par.energy_j) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn partial_windows_cover_the_fleet() {
+        // window smaller than the fleet: two fills tile [0, 5) + [5, 7)
+        let s = sched(7, 1);
+        let mut b = RoundBatch::new();
+        b.fill(&s, 0, 0, 5, 1);
+        assert_eq!(b.len(), 5);
+        assert_batch_matches_records(&b, &s, 0);
+        b.fill(&s, 0, 5, 2, 1);
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.device_idx(0), 5);
+        assert_batch_matches_records(&b, &s, 0);
+        // shrinking reuse: a larger refill after a smaller one is clean
+        b.fill(&s, 0, 0, 7, 1);
+        assert_eq!(b.len(), 7);
+        assert_batch_matches_records(&b, &s, 0);
+    }
+
+    #[test]
+    fn empty_fill_is_harmless() {
+        let s = sched(3, 1);
+        let mut b = RoundBatch::new();
+        b.fill(&s, 0, 0, 0, 4);
+        assert!(b.is_empty());
+        assert_eq!(b.len(), 0);
+    }
+}

@@ -223,7 +223,7 @@ fn run_point(
     let round_latency = if sink.des.latencies.is_empty() {
         Percentiles::default()
     } else {
-        Percentiles::of(&sink.des.latencies)
+        Percentiles::of(sink.des.latencies.as_slice())
     };
     let point = DesPoint {
         scenario: sc.name.to_string(),

@@ -17,7 +17,7 @@
 
 use std::sync::Arc;
 
-use crate::coordinator::Scheduler;
+use crate::coordinator::{RoundBatch, Scheduler, SOA_WINDOW};
 use crate::des::{CellStats, DesEngine, DesOutcome, RunState, ServerStats, SimSnapshot};
 use crate::obs::trace;
 
@@ -26,8 +26,10 @@ use super::sink::MetricsSink;
 /// How the round engine evaluates cells.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ExecMode {
-    /// Production path: decision kernel + CQI-keyed cache, cells fanned
-    /// out across the worker pool (serial when `threads <= 1`).
+    /// Production path: decision kernel + CQI-keyed cache, streamed as
+    /// bounded SoA windows whose chunks fan out across the worker pool
+    /// (serial when `threads <= 1`) — no `Vec<RoundRecord>` is ever
+    /// materialized by the engine.
     Cached,
     /// Oracle: kernel scan with the decision cache bypassed (serial).
     Uncached,
@@ -158,23 +160,25 @@ impl Engine for RoundEngine {
         if traced {
             trace::wall_begin("round_engine.run", "engine", tid);
         }
+        // one reusable SoA window for the whole run: the streaming
+        // path's memory is O(SOA_WINDOW), not O(devices × rounds)
+        let mut batch = RoundBatch::new();
         for round in 0..rounds {
             if traced {
                 trace::wall_begin("round", "engine", tid);
             }
             match self.mode {
-                ExecMode::Cached if self.threads > 1 => {
-                    // one round in flight at a time: bounded memory,
-                    // bit-identical to the serial stream
-                    for rec in self.sched.run_round_parallel(round, self.threads) {
-                        sink.on_record_owned(rec);
-                        cells += 1;
-                    }
-                }
                 ExecMode::Cached => {
-                    for i in 0..devices {
-                        sink.on_record_owned(self.sched.device_round(round, i));
-                        cells += 1;
+                    // bounded SoA windows in device order — bit-
+                    // identical to the per-record serial stream at any
+                    // window/thread count (every cell is pure)
+                    let mut start = 0;
+                    while start < devices {
+                        let len = SOA_WINDOW.min(devices - start);
+                        batch.fill(&self.sched, round, start, len, self.threads);
+                        sink.on_batch(&batch);
+                        cells += len;
+                        start += len;
                     }
                 }
                 ExecMode::Uncached => {
@@ -214,12 +218,17 @@ impl EventEngine {
 
 /// Drain a finished DES outcome into `sink` and fold it into the
 /// unified [`RunOutcome`] shape — shared by `run` and `resume_from`.
-fn drain_des_outcome(out: DesOutcome, sink: &mut dyn MetricsSink) -> RunOutcome {
-    for rec in &out.records {
-        sink.on_des_record(rec);
+fn drain_des_outcome(mut out: DesOutcome, sink: &mut dyn MetricsSink) -> RunOutcome {
+    // hand the records over by value: sinks that materialize them
+    // (CollectSink) move the payload instead of cloning two Arc names
+    // per cell
+    let records = std::mem::take(&mut out.records);
+    let cells = records.len();
+    for rec in records {
+        sink.on_des_record_owned(rec);
     }
     RunOutcome {
-        cells: out.records.len(),
+        cells,
         des: Some(DesRunStats {
             makespan_s: out.makespan_s,
             server: out.server,

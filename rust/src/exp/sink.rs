@@ -2,9 +2,10 @@
 //! produced, so aggregating consumers never have to hold a full
 //! `rounds × devices` record vector per grid point.
 
-use crate::coordinator::RoundRecord;
+use crate::coordinator::{RoundBatch, RoundRecord};
 use crate::des::DesRecord;
 use crate::sim::metrics::Summary;
+use crate::util::stats::ReservoirSampler;
 
 /// Receives the record stream an [`super::Engine`] produces, in the
 /// engine's canonical (round-major) order.
@@ -17,15 +18,34 @@ pub trait MetricsSink {
     fn on_record(&mut self, rec: &RoundRecord);
 
     /// Owned-record fast path: engines that own the records they
-    /// stream (the round engine) hand them over without a clone.
-    /// Sinks that materialize records override this; the default
-    /// forwards by reference.
+    /// stream (the round engine's oracle modes) hand them over without
+    /// a clone.  Sinks that materialize records override this; the
+    /// default forwards by reference.
     fn on_record_owned(&mut self, rec: RoundRecord) {
         self.on_record(&rec);
     }
 
+    /// One SoA window from the round engine's streaming path
+    /// (DESIGN.md §18).  The default materializes each cell through
+    /// [`RoundBatch::record`] and forwards it, so record-oriented sinks
+    /// work unchanged; column-oriented sinks ([`SummarySink`],
+    /// [`NullSink`]) override this to fold without building a single
+    /// `RoundRecord`.
+    fn on_batch(&mut self, batch: &RoundBatch) {
+        for i in 0..batch.len() {
+            self.on_record_owned(batch.record(i));
+        }
+    }
+
     fn on_des_record(&mut self, rec: &DesRecord) {
         self.on_record(&rec.record);
+    }
+
+    /// Owned DES-record fast path, mirroring `on_record_owned`: the
+    /// event engine owns its outcome records and hands them over
+    /// without refcount traffic.  The default forwards by reference.
+    fn on_des_record_owned(&mut self, rec: DesRecord) {
+        self.on_des_record(&rec);
     }
 }
 
@@ -35,6 +55,8 @@ pub struct NullSink;
 
 impl MetricsSink for NullSink {
     fn on_record(&mut self, _rec: &RoundRecord) {}
+
+    fn on_batch(&mut self, _batch: &RoundBatch) {}
 }
 
 /// Materializes the full record stream (figures and bit-compat gates
@@ -52,6 +74,13 @@ impl MetricsSink for CollectSink {
     fn on_record_owned(&mut self, rec: RoundRecord) {
         self.records.push(rec);
     }
+
+    /// By-value end-to-end: moving the embedded record out of an owned
+    /// `DesRecord` costs zero `Arc` refcount bumps per cell (the
+    /// by-reference default would clone both interned names).
+    fn on_des_record_owned(&mut self, rec: DesRecord) {
+        self.records.push(rec.record);
+    }
 }
 
 /// Aggregates the stream into a [`Summary`] online — what the sweeps
@@ -65,15 +94,22 @@ impl MetricsSink for SummarySink {
     fn on_record(&mut self, rec: &RoundRecord) {
         self.summary.push(rec);
     }
+
+    /// Column-wise fold, no record materialization — bit-identical to
+    /// the per-record path (see `Summary::push_batch`).
+    fn on_batch(&mut self, batch: &RoundBatch) {
+        self.summary.push_batch(batch);
+    }
 }
 
 /// DES observables the `des-sweep` reports: per-cell end-to-end latency
-/// samples (for percentiles) and the energy of merged rounds only
+/// samples (for percentiles; reservoir-bounded so memory stays fixed at
+/// any fleet size) and the energy of merged rounds only
 /// (`energy_merged_j` — the dispatch-time bill lives in
 /// [`super::DesRunStats::energy_spent_j`]).
 #[derive(Default)]
 pub struct DesSink {
-    pub latencies: Vec<f64>,
+    pub latencies: ReservoirSampler,
     pub energy_merged_j: f64,
 }
 

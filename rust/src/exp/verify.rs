@@ -65,6 +65,28 @@ pub fn verify_records_match_serial(
     verify_bit_identical(&serial, parallel)
 }
 
+/// The SoA-path gate (DESIGN.md §18): the streaming `ExecMode::Cached`
+/// engine — SoA windows, pool-chunked fills, lazy name resolution —
+/// must reproduce both retained AoS oracles bit for bit on the same
+/// scheduler: `run_uncached` (kernel scan, no decision cache) and
+/// `run_ref` (pre-kernel full re-evaluation, the paper-equation
+/// reference).  `exp::Experiment::run_collect` drives the real
+/// engine + sink stack, so this covers the whole streaming path, not
+/// just the scheduler.
+pub fn verify_soa_matches_oracles(exp: &Experiment) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        !exp.is_event_engine(),
+        "the SoA gate applies to the round engine"
+    );
+    let streamed = exp.run_collect()?;
+    let sched = exp.scheduler();
+    verify_bit_identical(&streamed, &sched.run_uncached())
+        .map_err(|e| e.context("SoA stream vs uncached oracle"))?;
+    verify_bit_identical(&streamed, &sched.run_ref())
+        .map_err(|e| e.context("SoA stream vs ref oracle"))?;
+    Ok(())
+}
+
 /// Gate variant for callers that already hold a churn-free sync-policy
 /// DES record stream (e.g. a des-sweep grid point at the gate
 /// configuration): compares it against a fresh serial round-engine run

@@ -10,6 +10,7 @@
 //! edgesplit cell-sweep           # multi-cell tier: cells × scenario grid + handover
 //! edgesplit chaos-sweep          # fault-injection grid: scenario × fault-rate ladder
 //! edgesplit card-bench           # decision kernel: legacy vs table vs cached
+//! edgesplit mega-sweep           # million-device streaming tier: cells/sec + peak RSS
 //! edgesplit decide --state poor  # one-shot CARD decision per device
 //! edgesplit train --arch tiny    # REAL split fine-tuning (PJRT)
 //! edgesplit show devices|params  # Table I / Table II
@@ -27,7 +28,7 @@ use edgesplit::exp::ExperimentBuilder;
 use edgesplit::obs;
 use edgesplit::runtime::{artifact_dir, ArtifactStore, SplitExecutor};
 use edgesplit::util::json::Json;
-use edgesplit::sim::{ablate, cardbench, fig3, fig4, fleet};
+use edgesplit::sim::{ablate, cardbench, fig3, fig4, fleet, mega};
 use edgesplit::util::benchkit::Bencher;
 use edgesplit::util::logging;
 use edgesplit::util::pool;
@@ -46,11 +47,13 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec { name: "sweep", value: Some("w|phi|bandwidth"), help: "ablation sweep to run", default: Some("w") },
         FlagSpec { name: "scenario", value: Some("name|all"), help: "sweep scenario preset (see `show scenarios`)", default: Some("all") },
         FlagSpec { name: "counts", value: Some("N,N,..."), help: "sweep device counts", default: Some("10,100,1000,10000") },
+        FlagSpec { name: "max-devices", value: Some("N"), help: "fleet-sweep: decade device grid 10,100,... capped at N (overrides --counts)", default: None },
+        FlagSpec { name: "grid", value: Some("N,N,..."), help: "fleet-sweep: explicit strictly-increasing device grid (overrides --max-devices/--counts)", default: None },
         FlagSpec { name: "threads", value: Some("N"), help: "parallel participants per job (default: all cores; the persistent pool caps extra threads at core count — results are identical at any value)", default: None },
-        FlagSpec { name: "out", value: Some("file.json"), help: "sweep JSON output path (default: BENCH_fleet.json / BENCH_des.json / BENCH_cells.json / BENCH_faults.json)", default: None },
+        FlagSpec { name: "out", value: Some("file.json"), help: "sweep JSON output path (default: BENCH_fleet.json / BENCH_des.json / BENCH_cells.json / BENCH_faults.json / BENCH_mega.json)", default: None },
         FlagSpec { name: "gate-all", value: None, help: "fleet-sweep: run the serial determinism gate at every grid point (default: largest only)", default: None },
-        FlagSpec { name: "devices", value: Some("N"), help: "card-bench / chaos-sweep fleet size (default: 10000 / 24)", default: None },
-        FlagSpec { name: "check", value: Some("file.json"), help: "card-bench: fail if decision speedups drop >30% vs this committed baseline", default: None },
+        FlagSpec { name: "devices", value: Some("N"), help: "card-bench / chaos-sweep / mega-sweep fleet size (default: 10000 / 24 / 1000000)", default: None },
+        FlagSpec { name: "check", value: Some("file.json"), help: "card-bench: fail if decision speedups drop >30% vs this committed baseline; mega-sweep: enforce its cells/sec floor + peak-RSS ceiling", default: None },
         FlagSpec { name: "policy", value: Some("sync|semi-sync|async|all"), help: "des-sweep aggregation policy", default: Some("all") },
         FlagSpec { name: "capacity", value: Some("N"), help: "des-sweep server queue slots", default: Some("4") },
         FlagSpec { name: "batch", value: Some("N"), help: "des-sweep max jobs fused per server dispatch", default: Some("1") },
@@ -70,7 +73,7 @@ fn flag_specs() -> Vec<FlagSpec> {
     ]
 }
 
-const SUBCOMMANDS: [(&str, &str); 13] = [
+const SUBCOMMANDS: [(&str, &str); 14] = [
     ("fig3", "reproduce Fig. 3: cut layer + frequency decisions over rounds"),
     ("fig4", "reproduce Fig. 4: delay/energy vs baselines across channel states"),
     ("ablate", "A1/A2 sweeps: w, phi, bandwidth"),
@@ -79,6 +82,7 @@ const SUBCOMMANDS: [(&str, &str); 13] = [
     ("cell-sweep", "multi-cell tier: cell-count × scenario grid with handover + per-cell energy"),
     ("chaos-sweep", "fault-injection grid: scenario × fault-rate ladder with retry/demotion accounting"),
     ("card-bench", "decision-kernel microbench: legacy vs cut-table vs cached (+pool)"),
+    ("mega-sweep", "million-device streaming tier: SoA cells/sec + peak-RSS ceiling guard"),
     ("obs-report", "render the telemetry registry (live run or a BENCH envelope's data.telemetry)"),
     ("decide", "one-shot CARD decision for each device"),
     ("train", "REAL split fine-tuning over PJRT artifacts"),
@@ -140,6 +144,7 @@ fn run(argv: &[String]) -> Result<()> {
         if matches!(
             cmd,
             "fleet-sweep" | "des-sweep" | "cell-sweep" | "chaos-sweep" | "card-bench"
+                | "mega-sweep"
         ) {
             bail!(
                 "--channel-model does not apply to {cmd}: its presets define the \
@@ -172,19 +177,12 @@ fn run(argv: &[String]) -> Result<()> {
         "fig3" => cmd_fig3(&cfg, state),
         "fig4" => cmd_fig4(&cfg),
         "ablate" => cmd_ablate(&cfg, args.str_of("sweep").unwrap_or("w")),
-        "fleet-sweep" => cmd_fleet_sweep(
-            cfg.seed,
-            rounds_flag,
-            args.str_of("scenario").unwrap_or("all"),
-            args.str_of("counts").unwrap_or("10,100,1000,10000"),
-            args.usize_of("threads")?,
-            args.bool_of("gate-all"),
-            args.str_of("out").unwrap_or("BENCH_fleet.json"),
-        ),
+        "fleet-sweep" => cmd_fleet_sweep(&args, cfg.seed, rounds_flag),
         "des-sweep" => cmd_des_sweep(&args, cfg.seed, rounds_flag),
         "cell-sweep" => cmd_cell_sweep(&args, cfg.seed, rounds_flag),
         "chaos-sweep" => cmd_chaos_sweep(&args, cfg.seed, rounds_flag),
         "card-bench" => cmd_card_bench(&args, cfg.seed, rounds_flag),
+        "mega-sweep" => cmd_mega_sweep(&args, cfg.seed, rounds_flag),
         "decide" => cmd_decide(&cfg, state),
         "train" => cmd_train(
             &cfg,
@@ -256,28 +254,40 @@ fn parse_scenarios(scenario_sel: &str) -> Result<Vec<Scenario>> {
 }
 
 fn parse_counts(counts_s: &str) -> Result<Vec<usize>> {
-    counts_s
+    parse_count_list(counts_s, "--counts")
+}
+
+fn parse_count_list(list_s: &str, flag: &str) -> Result<Vec<usize>> {
+    list_s
         .split(',')
         .map(|s| {
             s.trim()
                 .parse::<usize>()
-                .map_err(|_| anyhow!("bad device count '{}' in --counts", s.trim()))
+                .map_err(|_| anyhow!("bad device count '{}' in {flag}", s.trim()))
         })
         .collect()
 }
 
-fn cmd_fleet_sweep(
-    seed: u64,
-    rounds: Option<usize>,
-    scenario_sel: &str,
-    counts_s: &str,
-    threads: Option<usize>,
-    gate_all: bool,
-    out: &str,
-) -> Result<()> {
+fn cmd_fleet_sweep(args: &Args, seed: u64, rounds: Option<usize>) -> Result<()> {
+    let scenario_sel = args.str_of("scenario").unwrap_or("all");
     let scenarios = parse_scenarios(scenario_sel)?;
-    let counts = parse_counts(counts_s)?;
-    let threads = threads.unwrap_or_else(pool::default_parallelism);
+    // device-grid precedence: --grid > --max-devices > --counts
+    // (validated in fleet::resolve_grid — zero counts and non-monotone
+    // grids are rejected before any experiment builds)
+    let grid = args
+        .str_of("grid")
+        .map(|s| parse_count_list(s, "--grid"))
+        .transpose()?;
+    let counts = fleet::resolve_grid(
+        grid,
+        args.usize_of("max-devices")?,
+        parse_counts(args.str_of("counts").unwrap_or("10,100,1000,10000"))?,
+    )?;
+    let gate_all = args.bool_of("gate-all");
+    let out = args.str_of("out").unwrap_or("BENCH_fleet.json");
+    let threads = args
+        .usize_of("threads")?
+        .unwrap_or_else(pool::default_parallelism);
 
     let mut bench = Bencher::new("fleet-sweep");
     let sweep = fleet::sweep(&scenarios, &counts, rounds, threads, seed, gate_all, &mut bench)?;
@@ -494,6 +504,50 @@ fn cmd_card_bench(args: &Args, seed: u64, rounds: Option<usize>) -> Result<()> {
             .map_err(|e| anyhow!("parsing baseline {baseline_path}: {e}"))?;
         result.check_against(&baseline)?;
         println!("regression guard: speedups within 30% of {baseline_path}");
+    }
+    Ok(())
+}
+
+fn cmd_mega_sweep(args: &Args, seed: u64, rounds: Option<usize>) -> Result<()> {
+    let scenario_sel = args.str_of("scenario").unwrap_or("all");
+    let scenario = if scenario_sel.eq_ignore_ascii_case("all") {
+        // mega-sweep times one preset at fleet scale, not a grid — say
+        // so instead of silently reinterpreting the shared flag default
+        println!("mega-sweep benches a single preset: using heterogeneous-fleet (pass --scenario <name> to pick another)\n");
+        scenario::HETEROGENEOUS_FLEET
+    } else {
+        parse_scenarios(scenario_sel)?[0]
+    };
+    let n_devices = args.usize_of("devices")?.unwrap_or(1_000_000);
+    // default 1 round: the tier scales the fleet axis, not the time axis
+    let rounds = rounds.unwrap_or(1);
+    let threads = args
+        .usize_of("threads")?
+        .unwrap_or_else(pool::default_parallelism);
+    let out = args.str_of("out").unwrap_or("BENCH_mega.json");
+
+    let mut bench = Bencher::new("mega-sweep");
+    let result = mega::run(&scenario, n_devices, rounds, threads, seed, &mut bench)?;
+    let report = result.report();
+    println!("{}\n", report.render());
+    println!(
+        "correctness anchor: the streaming SoA path matched both oracles bit for bit on a \
+         scaled-down twin before timing\n"
+    );
+    bench.report();
+
+    // write the measurement before any guard verdict so a failing run
+    // still leaves its BENCH_mega.json behind for inspection
+    report.write(out)?;
+    println!("\nwrote {out}");
+
+    if let Some(baseline_path) = args.str_of("check") {
+        let text = std::fs::read_to_string(baseline_path)
+            .map_err(|e| anyhow!("reading baseline {baseline_path}: {e}"))?;
+        let baseline = Json::parse(&text)
+            .map_err(|e| anyhow!("parsing baseline {baseline_path}: {e}"))?;
+        result.check_against(&baseline)?;
+        println!("regression guard: cells/sec floor and peak-RSS ceiling hold vs {baseline_path}");
     }
     Ok(())
 }

@@ -352,6 +352,10 @@ pub struct Metrics {
     pub sched_realize_link_s: Histogram,
     /// wall time of the decision scan / cache path (timers only)
     pub sched_decide_s: Histogram,
+    /// SoA chunks filled by the round engine's streaming path
+    pub soa_chunks: Counter,
+    /// wall time per SoA chunk fill (timers only)
+    pub soa_fill_s: Histogram,
 }
 
 impl Metrics {
@@ -377,6 +381,8 @@ impl Metrics {
             des_server_utilization: Histogram::new(&RATIO_BUCKETS),
             sched_realize_link_s: Histogram::new(&TIME_BUCKETS_S),
             sched_decide_s: Histogram::new(&TIME_BUCKETS_S),
+            soa_chunks: Counter::new(),
+            soa_fill_s: Histogram::new(&TIME_BUCKETS_S),
         }
     }
 }

@@ -68,6 +68,7 @@ impl Snapshot {
             counters.push((MISS_KEYS[i], m.cache_miss[i].value()));
         }
         counters.push(("pool.idle_parks", m.pool_parks.value()));
+        counters.push(("round.soa.chunks", m.soa_chunks.value()));
         counters.push(("des.events", m.des_events.value()));
         counters.push(("des.merges", m.des_merges.value()));
         counters.push(("des.drops.straggler", m.des_drops_straggler.value()));
@@ -91,6 +92,7 @@ impl Snapshot {
             ("des.server_utilization", hist_snap(&m.des_server_utilization)),
             ("sched.realize_link_s", hist_snap(&m.sched_realize_link_s)),
             ("sched.decide_s", hist_snap(&m.sched_decide_s)),
+            ("round.soa.fill_s", hist_snap(&m.soa_fill_s)),
         ];
 
         let mut pool_claimed = m.pool_claimed.values();

@@ -41,7 +41,7 @@ pub fn sweep_w(base: &ExpConfig, values: &[f64]) -> anyhow::Result<Vec<SweepPoin
             value: w,
             mean_delay_s: s.delay.mean(),
             mean_energy_j: s.energy.mean(),
-            mean_freq_ghz: s.freqs_ghz.iter().sum::<f64>() / s.freqs_ghz.len() as f64,
+            mean_freq_ghz: s.mean_freq_ghz(),
             frac_cut_full: at_i,
         });
     }
@@ -60,7 +60,7 @@ pub fn sweep_phi(base: &ExpConfig, values: &[f64]) -> anyhow::Result<Vec<SweepPo
             value: phi,
             mean_delay_s: s.delay.mean(),
             mean_energy_j: s.energy.mean(),
-            mean_freq_ghz: s.freqs_ghz.iter().sum::<f64>() / s.freqs_ghz.len() as f64,
+            mean_freq_ghz: s.mean_freq_ghz(),
             frac_cut_full: at_i,
         });
     }
@@ -79,7 +79,7 @@ pub fn sweep_bandwidth(base: &ExpConfig, values_mhz: &[f64]) -> anyhow::Result<V
             value: mhz,
             mean_delay_s: s.delay.mean(),
             mean_energy_j: s.energy.mean(),
-            mean_freq_ghz: s.freqs_ghz.iter().sum::<f64>() / s.freqs_ghz.len() as f64,
+            mean_freq_ghz: s.mean_freq_ghz(),
             frac_cut_full: at_i,
         });
     }

@@ -24,6 +24,54 @@ use crate::util::benchkit::Bencher;
 use crate::util::json::{self, Json};
 use crate::util::table::{fmt_joules, fmt_secs, Table};
 
+/// Resolve the fleet-sweep device grid from the CLI's three overlapping
+/// knobs, highest precedence first:
+///
+/// * `--grid` — an explicit list, validated strictly increasing (a
+///   shuffled or duplicated grid is almost always a typo, and the
+///   determinism gate assumes the largest count is last);
+/// * `--max-devices` — the decade ladder 10, 100, 1000, … capped at
+///   (and always including) `N`, the one-flag way to scale the sweep;
+/// * `--counts` — the legacy comma list, kept as the default.
+///
+/// Every path rejects a zero count here, before any experiment builds.
+pub fn resolve_grid(
+    grid: Option<Vec<usize>>,
+    max_devices: Option<usize>,
+    counts: Vec<usize>,
+) -> anyhow::Result<Vec<usize>> {
+    if let Some(g) = grid {
+        anyhow::ensure!(!g.is_empty(), "--grid selected no device counts");
+        for &n in &g {
+            anyhow::ensure!(n > 0, "--grid entries must be >= 1");
+        }
+        for w in g.windows(2) {
+            anyhow::ensure!(
+                w[0] < w[1],
+                "--grid must be strictly increasing (got {} then {})",
+                w[0],
+                w[1]
+            );
+        }
+        return Ok(g);
+    }
+    if let Some(max) = max_devices {
+        anyhow::ensure!(max > 0, "--max-devices must be >= 1");
+        let mut g = Vec::new();
+        let mut n = 10usize;
+        while n < max {
+            g.push(n);
+            n = n.saturating_mul(10);
+        }
+        g.push(max);
+        return Ok(g);
+    }
+    for &n in &counts {
+        anyhow::ensure!(n > 0, "--counts entries must be >= 1");
+    }
+    Ok(counts)
+}
+
 /// One (scenario, fleet size) measurement.
 #[derive(Clone, Debug)]
 pub struct FleetPoint {
@@ -306,6 +354,33 @@ mod tests {
         )
         .unwrap();
         assert_eq!(sweep.points.len(), 3);
+    }
+
+    #[test]
+    fn grid_resolution_precedence_and_validation() {
+        // --grid wins over everything and must be strictly increasing
+        assert_eq!(
+            resolve_grid(Some(vec![5, 50, 500]), Some(9999), vec![1, 2]).unwrap(),
+            vec![5, 50, 500]
+        );
+        assert!(resolve_grid(Some(vec![]), None, vec![1]).is_err());
+        assert!(resolve_grid(Some(vec![10, 10]), None, vec![1]).is_err());
+        assert!(resolve_grid(Some(vec![100, 10]), None, vec![1]).is_err());
+        assert!(resolve_grid(Some(vec![0, 10]), None, vec![1]).is_err());
+
+        // --max-devices builds the decade ladder capped at N
+        assert_eq!(resolve_grid(None, Some(1000), vec![1]).unwrap(), vec![10, 100, 1000]);
+        assert_eq!(
+            resolve_grid(None, Some(2500), vec![1]).unwrap(),
+            vec![10, 100, 1000, 2500]
+        );
+        assert_eq!(resolve_grid(None, Some(7), vec![1]).unwrap(), vec![7]);
+        assert_eq!(resolve_grid(None, Some(10), vec![1]).unwrap(), vec![10]);
+        assert!(resolve_grid(None, Some(0), vec![1]).is_err());
+
+        // the legacy --counts list passes through, zeros rejected
+        assert_eq!(resolve_grid(None, None, vec![4, 2, 9]).unwrap(), vec![4, 2, 9]);
+        assert!(resolve_grid(None, None, vec![4, 0]).is_err());
     }
 
     #[test]

@@ -1,0 +1,369 @@
+//! `mega-sweep`: the million-device streaming tier (DESIGN.md §18).
+//!
+//! One scenario preset, one very large synthetic fleet, run end-to-end
+//! through the round engine's streaming SoA path (`ExecMode::Cached` →
+//! bounded [`crate::coordinator::RoundBatch`] windows →
+//! `exp::SummarySink`).  Nothing on that path grows with the fleet:
+//! the engine holds one `SOA_WINDOW` of columns, the summary holds
+//! Welford accumulators, a per-cut histogram, and a capped delay
+//! reservoir.  The tier exists to *prove* that claim on every commit —
+//! it reports
+//!
+//! * **cells/sec** — end-to-end streaming throughput (decision +
+//!   channel + column fold), the rate `BENCH_mega.json` tracks across
+//!   PRs; and
+//! * **peak RSS** — the process high-water mark from
+//!   `/proc/self/status` (`util::benchkit::peak_rss_bytes`), the
+//!   memory ceiling the CI guard holds the streaming path to.
+//!
+//! The regression guard (`--check`) is asymmetric by design: the
+//! committed baseline (`ci/mega_baseline.json`) stores an absolute
+//! `min_cells_per_s` floor and an absolute `max_peak_rss_bytes`
+//! ceiling.  Throughput floors are deliberately loose (raw rates track
+//! the host CPU), but the RSS ceiling is tight enough that a
+//! regression which re-materializes per-cell records at fleet scale —
+//! the exact failure mode the SoA rework removed — blows straight
+//! through it.
+//!
+//! Before the timed run, every invocation re-anchors correctness: the
+//! same SoA-vs-oracle bit-identity gate the test suite runs
+//! (`exp::verify::verify_soa_matches_oracles`) executes on a
+//! scaled-down twin of the benched configuration, so a drifted stream
+//! fails loudly instead of reporting a fast wrong number.
+
+use crate::config::scenario::Scenario;
+use crate::exp::{self, ExperimentBuilder, Report, ReportMeta};
+use crate::obs;
+use crate::util::benchkit::{peak_rss_bytes, Bencher};
+use crate::util::json::{self, Json};
+
+/// Fleet size of the scaled-down correctness twin each run gates on.
+const GATE_DEVICES: usize = 192;
+/// Round count of the correctness twin.
+const GATE_ROUNDS: usize = 2;
+
+/// One mega-sweep measurement: streaming throughput + memory ceiling
+/// of the SoA round engine at fleet scale.
+#[derive(Clone, Debug)]
+pub struct MegaBench {
+    pub scenario: String,
+    pub n_devices: usize,
+    pub rounds: usize,
+    pub threads: usize,
+    pub seed: u64,
+    /// cells streamed (n_devices × rounds)
+    pub cells: usize,
+    pub wall_s: f64,
+    /// end-to-end streaming throughput over the timed window
+    pub cells_per_s: f64,
+    /// process peak RSS after the run (`VmHWM`); `None` off-Linux
+    pub peak_rss_bytes: Option<u64>,
+    /// SoA windows the engine streamed (registry delta over the run)
+    pub soa_chunks: u64,
+    pub mean_delay_s: f64,
+    pub p50_delay_s: f64,
+    pub p95_delay_s: f64,
+    pub p99_delay_s: f64,
+    pub p999_delay_s: f64,
+    pub mean_energy_j: f64,
+    pub mean_cut: f64,
+}
+
+/// Run the tier on `scenario` with an `n_devices` synthetic fleet.
+pub fn run(
+    scenario: &Scenario,
+    n_devices: usize,
+    rounds: usize,
+    threads: usize,
+    seed: u64,
+    bench: &mut Bencher,
+) -> anyhow::Result<MegaBench> {
+    anyhow::ensure!(n_devices > 0, "device count must be >= 1");
+    anyhow::ensure!(rounds > 0, "rounds must be >= 1");
+
+    // correctness anchor first: the streaming SoA path must be
+    // bit-identical to both retained oracles on a scaled-down twin of
+    // this exact preset/seed/threads before we time anything
+    let twin = ExperimentBuilder::preset(scenario.name)
+        .devices(n_devices.min(GATE_DEVICES))
+        .rounds(rounds.min(GATE_ROUNDS))
+        .seed(seed)
+        .threads(threads)
+        .build()?;
+    exp::verify::verify_soa_matches_oracles(&twin)?;
+
+    let experiment = ExperimentBuilder::preset(scenario.name)
+        .devices(n_devices)
+        .rounds(rounds)
+        .seed(seed)
+        .threads(threads)
+        .build()?;
+
+    let chunks_before = obs::metrics().soa_chunks.value();
+    let t0 = std::time::Instant::now();
+    let (summary, outcome) = experiment.run_summary()?;
+    let wall = t0.elapsed().as_secs_f64();
+    let soa_chunks = obs::metrics().soa_chunks.value() - chunks_before;
+
+    anyhow::ensure!(
+        outcome.cells == n_devices * rounds,
+        "engine streamed {} cells, expected {}",
+        outcome.cells,
+        n_devices * rounds
+    );
+    anyhow::ensure!(
+        summary.cells() == outcome.cells as u64,
+        "summary folded {} cells, engine streamed {}",
+        summary.cells(),
+        outcome.cells
+    );
+
+    let cells_per_s = outcome.cells as f64 / wall.max(1e-9);
+    let pct = summary.delay_percentiles();
+    bench.record_once(
+        &format!("mega_{}_n{n_devices}", scenario.name),
+        wall,
+        Some((cells_per_s, "cell")),
+    );
+    Ok(MegaBench {
+        scenario: scenario.name.to_string(),
+        n_devices,
+        rounds,
+        threads,
+        seed,
+        cells: outcome.cells,
+        wall_s: wall,
+        cells_per_s,
+        peak_rss_bytes: peak_rss_bytes(),
+        soa_chunks,
+        mean_delay_s: summary.delay.mean(),
+        p50_delay_s: pct.p50,
+        p95_delay_s: pct.p95,
+        p99_delay_s: pct.p99,
+        p999_delay_s: pct.p999,
+        mean_energy_j: summary.energy.mean(),
+        mean_cut: summary.mean_cut(),
+    })
+}
+
+impl MegaBench {
+    /// Human summary (what the CLI prints above the bench table).
+    pub fn render(&self) -> String {
+        let rss = match self.peak_rss_bytes {
+            Some(b) => format!("{:.1} MiB", b as f64 / (1024.0 * 1024.0)),
+            None => "n/a (no /proc)".to_string(),
+        };
+        format!(
+            "mega-sweep — {} × {} devices × {} rounds (seed {}, {} threads)\n\
+             streamed        {} cells in {:.2} s  ({:.0} cells/s, {} SoA windows)\n\
+             peak RSS        {}\n\
+             delay           mean {:.3} s   p50 {:.3}   p95 {:.3}   p99 {:.3}   p99.9 {:.3}\n\
+             energy / cut    mean {:.3} J   mean cut {:.1}",
+            self.scenario,
+            self.n_devices,
+            self.rounds,
+            self.seed,
+            self.threads,
+            self.cells,
+            self.wall_s,
+            self.cells_per_s,
+            self.soa_chunks,
+            rss,
+            self.mean_delay_s,
+            self.p50_delay_s,
+            self.p95_delay_s,
+            self.p99_delay_s,
+            self.p999_delay_s,
+            self.mean_energy_j,
+            self.mean_cut,
+        )
+    }
+
+    /// The enveloped report (`BENCH_mega.json`): shared
+    /// `schema_version`/`meta` wrapper around [`MegaBench::to_json`].
+    pub fn report(&self) -> Report {
+        Report::new(
+            ReportMeta {
+                kind: "mega-sweep",
+                preset: self.scenario.clone(),
+                seed: self.seed,
+                threads: self.threads,
+                rounds: Some(self.rounds),
+            },
+            self.to_json(),
+            self.render(),
+        )
+    }
+
+    /// Emitter payload (the `data` member of the report envelope).
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("schema", Json::Str("edgesplit/mega-sweep/v1".into())),
+            ("scenario", Json::Str(self.scenario.clone())),
+            ("n_devices", Json::Num(self.n_devices as f64)),
+            ("rounds", Json::Num(self.rounds as f64)),
+            ("threads", Json::Num(self.threads as f64)),
+            // string, not number: u64 seeds above 2^53 would lose
+            // precision through the f64-backed Json::Num
+            ("seed", Json::Str(self.seed.to_string())),
+            ("cells", Json::Num(self.cells as f64)),
+            ("wall_s", Json::Num(self.wall_s)),
+            ("cells_per_s", Json::Num(self.cells_per_s)),
+            (
+                "peak_rss_bytes",
+                match self.peak_rss_bytes {
+                    Some(b) => Json::Num(b as f64),
+                    None => Json::Null,
+                },
+            ),
+            ("soa_chunks", Json::Num(self.soa_chunks as f64)),
+            ("mean_delay_s", Json::Num(self.mean_delay_s)),
+            ("p50_delay_s", Json::Num(self.p50_delay_s)),
+            ("p95_delay_s", Json::Num(self.p95_delay_s)),
+            ("p99_delay_s", Json::Num(self.p99_delay_s)),
+            ("p999_delay_s", Json::Num(self.p999_delay_s)),
+            ("mean_energy_j", Json::Num(self.mean_energy_j)),
+            ("mean_cut", Json::Num(self.mean_cut)),
+        ])
+    }
+
+    /// The CI regression guard: fail when throughput falls below the
+    /// committed `min_cells_per_s` floor or peak RSS climbs above the
+    /// committed `max_peak_rss_bytes` ceiling (see the module docs for
+    /// why the floor is loose and the ceiling is the real tripwire).
+    pub fn check_against(&self, baseline: &Json) -> anyhow::Result<()> {
+        let field = |name: &str| -> anyhow::Result<f64> {
+            // accept both the flat committed-baseline shape and a full
+            // report envelope (fields under `data`), so a baseline
+            // regenerated from an emitted BENCH_mega.json keeps working
+            baseline
+                .at(&["data", name])
+                .or_else(|| baseline.get(name))
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("baseline is missing numeric field '{name}'"))
+        };
+        let floor = field("min_cells_per_s")?;
+        anyhow::ensure!(
+            self.cells_per_s >= floor,
+            "mega-sweep throughput regression: {:.0} cells/s fell below the committed \
+             floor of {:.0} cells/s",
+            self.cells_per_s,
+            floor
+        );
+        let ceiling = field("max_peak_rss_bytes")?;
+        let rss = self.peak_rss_bytes.ok_or_else(|| {
+            anyhow::anyhow!(
+                "the baseline commits a peak-RSS ceiling but this platform has no \
+                 /proc/self/status probe — the memory guard cannot run"
+            )
+        })?;
+        anyhow::ensure!(
+            (rss as f64) <= ceiling,
+            "mega-sweep memory regression: peak RSS {:.1} MiB climbed above the committed \
+             ceiling of {:.1} MiB — the streaming path is materializing per-cell state",
+            rss as f64 / (1024.0 * 1024.0),
+            ceiling / (1024.0 * 1024.0)
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::scenario;
+    use crate::coordinator::SOA_WINDOW;
+
+    fn quick() -> MegaBench {
+        let mut bench = Bencher::new("mega-test");
+        run(&scenario::DENSE_URBAN, 600, 2, 2, 7, &mut bench).unwrap()
+    }
+
+    #[test]
+    fn streams_the_whole_fleet_and_measures() {
+        let r = quick();
+        assert_eq!(r.cells, 1200);
+        assert!(r.cells_per_s > 0.0);
+        assert!(r.wall_s > 0.0);
+        assert!(r.soa_chunks > 0, "the SoA path must have filled chunks");
+        assert!(r.mean_delay_s > 0.0 && r.mean_delay_s.is_finite());
+        assert!(r.mean_energy_j > 0.0);
+        assert!(r.p50_delay_s <= r.p95_delay_s && r.p95_delay_s <= r.p99_delay_s);
+        #[cfg(target_os = "linux")]
+        assert!(r.peak_rss_bytes.is_some(), "Linux must report VmHWM");
+    }
+
+    #[test]
+    fn covers_partial_windows_beyond_one_soa_window() {
+        // a fleet that is not a multiple of the window still streams
+        // every cell exactly once
+        let mut bench = Bencher::new("mega-window");
+        let n = SOA_WINDOW + 37;
+        let r = run(&scenario::HETEROGENEOUS_FLEET, n, 1, 4, 11, &mut bench).unwrap();
+        assert_eq!(r.cells, n);
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let r = quick();
+        let js = r.to_json().to_string();
+        assert!(js.contains("mega-sweep/v1"));
+        assert!(js.contains("cells_per_s"));
+        assert!(js.contains("peak_rss_bytes"));
+        assert!(js.contains("soa_chunks"));
+        let parsed = Json::parse(&js).unwrap();
+        assert_eq!(parsed.get("cells").and_then(Json::as_usize), Some(r.cells));
+        // the report envelope wraps the same payload
+        let env = Json::parse(&r.report().to_json().to_string()).unwrap();
+        assert_eq!(env.get("schema_version").and_then(Json::as_usize), Some(1));
+        assert_eq!(
+            env.at(&["meta", "preset"]).and_then(Json::as_str),
+            Some(r.scenario.as_str())
+        );
+        assert!(env.at(&["data", "cells_per_s"]).is_some());
+    }
+
+    #[test]
+    fn check_accepts_loose_and_rejects_tight_baselines() {
+        let r = quick();
+        let loose = json::obj(vec![
+            ("min_cells_per_s", Json::Num(0.0)),
+            ("max_peak_rss_bytes", Json::Num(1e15)),
+        ]);
+        r.check_against(&loose).unwrap();
+        // an enveloped baseline (fields under `data`) also works
+        let enveloped = json::obj(vec![("data", loose)]);
+        r.check_against(&enveloped).unwrap();
+        // an unreachable throughput floor trips the guard
+        let fast = json::obj(vec![
+            ("min_cells_per_s", Json::Num(1e15)),
+            ("max_peak_rss_bytes", Json::Num(1e15)),
+        ]);
+        assert!(r.check_against(&fast).is_err());
+        // a one-byte RSS ceiling trips the guard (Linux; elsewhere the
+        // missing probe is itself an error, never a silent pass)
+        let tiny = json::obj(vec![
+            ("min_cells_per_s", Json::Num(0.0)),
+            ("max_peak_rss_bytes", Json::Num(1.0)),
+        ]);
+        assert!(r.check_against(&tiny).is_err());
+        // and a malformed baseline is an error, not a silent pass
+        assert!(r.check_against(&Json::Null).is_err());
+    }
+
+    #[test]
+    fn rejects_degenerate_input() {
+        let mut bench = Bencher::new("bad");
+        assert!(run(&scenario::DENSE_URBAN, 0, 2, 1, 0, &mut bench).is_err());
+        assert!(run(&scenario::DENSE_URBAN, 4, 0, 1, 0, &mut bench).is_err());
+    }
+
+    #[test]
+    fn render_reports_throughput_and_rss() {
+        let s = quick().render();
+        assert!(s.contains("mega-sweep"));
+        assert!(s.contains("cells/s"));
+        assert!(s.contains("peak RSS"));
+        assert!(s.contains("SoA windows"));
+    }
+}

@@ -1,8 +1,8 @@
 //! Aggregation of `RoundRecord` streams into the summary statistics the
 //! figures report.
 
-use crate::coordinator::RoundRecord;
-use crate::util::stats::{self, Accum};
+use crate::coordinator::{RoundBatch, RoundRecord};
+use crate::util::stats::{self, Accum, ReservoirSampler};
 
 /// p50/p95/p99/p99.9 snapshot of a sample set — the tail view both
 /// `fleet-sweep` and `des-sweep` report next to means.
@@ -36,6 +36,12 @@ impl Percentiles {
 }
 
 /// Per-strategy (or per-cell) aggregate over a set of round records.
+///
+/// Every field is **bounded** regardless of how many records are
+/// folded: Welford accumulators, a per-cut-layer count histogram
+/// (`n_layers + 1` slots), a running frequency sum, and a reservoir
+/// sample of delays for the tail view — the streaming-only memory
+/// ceiling behind the mega-sweep tier.
 #[derive(Clone, Debug, Default)]
 pub struct Summary {
     pub delay: Accum,
@@ -44,10 +50,17 @@ pub struct Summary {
     pub server_compute: Accum,
     pub transmission: Accum,
     pub cost: Accum,
-    pub cuts: Vec<usize>,
-    pub freqs_ghz: Vec<f64>,
-    /// raw per-record round delays, kept for percentile reporting
-    pub delay_samples: Vec<f64>,
+    /// occurrence count per selected cut layer, indexed by cut —
+    /// replaces the old unbounded per-record `Vec<usize>`
+    pub cut_counts: Vec<u64>,
+    /// records folded (Σ `cut_counts`)
+    cells: u64,
+    /// running Σ freq [GHz] — the same left fold the old per-record
+    /// vector summed to, so means are bit-identical
+    freq_ghz_sum: f64,
+    /// bounded uniform sample of per-record round delays for the
+    /// percentile view — exact below the reservoir cap
+    pub delay_samples: ReservoirSampler,
 }
 
 impl Summary {
@@ -72,29 +85,86 @@ impl Summary {
         self.server_compute.push(r.server_compute_s);
         self.transmission.push(r.transmission_s);
         self.cost.push(r.cost);
-        self.cuts.push(r.cut);
-        self.freqs_ghz.push(r.freq_hz / 1e9);
+        self.push_cut(r.cut);
+        self.freq_ghz_sum += r.freq_hz / 1e9;
+    }
+
+    /// Fold one SoA window column-wise — bit-identical to calling
+    /// [`Summary::push`] per cell: each accumulator sees the same value
+    /// sequence; only the (irrelevant) interleaving between independent
+    /// accumulators changes.
+    pub fn push_batch(&mut self, b: &RoundBatch) {
+        for &x in &b.delay_s {
+            self.delay.push(x);
+            self.delay_samples.push(x);
+        }
+        for &x in &b.energy_j {
+            self.energy.push(x);
+        }
+        for &x in &b.device_compute_s {
+            self.device_compute.push(x);
+        }
+        for &x in &b.server_compute_s {
+            self.server_compute.push(x);
+        }
+        for &x in &b.transmission_s {
+            self.transmission.push(x);
+        }
+        for &x in &b.cost {
+            self.cost.push(x);
+        }
+        for &c in &b.cut {
+            self.push_cut(c);
+        }
+        for &f in &b.freq_hz {
+            self.freq_ghz_sum += f / 1e9;
+        }
+    }
+
+    fn push_cut(&mut self, cut: usize) {
+        if cut >= self.cut_counts.len() {
+            self.cut_counts.resize(cut + 1, 0);
+        }
+        self.cut_counts[cut] += 1;
+        self.cells += 1;
+    }
+
+    /// Records folded so far.
+    pub fn cells(&self) -> u64 {
+        self.cells
     }
 
     /// Mean selected cut layer over all records (0 when empty).
     pub fn mean_cut(&self) -> f64 {
-        self.cuts.iter().sum::<usize>() as f64 / self.cuts.len().max(1) as f64
+        let sum: u64 = self
+            .cut_counts
+            .iter()
+            .enumerate()
+            .map(|(c, &n)| c as u64 * n)
+            .sum();
+        sum as f64 / self.cells.max(1) as f64
     }
 
-    /// Round-delay tail percentiles (p50/p95/p99) over the records.
+    /// Mean selected device frequency [GHz] (NaN when empty, like the
+    /// vector mean it replaces).
+    pub fn mean_freq_ghz(&self) -> f64 {
+        self.freq_ghz_sum / self.cells as f64
+    }
+
+    /// Round-delay tail percentiles (p50/p95/p99) over the records —
+    /// exact up to the reservoir cap, a uniform subsample beyond it.
     pub fn delay_percentiles(&self) -> Percentiles {
-        Percentiles::of(&self.delay_samples)
+        Percentiles::of(self.delay_samples.as_slice())
     }
 
     /// Fraction of decisions at each endpoint (Fig. 3a structure).
     pub fn endpoint_fractions(&self, n_layers: usize) -> (f64, f64) {
-        if self.cuts.is_empty() {
+        if self.cells == 0 {
             return (0.0, 0.0);
         }
-        let n = self.cuts.len() as f64;
-        let at0 = self.cuts.iter().filter(|&&c| c == 0).count() as f64 / n;
-        let ati = self.cuts.iter().filter(|&&c| c == n_layers).count() as f64 / n;
-        (at0, ati)
+        let n = self.cells as f64;
+        let at = |c: usize| self.cut_counts.get(c).copied().unwrap_or(0) as f64 / n;
+        (at(0), at(n_layers))
     }
 }
 
@@ -141,9 +211,14 @@ mod tests {
         let s = Summary::from_records(&rs);
         assert_eq!(s.delay.mean(), 15.0);
         assert_eq!(s.energy.mean(), 200.0);
-        assert_eq!(s.cuts, vec![0, 32]);
+        assert_eq!(s.cells(), 2);
+        assert_eq!(s.cut_counts[0], 1);
+        assert_eq!(s.cut_counts[32], 1);
+        assert_eq!(s.cut_counts.iter().sum::<u64>(), 2);
         assert_eq!(s.mean_cut(), 16.0);
+        assert!((s.mean_freq_ghz() - 1.0).abs() < 1e-12);
         assert_eq!(Summary::default().mean_cut(), 0.0);
+        assert!(Summary::default().mean_freq_ghz().is_nan());
     }
 
     #[test]

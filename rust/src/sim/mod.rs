@@ -7,8 +7,10 @@ pub mod cardbench;
 pub mod fig3;
 pub mod fig4;
 pub mod fleet;
+pub mod mega;
 pub mod metrics;
 
 pub use cardbench::CardBench;
 pub use fleet::{FleetPoint, FleetSweep};
+pub use mega::MegaBench;
 pub use metrics::{reduction_pct, Percentiles, Summary};

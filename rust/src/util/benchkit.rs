@@ -168,6 +168,22 @@ pub fn bb<T>(x: T) -> T {
     black_box(x)
 }
 
+/// Peak resident set size of this process in bytes, from the `VmHWM`
+/// high-water mark in `/proc/self/status`.  `None` off Linux (or if
+/// procfs is unreadable) — callers report the probe as unavailable
+/// rather than guessing.  The kernel reports kB; monotonic over the
+/// process lifetime, so probe *after* the workload under test.
+pub fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest.trim().trim_end_matches("kB").trim().parse().ok()?;
+            return Some(kb * 1024);
+        }
+    }
+    None
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -207,6 +223,16 @@ mod tests {
         assert_eq!(r.throughput, Some((400.0, "device-round")));
         assert_eq!(b.results().len(), 2);
         b.report(); // must not panic
+    }
+
+    #[test]
+    fn peak_rss_probe_is_sane_on_linux() {
+        match peak_rss_bytes() {
+            // this very test's allocations put the floor well above a page
+            Some(b) => assert!(b > 4096, "VmHWM {b} bytes is implausibly small"),
+            // non-Linux (or exotic procfs): the probe must decline, not lie
+            None => assert!(!cfg!(target_os = "linux") || !std::path::Path::new("/proc/self/status").exists()),
+        }
     }
 
     #[test]

@@ -1,5 +1,7 @@
 //! Descriptive statistics for metrics/bench reporting (no external deps).
 
+use super::rng::SplitMix64;
+
 /// Online accumulator (Welford) — used by the round metrics and benchkit.
 #[derive(Clone, Debug)]
 pub struct Accum {
@@ -82,6 +84,84 @@ impl Accum {
     /// Inverse of [`Accum::state`].
     pub fn from_state(n: u64, mean: f64, m2: f64, min: f64, max: f64) -> Self {
         Self { n, mean, m2, min, max }
+    }
+}
+
+/// Default retained-sample ceiling for [`ReservoirSampler`] — big
+/// enough that every pre-mega workload (≤ 10k devices × a few rounds)
+/// stays in the exact regime.
+pub const RESERVOIR_CAP: usize = 65_536;
+
+/// Bounded uniform sample of an unbounded stream (Vitter's Algorithm R)
+/// — the fixed memory ceiling behind percentile reporting at fleet
+/// scale.
+///
+/// Below `cap` every observation is retained in push order, so
+/// percentiles over [`ReservoirSampler::as_slice`] are **exact** and
+/// bit-identical to the unbounded vector this replaces.  Past `cap`,
+/// observation k replaces a uniformly random slot with probability
+/// `cap / k`, driven by a private fixed-seed [`SplitMix64`] that
+/// advances once per overflow push.  The replacement sequence is a pure
+/// function of the push *count*, never of any experiment RNG stream or
+/// thread schedule — two consumers folding the same stream hold
+/// bit-identical samples.
+#[derive(Clone, Debug)]
+pub struct ReservoirSampler {
+    cap: usize,
+    seen: u64,
+    rng: SplitMix64,
+    samples: Vec<f64>,
+}
+
+impl Default for ReservoirSampler {
+    fn default() -> Self {
+        Self::new(RESERVOIR_CAP)
+    }
+}
+
+impl ReservoirSampler {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0, "reservoir capacity must be positive");
+        Self {
+            cap,
+            seen: 0,
+            // arbitrary fixed constant: the sampler is deterministic
+            // given the push sequence, independent of all other seeds
+            rng: SplitMix64::new(0x0DDB_1A5E_55AA_C3D5),
+            samples: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.seen += 1;
+        if self.samples.len() < self.cap {
+            self.samples.push(x);
+            return;
+        }
+        let j = self.rng.next_u64() % self.seen;
+        if (j as usize) < self.cap {
+            self.samples[j as usize] = x;
+        }
+    }
+
+    /// Total observations pushed (not the retained count).
+    pub fn len(&self) -> usize {
+        self.seen as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.seen == 0
+    }
+
+    /// The retained samples (push order below `cap`; arbitrary above).
+    pub fn as_slice(&self) -> &[f64] {
+        &self.samples
+    }
+
+    /// `true` while every pushed observation is still retained —
+    /// percentiles over [`ReservoirSampler::as_slice`] are exact.
+    pub fn is_exact(&self) -> bool {
+        self.seen as usize <= self.cap
     }
 }
 
@@ -229,5 +309,49 @@ mod tests {
     fn empty_inputs_are_nan_not_panic() {
         assert!(mean(&[]).is_nan());
         assert!(percentile(&[], 50.0).is_nan());
+    }
+
+    #[test]
+    fn reservoir_is_exact_below_cap() {
+        let mut r = ReservoirSampler::new(8);
+        for i in 0..8 {
+            r.push(i as f64);
+        }
+        assert!(r.is_exact());
+        assert_eq!(r.len(), 8);
+        assert_eq!(r.as_slice(), &[0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0]);
+        // one more tips it into the sampled regime
+        r.push(8.0);
+        assert!(!r.is_exact());
+        assert_eq!(r.len(), 9);
+        assert_eq!(r.as_slice().len(), 8);
+    }
+
+    #[test]
+    fn reservoir_replacement_is_deterministic() {
+        let fold = || {
+            let mut r = ReservoirSampler::new(16);
+            for i in 0..10_000 {
+                r.push((i as f64).sin());
+            }
+            r
+        };
+        let (a, b) = (fold(), fold());
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.as_slice().iter().zip(b.as_slice()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        // retained memory stays at the cap no matter the stream length
+        assert_eq!(a.as_slice().len(), 16);
+        // and the sample is not degenerate: several distinct survivors
+        let distinct: std::collections::HashSet<u64> =
+            a.as_slice().iter().map(|x| x.to_bits()).collect();
+        assert!(distinct.len() > 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn reservoir_rejects_zero_cap() {
+        let _ = ReservoirSampler::new(0);
     }
 }

@@ -143,6 +143,13 @@ fn telemetry_and_tracing_never_perturb_records() -> anyhow::Result<()> {
         counters.keys().any(|k| k.starts_with("decision_cache.")),
         "scheduler cache counters missing from snapshot"
     );
+    // the observed Cached runs above streamed SoA windows chunk by
+    // chunk (DESIGN.md §18) — the chunk counter must have seen them
+    let soa_chunks = counters
+        .get("round.soa.chunks")
+        .and_then(Json::as_f64)
+        .expect("round.soa.chunks missing from snapshot");
+    assert!(soa_chunks > 0.0, "no SoA chunk fills were counted");
     // the storm run above was observed: its fault counters landed
     for key in [
         "des.faults.retries",
@@ -163,6 +170,27 @@ fn telemetry_and_tracing_never_perturb_records() -> anyhow::Result<()> {
     assert!(
         backoff.get("count").and_then(Json::as_f64).unwrap() > 0.0,
         "retries must observe their backoff waits"
+    );
+
+    // the per-chunk SoA fill timer is gated on set_timers_enabled
+    // (zero-perturbation default): off, the histogram stays silent;
+    // on, one run records a sample per chunk filled
+    let fill_count = |snap: &Json| {
+        snap.at(&["histograms", "round.soa.fill_s", "count"])
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0)
+    };
+    registry::set_timers_enabled(false);
+    let before = fill_count(&obs::Snapshot::collect().to_json());
+    round_records(scenario::DENSE_URBAN.name, 2)?;
+    let dark_fill = fill_count(&obs::Snapshot::collect().to_json());
+    assert_eq!(before, dark_fill, "fill timer recorded while timers were off");
+    registry::set_timers_enabled(true);
+    round_records(scenario::DENSE_URBAN.name, 2)?;
+    let lit_fill = fill_count(&obs::Snapshot::collect().to_json());
+    assert!(
+        lit_fill > dark_fill,
+        "enabled fill timer recorded nothing ({dark_fill} -> {lit_fill})"
     );
 
     // leave the process-wide defaults behind for any later suite

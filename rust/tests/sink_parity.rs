@@ -1,0 +1,84 @@
+//! Property test for the online aggregation path (DESIGN.md §18): the
+//! `SummarySink` fold — which consumes the engine's SoA windows
+//! column-wise via `Summary::push_batch`, never materializing a
+//! `RoundRecord` — must agree with the offline
+//! `Summary::from_records` fold over the collected stream on every
+//! statistic the sweeps report, bit for bit, across every scenario
+//! preset, serial and pooled.
+
+use edgesplit::config::scenario;
+use edgesplit::exp::ExperimentBuilder;
+use edgesplit::sim::Summary;
+use edgesplit::util::stats::Accum;
+
+const DEVICES: usize = 40;
+const ROUNDS: usize = 4;
+const SEED: u64 = 17;
+
+fn assert_accums_bit_equal(which: &str, a: &Accum, b: &Accum, ctx: &str) {
+    assert_eq!(a.count(), b.count(), "{ctx}: {which} count");
+    assert_eq!(a.mean().to_bits(), b.mean().to_bits(), "{ctx}: {which} mean");
+    assert_eq!(a.var().to_bits(), b.var().to_bits(), "{ctx}: {which} var");
+    assert_eq!(a.min().to_bits(), b.min().to_bits(), "{ctx}: {which} min");
+    assert_eq!(a.max().to_bits(), b.max().to_bits(), "{ctx}: {which} max");
+}
+
+fn assert_summaries_bit_equal(online: &Summary, offline: &Summary, ctx: &str) {
+    for (which, a, b) in [
+        ("delay", &online.delay, &offline.delay),
+        ("energy", &online.energy, &offline.energy),
+        ("device_compute", &online.device_compute, &offline.device_compute),
+        ("server_compute", &online.server_compute, &offline.server_compute),
+        ("transmission", &online.transmission, &offline.transmission),
+        ("cost", &online.cost, &offline.cost),
+    ] {
+        assert_accums_bit_equal(which, a, b, ctx);
+    }
+    assert_eq!(online.cells(), offline.cells(), "{ctx}: cells");
+    assert_eq!(online.cut_counts, offline.cut_counts, "{ctx}: cut histogram");
+    assert_eq!(
+        online.mean_cut().to_bits(),
+        offline.mean_cut().to_bits(),
+        "{ctx}: mean cut"
+    );
+    assert_eq!(
+        online.mean_freq_ghz().to_bits(),
+        offline.mean_freq_ghz().to_bits(),
+        "{ctx}: mean freq"
+    );
+    // the delay reservoirs saw the same push sequence, so they hold
+    // the same samples in the same slots (exact below the cap here)
+    let (sa, sb) = (online.delay_samples.as_slice(), offline.delay_samples.as_slice());
+    assert_eq!(sa.len(), sb.len(), "{ctx}: reservoir size");
+    assert!(online.delay_samples.is_exact(), "{ctx}: test fleet must stay below cap");
+    for (i, (x, y)) in sa.iter().zip(sb).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: reservoir sample {i}");
+    }
+}
+
+/// Online (SoA column fold) vs offline (record-stream fold) on every
+/// preset, serial and pooled: the satellite-3 parity property.
+#[test]
+fn summary_sink_online_fold_matches_offline_on_every_preset() {
+    for sc in &scenario::ALL {
+        for threads in [1, 8] {
+            let build = || {
+                ExperimentBuilder::preset(sc.name)
+                    .devices(DEVICES)
+                    .rounds(ROUNDS)
+                    .seed(SEED)
+                    .threads(threads)
+                    .build()
+                    .unwrap()
+            };
+            // online: SummarySink folds SoA windows column-wise
+            let (online, outcome) = build().run_summary().unwrap();
+            // offline: materialize the stream, fold per record
+            let records = build().run_collect().unwrap();
+            assert_eq!(outcome.cells, records.len());
+            let offline = Summary::from_records(&records);
+            let ctx = format!("{} × {threads} thread(s)", sc.name);
+            assert_summaries_bit_equal(&online, &offline, &ctx);
+        }
+    }
+}

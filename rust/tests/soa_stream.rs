@@ -1,0 +1,67 @@
+//! Acceptance gate for the streaming SoA round engine (DESIGN.md §18):
+//! the `ExecMode::Cached` path — bounded `RoundBatch` windows, pool-
+//! chunked column fills, lazy name resolution — must be **bitwise
+//! identical** to both retained AoS oracles (`run_uncached`, `run_ref`)
+//! on every scenario preset, under every decision strategy, at every
+//! thread count.  The per-cell purity argument (counter-based RNG
+//! streams) says any chunking is invisible; this suite is the proof.
+
+use edgesplit::config::scenario;
+use edgesplit::coordinator::{Strategy, SOA_CHUNK, SOA_WINDOW};
+use edgesplit::exp::{verify, ExperimentBuilder};
+
+const SEED: u64 = 23;
+
+fn gate(preset: &str, strategy: Strategy, devices: usize, rounds: usize, threads: usize) {
+    let exp = ExperimentBuilder::preset(preset)
+        .devices(devices)
+        .rounds(rounds)
+        .seed(SEED)
+        .threads(threads)
+        .strategy(strategy)
+        .build()
+        .unwrap_or_else(|e| panic!("{preset}: build failed: {e}"));
+    verify::verify_soa_matches_oracles(&exp).unwrap_or_else(|e| {
+        panic!(
+            "{preset} / {} / {threads} thread(s): SoA stream diverged from an oracle: {e:#}",
+            strategy.name()
+        )
+    });
+}
+
+/// Every preset × strategy × thread count, small fleets: the full
+/// cross-product the acceptance spec names.
+#[test]
+fn soa_stream_matches_oracles_on_every_preset_strategy_and_thread_count() {
+    let strategies = [
+        Strategy::Card,
+        Strategy::ServerOnly,
+        Strategy::DeviceOnly,
+        Strategy::StaticCut(5),
+        Strategy::RandomCut,
+    ];
+    for sc in &scenario::ALL {
+        for &strategy in &strategies {
+            for threads in [1, 2, 8] {
+                gate(sc.name, strategy, 9, 3, threads);
+            }
+        }
+    }
+}
+
+/// A fleet larger than one SoA chunk forces the pooled fill to span
+/// multiple chunks within a window.
+#[test]
+fn soa_stream_survives_multi_chunk_windows() {
+    for sc in &scenario::ALL {
+        gate(sc.name, Strategy::Card, SOA_CHUNK + 13, 2, 8);
+    }
+}
+
+/// A fleet larger than one SoA *window* forces the engine's outer
+/// streaming loop to emit multiple (and one partial) windows — the
+/// window boundary must be invisible in the record stream.
+#[test]
+fn soa_stream_survives_multi_window_fleets() {
+    gate(scenario::DENSE_URBAN.name, Strategy::Card, SOA_WINDOW + 37, 1, 8);
+}
