@@ -11,9 +11,17 @@
 //! * **StaticCut(c)** — fixed split with CARD's frequency rule
 //!   (ablation: how much of the win is the *adaptive* cut?).
 //! * **RandomCut** — uniform cut per round with CARD's frequency rule.
+//! * **EpsGreedy / Ucb1 / Thompson** — the online-learning family
+//!   (DESIGN.md §19): contextual bandits that learn the cut from
+//!   realized costs.  Stateful, so their decisions live behind the
+//!   [`Scheduler`]'s policy bank, never in this enum's pure
+//!   `decide*` paths.
+//!
+//! [`Scheduler`]: super::Scheduler
 
 use crate::config::{DeviceSpec, ServerSpec};
 use crate::model::LinkRates;
+use crate::policy::PolicyKind;
 use crate::util::rng::Rng;
 
 use super::card::{Card, Decision};
@@ -27,6 +35,12 @@ pub enum Strategy {
     DeviceOnly,
     StaticCut(usize),
     RandomCut,
+    /// ε-greedy contextual bandit over (CQI bucket, device class).
+    EpsGreedy,
+    /// UCB1 (lower-confidence-bound) contextual bandit.
+    Ucb1,
+    /// Gaussian Thompson-sampling contextual bandit.
+    Thompson,
 }
 
 impl Strategy {
@@ -37,6 +51,24 @@ impl Strategy {
             Strategy::DeviceOnly => "Device-only".into(),
             Strategy::StaticCut(c) => format!("Static-cut({c})"),
             Strategy::RandomCut => "Random-cut".into(),
+            Strategy::EpsGreedy => "Eps-greedy".into(),
+            Strategy::Ucb1 => "UCB1".into(),
+            Strategy::Thompson => "Thompson".into(),
+        }
+    }
+
+    /// Stable machine-readable slug — report fields and metric keys
+    /// (must stay aligned with [`crate::obs::registry::STRATEGY_KEYS`]).
+    pub fn key(&self) -> &'static str {
+        match self {
+            Strategy::Card => "card",
+            Strategy::ServerOnly => "server-only",
+            Strategy::DeviceOnly => "device-only",
+            Strategy::StaticCut(_) => "static-cut",
+            Strategy::RandomCut => "random-cut",
+            Strategy::EpsGreedy => "eps-greedy",
+            Strategy::Ucb1 => "ucb1",
+            Strategy::Thompson => "thompson",
         }
     }
 
@@ -46,6 +78,9 @@ impl Strategy {
             "server-only" | "serveronly" => Some(Strategy::ServerOnly),
             "device-only" | "deviceonly" => Some(Strategy::DeviceOnly),
             "random" | "random-cut" => Some(Strategy::RandomCut),
+            "eps-greedy" | "epsgreedy" | "epsilon-greedy" => Some(Strategy::EpsGreedy),
+            "ucb1" | "ucb" => Some(Strategy::Ucb1),
+            "thompson" => Some(Strategy::Thompson),
             other => other
                 .strip_prefix("static:")
                 .and_then(|c| c.parse().ok())
@@ -54,11 +89,30 @@ impl Strategy {
     }
 
     /// A strategy is cacheable when its decision is a pure function of
-    /// `(device, link rates)` — true for everything except Random-cut,
-    /// which consumes the cell RNG and must bypass the decision cache
-    /// (DESIGN.md §12).
+    /// `(device, link rates)` — false for Random-cut, which consumes
+    /// the cell RNG, and for the learned family, whose decisions depend
+    /// on bandit state that evolves across rounds (DESIGN.md §12, §19).
     pub fn cacheable(&self) -> bool {
-        !matches!(self, Strategy::RandomCut)
+        !matches!(
+            self,
+            Strategy::RandomCut | Strategy::EpsGreedy | Strategy::Ucb1 | Strategy::Thompson
+        )
+    }
+
+    /// True for the online-learning family — decisions flow through the
+    /// scheduler's policy bank, not [`Strategy::decide_on`].
+    pub fn is_learned(&self) -> bool {
+        self.policy_kind().is_some()
+    }
+
+    /// The bandit rule a learned strategy runs, if any.
+    pub fn policy_kind(&self) -> Option<PolicyKind> {
+        match self {
+            Strategy::EpsGreedy => Some(PolicyKind::EpsGreedy),
+            Strategy::Ucb1 => Some(PolicyKind::Ucb1),
+            Strategy::Thompson => Some(PolicyKind::Thompson),
+            _ => None,
+        }
     }
 
     /// Decide (cut, frequency) for one device-round against a
@@ -77,6 +131,9 @@ impl Strategy {
             Strategy::RandomCut => {
                 let c = rng.below(table.n_layers() as u64 + 1) as usize;
                 table.at(c, table.optimal_frequency(&b), rates, &b)
+            }
+            Strategy::EpsGreedy | Strategy::Ucb1 | Strategy::Thompson => {
+                panic!("learned strategies decide through the Scheduler's policy bank")
             }
         }
     }
@@ -128,7 +185,40 @@ impl Strategy {
                 let c = rng.below(cm.n_layers() as u64 + 1) as usize;
                 fixed(c, card.optimal_frequency(dev, &b))
             }
+            Strategy::EpsGreedy | Strategy::Ucb1 | Strategy::Thompson => {
+                panic!("learned strategies decide through the Scheduler's policy bank")
+            }
         }
+    }
+}
+
+/// Evaluate a fixed cut at CARD's optimal frequency on the kernel path —
+/// the arithmetic every learned decision shares with `StaticCut`, so a
+/// bandit that has converged on cut c prices bit-identically to
+/// `Strategy::StaticCut(c)`.
+pub(crate) fn kernel_fixed_cut(table: &CutTable, cut: usize, rates: LinkRates) -> Decision {
+    let b = table.bounds(rates);
+    table.at(cut, table.optimal_frequency(&b), rates, &b)
+}
+
+/// Reference-path twin of [`kernel_fixed_cut`] (legacy O(I) models).
+pub(crate) fn ref_fixed_cut(
+    cm: &CostModel,
+    server: &ServerSpec,
+    dev: &DeviceSpec,
+    rates: LinkRates,
+    cut: usize,
+) -> Decision {
+    let card = Card::new(cm, server);
+    let b = cm.bounds(dev, server, rates);
+    let f = card.optimal_frequency(dev, &b);
+    let (d, e) = cm.delay_energy(cut, f, dev, server, rates);
+    Decision {
+        cut,
+        freq_hz: f,
+        cost: cm.cost(cut, f, dev, server, rates, &b),
+        delay_s: d,
+        energy_j: e,
     }
 }
 
@@ -214,6 +304,11 @@ mod tests {
         assert_eq!(Strategy::parse("card"), Some(Strategy::Card));
         assert_eq!(Strategy::parse("Server-Only"), Some(Strategy::ServerOnly));
         assert_eq!(Strategy::parse("static:16"), Some(Strategy::StaticCut(16)));
+        assert_eq!(Strategy::parse("eps-greedy"), Some(Strategy::EpsGreedy));
+        assert_eq!(Strategy::parse("Epsilon-Greedy"), Some(Strategy::EpsGreedy));
+        assert_eq!(Strategy::parse("ucb"), Some(Strategy::Ucb1));
+        assert_eq!(Strategy::parse("UCB1"), Some(Strategy::Ucb1));
+        assert_eq!(Strategy::parse("thompson"), Some(Strategy::Thompson));
         assert_eq!(Strategy::parse("bogus"), None);
     }
 
@@ -243,12 +338,43 @@ mod tests {
     }
 
     #[test]
-    fn random_cut_is_the_only_uncacheable_strategy() {
+    fn stateful_strategies_are_uncacheable() {
         assert!(Strategy::Card.cacheable());
         assert!(Strategy::ServerOnly.cacheable());
         assert!(Strategy::DeviceOnly.cacheable());
         assert!(Strategy::StaticCut(4).cacheable());
         assert!(!Strategy::RandomCut.cacheable());
+        for s in [Strategy::EpsGreedy, Strategy::Ucb1, Strategy::Thompson] {
+            assert!(!s.cacheable(), "{} is stateful", s.name());
+            assert!(s.is_learned());
+            assert!(s.policy_kind().is_some());
+        }
+        assert!(!Strategy::Card.is_learned());
+        assert_eq!(Strategy::RandomCut.policy_kind(), None);
+    }
+
+    #[test]
+    fn fixed_cut_helpers_match_static_cut_bitwise() {
+        // a converged bandit playing cut c must price exactly like
+        // StaticCut(c) on both the kernel and reference paths
+        let (cm, cfg) = setup();
+        for dev in &cfg.devices {
+            let table = CutTable::for_device(&cm, &cfg.server, dev);
+            for cut in [0, 8, 16, cm.n_layers()] {
+                let mut rng = Rng::new(0);
+                let want =
+                    Strategy::StaticCut(cut).decide(&cm, &cfg.server, dev, RATES, &mut rng);
+                let k = kernel_fixed_cut(&table, cut, RATES);
+                let r = ref_fixed_cut(&cm, &cfg.server, dev, RATES, cut);
+                for got in [&k, &r] {
+                    assert_eq!(got.cut, want.cut);
+                    assert_eq!(got.freq_hz.to_bits(), want.freq_hz.to_bits());
+                    assert_eq!(got.cost.to_bits(), want.cost.to_bits());
+                    assert_eq!(got.delay_s.to_bits(), want.delay_s.to_bits());
+                    assert_eq!(got.energy_j.to_bits(), want.energy_j.to_bits());
+                }
+            }
+        }
     }
 
     #[test]

@@ -32,17 +32,18 @@
 //! CQI-keyed decision cache stays exact (decisions depend on the link
 //! only through the quantized rate pair).
 
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 
 use crate::config::{ChannelState, ExpConfig};
 use crate::model::{DataSizeModel, DelayModel, EnergyModel, FlopModel, LlmArch};
 use crate::net::channel::LinkRealization;
 use crate::net::{Channel, LinkProcess};
 use crate::obs;
+use crate::policy::{PolicyBank, PolicyBankSnap, PolicyObs, POLICY_SALT};
 use crate::util::pool;
 use crate::util::rng::{Rng, SplitMix64};
 
-use super::baselines::Strategy;
+use super::baselines::{kernel_fixed_cut, ref_fixed_cut, Strategy};
 use super::card::Decision;
 use super::cost::CostModel;
 use super::kernel::{CellEval, CutTable, DecisionCache, ModelTerms};
@@ -173,6 +174,11 @@ pub struct Scheduler {
     /// shared as a slab so `RoundBatch` can resolve names lazily.
     names: Arc<[Arc<str>]>,
     strategy_name: Arc<str>,
+    /// Contextual-bandit state for the learned strategy family
+    /// (DESIGN.md §19).  Frozen within a round: decisions take the read
+    /// lock; the engines fold realized costs at round boundaries under
+    /// the write lock.  `None` for every oracle strategy.
+    policy: Option<RwLock<PolicyBank>>,
 }
 
 impl Scheduler {
@@ -194,6 +200,9 @@ impl Scheduler {
         let names: Arc<[Arc<str>]> =
             cfg.devices.iter().map(|d| Arc::from(d.name.as_str())).collect();
         let strategy_name: Arc<str> = Arc::from(strategy.name().as_str());
+        let policy = strategy
+            .policy_kind()
+            .map(|k| RwLock::new(PolicyBank::new(k, &cfg.devices, cost_model.n_layers())));
         Self {
             cfg,
             cost_model,
@@ -204,6 +213,7 @@ impl Scheduler {
             cache,
             names,
             strategy_name,
+            policy,
         }
     }
 
@@ -222,6 +232,75 @@ impl Scheduler {
         self.cache.hit_rate()
     }
 
+    /// True when the strategy is a learned policy (bandit state attached).
+    pub fn policy_enabled(&self) -> bool {
+        self.policy.is_some()
+    }
+
+    /// Forget all bandit state.  Every `run*` entry point calls this
+    /// first so repeated runs of one scheduler reproduce bit-identically;
+    /// the DES engine calls it from its prologue.
+    pub fn policy_reset(&self) {
+        if let Some(bank) = &self.policy {
+            bank.write().expect("policy bank lock poisoned").reset();
+        }
+    }
+
+    /// Fold realized cells into the bandit state — the reward step.
+    /// Engines call this exactly once per (round, cell), at a round
+    /// boundary (or launch boundary on the async DES path), in device
+    /// order; no-op for oracle strategies.
+    pub fn policy_observe(&self, obs: &[PolicyObs]) {
+        if let Some(bank) = &self.policy {
+            let mut b = bank.write().expect("policy bank lock poisoned");
+            for o in obs {
+                b.observe(o);
+            }
+        }
+    }
+
+    /// [`Scheduler::policy_observe`] from full records (AoS paths).
+    pub fn policy_observe_records(&self, records: &[RoundRecord]) {
+        if self.policy.is_none() {
+            return;
+        }
+        let obs: Vec<PolicyObs> = records
+            .iter()
+            .map(|r| PolicyObs {
+                device_idx: r.device_idx,
+                snr_up_db: r.snr_up_db,
+                cut: r.cut,
+                cost: r.cost,
+            })
+            .collect();
+        self.policy_observe(&obs);
+    }
+
+    /// Checkpointable copy of the bandit state, if any.
+    pub fn policy_snapshot(&self) -> Option<PolicyBankSnap> {
+        self.policy
+            .as_ref()
+            .map(|b| b.read().expect("policy bank lock poisoned").snapshot())
+    }
+
+    /// Restore bandit state from a checkpoint.
+    pub fn policy_restore(&self, snap: &PolicyBankSnap) -> anyhow::Result<()> {
+        match &self.policy {
+            Some(bank) => bank.write().expect("policy bank lock poisoned").restore(snap),
+            None => anyhow::bail!(
+                "checkpoint carries policy state but strategy '{}' has no policy bank",
+                self.strategy_name
+            ),
+        }
+    }
+
+    /// `(explore, exploit)` decision tallies since the last reset.
+    pub fn policy_counters(&self) -> Option<(u64, u64)> {
+        self.policy
+            .as_ref()
+            .map(|b| b.read().expect("policy bank lock poisoned").counters())
+    }
+
     /// Registry slot for the per-strategy decision-cache counters
     /// (order matches `obs::registry::STRATEGY_KEYS`).
     fn obs_slot(&self) -> usize {
@@ -231,6 +310,9 @@ impl Scheduler {
             Strategy::DeviceOnly => 2,
             Strategy::StaticCut(_) => 3,
             Strategy::RandomCut => 4,
+            Strategy::EpsGreedy => 5,
+            Strategy::Ucb1 => 6,
+            Strategy::Thompson => 7,
         }
     }
 
@@ -241,6 +323,36 @@ impl Scheduler {
             self.stream_root,
             &[round as u64, device_idx as u64],
         ))
+    }
+
+    /// The exploration stream for one cell — a *separate* counter-based
+    /// stream under [`POLICY_SALT`], so learned decisions never consume
+    /// channel draws: a learned run realizes bit-identical links to the
+    /// CARD run it is benchmarked against (DESIGN.md §19).
+    fn policy_rng(&self, round: usize, device_idx: usize) -> Rng {
+        Rng::new(SplitMix64::stream_seed(
+            self.stream_root ^ POLICY_SALT,
+            &[round as u64, device_idx as u64],
+        ))
+    }
+
+    /// Stage-1 decision for the learned family: choose a cut from the
+    /// frozen bandit statistics, then price it at CARD's optimal
+    /// frequency through the kernel (bit-identical to `StaticCut(cut)`).
+    fn decide_learned(
+        &self,
+        bank: &RwLock<PolicyBank>,
+        table: &CutTable,
+        round: usize,
+        device_idx: usize,
+        link: &LinkRealization,
+    ) -> Decision {
+        let mut rng = self.policy_rng(round, device_idx);
+        let cut = bank
+            .read()
+            .expect("policy bank lock poisoned")
+            .choose_cut(device_idx, link.snr_up_db, &mut rng);
+        kernel_fixed_cut(table, cut, link.rates)
     }
 
     /// Link realization for one cell through the configured
@@ -279,6 +391,16 @@ impl Scheduler {
         obs::registry::timer_record(&obs::metrics().sched_realize_link_s, t_link);
         let table = &self.tables[device_idx];
 
+        // Stage 1 (learned family): bandit chooses the cut from frozen
+        // round-boundary state — stateful, so the CQI cache (which
+        // assumes decisions are pure in the link) must stay bypassed
+        if let Some(bank) = &self.policy {
+            let t_dec = obs::registry::timer_start();
+            let d = self.decide_learned(bank, table, round, device_idx, &link);
+            obs::registry::timer_record(&obs::metrics().sched_decide_s, t_dec);
+            return self.cell_values_from_decision(round, device_idx, &link, d);
+        }
+
         // Stage 1: decision — memoized per (device, CQI pair)
         if self.strategy.cacheable() {
             let key = DecisionCache::key(link.snr_up_db, link.snr_down_db);
@@ -307,10 +429,26 @@ impl Scheduler {
     pub fn device_round_uncached(&self, round: usize, device_idx: usize) -> RoundRecord {
         let mut rng = self.cell_rng(round, device_idx);
         let link = self.realize_link(round, device_idx, &mut rng);
-        let decision = self
-            .strategy
-            .decide_on(&self.tables[device_idx], link.rates, &mut rng);
+        let table = &self.tables[device_idx];
+        let decision = match &self.policy {
+            Some(bank) => self.decide_learned(bank, table, round, device_idx, &link),
+            None => self.strategy.decide_on(table, link.rates, &mut rng),
+        };
         self.record_from_values(self.cell_values_from_decision(round, device_idx, &link, decision))
+    }
+
+    /// Re-execute one cell with the cut pinned: the channel realization
+    /// comes from the cell's own stream exactly as in
+    /// [`Scheduler::cell_values`], but Stage 1 is replaced by pricing
+    /// `cut` at CARD's optimal frequency.  For a learned strategy this
+    /// is bit-identical to the decision path whenever `cut` is what the
+    /// bandit chose — checkpoint restore uses it to rebuild records
+    /// without replaying bandit state (DESIGN.md §19).
+    pub fn device_round_forced(&self, round: usize, device_idx: usize, cut: usize) -> RoundRecord {
+        let mut rng = self.cell_rng(round, device_idx);
+        let link = self.realize_link(round, device_idx, &mut rng);
+        let d = kernel_fixed_cut(&self.tables[device_idx], cut, link.rates);
+        self.record_from_values(self.cell_values_from_decision(round, device_idx, &link, d))
     }
 
     /// The pre-kernel cell path — full model re-evaluation per cost
@@ -320,9 +458,19 @@ impl Scheduler {
         let dev = &self.cfg.devices[device_idx];
         let mut rng = self.cell_rng(round, device_idx);
         let link = self.link.realize_ref(device_idx, round, &mut rng);
-        let decision = self
-            .strategy
-            .decide_ref(&self.cost_model, &self.cfg.server, dev, link.rates, &mut rng);
+        let decision = match &self.policy {
+            Some(bank) => {
+                let mut prng = self.policy_rng(round, device_idx);
+                let cut = bank
+                    .read()
+                    .expect("policy bank lock poisoned")
+                    .choose_cut(device_idx, link.snr_up_db, &mut prng);
+                ref_fixed_cut(&self.cost_model, &self.cfg.server, dev, link.rates, cut)
+            }
+            None => self
+                .strategy
+                .decide_ref(&self.cost_model, &self.cfg.server, dev, link.rates, &mut rng),
+        };
 
         let dm = &self.cost_model.delay;
         let t = self.cfg.workload.local_epochs as f64;
@@ -474,6 +622,9 @@ impl Scheduler {
             }
             records.push(rec);
         }
+        // round boundary: fold this round's realized costs into the
+        // bandit state (no-op for oracle strategies)
+        self.policy_observe_records(&records);
         Ok(records)
     }
 
@@ -481,13 +632,33 @@ impl Scheduler {
     /// bit-identical to [`Scheduler::run_round_analytic`].
     pub fn run_round_parallel(&self, round: usize, threads: usize) -> Vec<RoundRecord> {
         let idxs: Vec<usize> = (0..self.cfg.devices.len()).collect();
-        pool::par_map_indexed(threads, &idxs, |_, &idx| self.device_round(round, idx))
+        let records =
+            pool::par_map_indexed(threads, &idxs, |_, &idx| self.device_round(round, idx));
+        // fold in device order regardless of completion order — the
+        // pool returns results in index order, so the bandit update is
+        // thread-count independent
+        self.policy_observe_records(&records);
+        records
     }
 
     /// All configured rounds with up to `threads` device-round cells in
     /// flight — the fleet-scale engine.  Bit-identical to
     /// [`Scheduler::run_analytic`] for the same config/seed.
+    ///
+    /// Learned strategies force a barrier at every round boundary
+    /// (decisions in round n need the costs of rounds < n), so only the
+    /// devices within a round run concurrently; oracle strategies keep
+    /// the fully-flattened cell schedule.
     pub fn run_parallel(&self, threads: usize) -> Vec<RoundRecord> {
+        if self.policy_enabled() {
+            self.policy_reset();
+            let mut all =
+                Vec::with_capacity(self.cfg.workload.rounds * self.cfg.devices.len());
+            for n in 0..self.cfg.workload.rounds {
+                all.extend(self.run_round_parallel(n, threads));
+            }
+            return all;
+        }
         let cells: Vec<(usize, usize)> = (0..self.cfg.workload.rounds)
             .flat_map(|n| (0..self.cfg.devices.len()).map(move |i| (n, i)))
             .collect();
@@ -498,11 +669,14 @@ impl Scheduler {
     /// cache bypassed — serial; the reference stream for the cache
     /// bit-compat property tests.
     pub fn run_uncached(&self) -> Vec<RoundRecord> {
+        self.policy_reset();
         let mut all = Vec::with_capacity(self.cfg.workload.rounds * self.cfg.devices.len());
         for n in 0..self.cfg.workload.rounds {
+            let start = all.len();
             for i in 0..self.cfg.devices.len() {
                 all.push(self.device_round_uncached(n, i));
             }
+            self.policy_observe_records(&all[start..]);
         }
         all
     }
@@ -510,11 +684,14 @@ impl Scheduler {
     /// All configured rounds through the pre-kernel reference path —
     /// serial; the legacy oracle for the kernel bit-compat tests.
     pub fn run_ref(&self) -> Vec<RoundRecord> {
+        self.policy_reset();
         let mut all = Vec::with_capacity(self.cfg.workload.rounds * self.cfg.devices.len());
         for n in 0..self.cfg.workload.rounds {
+            let start = all.len();
             for i in 0..self.cfg.devices.len() {
                 all.push(self.device_round_ref(n, i));
             }
+            self.policy_observe_records(&all[start..]);
         }
         all
     }
@@ -534,6 +711,7 @@ impl Scheduler {
         &self,
         mut backend: Option<&mut B>,
     ) -> anyhow::Result<Vec<RoundRecord>> {
+        self.policy_reset();
         let mut all = Vec::new();
         for n in 0..self.cfg.workload.rounds {
             all.extend(self.run_round(n, backend.as_deref_mut())?);
@@ -622,7 +800,14 @@ mod tests {
 
     #[test]
     fn full_parallel_run_bit_identical_to_serial() {
-        for strategy in [Strategy::Card, Strategy::RandomCut, Strategy::StaticCut(16)] {
+        for strategy in [
+            Strategy::Card,
+            Strategy::RandomCut,
+            Strategy::StaticCut(16),
+            Strategy::EpsGreedy,
+            Strategy::Ucb1,
+            Strategy::Thompson,
+        ] {
             let s = Scheduler::new(quick_cfg(), ChannelState::Poor, strategy);
             let serial = s.run_analytic().unwrap();
             assert_bit_identical(&serial, &s.run_parallel(8));
@@ -637,11 +822,53 @@ mod tests {
             Strategy::DeviceOnly,
             Strategy::StaticCut(16),
             Strategy::RandomCut,
+            Strategy::EpsGreedy,
+            Strategy::Ucb1,
+            Strategy::Thompson,
         ] {
             let s = Scheduler::new(quick_cfg(), ChannelState::Poor, strategy);
             let cached = s.run_analytic().unwrap();
             assert_bit_identical(&cached, &s.run_uncached());
             assert_bit_identical(&cached, &s.run_ref());
+        }
+    }
+
+    #[test]
+    fn learned_runs_never_perturb_the_channel_stream() {
+        // the policy stream is salted away from the cell stream, so a
+        // learned run must realize the exact links the CARD run sees
+        let card = Scheduler::new(quick_cfg(), ChannelState::Poor, Strategy::Card);
+        let oracle = card.run_analytic().unwrap();
+        for strategy in [Strategy::EpsGreedy, Strategy::Ucb1, Strategy::Thompson] {
+            let s = Scheduler::new(quick_cfg(), ChannelState::Poor, strategy);
+            let recs = s.run_analytic().unwrap();
+            for (a, b) in oracle.iter().zip(&recs) {
+                assert_eq!(a.snr_up_db.to_bits(), b.snr_up_db.to_bits());
+                assert_eq!(a.snr_down_db.to_bits(), b.snr_down_db.to_bits());
+                assert_eq!(a.rate_up_bps.to_bits(), b.rate_up_bps.to_bits());
+                assert_eq!(a.rate_down_bps.to_bits(), b.rate_down_bps.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn learned_rerun_reproduces_after_reset() {
+        let s = Scheduler::new(quick_cfg(), ChannelState::Normal, Strategy::Ucb1);
+        let a = s.run_analytic().unwrap();
+        let b = s.run_analytic().unwrap();
+        assert_bit_identical(&a, &b);
+        assert!(s.policy_counters().unwrap().0 > 0, "bandit never explored");
+    }
+
+    #[test]
+    fn forced_cut_replays_the_learned_decision_path() {
+        let s = Scheduler::new(quick_cfg(), ChannelState::Normal, Strategy::Thompson);
+        let recs = s.run_analytic().unwrap();
+        // re-running a cell with its chosen cut pinned reproduces the
+        // record bit-for-bit without replaying any bandit state
+        for r in recs.iter().take(10) {
+            let forced = s.device_round_forced(r.round, r.device_idx, r.cut);
+            assert_bit_identical(std::slice::from_ref(r), &[forced]);
         }
     }
 

@@ -84,6 +84,7 @@ use crate::coordinator::aggregator::{LayerVersion, Owner};
 use crate::coordinator::{Aggregator, RoundRecord, Scheduler, Strategy};
 use crate::net::CellGrid;
 use crate::obs::{self, trace};
+use crate::policy::{PolicyBankSnap, PolicyObs};
 use crate::util::stats;
 
 use super::churn::ChurnTrace;
@@ -274,6 +275,9 @@ pub struct InflightSnap {
     pub device: usize,
     pub round: usize,
     pub degraded: bool,
+    /// the decided cut — lets resume rebuild a learned strategy's
+    /// record without replaying bandit state (DESIGN.md §19)
+    pub cut: usize,
     pub cell: usize,
     pub start_s: f64,
     pub wait_s: f64,
@@ -287,6 +291,8 @@ pub struct RecordSnap {
     pub device: usize,
     pub round: usize,
     pub degraded: bool,
+    /// the decided cut (see [`InflightSnap::cut`])
+    pub cut: usize,
     pub start_s: f64,
     pub finish_s: f64,
     pub wait_s: f64,
@@ -388,6 +394,9 @@ pub struct SimSnapshot {
     pub slot_failures: u64,
     pub slot_repairs: u64,
     pub retry_energy_j: f64,
+    /// bandit state of a learned strategy (`None` for oracles) —
+    /// restored verbatim, never replayed (DESIGN.md §19)
+    pub policy: Option<PolicyBankSnap>,
 }
 
 /// Result of [`DesEngine::run_until`] / [`DesEngine::resume_until`].
@@ -684,9 +693,22 @@ impl<'a> Sim<'a> {
         sim.slot_failures = snap.slot_failures;
         sim.slot_repairs = snap.slot_repairs;
         sim.retry_energy_j = snap.retry_energy_j;
+        if let Some(p) = &snap.policy {
+            sim.sched
+                .policy_restore(p)
+                .expect("checkpoint policy state does not fit this strategy");
+        } else {
+            // oracle checkpoint: make sure no stale bank state from a
+            // previous run on this scheduler leaks into the resume
+            sim.sched.policy_reset();
+        }
         for s in &snap.inflight {
             let rec = if s.degraded {
                 sim.degraded_record(s.round, s.device)
+            } else if sim.sched.policy_enabled() {
+                // replay the decision by its recorded cut — the bank
+                // has already advanced past this cell's launch state
+                sim.sched.device_round_forced(s.round, s.device, s.cut)
             } else {
                 sim.sched.device_round(s.round, s.device)
             };
@@ -709,6 +731,8 @@ impl<'a> Sim<'a> {
         for s in &snap.records {
             let rec = if s.degraded {
                 sim.degraded_record(s.round, s.device)
+            } else if sim.sched.policy_enabled() {
+                sim.sched.device_round_forced(s.round, s.device, s.cut)
             } else {
                 sim.sched.device_round(s.round, s.device)
             };
@@ -756,6 +780,7 @@ impl<'a> Sim<'a> {
                     device,
                     round,
                     degraded: inf.degraded,
+                    cut: inf.record.cut,
                     cell: inf.cell,
                     start_s: inf.start_s,
                     wait_s: inf.wait_s,
@@ -772,6 +797,7 @@ impl<'a> Sim<'a> {
                     device: r.record.device_idx,
                     round: r.record.round,
                     degraded: r.degraded,
+                    cut: r.record.cut,
                     start_s: r.start_s,
                     finish_s: r.finish_s,
                     wait_s: r.wait_s,
@@ -797,11 +823,15 @@ impl<'a> Sim<'a> {
             slot_failures: self.slot_failures,
             slot_repairs: self.slot_repairs,
             retry_energy_j: self.retry_energy_j,
+            policy: self.sched.policy_snapshot(),
         }
     }
 
     /// Seed the timeline: churn departures + the first round/launches.
     fn prologue(&mut self) {
+        // learned strategies start every run from a blank bandit bank
+        // (resume skips the prologue and restores the bank instead)
+        self.sched.policy_reset();
         // seed churn: every device starts present; its first departure
         // (if it churns at all) comes from its private stream
         for i in 0..self.devices.len() {
@@ -1293,7 +1323,26 @@ impl<'a> Sim<'a> {
         let round = self.devices[device].next_round;
         self.devices[device].next_round += 1;
         let rec = self.sched.device_round(round, device);
+        // async has no round barrier: fold the realized cost per launch,
+        // in serial event order — the virtual-timeline reward boundary
+        self.observe_policy_launch(&rec);
         self.launch_cell(device, round, rec);
+    }
+
+    /// Feed one launched cell's realized cost back to the learned
+    /// policy (no-op for oracle strategies).  The reward is the cost of
+    /// the cut the bandit *chose* — a burst failover may still degrade
+    /// the launched record afterwards, but that is the fault plane's
+    /// business, not the arm's.
+    fn observe_policy_launch(&self, rec: &RoundRecord) {
+        if self.sched.policy_enabled() {
+            self.sched.policy_observe(&[PolicyObs {
+                device_idx: rec.device_idx,
+                snr_up_db: rec.snr_up_db,
+                cut: rec.cut,
+                cost: rec.cost,
+            }]);
+        }
     }
 
     /// Sync/semi-sync: open global round `round` with every present
@@ -1311,12 +1360,25 @@ impl<'a> Sim<'a> {
         self.barrier_open = true;
         let mut delays = Vec::with_capacity(present.len());
         let mut services = Vec::with_capacity(present.len());
+        let mut rewards = Vec::new();
         for &i in &present {
             let rec = self.sched.device_round(round, i);
             delays.push(rec.delay_s);
             services.push(rec.server_compute_s);
+            if self.sched.policy_enabled() {
+                rewards.push(PolicyObs {
+                    device_idx: rec.device_idx,
+                    snr_up_db: rec.snr_up_db,
+                    cut: rec.cut,
+                    cost: rec.cost,
+                });
+            }
             self.launch_cell(i, round, rec);
         }
+        // fold after the whole barrier launches, in device order — the
+        // exact reward boundary the round engine uses, so churn-free
+        // sync DES stays bit-identical to it for learned strategies too
+        self.sched.policy_observe(&rewards);
         let factor = match self.des.policy {
             Policy::SemiSync { deadline_factor } => Some(deadline_factor),
             // sync + faults: `timeout_factor` demotes the round's

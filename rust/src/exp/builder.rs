@@ -41,6 +41,9 @@ pub enum EngineChoice {
 pub enum BuildError {
     /// Preset name not in the scenario registry.
     UnknownPreset(String),
+    /// Strategy name not in the strategy family (see
+    /// [`parse_strategy`]).
+    UnknownStrategy(String),
     /// The named preset base needs an explicit fleet size (`devices(n)`).
     MissingFleetSize(String),
     /// `devices(n)` only applies to preset bases — an explicit config
@@ -70,6 +73,11 @@ impl fmt::Display for BuildError {
                 let known: Vec<&str> = scenario::ALL.iter().map(|s| s.name).collect();
                 write!(f, "unknown preset '{name}' (have: {})", known.join(", "))
             }
+            BuildError::UnknownStrategy(name) => write!(
+                f,
+                "unknown strategy '{name}' (have: {})",
+                STRATEGY_NAMES.join(", ")
+            ),
             BuildError::MissingFleetSize(preset) => {
                 write!(f, "preset '{preset}' needs an explicit fleet size — call .devices(n)")
             }
@@ -100,6 +108,26 @@ impl From<ConfigError> for BuildError {
     fn from(e: ConfigError) -> Self {
         BuildError::Config(e)
     }
+}
+
+/// Every accepted `--strategy` spelling family, for error messages and
+/// help text (aliases like `ucb`/`epsilon-greedy` parse too).
+pub const STRATEGY_NAMES: [&str; 8] = [
+    "card",
+    "server-only",
+    "device-only",
+    "static:<cut>",
+    "random",
+    "eps-greedy",
+    "ucb1",
+    "thompson",
+];
+
+/// Parse a `--strategy` argument with a typed error that lists the
+/// valid names — the strategy-family mirror of
+/// [`BuildError::UnknownPreset`].
+pub fn parse_strategy(s: &str) -> Result<Strategy, BuildError> {
+    Strategy::parse(s).ok_or_else(|| BuildError::UnknownStrategy(s.to_string()))
 }
 
 enum Base {
@@ -539,5 +567,32 @@ impl Experiment {
             self.mode.name()
         );
         self.sched.run(Some(backend))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_strategy_is_a_typed_error_listing_the_family() {
+        let err = parse_strategy("bogus").unwrap_err();
+        assert!(matches!(err, BuildError::UnknownStrategy(ref n) if n == "bogus"));
+        let msg = err.to_string();
+        for name in STRATEGY_NAMES {
+            assert!(msg.contains(name), "error should list {name}: {msg}");
+        }
+    }
+
+    #[test]
+    fn parse_strategy_accepts_every_family_member() {
+        assert_eq!(parse_strategy("card").unwrap(), Strategy::Card);
+        assert_eq!(parse_strategy("ucb").unwrap(), Strategy::Ucb1);
+        assert_eq!(parse_strategy("eps-greedy").unwrap(), Strategy::EpsGreedy);
+        assert_eq!(parse_strategy("thompson").unwrap(), Strategy::Thompson);
+        assert_eq!(
+            parse_strategy("static:12").unwrap(),
+            Strategy::StaticCut(12)
+        );
     }
 }

@@ -1,8 +1,11 @@
 //! Checkpoint envelope (DESIGN.md §17): serialize a paused DES run's
 //! [`SimSnapshot`] to a versioned, line-oriented text format and back.
 //!
-//! Format `edgesplit/checkpoint/v1`: the first line is the magic, each
+//! Format `edgesplit/checkpoint/v2`: the first line is the magic, each
 //! following line is a space-separated record with a leading tag.
+//! (v2 added the decided cut to `i`/`r` lines and the trailing policy
+//! section carrying a learned strategy's bandit state; v1 envelopes
+//! are refused rather than silently half-restored.)
 //! Every `f64` travels as the decimal rendering of its IEEE-754 **bit
 //! pattern** (`to_bits`), never as a decimal float — the whole point of
 //! a checkpoint is that `resume(decode(encode(checkpoint(t))))` is
@@ -28,9 +31,10 @@ use crate::des::engine::{AggSnap, DeviceSnap, InflightSnap, RecordSnap};
 use crate::des::{EventKind, SimSnapshot};
 use crate::des::server::{Job, ServerQueueState};
 use crate::des::SimTime;
+use crate::policy::PolicyBankSnap;
 
 /// First line of every checkpoint envelope.
-pub const MAGIC: &str = "edgesplit/checkpoint/v1";
+pub const MAGIC: &str = "edgesplit/checkpoint/v2";
 
 /// Serialize a snapshot to the versioned text envelope.
 pub fn encode(snap: &SimSnapshot) -> String {
@@ -148,10 +152,11 @@ pub fn encode(snap: &SimSnapshot) -> String {
     for i in &snap.inflight {
         let _ = writeln!(
             w,
-            "i {} {} {} {} {} {} {}",
+            "i {} {} {} {} {} {} {} {}",
             i.device,
             i.round,
             u8::from(i.degraded),
+            i.cut,
             i.cell,
             i.start_s.to_bits(),
             i.wait_s.to_bits(),
@@ -167,16 +172,43 @@ pub fn encode(snap: &SimSnapshot) -> String {
     for r in &snap.records {
         let _ = writeln!(
             w,
-            "r {} {} {} {} {} {} {} {}",
+            "r {} {} {} {} {} {} {} {} {}",
             r.device,
             r.round,
             u8::from(r.degraded),
+            r.cut,
             r.start_s.to_bits(),
             r.finish_s.to_bits(),
             r.wait_s.to_bits(),
             r.staleness,
             r.weight.to_bits()
         );
+    }
+    match &snap.policy {
+        None => {
+            let _ = writeln!(w, "policy 0");
+        }
+        Some(p) => {
+            let _ = writeln!(
+                w,
+                "policy 1 {} {} {} {}",
+                p.n_ctx, p.n_arms, p.explore, p.exploit
+            );
+            let _ = write!(w, "pp");
+            for pulls in &p.pulls {
+                let _ = write!(w, " {pulls}");
+            }
+            let _ = writeln!(w);
+            for i in 0..p.count.len() {
+                let _ = writeln!(
+                    w,
+                    "pa {} {} {}",
+                    p.count[i],
+                    p.mean[i].to_bits(),
+                    p.m2[i].to_bits()
+                );
+            }
+        }
     }
     out
 }
@@ -425,6 +457,7 @@ pub fn decode(text: &str) -> anyhow::Result<SimSnapshot> {
             device: t.usize("inflight device")?,
             round: t.usize("inflight round")?,
             degraded: t.bool01("inflight degraded")?,
+            cut: t.usize("inflight cut")?,
             cell: t.usize("inflight cell")?,
             start_s: t.f64_bits("inflight start")?,
             wait_s: t.f64_bits("inflight wait")?,
@@ -447,6 +480,7 @@ pub fn decode(text: &str) -> anyhow::Result<SimSnapshot> {
             device: t.usize("record device")?,
             round: t.usize("record round")?,
             degraded: t.bool01("record degraded")?,
+            cut: t.usize("record cut")?,
             start_s: t.f64_bits("record start")?,
             finish_s: t.f64_bits("record finish")?,
             wait_s: t.f64_bits("record wait")?,
@@ -454,6 +488,43 @@ pub fn decode(text: &str) -> anyhow::Result<SimSnapshot> {
             weight: t.f64_bits("record weight")?,
         });
     }
+
+    let mut t = cur.tagged("policy")?;
+    let policy = if t.bool01("policy present")? {
+        let n_ctx = t.usize("policy contexts")?;
+        let n_arms = t.usize("policy arms")?;
+        let explore = t.u64("policy explore")?;
+        let exploit = t.u64("policy exploit")?;
+        let mut p = cur.tagged("pp")?;
+        let mut pulls = Vec::with_capacity(n_ctx);
+        for _ in 0..n_ctx {
+            pulls.push(p.u64("policy pulls")?);
+        }
+        let cells = n_ctx
+            .checked_mul(n_arms)
+            .ok_or_else(|| anyhow::anyhow!("policy table dimensions overflow"))?;
+        let mut count = Vec::with_capacity(cells);
+        let mut mean = Vec::with_capacity(cells);
+        let mut m2 = Vec::with_capacity(cells);
+        for _ in 0..cells {
+            let mut a = cur.tagged("pa")?;
+            count.push(a.u64("arm count")?);
+            mean.push(a.f64_bits("arm mean")?);
+            m2.push(a.f64_bits("arm m2")?);
+        }
+        Some(PolicyBankSnap {
+            n_ctx,
+            n_arms,
+            count,
+            mean,
+            m2,
+            pulls,
+            explore,
+            exploit,
+        })
+    } else {
+        None
+    };
 
     Ok(SimSnapshot {
         fingerprint,
@@ -487,6 +558,7 @@ pub fn decode(text: &str) -> anyhow::Result<SimSnapshot> {
         slot_failures,
         slot_repairs,
         retry_energy_j,
+        policy,
     })
 }
 
@@ -635,8 +707,51 @@ mod tests {
         let cut = &text[..text.trim_end().rfind('\n').unwrap()];
         assert!(decode(cut).is_err());
         // corrupt the magic
-        let bad = text.replacen("v1", "v9", 1);
+        let bad = text.replacen("v2", "v9", 1);
         assert!(decode(&bad).is_err());
+    }
+
+    #[test]
+    fn learned_policy_section_round_trips() {
+        let exp = ExperimentBuilder::preset("dense-urban")
+            .devices(6)
+            .rounds(4)
+            .seed(11)
+            .strategy(crate::coordinator::Strategy::Ucb1)
+            .des(DesConfig {
+                policy: Policy::Sync,
+                capacity: 2,
+                batch: 1,
+            })
+            .build()
+            .unwrap();
+        // checkpoint late enough that the bank has folded rewards, so
+        // the envelope exercises a non-trivial policy section
+        let mut t = 0.5;
+        let snap = loop {
+            match exp.checkpoint_at(t).unwrap() {
+                RunState::Checkpoint(snap) => {
+                    let fed = snap
+                        .policy
+                        .as_ref()
+                        .is_some_and(|p| p.pulls.iter().sum::<u64>() > 0);
+                    if fed {
+                        break *snap;
+                    }
+                    t += 0.5;
+                }
+                RunState::Done(_) => panic!("run drained before the bank saw a reward"),
+            }
+        };
+        let text = encode(&snap);
+        assert!(text.contains("\npolicy 1 "));
+        let decoded = decode(&text).unwrap();
+        assert_eq!(encode(&decoded), text);
+        assert_eq!(decoded.policy, snap.policy);
+        // oracle snapshots keep an empty section
+        let plain = mid_run_snapshot();
+        assert!(plain.policy.is_none());
+        assert!(encode(&plain).contains("\npolicy 0\n"));
     }
 
     #[test]

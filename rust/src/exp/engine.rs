@@ -20,6 +20,7 @@ use std::sync::Arc;
 use crate::coordinator::{RoundBatch, Scheduler, SOA_WINDOW};
 use crate::des::{CellStats, DesEngine, DesOutcome, RunState, ServerStats, SimSnapshot};
 use crate::obs::trace;
+use crate::policy::PolicyObs;
 
 use super::sink::MetricsSink;
 
@@ -163,6 +164,13 @@ impl Engine for RoundEngine {
         // one reusable SoA window for the whole run: the streaming
         // path's memory is O(SOA_WINDOW), not O(devices × rounds)
         let mut batch = RoundBatch::new();
+        // learned strategies: start from a blank bank and buffer one
+        // round of (context, cut, cost) rewards to fold at each round
+        // boundary — decisions within a round read frozen state, so the
+        // window/thread fan-out stays bit-deterministic (DESIGN.md §19)
+        let learned = self.sched.policy_enabled();
+        self.sched.policy_reset();
+        let mut rewards: Vec<PolicyObs> = Vec::new();
         for round in 0..rounds {
             if traced {
                 trace::wall_begin("round", "engine", tid);
@@ -176,6 +184,14 @@ impl Engine for RoundEngine {
                     while start < devices {
                         let len = SOA_WINDOW.min(devices - start);
                         batch.fill(&self.sched, round, start, len, self.threads);
+                        if learned {
+                            rewards.extend((0..batch.len()).map(|i| PolicyObs {
+                                device_idx: batch.device_idx(i),
+                                snr_up_db: batch.snr_up_db[i],
+                                cut: batch.cut[i],
+                                cost: batch.cost[i],
+                            }));
+                        }
                         sink.on_batch(&batch);
                         cells += len;
                         start += len;
@@ -183,16 +199,38 @@ impl Engine for RoundEngine {
                 }
                 ExecMode::Uncached => {
                     for i in 0..devices {
-                        sink.on_record_owned(self.sched.device_round_uncached(round, i));
+                        let rec = self.sched.device_round_uncached(round, i);
+                        if learned {
+                            rewards.push(PolicyObs {
+                                device_idx: rec.device_idx,
+                                snr_up_db: rec.snr_up_db,
+                                cut: rec.cut,
+                                cost: rec.cost,
+                            });
+                        }
+                        sink.on_record_owned(rec);
                         cells += 1;
                     }
                 }
                 ExecMode::Ref => {
                     for i in 0..devices {
-                        sink.on_record_owned(self.sched.device_round_ref(round, i));
+                        let rec = self.sched.device_round_ref(round, i);
+                        if learned {
+                            rewards.push(PolicyObs {
+                                device_idx: rec.device_idx,
+                                snr_up_db: rec.snr_up_db,
+                                cut: rec.cut,
+                                cost: rec.cost,
+                            });
+                        }
+                        sink.on_record_owned(rec);
                         cells += 1;
                     }
                 }
+            }
+            if learned {
+                self.sched.policy_observe(&rewards);
+                rewards.clear();
             }
             if traced {
                 trace::wall_end("round", "engine", tid);

@@ -36,7 +36,8 @@
 //!   plus the fault-plane gates (zero-rate no-op, checkpoint/resume
 //!   bit-identity) the chaos sweep runs per scenario (DESIGN.md §17).
 //! * [`checkpoint`] serializes a paused event-engine run to the
-//!   versioned `edgesplit/checkpoint/v1` text envelope and back.
+//!   versioned `edgesplit/checkpoint/v2` text envelope and back
+//!   (v2 carries the learned-policy bandit bank, DESIGN.md §19).
 //!
 //! Not sure which engine a new experiment should use?  See the
 //! decision table in `rust/src/exp/README.md`.
@@ -48,7 +49,9 @@ pub mod report;
 pub mod sink;
 pub mod verify;
 
-pub use builder::{BuildError, EngineChoice, Experiment, ExperimentBuilder};
+pub use builder::{
+    parse_strategy, BuildError, EngineChoice, Experiment, ExperimentBuilder, STRATEGY_NAMES,
+};
 pub use engine::{DesRunStats, Engine, ExecMode, RunOutcome};
 pub use report::{Report, ReportMeta, SCHEMA_VERSION};
 pub use sink::{CollectSink, DesSink, MetricsSink, NullSink, SummarySink};

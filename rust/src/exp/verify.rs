@@ -301,10 +301,21 @@ pub fn verify_checkpoint_resume_bit_identity(
     des: DesConfig,
     t_s: f64,
 ) -> anyhow::Result<()> {
-    let engine = DesEngine::new(
-        Arc::new(Scheduler::new(cfg.clone(), state, Strategy::Card)),
-        des,
-    );
+    verify_checkpoint_resume_bit_identity_with(cfg, state, des, t_s, Strategy::Card)
+}
+
+/// Strategy-parameterized checkpoint/resume gate: learned strategies
+/// carry their bandit bank through the envelope's policy section, so a
+/// mid-run freeze must restore the exact Welford table the
+/// uninterrupted run had at that instant (DESIGN.md §19).
+pub fn verify_checkpoint_resume_bit_identity_with(
+    cfg: &ExpConfig,
+    state: ChannelState,
+    des: DesConfig,
+    t_s: f64,
+    strategy: Strategy,
+) -> anyhow::Result<()> {
+    let engine = DesEngine::new(Arc::new(Scheduler::new(cfg.clone(), state, strategy)), des);
     let full = engine.run();
     let resumed = match engine.run_until(t_s) {
         RunState::Checkpoint(snap) => {
@@ -315,4 +326,68 @@ pub fn verify_checkpoint_resume_bit_identity(
         RunState::Done(out) => *out,
     };
     verify_des_outcome_bit_identical(&full, &resumed)
+}
+
+/// The learned-policy determinism gate (DESIGN.md §19): a bandit
+/// strategy's record stream must be a pure function of
+/// `(config, seed)` — bit-identical from the serial reference path and
+/// the round-barriered parallel engine at any thread count.  The
+/// policy sweep runs this gate per (strategy, scenario) before any
+/// regret curve is trusted.
+pub fn verify_learned_thread_determinism(
+    cfg: &ExpConfig,
+    state: ChannelState,
+    strategy: Strategy,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        strategy.is_learned(),
+        "the learned-determinism gate applies to bandit strategies, not {}",
+        strategy.name()
+    );
+    let sched = Scheduler::new(cfg.clone(), state, strategy);
+    let serial = sched.run_analytic()?;
+    for threads in [2usize, 8] {
+        let par = sched.run_parallel(threads);
+        verify_bit_identical(&serial, &par)
+            .map_err(|e| e.context(format!("{} at {threads} threads", strategy.name())))?;
+    }
+    Ok(())
+}
+
+/// The channel-isolation gate (DESIGN.md §19): learned decisions draw
+/// exploration noise from their own salted stream, never the cell RNG,
+/// so every link realization (SNRs, rates) under a bandit strategy
+/// must equal the CARD baseline's bit for bit — and CARD itself stays
+/// bitwise untouched by the policy subsystem's existence.
+pub fn verify_learned_channel_isolation(
+    cfg: &ExpConfig,
+    state: ChannelState,
+    strategy: Strategy,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        strategy.is_learned(),
+        "the channel-isolation gate applies to bandit strategies, not {}",
+        strategy.name()
+    );
+    let card = Scheduler::new(cfg.clone(), state, Strategy::Card).run_analytic()?;
+    let learned = Scheduler::new(cfg.clone(), state, strategy).run_analytic()?;
+    anyhow::ensure!(
+        card.len() == learned.len(),
+        "record count mismatch: {} vs {}",
+        card.len(),
+        learned.len()
+    );
+    for (c, l) in card.iter().zip(&learned) {
+        anyhow::ensure!(
+            c.snr_up_db.to_bits() == l.snr_up_db.to_bits()
+                && c.snr_down_db.to_bits() == l.snr_down_db.to_bits()
+                && c.rate_up_bps.to_bits() == l.rate_up_bps.to_bits()
+                && c.rate_down_bps.to_bits() == l.rate_down_bps.to_bits(),
+            "{} perturbed the channel stream at round {} device {}",
+            strategy.name(),
+            c.round,
+            c.device_idx
+        );
+    }
+    Ok(())
 }

@@ -39,6 +39,7 @@ pub mod exp;
 pub mod model;
 pub mod net;
 pub mod obs;
+pub mod policy;
 pub mod runtime;
 pub mod sim;
 pub mod util;

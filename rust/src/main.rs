@@ -9,6 +9,7 @@
 //! edgesplit des-sweep            # discrete-event engine: policy × scenario grid
 //! edgesplit cell-sweep           # multi-cell tier: cells × scenario grid + handover
 //! edgesplit chaos-sweep          # fault-injection grid: scenario × fault-rate ladder
+//! edgesplit policy-sweep         # learned cut policies: regret vs the CARD oracle
 //! edgesplit card-bench           # decision kernel: legacy vs table vs cached
 //! edgesplit mega-sweep           # million-device streaming tier: cells/sec + peak RSS
 //! edgesplit decide --state poor  # one-shot CARD decision per device
@@ -28,7 +29,7 @@ use edgesplit::exp::ExperimentBuilder;
 use edgesplit::obs;
 use edgesplit::runtime::{artifact_dir, ArtifactStore, SplitExecutor};
 use edgesplit::util::json::Json;
-use edgesplit::sim::{ablate, cardbench, fig3, fig4, fleet, mega};
+use edgesplit::sim::{ablate, cardbench, fig3, fig4, fleet, mega, policysweep};
 use edgesplit::util::benchkit::Bencher;
 use edgesplit::util::logging;
 use edgesplit::util::pool;
@@ -43,16 +44,16 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec { name: "seed", value: Some("u64"), help: "root RNG seed", default: None },
         FlagSpec { name: "state", value: Some("good|normal|poor"), help: "channel state", default: Some("normal") },
         FlagSpec { name: "channel-model", value: Some("iid|markov|jakes"), help: "fading process override for config-driven commands (fig3/fig4/ablate/decide/train); sweeps take it from their scenario presets", default: None },
-        FlagSpec { name: "strategy", value: Some("card|server-only|device-only|static:C|random"), help: "decision strategy", default: Some("card") },
+        FlagSpec { name: "strategy", value: Some("card|server-only|device-only|static:C|random|eps-greedy|ucb1|thompson"), help: "decision strategy (learned policies: DESIGN.md §19)", default: Some("card") },
         FlagSpec { name: "sweep", value: Some("w|phi|bandwidth"), help: "ablation sweep to run", default: Some("w") },
         FlagSpec { name: "scenario", value: Some("name|all"), help: "sweep scenario preset (see `show scenarios`)", default: Some("all") },
         FlagSpec { name: "counts", value: Some("N,N,..."), help: "sweep device counts", default: Some("10,100,1000,10000") },
         FlagSpec { name: "max-devices", value: Some("N"), help: "fleet-sweep: decade device grid 10,100,... capped at N (overrides --counts)", default: None },
         FlagSpec { name: "grid", value: Some("N,N,..."), help: "fleet-sweep: explicit strictly-increasing device grid (overrides --max-devices/--counts)", default: None },
         FlagSpec { name: "threads", value: Some("N"), help: "parallel participants per job (default: all cores; the persistent pool caps extra threads at core count — results are identical at any value)", default: None },
-        FlagSpec { name: "out", value: Some("file.json"), help: "sweep JSON output path (default: BENCH_fleet.json / BENCH_des.json / BENCH_cells.json / BENCH_faults.json / BENCH_mega.json)", default: None },
-        FlagSpec { name: "gate-all", value: None, help: "fleet-sweep: run the serial determinism gate at every grid point (default: largest only)", default: None },
-        FlagSpec { name: "devices", value: Some("N"), help: "card-bench / chaos-sweep / mega-sweep fleet size (default: 10000 / 24 / 1000000)", default: None },
+        FlagSpec { name: "out", value: Some("file.json"), help: "sweep JSON output path (default: BENCH_fleet.json / BENCH_des.json / BENCH_cells.json / BENCH_faults.json / BENCH_policy.json / BENCH_mega.json)", default: None },
+        FlagSpec { name: "gate-all", value: None, help: "fleet-sweep / policy-sweep: run the serial determinism gate at every grid point (default: largest / first scenario only)", default: None },
+        FlagSpec { name: "devices", value: Some("N"), help: "card-bench / chaos-sweep / policy-sweep / mega-sweep fleet size (default: 10000 / 24 / 24 / 1000000)", default: None },
         FlagSpec { name: "check", value: Some("file.json"), help: "card-bench: fail if decision speedups drop >30% vs this committed baseline; mega-sweep: enforce its cells/sec floor + peak-RSS ceiling", default: None },
         FlagSpec { name: "policy", value: Some("sync|semi-sync|async|all"), help: "des-sweep aggregation policy", default: Some("all") },
         FlagSpec { name: "capacity", value: Some("N"), help: "des-sweep server queue slots", default: Some("4") },
@@ -73,7 +74,7 @@ fn flag_specs() -> Vec<FlagSpec> {
     ]
 }
 
-const SUBCOMMANDS: [(&str, &str); 14] = [
+const SUBCOMMANDS: [(&str, &str); 15] = [
     ("fig3", "reproduce Fig. 3: cut layer + frequency decisions over rounds"),
     ("fig4", "reproduce Fig. 4: delay/energy vs baselines across channel states"),
     ("ablate", "A1/A2 sweeps: w, phi, bandwidth"),
@@ -81,6 +82,7 @@ const SUBCOMMANDS: [(&str, &str); 14] = [
     ("des-sweep", "discrete-event engine: policy × scenario × device-count grid"),
     ("cell-sweep", "multi-cell tier: cell-count × scenario grid with handover + per-cell energy"),
     ("chaos-sweep", "fault-injection grid: scenario × fault-rate ladder with retry/demotion accounting"),
+    ("policy-sweep", "online-learning cut policies: cumulative regret vs the CARD oracle per scenario"),
     ("card-bench", "decision-kernel microbench: legacy vs cut-table vs cached (+pool)"),
     ("mega-sweep", "million-device streaming tier: SoA cells/sec + peak-RSS ceiling guard"),
     ("obs-report", "render the telemetry registry (live run or a BENCH envelope's data.telemetry)"),
@@ -143,8 +145,8 @@ fn run(argv: &[String]) -> Result<()> {
         // the override there instead of silently ignoring it
         if matches!(
             cmd,
-            "fleet-sweep" | "des-sweep" | "cell-sweep" | "chaos-sweep" | "card-bench"
-                | "mega-sweep"
+            "fleet-sweep" | "des-sweep" | "cell-sweep" | "chaos-sweep" | "policy-sweep"
+                | "card-bench" | "mega-sweep"
         ) {
             bail!(
                 "--channel-model does not apply to {cmd}: its presets define the \
@@ -159,8 +161,9 @@ fn run(argv: &[String]) -> Result<()> {
 
     let state = ChannelState::parse(args.str_of("state").unwrap_or("normal"))
         .ok_or_else(|| anyhow!("bad --state"))?;
-    let strategy = Strategy::parse(args.str_of("strategy").unwrap_or("card"))
-        .ok_or_else(|| anyhow!("bad --strategy"))?;
+    // typed error listing the whole strategy family on a typo,
+    // mirroring BuildError::UnknownPreset
+    let strategy = edgesplit::exp::parse_strategy(args.str_of("strategy").unwrap_or("card"))?;
 
     // --trace works on every subcommand: recording spans both engines,
     // and the timeline is written once the command finishes (DESIGN.md
@@ -181,6 +184,7 @@ fn run(argv: &[String]) -> Result<()> {
         "des-sweep" => cmd_des_sweep(&args, cfg.seed, rounds_flag),
         "cell-sweep" => cmd_cell_sweep(&args, cfg.seed, rounds_flag),
         "chaos-sweep" => cmd_chaos_sweep(&args, cfg.seed, rounds_flag),
+        "policy-sweep" => cmd_policy_sweep(&args, cfg.seed, rounds_flag),
         "card-bench" => cmd_card_bench(&args, cfg.seed, rounds_flag),
         "mega-sweep" => cmd_mega_sweep(&args, cfg.seed, rounds_flag),
         "decide" => cmd_decide(&cfg, state),
@@ -466,6 +470,46 @@ fn cmd_chaos_sweep(args: &Args, seed: u64, rounds: Option<usize>) -> Result<()> 
 
     report.write(out)?;
     println!("\nwrote {out} ({} sweep points)", sweep.points.len());
+    Ok(())
+}
+
+fn cmd_policy_sweep(args: &Args, seed: u64, rounds: Option<usize>) -> Result<()> {
+    let scenario_sel = args.str_of("scenario").unwrap_or("all");
+    let scenarios = parse_scenarios(scenario_sel)?;
+    let n_devices = args.usize_of("devices")?.unwrap_or(24);
+    let threads = args
+        .usize_of("threads")?
+        .unwrap_or_else(pool::default_parallelism);
+    let gate_all = args.bool_of("gate-all");
+    let out = args.str_of("out").unwrap_or("BENCH_policy.json");
+
+    let mut bench = Bencher::new("policy-sweep");
+    let sweep = policysweep::sweep(
+        &scenarios, n_devices, rounds, threads, seed, gate_all, &mut bench,
+    )?;
+    let report = sweep.report(scenario_sel, rounds);
+    println!("{}\n", report.render());
+    println!(
+        "regret arithmetic: per-cell cost(strategy) − cost(CARD) on bit-identical link \
+         realizations (the learned policies explore on their own salted stream, so CARD's \
+         records are bitwise untouched); every curve is non-negative and non-decreasing"
+    );
+    if gate_all {
+        println!(
+            "determinism gates: channel isolation on every curve; learned streams \
+             serial == parallel (bit-identical) for every scenario\n"
+        );
+    } else {
+        println!(
+            "determinism gates: channel isolation on every curve; learned streams \
+             serial == parallel (bit-identical) on the first scenario \
+             (--gate-all checks every scenario)\n"
+        );
+    }
+    bench.report();
+
+    report.write(out)?;
+    println!("\nwrote {out} ({} regret curves)", sweep.curves.len());
     Ok(())
 }
 

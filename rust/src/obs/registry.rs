@@ -44,13 +44,18 @@ pub const COUNTER_SHARDS: usize = 8;
 pub const MAX_WORKER_SLOTS: usize = 65;
 
 /// Strategy key order for the per-strategy cache counters — the
-/// coordinator maps its `Strategy` enum onto these slots.
-pub const STRATEGY_KEYS: [&str; 5] = [
+/// coordinator maps its `Strategy` enum onto these slots (the learned
+/// family is uncacheable, so its slots only ever count misses of 0,
+/// but keeping the key space total means `obs_slot` never clamps).
+pub const STRATEGY_KEYS: [&str; 8] = [
     "card",
     "server-only",
     "device-only",
     "static-cut",
     "random-cut",
+    "eps-greedy",
+    "ucb1",
+    "thompson",
 ];
 
 /// Wall/sim duration bucket bounds [s] (log-ish spacing, µs → 10 min).
@@ -313,9 +318,9 @@ impl Default for PerWorker {
 /// the "registry".  Field order is the report order.
 pub struct Metrics {
     /// decision-cache hits, one counter per [`STRATEGY_KEYS`] slot
-    pub cache_hit: [Counter; 5],
+    pub cache_hit: [Counter; 8],
     /// decision-cache misses, same slots
-    pub cache_miss: [Counter; 5],
+    pub cache_miss: [Counter; 8],
     /// pool tasks claimed, per worker slot (0 = caller)
     pub pool_claimed: PerWorker,
     /// pool idle parks (worker found no work and blocked on the condvar)
@@ -356,6 +361,13 @@ pub struct Metrics {
     pub soa_chunks: Counter,
     /// wall time per SoA chunk fill (timers only)
     pub soa_fill_s: Histogram,
+    /// learned-policy decisions that explored (off the greedy arm)
+    pub policy_explore: Counter,
+    /// learned-policy decisions that exploited the greedy arm
+    pub policy_exploit: Counter,
+    /// latest cumulative regret vs CARD [milli-units of cost U] —
+    /// written by the policy sweep as each curve finishes
+    pub policy_regret_milli: Gauge,
 }
 
 impl Metrics {
@@ -383,6 +395,9 @@ impl Metrics {
             sched_decide_s: Histogram::new(&TIME_BUCKETS_S),
             soa_chunks: Counter::new(),
             soa_fill_s: Histogram::new(&TIME_BUCKETS_S),
+            policy_explore: Counter::new(),
+            policy_exploit: Counter::new(),
+            policy_regret_milli: Gauge::new(),
         }
     }
 }

@@ -49,19 +49,25 @@ impl Snapshot {
         let m = metrics();
         let mut counters: Vec<(&'static str, u64)> = Vec::new();
         // per-strategy cache counters under static compound keys
-        const HIT_KEYS: [&str; 5] = [
+        const HIT_KEYS: [&str; 8] = [
             "decision_cache.hit.card",
             "decision_cache.hit.server-only",
             "decision_cache.hit.device-only",
             "decision_cache.hit.static-cut",
             "decision_cache.hit.random-cut",
+            "decision_cache.hit.eps-greedy",
+            "decision_cache.hit.ucb1",
+            "decision_cache.hit.thompson",
         ];
-        const MISS_KEYS: [&str; 5] = [
+        const MISS_KEYS: [&str; 8] = [
             "decision_cache.miss.card",
             "decision_cache.miss.server-only",
             "decision_cache.miss.device-only",
             "decision_cache.miss.static-cut",
             "decision_cache.miss.random-cut",
+            "decision_cache.miss.eps-greedy",
+            "decision_cache.miss.ucb1",
+            "decision_cache.miss.thompson",
         ];
         for (i, _) in STRATEGY_KEYS.iter().enumerate() {
             counters.push((HIT_KEYS[i], m.cache_hit[i].value()));
@@ -79,12 +85,21 @@ impl Snapshot {
         counters.push(("des.faults.failovers", m.des_fault_failovers.value()));
         counters.push(("des.faults.slot_failures", m.des_fault_slot_failures.value()));
         counters.push(("des.faults.slot_repairs", m.des_fault_slot_repairs.value()));
+        counters.push(("policy.explore", m.policy_explore.value()));
+        counters.push(("policy.exploit", m.policy_exploit.value()));
 
-        let gauges = vec![(
-            "des.event_queue_depth",
-            m.des_queue_depth.last(),
-            m.des_queue_depth.max(),
-        )];
+        let gauges = vec![
+            (
+                "des.event_queue_depth",
+                m.des_queue_depth.last(),
+                m.des_queue_depth.max(),
+            ),
+            (
+                "policy.regret_milli",
+                m.policy_regret_milli.last(),
+                m.policy_regret_milli.max(),
+            ),
+        ];
 
         let histograms = vec![
             ("des.queue_wait_s", hist_snap(&m.des_queue_wait_s)),

@@ -1,0 +1,269 @@
+//! The bandit decision rules: deterministic functions of (frozen arm
+//! statistics, a dedicated counter-based RNG stream).
+//!
+//! All three rules *minimize* — arm statistics are realized Eq.-12
+//! costs, so lower is better — and share two conventions that make the
+//! whole subsystem reproducible:
+//!
+//! 1. **Untried arms first.**  While any arm in the context has zero
+//!    pulls, every rule plays the lowest-index untried arm.  This makes
+//!    the cold-start phase a deterministic sweep of the grid (no RNG
+//!    consumed), identical for every rule and thread count.
+//! 2. **Lowest-index tie-break.**  Score ties resolve to the smaller
+//!    arm index, never to RNG state.
+
+use crate::util::rng::Rng;
+
+/// Frozen per-context statistics handed to a rule: parallel slices over
+/// the arms of one context, plus the context's total pull count.
+pub struct ArmsView<'a> {
+    /// pulls per arm
+    pub count: &'a [u64],
+    /// Welford running mean cost per arm
+    pub mean: &'a [f64],
+    /// Welford M2 (sum of squared deviations) per arm
+    pub m2: &'a [f64],
+    /// total pulls in this context (= `count.iter().sum()`)
+    pub pulls: u64,
+}
+
+impl ArmsView<'_> {
+    /// Lowest-index untried arm, if any.
+    pub fn untried(&self) -> Option<usize> {
+        self.count.iter().position(|&c| c == 0)
+    }
+
+    /// The pure-greedy choice: argmin of the empirical means, lowest
+    /// index on ties; `None` while any arm is untried (greedy is not
+    /// meaningful on an incomplete sweep).
+    pub fn greedy(&self) -> Option<usize> {
+        if self.untried().is_some() {
+            return None;
+        }
+        argmin(self.mean.iter().copied())
+    }
+
+    /// Unbiased sample standard deviation of one arm, floored.
+    pub fn stddev(&self, arm: usize, floor: f64) -> f64 {
+        if self.count[arm] < 2 {
+            return floor;
+        }
+        (self.m2[arm] / (self.count[arm] - 1) as f64).sqrt().max(floor)
+    }
+}
+
+/// First argmin of a score sequence (lowest index wins ties).
+fn argmin(scores: impl Iterator<Item = f64>) -> Option<usize> {
+    let mut best: Option<(usize, f64)> = None;
+    for (i, s) in scores.enumerate() {
+        match best {
+            Some((_, b)) if s >= b => {}
+            _ => best = Some((i, s)),
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+/// A contextual-bandit decision rule: observe the frozen context
+/// statistics, choose an arm, and (through the engines) receive the
+/// realized cost as reward at the round boundary.
+pub trait LearnedPolicy: Sync {
+    /// Stable identifier used in reports and metric keys.
+    fn name(&self) -> &'static str;
+
+    /// Pick an arm index.  Must be a pure function of `(view, rng)` —
+    /// no interior mutability, no ambient state.
+    fn choose(&self, view: &ArmsView, rng: &mut Rng) -> usize;
+}
+
+/// ε-greedy: with probability ε pick a uniform arm, otherwise the
+/// empirical argmin.  The classic myopic baseline the confidence-based
+/// rules are expected to beat on correlated channels.
+#[derive(Clone, Copy, Debug)]
+pub struct EpsilonGreedy {
+    pub epsilon: f64,
+}
+
+impl LearnedPolicy for EpsilonGreedy {
+    fn name(&self) -> &'static str {
+        "eps-greedy"
+    }
+
+    fn choose(&self, view: &ArmsView, rng: &mut Rng) -> usize {
+        if let Some(a) = view.untried() {
+            return a;
+        }
+        if rng.f64() < self.epsilon {
+            rng.below(view.count.len() as u64) as usize
+        } else {
+            argmin(view.mean.iter().copied()).expect("non-empty arm grid")
+        }
+    }
+}
+
+/// UCB1 (lower-confidence bound, since we minimize): score each arm
+/// `mean − sqrt(ln t / 128n)` and play the argmin.  The radius keeps
+/// the Hoeffding shape but is deliberately tight: Eq.-12 costs over the
+/// cut grid live in a band far narrower than the worst-case [0, 1]
+/// range, and the classic `2/n` (or even `1/2n`) radius over-explores
+/// near-tied cuts for the whole fleet-sweep horizon instead of
+/// converging.  `1/128n` resolves the grid within a few hundred rounds
+/// while still pre-empting any arm whose count lags far behind.
+#[derive(Clone, Copy, Debug)]
+pub struct Ucb1;
+
+impl LearnedPolicy for Ucb1 {
+    fn name(&self) -> &'static str {
+        "ucb1"
+    }
+
+    fn choose(&self, view: &ArmsView, _rng: &mut Rng) -> usize {
+        if let Some(a) = view.untried() {
+            return a;
+        }
+        let ln_t = (view.pulls.max(1) as f64).ln();
+        argmin((0..view.count.len()).map(|a| {
+            view.mean[a] - (ln_t / (128.0 * view.count[a] as f64)).sqrt()
+        }))
+        .expect("non-empty arm grid")
+    }
+}
+
+/// Gaussian Thompson sampling: draw `mean + N(0,1)·s/sqrt(n)` per arm
+/// (s = sample stddev, floored so a low-variance arm keeps exploring)
+/// and play the argmin draw.  Posterior-shaped exploration — arms with
+/// uncertain means get sampled optimistically often enough to resolve
+/// them, without UCB's uniform radius.
+#[derive(Clone, Copy, Debug)]
+pub struct GaussianThompson {
+    pub sigma_floor: f64,
+}
+
+impl LearnedPolicy for GaussianThompson {
+    fn name(&self) -> &'static str {
+        "thompson"
+    }
+
+    fn choose(&self, view: &ArmsView, rng: &mut Rng) -> usize {
+        if let Some(a) = view.untried() {
+            return a;
+        }
+        argmin((0..view.count.len()).map(|a| {
+            let se = view.stddev(a, self.sigma_floor) / (view.count[a] as f64).sqrt();
+            view.mean[a] + rng.gauss() * se
+        }))
+        .expect("non-empty arm grid")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A 4-arm view where arm 2 is clearly best (mean 0.1 vs 0.5+).
+    fn converged<'a>(
+        count: &'a [u64; 4],
+        mean: &'a [f64; 4],
+        m2: &'a [f64; 4],
+    ) -> ArmsView<'a> {
+        ArmsView {
+            count,
+            mean,
+            m2,
+            pulls: count.iter().sum(),
+        }
+    }
+
+    const COUNT: [u64; 4] = [50, 50, 50, 50];
+    const MEAN: [f64; 4] = [0.5, 0.6, 0.1, 0.7];
+    const M2: [f64; 4] = [0.5, 0.5, 0.5, 0.5];
+
+    #[test]
+    fn argmin_prefers_lowest_index_on_ties() {
+        assert_eq!(argmin([1.0, 0.5, 0.5, 2.0].into_iter()), Some(1));
+        assert_eq!(argmin(std::iter::empty()), None);
+    }
+
+    #[test]
+    fn untried_arms_preempt_every_rule() {
+        let count = [3, 0, 5, 0];
+        let view = ArmsView {
+            count: &count,
+            mean: &MEAN,
+            m2: &M2,
+            pulls: 8,
+        };
+        let mut rng = Rng::new(1);
+        assert_eq!(EpsilonGreedy { epsilon: 0.1 }.choose(&view, &mut rng), 1);
+        assert_eq!(Ucb1.choose(&view, &mut rng), 1);
+        assert_eq!(GaussianThompson { sigma_floor: 0.05 }.choose(&view, &mut rng), 1);
+        assert_eq!(view.greedy(), None);
+    }
+
+    #[test]
+    fn eps_greedy_mostly_exploits_the_best_arm() {
+        let view = converged(&COUNT, &MEAN, &M2);
+        let rule = EpsilonGreedy { epsilon: 0.1 };
+        let mut rng = Rng::new(42);
+        let picks: Vec<usize> = (0..1000).map(|_| rule.choose(&view, &mut rng)).collect();
+        let best = picks.iter().filter(|&&a| a == 2).count();
+        assert!(best > 850, "greedy share too low: {best}/1000");
+        // but it does explore
+        assert!(picks.iter().any(|&a| a != 2));
+    }
+
+    #[test]
+    fn ucb_converges_to_the_best_arm_and_ignores_rng() {
+        let view = converged(&COUNT, &MEAN, &M2);
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(999);
+        assert_eq!(Ucb1.choose(&view, &mut a), 2);
+        assert_eq!(Ucb1.choose(&view, &mut b), 2);
+        // rng untouched: both streams still agree on their next draw
+        assert_eq!(Rng::new(1).f64(), a.f64());
+    }
+
+    #[test]
+    fn ucb_bonus_favors_undersampled_arms() {
+        // arm 2 is best on mean but heavily sampled; arm 0 has a huge
+        // confidence radius with only 1 pull and a near-tied mean
+        let count = [1, 400, 400, 400];
+        let mean = [0.15, 0.6, 0.1, 0.7];
+        let view = converged(&count, &mean, &M2);
+        assert_eq!(Ucb1.choose(&view, &mut Rng::new(0)), 0);
+    }
+
+    #[test]
+    fn thompson_samples_around_the_posterior() {
+        let view = converged(&COUNT, &MEAN, &M2);
+        let rule = GaussianThompson { sigma_floor: 0.05 };
+        let mut rng = Rng::new(7);
+        let picks: Vec<usize> = (0..1000).map(|_| rule.choose(&view, &mut rng)).collect();
+        let best = picks.iter().filter(|&&a| a == 2).count();
+        assert!(best > 900, "posterior share too low: {best}/1000");
+    }
+
+    #[test]
+    fn rules_are_deterministic_per_stream() {
+        let view = converged(&COUNT, &MEAN, &M2);
+        for seed in 0..10u64 {
+            for rule in [
+                &EpsilonGreedy { epsilon: 0.3 } as &dyn LearnedPolicy,
+                &Ucb1,
+                &GaussianThompson { sigma_floor: 0.05 },
+            ] {
+                let x = rule.choose(&view, &mut Rng::new(seed));
+                let y = rule.choose(&view, &mut Rng::new(seed));
+                assert_eq!(x, y, "{} seed {seed}", rule.name());
+            }
+        }
+    }
+
+    #[test]
+    fn stddev_floors_small_samples() {
+        let count = [1, 2, 50, 50];
+        let view = converged(&count, &MEAN, &M2);
+        assert_eq!(view.stddev(0, 0.05), 0.05);
+        assert!(view.stddev(2, 0.05) > 0.05);
+    }
+}

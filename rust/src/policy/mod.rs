@@ -1,0 +1,453 @@
+//! Online-learning cut policies (DESIGN.md §19): contextual bandits
+//! that *learn* the cut decision the CARD oracle computes in closed
+//! form.
+//!
+//! The paper's CARD algorithm assumes the cost model is known and picks
+//! the optimal `(cut, frequency)` per (device, channel) instant.  Real
+//! edge deployments must learn cut placement online, under channel
+//! dynamics the server cannot observe in closed form.  This module is
+//! that learner: a [`LearnedPolicy`] trait (observe context → choose a
+//! cut arm → receive the realized cost as reward) with three
+//! deterministic implementations — epsilon-greedy, UCB1, and Gaussian
+//! Thompson sampling — over a discretized context of
+//! (uplink-CQI bucket, device class).
+//!
+//! ## Determinism contract
+//!
+//! Learned decisions are stateful, which is exactly what the engines'
+//! purity contract (DESIGN.md §8) forbids *within* a round.  The
+//! [`PolicyBank`] therefore freezes its statistics for the duration of
+//! a round: every decision in round `n` reads state folded from rounds
+//! `< n`, and the engines fold round `n`'s realized costs exactly once,
+//! at the round boundary, in device order
+//! ([`Scheduler::policy_observe`]).  Exploration randomness never
+//! touches the cell's channel stream — each cell derives a dedicated
+//! policy stream from `stream_root ^ POLICY_SALT`, so a learned run
+//! realizes bit-identical links to the CARD run it is benchmarked
+//! against, and stays bit-reproducible at any thread count.
+//!
+//! [`Scheduler::policy_observe`]: crate::coordinator::Scheduler::policy_observe
+
+pub mod bandits;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::config::DeviceSpec;
+use crate::net::cqi::cqi_for_snr;
+use crate::obs;
+use crate::util::rng::Rng;
+
+pub use bandits::{ArmsView, EpsilonGreedy, GaussianThompson, LearnedPolicy, Ucb1};
+
+/// Salt folded into the scheduler's stream root to derive per-cell
+/// policy streams — a dedicated RNG domain, disjoint by construction
+/// from the channel/mobility (`stream_root`), churn (`seed ^ 0xDE5C4`),
+/// and fault (`seed ^ 0xFA0170`) domains, so exploration never perturbs
+/// what any other subsystem draws.
+pub const POLICY_SALT: u64 = 0xB0_11_C7;
+
+/// Uplink-CQI buckets: the 16 CQI levels collapse 4:1.
+pub const N_CQI_BUCKETS: usize = 4;
+
+/// Device classes: fast/slow split at the fleet's geometric-mean
+/// throughput.
+pub const N_DEVICE_CLASSES: usize = 2;
+
+/// Contexts = device class × CQI bucket.
+pub const N_CONTEXTS: usize = N_DEVICE_CLASSES * N_CQI_BUCKETS;
+
+/// Which bandit rule a [`PolicyBank`] runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PolicyKind {
+    EpsGreedy,
+    Ucb1,
+    Thompson,
+}
+
+impl PolicyKind {
+    /// The decision rule (stateless — all state lives in the bank).
+    pub fn rule(&self) -> &'static dyn LearnedPolicy {
+        static EPS: EpsilonGreedy = EpsilonGreedy { epsilon: 0.1 };
+        static UCB: Ucb1 = Ucb1;
+        static TS: GaussianThompson = GaussianThompson { sigma_floor: 0.05 };
+        match self {
+            PolicyKind::EpsGreedy => &EPS,
+            PolicyKind::Ucb1 => &UCB,
+            PolicyKind::Thompson => &TS,
+        }
+    }
+}
+
+/// One realized cell fed back to the bank at a round boundary: the
+/// context coordinates, the cut the policy chose, and the realized
+/// Eq.-12 cost (the reward signal, negated by convention — the bank
+/// minimizes).
+#[derive(Clone, Copy, Debug)]
+pub struct PolicyObs {
+    pub device_idx: usize,
+    pub snr_up_db: f64,
+    pub cut: usize,
+    pub cost: f64,
+}
+
+/// Checkpointable copy of a bank's mutable state (`exp::checkpoint`
+/// serializes this alongside the DES snapshot).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PolicyBankSnap {
+    pub n_ctx: usize,
+    pub n_arms: usize,
+    /// per (ctx, arm): pull count
+    pub count: Vec<u64>,
+    /// per (ctx, arm): Welford running mean of the cost
+    pub mean: Vec<f64>,
+    /// per (ctx, arm): Welford M2 (sum of squared deviations)
+    pub m2: Vec<f64>,
+    /// per ctx: total pulls
+    pub pulls: Vec<u64>,
+    pub explore: u64,
+    pub exploit: u64,
+}
+
+/// Map the realized uplink SNR to its context bucket.
+#[inline]
+pub fn cqi_bucket(snr_up_db: f64) -> usize {
+    (cqi_for_snr(snr_up_db) as usize / 4).min(N_CQI_BUCKETS - 1)
+}
+
+/// Derive each device's class from its compute throughput: class 1
+/// (fast) above the fleet's geometric-mean throughput, class 0 (slow)
+/// at or below it.  A pure function of the config, so every engine and
+/// thread count derives the identical partition; a homogeneous fleet
+/// collapses to one class.
+pub fn device_classes(devices: &[DeviceSpec]) -> Vec<u8> {
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for d in devices {
+        let t = d.throughput();
+        lo = lo.min(t);
+        hi = hi.max(t);
+    }
+    if !(hi > lo) {
+        return vec![0; devices.len()];
+    }
+    let split = (lo * hi).sqrt();
+    devices
+        .iter()
+        .map(|d| u8::from(d.throughput() > split))
+        .collect()
+}
+
+/// The coarse cut grid the bandits choose from: 9 evenly spaced cuts
+/// over `0..=n_layers` (deduplicated for shallow models).  A 33-arm
+/// grid over every cut would take thousands of pulls per context to
+/// converge; the coarse grid keeps the learning problem solvable at
+/// fleet-sweep horizons while still spanning server-only (0) to
+/// device-only (I).
+pub fn arm_grid(n_layers: usize) -> Vec<usize> {
+    let mut arms: Vec<usize> = (0..=8).map(|k| (k * n_layers + 4) / 8).collect();
+    arms.dedup();
+    arms
+}
+
+/// The contextual-bandit state behind a learned `Strategy`: per
+/// (context, arm) Welford cost statistics, shared across the fleet
+/// (devices pool their experience through the context discretization).
+///
+/// Reads ([`PolicyBank::choose_cut`]) take `&self` and are safe from
+/// any thread *between* folds; writes ([`PolicyBank::observe`],
+/// [`PolicyBank::reset`], [`PolicyBank::restore`]) require `&mut self`
+/// and happen only at round boundaries, under the scheduler's lock.
+#[derive(Debug)]
+pub struct PolicyBank {
+    kind: PolicyKind,
+    /// The cut each arm index maps to (sorted, deduplicated).
+    arms: Vec<usize>,
+    /// Per-device class (derived once from the config).
+    classes: Vec<u8>,
+    count: Vec<u64>,
+    mean: Vec<f64>,
+    m2: Vec<f64>,
+    pulls: Vec<u64>,
+    /// Exploration/exploitation tallies — atomics because decisions run
+    /// on pool workers under a read lock; totals are order-independent.
+    explore: AtomicU64,
+    exploit: AtomicU64,
+}
+
+impl PolicyBank {
+    pub fn new(kind: PolicyKind, devices: &[DeviceSpec], n_layers: usize) -> Self {
+        let arms = arm_grid(n_layers);
+        let n = N_CONTEXTS * arms.len();
+        PolicyBank {
+            kind,
+            arms,
+            classes: device_classes(devices),
+            count: vec![0; n],
+            mean: vec![0.0; n],
+            m2: vec![0.0; n],
+            pulls: vec![0; N_CONTEXTS],
+            explore: AtomicU64::new(0),
+            exploit: AtomicU64::new(0),
+        }
+    }
+
+    pub fn kind(&self) -> PolicyKind {
+        self.kind
+    }
+
+    /// The cut grid the bandit chooses from.
+    pub fn arms(&self) -> &[usize] {
+        &self.arms
+    }
+
+    /// Context index for one cell.
+    #[inline]
+    fn ctx(&self, device_idx: usize, snr_up_db: f64) -> usize {
+        self.classes[device_idx] as usize * N_CQI_BUCKETS + cqi_bucket(snr_up_db)
+    }
+
+    /// Choose a cut for one cell from the frozen statistics.  `rng` must
+    /// be the cell's dedicated policy stream — never the channel stream.
+    pub fn choose_cut(&self, device_idx: usize, snr_up_db: f64, rng: &mut Rng) -> usize {
+        let n_arms = self.arms.len();
+        let base = self.ctx(device_idx, snr_up_db) * n_arms;
+        let view = ArmsView {
+            count: &self.count[base..base + n_arms],
+            mean: &self.mean[base..base + n_arms],
+            m2: &self.m2[base..base + n_arms],
+            pulls: self.pulls[base / n_arms],
+        };
+        let arm = self.kind.rule().choose(&view, rng);
+        debug_assert!(arm < n_arms);
+        // exploration = any deviation from the pure-greedy argmin
+        // (untried arms count as exploration); tallies observe only
+        if view.greedy() == Some(arm) {
+            self.exploit.fetch_add(1, Ordering::Relaxed);
+            obs::metrics().policy_exploit.inc(device_idx);
+        } else {
+            self.explore.fetch_add(1, Ordering::Relaxed);
+            obs::metrics().policy_explore.inc(device_idx);
+        }
+        self.arms[arm]
+    }
+
+    /// Fold one realized cell into the statistics (round boundary,
+    /// device order — the engines guarantee the fold order).
+    pub fn observe(&mut self, o: &PolicyObs) {
+        let arm = self
+            .arms
+            .binary_search(&o.cut)
+            .unwrap_or_else(|_| panic!("cut {} is not on the policy arm grid", o.cut));
+        let ctx = self.ctx(o.device_idx, o.snr_up_db);
+        let i = ctx * self.arms.len() + arm;
+        self.pulls[ctx] += 1;
+        self.count[i] += 1;
+        let n = self.count[i] as f64;
+        let delta = o.cost - self.mean[i];
+        self.mean[i] += delta / n;
+        self.m2[i] += delta * (o.cost - self.mean[i]);
+    }
+
+    /// `(explore, exploit)` decision tallies since the last reset.
+    pub fn counters(&self) -> (u64, u64) {
+        (
+            self.explore.load(Ordering::Relaxed),
+            self.exploit.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Forget everything — every `run*` entry point resets so repeated
+    /// runs of one scheduler reproduce bit-identically.
+    pub fn reset(&mut self) {
+        self.count.fill(0);
+        self.mean.fill(0.0);
+        self.m2.fill(0.0);
+        self.pulls.fill(0);
+        self.explore.store(0, Ordering::Relaxed);
+        self.exploit.store(0, Ordering::Relaxed);
+    }
+
+    /// Checkpointable copy of the mutable state.
+    pub fn snapshot(&self) -> PolicyBankSnap {
+        PolicyBankSnap {
+            n_ctx: N_CONTEXTS,
+            n_arms: self.arms.len(),
+            count: self.count.clone(),
+            mean: self.mean.clone(),
+            m2: self.m2.clone(),
+            pulls: self.pulls.clone(),
+            explore: self.explore.load(Ordering::Relaxed),
+            exploit: self.exploit.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Inverse of [`PolicyBank::snapshot`].
+    pub fn restore(&mut self, snap: &PolicyBankSnap) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            snap.n_ctx == N_CONTEXTS && snap.n_arms == self.arms.len(),
+            "policy snapshot shape {}x{} does not fit this bank ({}x{})",
+            snap.n_ctx,
+            snap.n_arms,
+            N_CONTEXTS,
+            self.arms.len()
+        );
+        anyhow::ensure!(
+            snap.count.len() == self.count.len()
+                && snap.mean.len() == self.mean.len()
+                && snap.m2.len() == self.m2.len()
+                && snap.pulls.len() == self.pulls.len(),
+            "policy snapshot vector lengths are inconsistent"
+        );
+        self.count.copy_from_slice(&snap.count);
+        self.mean.copy_from_slice(&snap.mean);
+        self.m2.copy_from_slice(&snap.m2);
+        self.pulls.copy_from_slice(&snap.pulls);
+        self.explore.store(snap.explore, Ordering::Relaxed);
+        self.exploit.store(snap.exploit, Ordering::Relaxed);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExpConfig;
+
+    fn bank(kind: PolicyKind) -> PolicyBank {
+        PolicyBank::new(kind, &ExpConfig::paper().devices, 32)
+    }
+
+    #[test]
+    fn arm_grid_spans_and_dedups() {
+        assert_eq!(arm_grid(32), vec![0, 4, 8, 12, 16, 20, 24, 28, 32]);
+        assert_eq!(arm_grid(4), vec![0, 1, 2, 3, 4]);
+        let g = arm_grid(2);
+        assert_eq!(g.first(), Some(&0));
+        assert_eq!(g.last(), Some(&2));
+        for w in g.windows(2) {
+            assert!(w[0] < w[1], "grid must stay strictly increasing: {g:?}");
+        }
+    }
+
+    #[test]
+    fn device_classes_split_the_paper_fleet() {
+        let cfg = ExpConfig::paper();
+        let classes = device_classes(&cfg.devices);
+        assert_eq!(classes.len(), cfg.devices.len());
+        assert!(classes.contains(&0) && classes.contains(&1), "{classes:?}");
+        // the paper fleet is strictly decreasing in capability, so the
+        // class vector must be non-increasing
+        for w in classes.windows(2) {
+            assert!(w[0] >= w[1], "{classes:?}");
+        }
+    }
+
+    #[test]
+    fn homogeneous_fleet_collapses_to_one_class() {
+        let cfg = ExpConfig::paper();
+        let twin = vec![cfg.devices[0].clone(); 4];
+        assert_eq!(device_classes(&twin), vec![0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn cqi_buckets_cover_the_range() {
+        assert_eq!(cqi_bucket(-30.0), 0);
+        assert_eq!(cqi_bucket(60.0), N_CQI_BUCKETS - 1);
+        for snr in -30..60 {
+            assert!(cqi_bucket(snr as f64) < N_CQI_BUCKETS);
+        }
+    }
+
+    #[test]
+    fn observe_accumulates_welford_stats() {
+        let mut b = bank(PolicyKind::Ucb1);
+        let cut = b.arms()[2];
+        for (i, cost) in [0.2, 0.4, 0.6].iter().enumerate() {
+            b.observe(&PolicyObs {
+                device_idx: 0,
+                snr_up_db: 10.0,
+                cut,
+                cost: *cost,
+            });
+            let snap = b.snapshot();
+            let total: u64 = snap.count.iter().sum();
+            assert_eq!(total, i as u64 + 1);
+        }
+        let snap = b.snapshot();
+        let i = snap.count.iter().position(|&c| c == 3).unwrap();
+        assert!((snap.mean[i] - 0.4).abs() < 1e-12);
+        assert!((snap.m2[i] - 0.08).abs() < 1e-12);
+    }
+
+    #[test]
+    fn choose_is_pure_given_frozen_stats_and_stream() {
+        for kind in [PolicyKind::EpsGreedy, PolicyKind::Ucb1, PolicyKind::Thompson] {
+            let b = bank(kind);
+            for seed in 0..20u64 {
+                let a = b.choose_cut(1, 12.0, &mut Rng::new(seed));
+                let again = b.choose_cut(1, 12.0, &mut Rng::new(seed));
+                assert_eq!(a, again, "{kind:?} seed {seed}");
+                assert!(b.arms().contains(&a));
+            }
+        }
+    }
+
+    #[test]
+    fn untried_arms_are_visited_first() {
+        // with an empty bank every rule sweeps the arm grid in order
+        for kind in [PolicyKind::EpsGreedy, PolicyKind::Ucb1, PolicyKind::Thompson] {
+            let mut b = bank(kind);
+            let mut seen = Vec::new();
+            for _ in 0..b.arms().len() {
+                let cut = b.choose_cut(0, 10.0, &mut Rng::new(7));
+                seen.push(cut);
+                b.observe(&PolicyObs {
+                    device_idx: 0,
+                    snr_up_db: 10.0,
+                    cut,
+                    cost: 0.5,
+                });
+            }
+            assert_eq!(seen, b.arms(), "{kind:?} must try every arm once");
+        }
+    }
+
+    #[test]
+    fn snapshot_restore_round_trips() {
+        let mut b = bank(PolicyKind::Thompson);
+        for r in 0..40 {
+            let cut = b.choose_cut(r % 5, (r % 30) as f64, &mut Rng::new(r as u64));
+            b.observe(&PolicyObs {
+                device_idx: r % 5,
+                snr_up_db: (r % 30) as f64,
+                cut,
+                cost: 0.1 + 0.01 * r as f64,
+            });
+        }
+        let snap = b.snapshot();
+        let mut c = bank(PolicyKind::Thompson);
+        c.restore(&snap).unwrap();
+        assert_eq!(c.snapshot(), snap);
+        // restore rejects a foreign shape
+        let mut bad = snap.clone();
+        bad.n_arms += 1;
+        assert!(c.restore(&bad).is_err());
+    }
+
+    #[test]
+    fn reset_clears_everything() {
+        let mut b = bank(PolicyKind::EpsGreedy);
+        let cut = b.choose_cut(0, 10.0, &mut Rng::new(1));
+        b.observe(&PolicyObs {
+            device_idx: 0,
+            snr_up_db: 10.0,
+            cut,
+            cost: 0.3,
+        });
+        b.reset();
+        let snap = b.snapshot();
+        assert!(snap.count.iter().all(|&c| c == 0));
+        assert!(snap.pulls.iter().all(|&p| p == 0));
+        assert_eq!(b.counters(), (0, 0));
+    }
+}

@@ -9,8 +9,10 @@ pub mod fig4;
 pub mod fleet;
 pub mod mega;
 pub mod metrics;
+pub mod policysweep;
 
 pub use cardbench::CardBench;
 pub use fleet::{FleetPoint, FleetSweep};
 pub use mega::MegaBench;
+pub use policysweep::{PolicyCurve, PolicySweep, POLICY_STRATEGIES};
 pub use metrics::{reduction_pct, Percentiles, Summary};

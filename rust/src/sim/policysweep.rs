@@ -1,0 +1,395 @@
+//! Regret benchmarking for the online-learning cut policies
+//! (DESIGN.md §19): run every learned strategy plus the CARD oracle
+//! and Random-cut across the scenario registry, accumulate per-round
+//! cumulative regret vs CARD, and emit `BENCH_policy.json` under the
+//! `edgesplit/policy-sweep/v1` envelope.
+//!
+//! The comparison is exact, not statistical: learned decisions draw
+//! exploration noise from their own salted stream (`policy::POLICY_SALT`),
+//! so every strategy sees bit-identical link realizations.  CARD picks
+//! the cost-minimal cut at the CARD-optimal frequency, and the bandits
+//! pick from a cut grid at the same frequency over the same cut table —
+//! so per-cell regret `cost(strategy) − cost(CARD)` is non-negative by
+//! construction, CARD's self-regret is exactly zero, and a curve that
+//! flattens is a bandit that has learned the context's best arm.
+//!
+//! Two determinism gates run before any curve is trusted:
+//!
+//! * channel isolation — every strategy's per-record SNRs/rates must
+//!   equal CARD's bit for bit (checked inline from the collected
+//!   records, no extra runs);
+//! * thread determinism — learned streams must be bit-identical from
+//!   the serial reference and the parallel engine
+//!   ([`exp::verify::verify_learned_thread_determinism`]; first
+//!   scenario per strategy by default, everywhere with `gate_all`).
+
+use crate::config::scenario::Scenario;
+use crate::coordinator::Strategy;
+use crate::exp::{self, ExperimentBuilder, Report, ReportMeta};
+use crate::util::benchkit::Bencher;
+use crate::util::json::{self, Json};
+use crate::util::table::{fmt_secs, Table};
+
+/// The strategy slate every policy sweep runs: the oracle, the
+/// exploration floor, and the three learned policies.
+pub const POLICY_STRATEGIES: [Strategy; 5] = [
+    Strategy::Card,
+    Strategy::RandomCut,
+    Strategy::EpsGreedy,
+    Strategy::Ucb1,
+    Strategy::Thompson,
+];
+
+/// One (scenario, strategy) regret curve.
+#[derive(Clone, Debug)]
+pub struct PolicyCurve {
+    pub scenario: String,
+    /// [`Strategy::key`] of the strategy that produced this curve.
+    pub strategy: &'static str,
+    pub n_devices: usize,
+    pub rounds: usize,
+    pub wall_s: f64,
+    /// mean per-cell cost U over the whole run
+    pub mean_cost: f64,
+    /// `cumulative_regret[r]` = Σ over rounds `<= r`, devices, of
+    /// `cost(strategy) − cost(CARD)` — non-decreasing, 0 for CARD
+    pub cumulative_regret: Vec<f64>,
+    /// `cumulative_regret.last()` (0.0 for an empty run)
+    pub final_regret: f64,
+    /// learned-policy decision tallies (0 for CARD/Random)
+    pub explore: u64,
+    pub exploit: u64,
+}
+
+impl PolicyCurve {
+    /// Final regret averaged per round — the slope a sublinear curve
+    /// drives toward zero.
+    pub fn regret_per_round(&self) -> f64 {
+        if self.rounds == 0 {
+            0.0
+        } else {
+            self.final_regret / self.rounds as f64
+        }
+    }
+}
+
+/// Full sweep result: the strategy slate × the scenario selection.
+#[derive(Clone, Debug)]
+pub struct PolicySweep {
+    pub curves: Vec<PolicyCurve>,
+    pub threads: usize,
+    pub seed: u64,
+}
+
+/// Look up a finished curve by (scenario, strategy key).
+impl PolicySweep {
+    pub fn curve(&self, scenario: &str, strategy: &str) -> Option<&PolicyCurve> {
+        self.curves
+            .iter()
+            .find(|c| c.scenario == scenario && c.strategy == strategy)
+    }
+}
+
+/// Run the strategy slate over `scenarios` with an `n_devices` fleet.
+/// `rounds` overrides each preset's round count; `gate_all` runs the
+/// thread-determinism gate for every (scenario, learned strategy) pair
+/// instead of only the first scenario.  Timings land in `bench`.
+pub fn sweep(
+    scenarios: &[Scenario],
+    n_devices: usize,
+    rounds: Option<usize>,
+    threads: usize,
+    seed: u64,
+    gate_all: bool,
+    bench: &mut Bencher,
+) -> anyhow::Result<PolicySweep> {
+    anyhow::ensure!(!scenarios.is_empty(), "no scenarios selected");
+    anyhow::ensure!(n_devices > 0, "fleet size must be >= 1");
+    let mut curves = Vec::with_capacity(scenarios.len() * POLICY_STRATEGIES.len());
+    for (si, sc) in scenarios.iter().enumerate() {
+        // the CARD baseline first: its records anchor both the regret
+        // arithmetic and the channel-isolation check
+        let mut baseline = None;
+        for strategy in POLICY_STRATEGIES {
+            let mut builder = ExperimentBuilder::preset(sc.name)
+                .devices(n_devices)
+                .seed(seed)
+                .threads(threads)
+                .strategy(strategy);
+            if let Some(r) = rounds {
+                builder = builder.rounds(r);
+            }
+            let experiment = builder.build()?;
+            let n_rounds = experiment.config().workload.rounds;
+
+            if strategy.is_learned() && (gate_all || si == 0) {
+                exp::verify::verify_learned_thread_determinism(
+                    experiment.config(),
+                    sc.state,
+                    strategy,
+                )?;
+            }
+
+            let t0 = std::time::Instant::now();
+            let records = experiment.run_collect()?;
+            let wall = t0.elapsed().as_secs_f64();
+
+            if baseline.is_none() {
+                anyhow::ensure!(
+                    strategy == Strategy::Card,
+                    "the strategy slate must lead with CARD"
+                );
+                baseline = Some(records.clone());
+            }
+            let card: &[crate::coordinator::RoundRecord] =
+                baseline.as_deref().expect("CARD baseline collected above");
+            anyhow::ensure!(
+                card.len() == records.len(),
+                "{}: record count diverged from the CARD baseline",
+                strategy.name()
+            );
+
+            let mut cumulative = vec![0.0f64; n_rounds];
+            let mut cost_sum = 0.0f64;
+            for (c, r) in card.iter().zip(&records) {
+                // the policy stream is salted away from the cell
+                // stream, so every strategy must see CARD's links
+                anyhow::ensure!(
+                    c.snr_up_db.to_bits() == r.snr_up_db.to_bits()
+                        && c.rate_up_bps.to_bits() == r.rate_up_bps.to_bits(),
+                    "{} perturbed the channel at round {} device {}",
+                    strategy.name(),
+                    c.round,
+                    c.device_idx
+                );
+                let regret = r.cost - c.cost;
+                anyhow::ensure!(
+                    regret >= 0.0,
+                    "{}: negative per-cell regret {regret} at round {} device {} — \
+                     CARD is per-cell optimal over the cut grid",
+                    strategy.name(),
+                    c.round,
+                    c.device_idx
+                );
+                cumulative[r.round] += regret;
+                cost_sum += r.cost;
+            }
+            for r in 1..n_rounds {
+                cumulative[r] += cumulative[r - 1];
+            }
+            let final_regret = cumulative.last().copied().unwrap_or(0.0);
+            let (explore, exploit) = experiment.scheduler().policy_counters().unwrap_or((0, 0));
+            crate::obs::metrics()
+                .policy_regret_milli
+                .observe((final_regret * 1e3).round() as u64);
+            bench.record_once(
+                &format!("{}_{}", sc.name, strategy.key()),
+                wall,
+                Some(((n_devices * n_rounds) as f64 / wall.max(1e-9), "device-round")),
+            );
+            curves.push(PolicyCurve {
+                scenario: sc.name.to_string(),
+                strategy: strategy.key(),
+                n_devices,
+                rounds: n_rounds,
+                wall_s: wall,
+                mean_cost: cost_sum / records.len().max(1) as f64,
+                cumulative_regret: cumulative,
+                final_regret,
+                explore,
+                exploit,
+            });
+        }
+    }
+    Ok(PolicySweep {
+        curves,
+        threads,
+        seed,
+    })
+}
+
+impl PolicySweep {
+    /// ASCII summary table (scenario × strategy).
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            &format!(
+                "policy-sweep — regret vs CARD ({} workers, seed {})",
+                self.threads, self.seed
+            ),
+            &[
+                "scenario",
+                "strategy",
+                "devices",
+                "rounds",
+                "final regret",
+                "regret/round",
+                "explore",
+                "exploit",
+                "mean cost",
+                "wall",
+            ],
+        );
+        for c in &self.curves {
+            t.row(vec![
+                c.scenario.clone(),
+                c.strategy.to_string(),
+                c.n_devices.to_string(),
+                c.rounds.to_string(),
+                format!("{:.4}", c.final_regret),
+                format!("{:.6}", c.regret_per_round()),
+                c.explore.to_string(),
+                c.exploit.to_string(),
+                format!("{:.4}", c.mean_cost),
+                fmt_secs(c.wall_s),
+            ]);
+        }
+        t.render()
+    }
+
+    /// Emitter payload (the `data` member of the report envelope).
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("schema", Json::Str("edgesplit/policy-sweep/v1".into())),
+            // string, not number: u64 seeds above 2^53 would lose
+            // precision through the f64-backed Json::Num
+            ("seed", Json::Str(self.seed.to_string())),
+            ("threads", Json::Num(self.threads as f64)),
+            (
+                "curves",
+                Json::Arr(
+                    self.curves
+                        .iter()
+                        .map(|c| {
+                            json::obj(vec![
+                                ("scenario", Json::Str(c.scenario.clone())),
+                                ("strategy", Json::Str(c.strategy.to_string())),
+                                ("n_devices", Json::Num(c.n_devices as f64)),
+                                ("rounds", Json::Num(c.rounds as f64)),
+                                ("wall_s", Json::Num(c.wall_s)),
+                                ("mean_cost", Json::Num(c.mean_cost)),
+                                ("final_regret", Json::Num(c.final_regret)),
+                                ("regret_per_round", Json::Num(c.regret_per_round())),
+                                ("explore", Json::Num(c.explore as f64)),
+                                ("exploit", Json::Num(c.exploit as f64)),
+                                (
+                                    "cumulative_regret",
+                                    Json::Arr(
+                                        c.cumulative_regret
+                                            .iter()
+                                            .map(|&v| Json::Num(v))
+                                            .collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// The enveloped report (`BENCH_policy*.json`): shared
+    /// `schema_version`/`meta` wrapper around [`PolicySweep::to_json`].
+    pub fn report(&self, scenario_sel: &str, rounds: Option<usize>) -> Report {
+        Report::new(
+            ReportMeta {
+                kind: "policy-sweep",
+                preset: scenario_sel.to_string(),
+                seed: self.seed,
+                threads: self.threads,
+                rounds,
+            },
+            self.to_json(),
+            self.render(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::scenario;
+
+    #[test]
+    fn card_self_regret_is_exactly_zero_and_curves_never_decrease() {
+        let mut bench = Bencher::new("policy-sanity");
+        let sweep = sweep(
+            &[scenario::DENSE_URBAN],
+            6,
+            Some(20),
+            2,
+            7,
+            false,
+            &mut bench,
+        )
+        .unwrap();
+        assert_eq!(sweep.curves.len(), POLICY_STRATEGIES.len());
+        let card = sweep.curve("dense-urban", "card").unwrap();
+        assert_eq!(card.final_regret, 0.0);
+        assert!(card.cumulative_regret.iter().all(|&v| v == 0.0));
+        assert_eq!((card.explore, card.exploit), (0, 0));
+        for c in &sweep.curves {
+            assert_eq!(c.cumulative_regret.len(), c.rounds);
+            assert!(c.final_regret >= 0.0);
+            for w in c.cumulative_regret.windows(2) {
+                assert!(w[1] >= w[0], "{}: regret curve decreased", c.strategy);
+            }
+        }
+        // learned curves actually made decisions
+        for key in ["eps-greedy", "ucb1", "thompson"] {
+            let c = sweep.curve("dense-urban", key).unwrap();
+            assert_eq!(c.explore + c.exploit, (6 * 20) as u64, "{key}");
+        }
+    }
+
+    #[test]
+    fn json_payload_round_trips_with_full_curves() {
+        let mut bench = Bencher::new("policy-json");
+        let sweep = sweep(
+            &[scenario::BURSTY_CHANNEL],
+            4,
+            Some(5),
+            1,
+            3,
+            false,
+            &mut bench,
+        )
+        .unwrap();
+        let js = sweep.to_json().to_string();
+        assert!(js.contains("policy-sweep/v1"));
+        assert!(js.contains("cumulative_regret"));
+        assert!(js.contains("\"strategy\":\"ucb1\""));
+        assert!(Json::parse(&js).is_ok());
+        let j = sweep.report("bursty-channel", Some(5)).to_json();
+        assert_eq!(j.get("schema_version").and_then(Json::as_usize), Some(1));
+        assert_eq!(j.get("kind").and_then(Json::as_str), Some("policy-sweep"));
+        assert!(j.at(&["data", "curves"]).is_some());
+    }
+
+    #[test]
+    fn render_lists_every_strategy() {
+        let mut bench = Bencher::new("policy-render");
+        let sweep = sweep(
+            &[scenario::SPARSE_RURAL],
+            3,
+            Some(4),
+            1,
+            1,
+            false,
+            &mut bench,
+        )
+        .unwrap();
+        let out = sweep.render();
+        for key in ["card", "random-cut", "eps-greedy", "ucb1", "thompson"] {
+            assert!(out.contains(key), "render missing {key}");
+        }
+        assert!(out.contains("final regret"));
+    }
+
+    #[test]
+    fn rejects_degenerate_input() {
+        let mut bench = Bencher::new("policy-bad");
+        assert!(sweep(&[], 4, None, 1, 0, false, &mut bench).is_err());
+        assert!(sweep(&[scenario::DENSE_URBAN], 0, None, 1, 0, false, &mut bench).is_err());
+    }
+}

@@ -1,0 +1,239 @@
+//! Property suite for the online-learning cut policies (DESIGN.md §19):
+//! regret quality vs the CARD oracle, bit-determinism across thread
+//! counts and checkpoint/resume, channel isolation, and the
+//! decision-cache guard for every uncacheable strategy.
+
+use std::sync::Arc;
+
+use edgesplit::config::scenario;
+use edgesplit::coordinator::{Scheduler, Strategy};
+use edgesplit::des::{DesConfig, DesEngine, Policy};
+use edgesplit::exp::verify::{
+    verify_bit_identical, verify_checkpoint_resume_bit_identity_with,
+    verify_learned_channel_isolation, verify_learned_thread_determinism,
+};
+use edgesplit::exp::{EngineChoice, ExperimentBuilder};
+use edgesplit::sim::policysweep;
+use edgesplit::util::benchkit::Bencher;
+
+const LEARNED: [Strategy; 3] = [Strategy::EpsGreedy, Strategy::Ucb1, Strategy::Thompson];
+
+/// The acceptance horizon: enough pulls per (context, arm) for UCB's
+/// confidence radii to separate the arms on every preset.
+const FLEET: usize = 24;
+const HORIZON: usize = 300;
+
+fn regret_sweep(sc: scenario::Scenario) -> policysweep::PolicySweep {
+    let mut bench = Bencher::new("policy-test");
+    policysweep::sweep(
+        &[sc],
+        FLEET,
+        Some(HORIZON),
+        2,
+        7,
+        false,
+        &mut bench,
+    )
+    .unwrap()
+}
+
+fn assert_learned_beat_unlearned(sweep: &policysweep::PolicySweep, scenario: &str) {
+    let final_of = |key: &str| sweep.curve(scenario, key).unwrap().final_regret;
+    let (eps, random) = (final_of("eps-greedy"), final_of("random-cut"));
+    for smart in ["ucb1", "thompson"] {
+        let r = final_of(smart);
+        assert!(
+            r < eps,
+            "{scenario}: {smart} regret {r} should beat eps-greedy {eps}"
+        );
+        assert!(
+            r < random,
+            "{scenario}: {smart} regret {r} should beat random {random}"
+        );
+    }
+    assert_eq!(final_of("card"), 0.0, "{scenario}: CARD self-regret");
+}
+
+fn assert_sublinear(sweep: &policysweep::PolicySweep, scenario: &str) {
+    for key in ["ucb1", "thompson"] {
+        let c = &sweep.curve(scenario, key).unwrap().cumulative_regret;
+        let (half, full) = (c[c.len() / 2 - 1], *c.last().unwrap());
+        // a linear curve doubles over the second half; a converged
+        // bandit adds much less than it did while exploring
+        assert!(
+            full - half < 0.8 * half,
+            "{scenario}: {key} regret not sublinear (half {half}, full {full})"
+        );
+        assert!(full > 0.0, "{scenario}: {key} never explored at all");
+    }
+}
+
+#[test]
+fn ucb_and_thompson_beat_eps_greedy_and_random_on_correlated_indoor() {
+    let sweep = regret_sweep(scenario::CORRELATED_INDOOR);
+    assert_learned_beat_unlearned(&sweep, "correlated-indoor");
+    assert_sublinear(&sweep, "correlated-indoor");
+}
+
+#[test]
+fn ucb_and_thompson_beat_eps_greedy_and_random_on_mobile_vehicular() {
+    let sweep = regret_sweep(scenario::MOBILE_VEHICULAR);
+    assert_learned_beat_unlearned(&sweep, "mobile-vehicular");
+    assert_sublinear(&sweep, "mobile-vehicular");
+}
+
+#[test]
+fn learned_streams_bit_identical_across_thread_counts_and_seeds() {
+    for seed in [1u64, 7, 23] {
+        let mut cfg = scenario::CORRELATED_INDOOR.config(10, seed).unwrap();
+        cfg.workload.rounds = 12;
+        for strategy in LEARNED {
+            // serial vs 2 and 8 workers
+            verify_learned_thread_determinism(&cfg, scenario::CORRELATED_INDOOR.state, strategy)
+                .unwrap();
+            // and a degenerate 1-worker parallel run
+            let sched = Scheduler::new(cfg.clone(), scenario::CORRELATED_INDOOR.state, strategy);
+            let serial = sched.run_analytic().unwrap();
+            verify_bit_identical(&serial, &sched.run_parallel(1)).unwrap();
+        }
+    }
+}
+
+#[test]
+fn learned_runs_never_perturb_the_channel() {
+    for sc in [scenario::CORRELATED_INDOOR, scenario::MOBILE_VEHICULAR] {
+        let mut cfg = sc.config(8, 5).unwrap();
+        cfg.workload.rounds = 10;
+        for strategy in LEARNED {
+            verify_learned_channel_isolation(&cfg, sc.state, strategy).unwrap();
+        }
+    }
+}
+
+#[test]
+fn des_checkpoint_resume_is_bit_identical_for_learned_strategies() {
+    let des = DesConfig {
+        policy: Policy::Sync,
+        capacity: 2,
+        batch: 1,
+    };
+    for seed in [1u64, 7, 23] {
+        let mut cfg = scenario::DENSE_URBAN.config(6, seed).unwrap();
+        cfg.workload.rounds = 5;
+        for strategy in LEARNED {
+            // freeze early (mid-learning) and late (mostly replayed)
+            for t_s in [0.5, 4.0] {
+                verify_checkpoint_resume_bit_identity_with(
+                    &cfg,
+                    scenario::DENSE_URBAN.state,
+                    des,
+                    t_s,
+                    strategy,
+                )
+                .unwrap_or_else(|e| {
+                    panic!("{} seed {seed} t={t_s}: {e:#}", strategy.name())
+                });
+            }
+        }
+    }
+}
+
+#[test]
+fn sync_churn_free_des_matches_round_engine_for_learned_strategies() {
+    let mut cfg = scenario::CORRELATED_INDOOR.config(8, 11).unwrap();
+    cfg.workload.rounds = 6;
+    cfg.churn = Default::default();
+    for strategy in LEARNED {
+        let sched = Arc::new(Scheduler::new(
+            cfg.clone(),
+            scenario::CORRELATED_INDOOR.state,
+            strategy,
+        ));
+        let out = DesEngine::new(
+            sched.clone(),
+            DesConfig {
+                policy: Policy::Sync,
+                capacity: 3,
+                batch: 1,
+            },
+        )
+        .run();
+        let des_records: Vec<_> = out.records.iter().map(|r| r.record.clone()).collect();
+        let serial = sched.run_analytic().unwrap();
+        verify_bit_identical(&serial, &des_records)
+            .unwrap_or_else(|e| panic!("{}: {e:#}", strategy.name()));
+    }
+}
+
+#[test]
+fn uncacheable_strategies_never_touch_the_decision_cache() {
+    let uncacheable = [
+        Strategy::RandomCut,
+        Strategy::EpsGreedy,
+        Strategy::Ucb1,
+        Strategy::Thompson,
+    ];
+    let mut cfg = scenario::DENSE_URBAN.config(6, 3).unwrap();
+    cfg.workload.rounds = 4;
+    for strategy in uncacheable {
+        assert!(!strategy.cacheable());
+        // every scheduler-level path on one instance
+        let sched = Scheduler::new(cfg.clone(), scenario::DENSE_URBAN.state, strategy);
+        sched.run_analytic().unwrap();
+        sched.run_parallel(4);
+        sched.run_uncached();
+        sched.run_ref();
+        assert_eq!(
+            sched.cache_stats(),
+            (0, 0),
+            "{}: scheduler paths touched the cache",
+            strategy.name()
+        );
+        // the streaming round engine
+        let exp = ExperimentBuilder::from_config(cfg.clone())
+            .channel_state(scenario::DENSE_URBAN.state)
+            .strategy(strategy)
+            .build()
+            .unwrap();
+        exp.run_collect().unwrap();
+        assert_eq!(
+            exp.scheduler().cache_stats(),
+            (0, 0),
+            "{}: round engine touched the cache",
+            strategy.name()
+        );
+        // the event engine
+        let exp = ExperimentBuilder::from_config(cfg.clone())
+            .channel_state(scenario::DENSE_URBAN.state)
+            .strategy(strategy)
+            .engine(EngineChoice::Des(DesConfig {
+                policy: Policy::Sync,
+                capacity: 2,
+                batch: 1,
+            }))
+            .build()
+            .unwrap();
+        exp.run_collect().unwrap();
+        assert_eq!(
+            exp.scheduler().cache_stats(),
+            (0, 0),
+            "{}: event engine touched the cache",
+            strategy.name()
+        );
+    }
+}
+
+#[test]
+fn soa_stream_matches_oracles_under_learned_strategies() {
+    let mut cfg = scenario::MOBILE_VEHICULAR.config(7, 9).unwrap();
+    cfg.workload.rounds = 6;
+    for strategy in LEARNED {
+        let exp = ExperimentBuilder::from_config(cfg.clone())
+            .channel_state(scenario::MOBILE_VEHICULAR.state)
+            .strategy(strategy)
+            .build()
+            .unwrap();
+        edgesplit::exp::verify::verify_soa_matches_oracles(&exp)
+            .unwrap_or_else(|e| panic!("{}: {e:#}", strategy.name()));
+    }
+}
